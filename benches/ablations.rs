@@ -1,0 +1,164 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//!  A1. implicit-hash VCI pool size — the paper's Fig 3a "mismapping"
+//!      failure mode: when communicators outnumber shared endpoints, the
+//!      implicit scheme collides and threads contend;
+//!  A2. eager/rendezvous threshold — where the two-copy handshake starts
+//!      paying off;
+//!  A3. rendezvous chunk size — pipelining granularity vs per-chunk cost.
+//!
+//! Run: `cargo bench --offline --bench ablations`
+
+use mpix::fabric::FabricConfig;
+use mpix::universe::Universe;
+use mpix::util::stats::{fmt_rate, fmt_time};
+use std::time::Instant;
+
+/// A1: 4 thread pairs over per-vci mode with a varying shared-endpoint
+/// pool. n_shared = 1 forces every comm onto one endpoint (max
+/// contention); large pools approach perfect hashing.
+fn vci_pool(n_shared: usize) -> f64 {
+    let threads = 4;
+    let cfg = FabricConfig {
+        nranks: 2,
+        n_shared,
+        max_streams: 2,
+        ..Default::default()
+    };
+    let rates = Universe::run(cfg, |world| {
+        let comms: Vec<mpix::Comm> = (0..threads).map(|_| world.dup()).collect();
+        let peer = 1 - world.rank();
+        mpix::coll::barrier(&world).unwrap();
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for comm in &comms {
+                s.spawn(move || {
+                    let b = [0u8; 8];
+                    let mut rb = vec![[0u8; 8]; 32];
+                    for _ in 0..50 {
+                        let mut reqs = Vec::new();
+                        for r in rb.iter_mut() {
+                            reqs.push(comm.irecv(r, peer as i32, 0).unwrap());
+                        }
+                        for _ in 0..32 {
+                            reqs.push(comm.isend(&b, peer, 0).unwrap());
+                        }
+                        mpix::waitall(reqs).unwrap();
+                    }
+                });
+            }
+        });
+        (threads * 32 * 50) as f64 / t0.elapsed().as_secs_f64()
+    });
+    rates.iter().sum()
+}
+
+/// A2/A3: one-directional bandwidth at `size` under a given config.
+fn bandwidth(cfg: FabricConfig, size: usize) -> f64 {
+    const W: usize = 8;
+    const R: usize = 12;
+    let out = Universe::run(cfg, |world| {
+        let buf = vec![1u8; size];
+        let mut rbuf = vec![0u8; size];
+        mpix::coll::barrier(&world).unwrap();
+        let t0 = Instant::now();
+        for _ in 0..R {
+            if world.rank() == 0 {
+                let reqs: Vec<_> = (0..W).map(|_| world.isend(&buf, 1, 0).unwrap()).collect();
+                mpix::waitall(reqs).unwrap();
+                let mut a = [0u8; 1];
+                world.recv(&mut a, 1, 1).unwrap();
+            } else {
+                for _ in 0..W {
+                    world.recv(&mut rbuf, 0, 0).unwrap();
+                }
+                world.send(&[1], 0, 1).unwrap();
+            }
+        }
+        t0.elapsed().as_secs_f64()
+    });
+    (R * W * size) as f64 / out[0]
+}
+
+fn main() {
+    // A4 subprocess entry (spin budget latches once per process).
+    if std::env::var("ABLATION_INNER").as_deref() == Ok("pingpong") {
+        println!("{}", pingpong_inner());
+        return;
+    }
+    std::env::set_var("MPIX_SPIN", "64");
+
+    println!("A1 — implicit VCI hashing vs pool size (4 thread pairs, per-vci locks)");
+    println!("{:>10} {:>14} {:>10}", "n_shared", "msg rate", "collisions");
+    for &n in &[1usize, 2, 4, 8, 64] {
+        let r = (0..3).map(|_| vci_pool(n)).fold(0f64, f64::max);
+        // 4 comms hash ctx over n endpoints.
+        let collide = if n >= 4 { "none" } else { "yes" };
+        println!("{:>10} {:>14} {:>10}", n, fmt_rate(r), collide);
+    }
+
+    println!();
+    println!("A2 — eager/rendezvous threshold at 128 KiB messages");
+    println!("{:>12} {:>14} {:>10}", "eager_max", "bandwidth", "path");
+    for &e in &[4 * 1024usize, 64 * 1024, 256 * 1024] {
+        let cfg = FabricConfig {
+            nranks: 2,
+            eager_max: e,
+            ..Default::default()
+        };
+        let bw = bandwidth(cfg, 128 * 1024);
+        let path = if e >= 128 * 1024 { "eager copy" } else { "rendezvous" };
+        println!("{:>12} {:>14} {:>10}", e, fmt_rate(bw), path);
+    }
+
+    println!();
+    println!("A3 — rendezvous chunk size on 1 MiB transfers");
+    println!("{:>12} {:>14} {:>12}", "chunk", "bandwidth", "chunks/msg");
+    for &c in &[16 * 1024usize, 64 * 1024, 256 * 1024] {
+        let cfg = FabricConfig {
+            nranks: 2,
+            chunk_size: c,
+            ..Default::default()
+        };
+        let bw = bandwidth(cfg, 1 << 20);
+        println!("{:>12} {:>14} {:>12}", c, fmt_rate(bw), (1 << 20) / c);
+    }
+
+    println!();
+    println!("A4 — wait-loop spin budget (latency vs core yield, 8 B ping-pong)");
+    println!("{:>12} {:>14}", "MPIX_SPIN", "half-rt");
+    for &spin in &["16", "256", "4096"] {
+        // NOTE: spin budget is latched once per process; sweep via env in
+        // subprocesses.
+        let exe = std::env::current_exe().unwrap();
+        let out = std::process::Command::new(exe)
+            .env("MPIX_SPIN", spin)
+            .env("ABLATION_INNER", "pingpong")
+            .output()
+            .unwrap();
+        let t = String::from_utf8_lossy(&out.stdout);
+        println!("{:>12} {:>14}", spin, t.trim());
+    }
+}
+
+/// Subprocess entry for A4 (the spin budget latches once per process, so
+/// the sweep re-executes this binary with MPIX_SPIN set).
+fn pingpong_inner() -> String {
+    let lat = Universe::run(Universe::with_ranks(2), |world| {
+        let b = [1u8; 8];
+        let mut r = [0u8; 8];
+        mpix::coll::barrier(&world).unwrap();
+        let t0 = Instant::now();
+        for _ in 0..5000 {
+            if world.rank() == 0 {
+                world.send(&b, 1, 0).unwrap();
+                world.recv(&mut r, 1, 0).unwrap();
+            } else {
+                world.recv(&mut r, 0, 0).unwrap();
+                world.send(&b, 0, 0).unwrap();
+            }
+        }
+        t0.elapsed().as_secs_f64() / 5000.0 / 2.0
+    });
+    fmt_time(lat[0])
+}

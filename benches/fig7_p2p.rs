@@ -1,0 +1,149 @@
+//! E2/E3 — Paper Fig 7: point-to-point latency (a) and bandwidth (b),
+//! MPI-everywhere vs OpenMP+threadcomm.
+//!
+//! * `mpi-proc`   — two proc ranks over the two-copy bounded-cell shm
+//!   transport (eager) / chunked two-copy rendezvous (large).
+//! * `threadcomm` — two thread ranks in one process: inline-cell fast
+//!   path with **no request allocation** for small messages, and
+//!   **single-copy** delivery for large ones.
+//!
+//! Paper shape: threadcomm slightly ahead on small-message latency
+//! (request-object shortcut) and ahead on large-message bandwidth
+//! (single-copy vs two-copy), with a decline past cache sizes.
+//!
+//! Run: `cargo bench --offline --bench fig7_p2p`
+
+use mpix::threadcomm::{ThreadComm, Threadcomm};
+use mpix::universe::Universe;
+use mpix::util::stats::{fmt_rate, fmt_time};
+use std::time::Instant;
+
+const LAT_SIZES: &[usize] = &[8, 32, 128, 512, 2048, 8192, 32768, 65536];
+const BW_SIZES: &[usize] = &[1 << 10, 1 << 12, 1 << 14, 1 << 16, 1 << 18, 1 << 20, 1 << 22];
+const LAT_ITERS: usize = 3000;
+const BW_WINDOW: usize = 16;
+const BW_ROUNDS: usize = 24;
+
+fn pingpong<C: PingPong>(h: &C, size: usize, iters: usize) -> f64 {
+    let buf = vec![1u8; size];
+    let mut rbuf = vec![0u8; size];
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        if h.pp_rank() == 0 {
+            h.pp_send(&buf, 1, 0);
+            h.pp_recv(&mut rbuf, 1, 0);
+        } else {
+            h.pp_recv(&mut rbuf, 0, 0);
+            h.pp_send(&buf, 0, 0);
+        }
+    }
+    t0.elapsed().as_secs_f64() / iters as f64 / 2.0
+}
+
+fn bw_run<C: PingPong>(h: &C, size: usize) -> f64 {
+    let buf = vec![1u8; size];
+    let mut rbuf = vec![0u8; size];
+    let t0 = Instant::now();
+    for _ in 0..BW_ROUNDS {
+        if h.pp_rank() == 0 {
+            for _ in 0..BW_WINDOW {
+                h.pp_send(&buf, 1, 0);
+            }
+            let mut ack = [0u8; 1];
+            h.pp_recv(&mut ack, 1, 1);
+        } else {
+            for _ in 0..BW_WINDOW {
+                h.pp_recv(&mut rbuf, 0, 0);
+            }
+            h.pp_send(&[1], 0, 1);
+        }
+    }
+    (BW_ROUNDS * BW_WINDOW * size) as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// Tiny adapter so the same measurement loops run over both comm kinds.
+trait PingPong {
+    fn pp_rank(&self) -> usize;
+    fn pp_send(&self, b: &[u8], dst: usize, tag: i32);
+    fn pp_recv(&self, b: &mut [u8], src: usize, tag: i32);
+}
+
+impl PingPong for mpix::Comm {
+    fn pp_rank(&self) -> usize {
+        self.rank()
+    }
+    fn pp_send(&self, b: &[u8], dst: usize, tag: i32) {
+        self.send(b, dst, tag).unwrap()
+    }
+    fn pp_recv(&self, b: &mut [u8], src: usize, tag: i32) {
+        self.recv(b, src as i32, tag).unwrap();
+    }
+}
+
+impl PingPong for ThreadComm {
+    fn pp_rank(&self) -> usize {
+        self.rank()
+    }
+    fn pp_send(&self, b: &[u8], dst: usize, tag: i32) {
+        self.send(b, dst, tag).unwrap()
+    }
+    fn pp_recv(&self, b: &mut [u8], src: usize, tag: i32) {
+        self.recv(b, src as i32, tag).unwrap();
+    }
+}
+
+fn proc_measure(f: impl Fn(&mpix::Comm) -> f64 + Sync) -> f64 {
+    let out = Universe::run(Universe::with_ranks(2), |world| {
+        mpix::coll::barrier(&world).unwrap();
+        let v = f(&world);
+        mpix::coll::barrier(&world).unwrap();
+        v
+    });
+    out[0]
+}
+
+fn tc_measure(f: impl Fn(&ThreadComm) -> f64 + Sync) -> f64 {
+    let out = Universe::run(Universe::with_ranks(1), |world| {
+        let tc = Threadcomm::init(&world, 2).unwrap();
+        std::thread::scope(|s| {
+            let spawn_rank = || {
+                s.spawn(|| {
+                    let h = tc.start();
+                    let v = f(&h);
+                    let is_zero = h.rank() == 0;
+                    h.finish();
+                    is_zero.then_some(v)
+                })
+            };
+            let a = spawn_rank();
+            let b = spawn_rank();
+            a.join().unwrap().or(b.join().unwrap()).unwrap()
+        })
+    });
+    out[0]
+}
+
+fn main() {
+    println!("E2 / Fig 7(a) — p2p latency: MPI-everywhere vs threadcomm");
+    println!("{:>10} {:>14} {:>14} {:>8}", "size", "mpi-proc", "threadcomm", "tc/proc");
+    for &s in LAT_SIZES {
+        let p = proc_measure(|c| pingpong(c, s, LAT_ITERS));
+        let t = tc_measure(|h| pingpong(h, s, LAT_ITERS));
+        println!("{:>10} {:>14} {:>14} {:>8.2}", s, fmt_time(p), fmt_time(t), t / p);
+    }
+
+    println!();
+    println!("E3 / Fig 7(b) — p2p bandwidth: MPI-everywhere vs threadcomm");
+    println!("{:>10} {:>14} {:>14} {:>8}", "size", "mpi-proc", "threadcomm", "tc/proc");
+    for &s in BW_SIZES {
+        let p = proc_measure(|c| bw_run(c, s));
+        let t = tc_measure(|h| bw_run(h, s));
+        println!(
+            "{:>10} {:>14} {:>14} {:>8.2}",
+            s,
+            fmt_rate(p),
+            fmt_rate(t),
+            t / p
+        );
+    }
+}

@@ -1,0 +1,139 @@
+//! E5 — generalized-request extension (paper Fig 1): completing external
+//! asynchronous tasks through the MPI progress engine (`poll_fn`) versus
+//! the standard-API pattern that needs a dedicated user progress thread.
+//!
+//! Measures, for K concurrent "offload" tasks completing after a fixed
+//! delay: (a) wall time from task completion to waitall return, and
+//! (b) the resources burned — the standard pattern owns a whole polling
+//! thread for the duration.
+//!
+//! Run: `cargo bench --offline --bench grequest`
+
+use mpix::grequest::grequest_start;
+use mpix::request::{ReqInner, Status};
+use mpix::universe::Universe;
+use mpix::util::stats::fmt_time;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const K: usize = 16;
+const TASK_MS: u64 = 20;
+
+/// Extension path: poll_fn driven by the progress engine inside MPI_Wait.
+fn ext_poll_fn() -> (f64, u64) {
+    let out = Universe::run(Universe::with_ranks(1), |world| {
+        let before = world.fabric().metrics.snapshot();
+        let flags: Vec<Arc<AtomicBool>> =
+            (0..K).map(|_| Arc::new(AtomicBool::new(false))).collect();
+        // External "offload" completing each task after TASK_MS.
+        let fs = flags.clone();
+        let ext = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(TASK_MS));
+            for f in fs {
+                f.store(true, Ordering::Release);
+            }
+        });
+        let reqs: Vec<_> = flags
+            .iter()
+            .map(|f| {
+                let f = Arc::clone(f);
+                grequest_start(
+                    &world,
+                    Box::new(move || f.load(Ordering::Acquire).then(Status::empty)),
+                    None,
+                )
+            })
+            .collect();
+        let t0 = Instant::now();
+        mpix::waitall(reqs).unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        ext.join().unwrap();
+        let polls = world.fabric().metrics.snapshot().since(&before).grequest_polls;
+        (dt, polls)
+    });
+    out[0]
+}
+
+/// Standard-API pattern (paper Fig 1a): the app must run its own progress
+/// thread that polls the tasks and calls MPI_Grequest_complete.
+fn standard_user_thread(poll_interval: Duration) -> f64 {
+    let out = Universe::run(Universe::with_ranks(1), |world| {
+        let flags: Vec<Arc<AtomicBool>> =
+            (0..K).map(|_| Arc::new(AtomicBool::new(false))).collect();
+        let fs = flags.clone();
+        let ext = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(TASK_MS));
+            for f in fs {
+                f.store(true, Ordering::Release);
+            }
+        });
+        // Plain requests with no poll_fn; a dedicated user thread
+        // completes them (the pre-extension world).
+        let inners: Vec<Arc<ReqInner>> = (0..K).map(|_| ReqInner::new()).collect();
+        let poller_inners = inners.clone();
+        let poller_flags = flags.clone();
+        let poller = std::thread::spawn(move || loop {
+            let mut all = true;
+            for (r, f) in poller_inners.iter().zip(&poller_flags) {
+                if !r.is_complete() {
+                    if f.load(Ordering::Acquire) {
+                        r.complete(Status::empty());
+                    } else {
+                        all = false;
+                    }
+                }
+            }
+            if all {
+                break;
+            }
+            std::thread::sleep(poll_interval);
+        });
+        let t0 = Instant::now();
+        for r in &inners {
+            while !r.is_complete() {
+                std::hint::spin_loop();
+            }
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        poller.join().unwrap();
+        ext.join().unwrap();
+        let _ = &world;
+        dt
+    });
+    out[0]
+}
+
+fn main() {
+    println!("E5 / Fig 1 — waitall over {K} external tasks (complete after {TASK_MS} ms)");
+    let (ext, polls) = ext_poll_fn();
+    let std_1ms = standard_user_thread(Duration::from_millis(1));
+    let std_10ms = standard_user_thread(Duration::from_millis(10));
+    println!("{:>40} {:>12} {:>16}", "config", "waitall", "extra thread?");
+    println!(
+        "{:>40} {:>12} {:>16}",
+        "MPIX poll_fn (progress engine)",
+        fmt_time(ext),
+        "no"
+    );
+    println!(
+        "{:>40} {:>12} {:>16}",
+        "standard + user poller (1ms)",
+        fmt_time(std_1ms),
+        "yes"
+    );
+    println!(
+        "{:>40} {:>12} {:>16}",
+        "standard + user poller (10ms)",
+        fmt_time(std_10ms),
+        "yes"
+    );
+    println!();
+    println!(
+        "poll_fn invocations by progress engine: {polls} \
+         (no dedicated thread; latency tracks the progress loop)"
+    );
+    // The extension must not be slower than the fastest standard config
+    // by more than the task time (both bounded below by TASK_MS).
+    assert!(ext < (TASK_MS as f64 / 1000.0) * 3.0);
+}

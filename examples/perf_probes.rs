@@ -1,0 +1,64 @@
+//! Perf probes for the message path (the instrument behind EXPERIMENTS.md §Perf).
+use mpix::universe::Universe;
+use std::time::Instant;
+
+fn main() {
+    let out = Universe::run(Universe::with_ranks(1), |world| {
+        let n = 100_000;
+        let b = [0u8; 8];
+        let mut r = [0u8; 8];
+        let t0 = Instant::now();
+        for _ in 0..n {
+            world.send(&b, 0, 0).unwrap();
+            world.recv(&mut r, 0, 0).unwrap();
+        }
+        t0.elapsed().as_secs_f64() / n as f64
+    });
+    println!("self send+recv : {:.0} ns", out[0] * 1e9);
+
+    let out = Universe::run(Universe::with_ranks(2), |world| {
+        let n = 100_000usize;
+        mpix::coll::barrier(&world).unwrap();
+        let t0 = Instant::now();
+        let b = [1u8; 8];
+        let mut r = [0u8; 8];
+        for _ in 0..n {
+            if world.rank() == 0 {
+                world.send(&b, 1, 0).unwrap();
+                world.recv(&mut r, 1, 0).unwrap();
+            } else {
+                world.recv(&mut r, 0, 0).unwrap();
+                world.send(&b, 0, 0).unwrap();
+            }
+        }
+        let dt = t0.elapsed().as_secs_f64() / n as f64 / 2.0;
+        mpix::coll::barrier(&world).unwrap();
+        dt
+    });
+    println!("pingpong half-rt: {:.0} ns", out[0] * 1e9);
+
+    // Window message rate (fig4 T=1 inner loop).
+    let rates = Universe::run(Universe::with_ranks(2), |world| {
+        let peer = 1 - world.rank();
+        mpix::coll::barrier(&world).unwrap();
+        let t0 = Instant::now();
+        const W: usize = 32;
+        const R: usize = 2000;
+        let sendbuf = [0u8; 8];
+        let mut recvbufs = vec![[0u8; 8]; W];
+        for _ in 0..R {
+            let mut reqs = Vec::with_capacity(2 * W);
+            for rb in recvbufs.iter_mut() {
+                reqs.push(world.irecv(rb, peer as i32, 0).unwrap());
+            }
+            for _ in 0..W {
+                reqs.push(world.isend(&sendbuf, peer, 0).unwrap());
+            }
+            mpix::waitall(reqs).unwrap();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        mpix::coll::barrier(&world).unwrap();
+        (W * R) as f64 / dt
+    });
+    println!("window msgrate : {:.0} msg/s/rank", rates[0]);
+}

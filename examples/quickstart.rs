@@ -1,0 +1,55 @@
+//! Quickstart: launch 4 ranks, exercise point-to-point messaging,
+//! derived datatypes with the iovec extension, and collectives.
+//!
+//! Run: `cargo run --release --offline --example quickstart`
+
+use mpix::coll;
+use mpix::datatype::Datatype;
+use mpix::universe::Universe;
+
+fn main() {
+    let results = Universe::run(Universe::with_ranks(4), |world| {
+        let me = world.rank();
+        let n = world.size();
+
+        // --- point-to-point ring ------------------------------------
+        let next = (me + 1) % n;
+        let prev = (me + n - 1) % n;
+        let token = [me as u64, 42];
+        world.send_t(&token, next, 0).unwrap();
+        let mut got = [0u64; 2];
+        world.recv_t(&mut got, prev as i32, 0).unwrap();
+        assert_eq!(got, [prev as u64, 42]);
+
+        // --- derived datatypes + the iovec extension -----------------
+        // An 8x8 f64 tile; every rank packs a 4x2 subarray and mails it.
+        let tile = Datatype::subarray(&[8, 8], &[4, 2], &[2, 3], &Datatype::f64()).unwrap();
+        let (segs, bytes) = tile.iov_len(None);
+        assert_eq!((segs, bytes), (4, 4 * 2 * 8));
+        let src: Vec<u8> = (0..8 * 8 * 8).map(|i| (i % 251) as u8).collect();
+        let packed = tile.pack(&src).unwrap();
+        world.send(&packed, next, 1).unwrap();
+        let mut incoming = vec![0u8; packed.len()];
+        world.recv(&mut incoming, prev as i32, 1).unwrap();
+        let mut dst = vec![0u8; src.len()];
+        tile.unpack(&incoming, &mut dst).unwrap();
+
+        // --- collectives ---------------------------------------------
+        coll::barrier(&world).unwrap();
+        let mut sum = [me as f64 + 1.0];
+        coll::allreduce_t(&world, &mut sum, |a, b| *a += *b).unwrap();
+        assert_eq!(sum[0], (1..=n as u64).sum::<u64>() as f64);
+
+        let mine = [me as u32 * 10];
+        let mut all = vec![0u32; n];
+        coll::allgather_t(&world, &mine, &mut all).unwrap();
+        assert_eq!(all, vec![0, 10, 20, 30]);
+
+        format!("rank {me}/{n}: ring ok, iov segs={segs}, allreduce={}", sum[0])
+    });
+
+    for line in results {
+        println!("{line}");
+    }
+    println!("quickstart OK");
+}

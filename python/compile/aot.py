@@ -1,0 +1,92 @@
+"""AOT pipeline: lower the L2 graphs to HLO *text* + a manifest.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` 0.1.6 crate links) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+Emits  <name>.hlo.txt per entry plus manifest.json describing I/O shapes,
+which rust/src/runtime uses to validate artifacts at load time.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+
+
+def _spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# name -> (fn, [input specs]); every output is a tuple (return_tuple=True).
+ENTRIES = {
+    # The paper's CUDA example kernel at its N=1e6-class size (tile-aligned).
+    "saxpy_1m": (model.saxpy, [_spec((1,)), _spec((1048576,)), _spec((1048576,))]),
+    # Small variant for tests and the enqueue example.
+    "saxpy_4k": (model.saxpy, [_spec((1,)), _spec((4096,)), _spec((4096,))]),
+    # Rank-local stencil step for the end-to-end halo-exchange driver
+    # (128x128 interior + halo ring).
+    "jacobi_128": (model.jacobi_local_step, [_spec((130, 130))]),
+    # Small variant for tests (32x32 interior).
+    "jacobi_32": (model.jacobi_local_step, [_spec((34, 34))]),
+    # Blocked dot product.
+    "dot_64k": (model.dot, [_spec((65536,)), _spec((65536,))]),
+    # Tiled MXU-style matmul.
+    "matmul_256": (model.matmul, [_spec((256, 256)), _spec((256, 256))]),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(name):
+    fn, specs = ENTRIES[name]
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    outs = [
+        {"shape": list(s.shape), "dtype": str(s.dtype)}
+        for s in jax.eval_shape(fn, *specs)
+    ]
+    ins = [{"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs]
+    return text, {"inputs": ins, "outputs": outs}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument("--only", default=None, help="comma-separated entry names")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    names = args.only.split(",") if args.only else list(ENTRIES)
+    manifest = {}
+    for name in names:
+        text, meta = lower_entry(name)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        meta["file"] = f"{name}.hlo.txt"
+        manifest[name] = meta
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {os.path.join(args.out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Pallas blocked dot product with grid accumulation.
+
+Used by the end-to-end stencil driver to compute the residual norm that
+each rank contributes to the allreduce. Demonstrates the accumulate-into-
+output pattern (@pl.when on the first grid step) that a CUDA version would
+express with atomics or a second reduction kernel.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 8
+BLOCK_COLS = 128
+BLOCK = BLOCK_ROWS * BLOCK_COLS
+
+
+def _dot_kernel(x_ref, y_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[0, 0] += jnp.sum(x_ref[...] * y_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=())
+def dot(x, y):
+    """sum(x*y) for 1-D f32 vectors, length a multiple of BLOCK."""
+    n = x.shape[0]
+    assert n % BLOCK == 0, f"n must be a multiple of {BLOCK}"
+    nblocks = n // BLOCK
+    x2 = x.reshape(nblocks * BLOCK_ROWS, BLOCK_COLS)
+    y2 = y.reshape(nblocks * BLOCK_ROWS, BLOCK_COLS)
+    out = pl.pallas_call(
+        _dot_kernel,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, BLOCK_COLS), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_ROWS, BLOCK_COLS), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), x.dtype),
+        interpret=True,
+    )(x2, y2)
+    return out[0, 0]

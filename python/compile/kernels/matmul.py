@@ -1,0 +1,52 @@
+"""Pallas tiled matmul — the MXU-path demonstration of the hardware
+adaptation (DESIGN.md §Hardware-Adaptation).
+
+Where the paper's CUDA examples would use tensor-core WMMA tiles and
+shared-memory staging, the TPU formulation tiles for the 128×128 MXU
+systolic array with VMEM-resident blocks and a k-loop accumulation over
+the grid's innermost dimension (`dimension_semantics`-style reduction):
+
+    C[i, j] = sum_k A[i, k] @ B[k, j]
+
+Block shapes are (BM, BK) x (BK, BN) -> (BM, BN) with BM = BN = BK = 128
+(one MXU pass per step). interpret=True for CPU-PJRT execution, as
+everywhere in this repo.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BM = BN = BK = 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=())
+def matmul(a, b):
+    """a @ b for f32[m, k] x f32[k, n]; dims multiples of 128."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, "inner dims must agree"
+    assert m % BM == 0 and n % BN == 0 and k % BK == 0, "dims must be multiples of 128"
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(m // BM, n // BN, k // BK),
+        in_specs=[
+            pl.BlockSpec((BM, BK), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((BK, BN), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((BM, BN), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every Pallas kernel in this package must agree with its oracle here to
+within float tolerance; pytest (python/tests/) enforces this with
+hypothesis sweeps over shapes and dtypes.
+"""
+
+import jax.numpy as jnp
+
+
+def saxpy_ref(a, x, y):
+    """y <- a*x + y (the paper's running CUDA example kernel)."""
+    return a * x + y
+
+
+def jacobi_step_ref(grid):
+    """One 5-point Jacobi sweep over the interior of a padded grid.
+
+    ``grid`` has shape (n+2, m+2) (one halo cell on each side); returns the
+    updated (n, m) interior.
+    """
+    return 0.25 * (
+        grid[:-2, 1:-1] + grid[2:, 1:-1] + grid[1:-1, :-2] + grid[1:-1, 2:]
+    )
+
+
+def jacobi_residual_ref(grid):
+    """Sum of squared change of one Jacobi sweep (convergence monitor)."""
+    new = jacobi_step_ref(grid)
+    return jnp.sum((new - grid[1:-1, 1:-1]) ** 2)
+
+
+def dot_ref(x, y):
+    """Blocked dot product oracle."""
+    return jnp.sum(x * y)
+
+
+def matmul_ref(a, b):
+    """Matmul oracle."""
+    return a @ b

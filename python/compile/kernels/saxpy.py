@@ -1,0 +1,54 @@
+"""Pallas saxpy kernel — the paper's running CUDA example (`saxpy<<<...>>>`)
+re-thought for TPU-style blocking.
+
+The CUDA version assigns one element per thread; on TPU the natural unit is
+a VMEM tile processed by the VPU. We block the vector into (8, 128)-lane
+tiles (the TPU vreg shape) and let the grid walk the blocks. ``a`` is
+broadcast from a (1, 1) SMEM-style operand.
+
+interpret=True everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls; structural choices (BlockSpec, tiling) are still the real
+ones and are analyzed in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# One grid step processes BLOCK elements laid out as (8, 128) vregs.
+BLOCK_ROWS = 8
+BLOCK_COLS = 128
+BLOCK = BLOCK_ROWS * BLOCK_COLS
+
+
+def _saxpy_kernel(a_ref, x_ref, y_ref, o_ref):
+    o_ref[...] = a_ref[0, 0] * x_ref[...] + y_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def saxpy(a, x, y):
+    """a*x + y for 1-D x, y whose length is a multiple of BLOCK.
+
+    a: f32 scalar (traced), x/y: f32[n].
+    """
+    n = x.shape[0]
+    assert n % BLOCK == 0, f"n must be a multiple of {BLOCK}"
+    nblocks = n // BLOCK
+    x2 = x.reshape(nblocks * BLOCK_ROWS, BLOCK_COLS)
+    y2 = y.reshape(nblocks * BLOCK_ROWS, BLOCK_COLS)
+    a2 = a.reshape(1, 1)
+    out = pl.pallas_call(
+        _saxpy_kernel,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((BLOCK_ROWS, BLOCK_COLS), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_ROWS, BLOCK_COLS), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, BLOCK_COLS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblocks * BLOCK_ROWS, BLOCK_COLS), x.dtype),
+        interpret=True,
+    )(a2, x2, y2)
+    return out.reshape(n)

@@ -1,0 +1,48 @@
+"""Pallas 5-point Jacobi sweep — the halo-exchange workload that motivates
+the paper's subarray-datatype section.
+
+The kernel consumes a halo-padded (n+2, m+2) grid and produces the updated
+(n, m) interior. Blocking: the grid walks row-bands of BM interior rows;
+each step loads an overlapping (BM+2, m+2) halo window with a dynamic
+slice — the TPU analogue of the CUDA shared-memory halo staging the paper's
+applications do with threadblocks (a VMEM window in place of a shared-mem
+tile).
+
+interpret=True: the CPU PJRT client cannot execute Mosaic custom-calls;
+the BlockSpec / window structure is still the real one and is analyzed in
+DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BM = 32  # interior rows per grid step
+
+
+def _jacobi_kernel(m, g_ref, o_ref):
+    i = pl.program_id(0)
+    # Overlapping halo window: rows [i*BM, i*BM + BM + 2).
+    g = g_ref[pl.dslice(i * BM, BM + 2), pl.dslice(0, m + 2)]
+    o_ref[...] = 0.25 * (
+        g[:-2, 1:-1] + g[2:, 1:-1] + g[1:-1, :-2] + g[1:-1, 2:]
+    )
+
+
+@functools.partial(jax.jit, static_argnames=())
+def jacobi_step(grid):
+    """One Jacobi sweep. grid: f32[n+2, m+2] -> f32[n, m] interior."""
+    n = grid.shape[0] - 2
+    m = grid.shape[1] - 2
+    assert n % BM == 0, f"interior rows must be a multiple of {BM}"
+    nb = n // BM
+    return pl.pallas_call(
+        functools.partial(_jacobi_kernel, m),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((n + 2, m + 2), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((BM, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, m), grid.dtype),
+        interpret=True,
+    )(grid)

@@ -1,0 +1,51 @@
+"""L2 — JAX compute graphs composed from the L1 Pallas kernels.
+
+These are the compute hot-spots of the paper's running examples and of our
+end-to-end driver, written as jittable functions that are AOT-lowered by
+``aot.py`` into ``artifacts/*.hlo.txt`` and executed from the Rust
+coordinator through PJRT. Python never runs at request time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.saxpy import saxpy as _saxpy_kernel, BLOCK as SAXPY_BLOCK
+from .kernels.stencil import jacobi_step as _jacobi_kernel
+from .kernels.dot import dot as _dot_kernel
+from .kernels.matmul import matmul as _matmul_kernel
+
+
+def saxpy(a, x, y):
+    """y <- a*x + y. ``a`` is passed as f32[1] (PJRT scalar ergonomics)."""
+    return (_saxpy_kernel(a[0], x, y),)
+
+
+def jacobi_local_step(grid):
+    """One rank-local Jacobi sweep + residual contribution.
+
+    grid: f32[n+2, m+2] halo-padded local block.
+    Returns (new_interior f32[n,m], residual f32[1]) where residual is the
+    sum of squared updates — each rank's contribution to the global
+    convergence allreduce in the stencil driver.
+
+    The residual flows through the blocked-dot Pallas kernel when the
+    interior size is tile-aligned, otherwise falls back to jnp (the AOT
+    shapes we emit are always aligned).
+    """
+    new = _jacobi_kernel(grid)
+    d = (new - grid[1:-1, 1:-1]).reshape(-1)
+    if d.shape[0] % SAXPY_BLOCK == 0:
+        res = _dot_kernel(d, d)
+    else:
+        res = jnp.sum(d * d)
+    return new, res.reshape(1)
+
+
+def dot(x, y):
+    """Blocked dot product (tile-aligned lengths only)."""
+    return (_dot_kernel(x, y).reshape(1),)
+
+
+def matmul(a, b):
+    """Tiled MXU-style matmul (dims multiples of 128)."""
+    return (_matmul_kernel(a, b),)

@@ -1,0 +1,64 @@
+"""AOT pipeline tests: HLO-text emission, manifest integrity, determinism."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def lowered_saxpy():
+    return aot.lower_entry("saxpy_4k")
+
+
+def test_hlo_text_is_emitted(lowered_saxpy):
+    text, meta = lowered_saxpy
+    assert text.startswith("HloModule")
+    # return_tuple=True: root must be a tuple shape.
+    assert "ENTRY" in text
+
+
+def test_manifest_shapes(lowered_saxpy):
+    _, meta = lowered_saxpy
+    assert meta["inputs"] == [
+        {"shape": [1], "dtype": "float32"},
+        {"shape": [4096], "dtype": "float32"},
+        {"shape": [4096], "dtype": "float32"},
+    ]
+    assert meta["outputs"] == [{"shape": [4096], "dtype": "float32"}]
+
+
+def test_lowering_is_deterministic():
+    t1, _ = aot.lower_entry("dot_64k")
+    t2, _ = aot.lower_entry("dot_64k")
+    assert t1 == t2
+
+
+def test_jacobi_manifest_has_two_outputs():
+    _, meta = aot.lower_entry("jacobi_32")
+    assert meta["outputs"] == [
+        {"shape": [32, 32], "dtype": "float32"},
+        {"shape": [1], "dtype": "float32"},
+    ]
+
+
+def test_all_entries_lower():
+    # Every registered entry must lower without error (smoke).
+    for name in aot.ENTRIES:
+        text, meta = aot.lower_entry(name)
+        assert text.startswith("HloModule"), name
+        assert meta["outputs"], name
+
+
+def test_artifacts_dir_contents():
+    # `make artifacts` must have produced every entry + manifest.
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    if not os.path.isdir(art):
+        pytest.skip("artifacts not built")
+    with open(os.path.join(art, "manifest.json")) as f:
+        manifest = json.load(f)
+    for name in aot.ENTRIES:
+        assert name in manifest
+        assert os.path.exists(os.path.join(art, manifest[name]["file"]))

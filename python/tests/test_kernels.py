@@ -1,0 +1,142 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes (and values); tolerances account for FMA
+reassociation differences between the Pallas interpret path and jnp.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.saxpy import saxpy, BLOCK
+from compile.kernels.stencil import jacobi_step, BM
+from compile.kernels.dot import dot
+from compile.kernels import ref
+
+RNG = np.random.default_rng(1234)
+
+
+def _vec(n, seed):
+    return jnp.asarray(
+        np.random.default_rng(seed).standard_normal(n), jnp.float32
+    )
+
+
+# ---------------------------------------------------------------- saxpy ---
+
+@settings(max_examples=8, deadline=None)
+@given(
+    nblocks=st.integers(min_value=1, max_value=8),
+    a=st.floats(min_value=-10, max_value=10, allow_nan=False),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_saxpy_matches_ref(nblocks, a, seed):
+    n = nblocks * BLOCK
+    x, y = _vec(n, seed), _vec(n, seed + 1)
+    a = jnp.float32(a)
+    got = saxpy(a, x, y)
+    want = ref.saxpy_ref(a, x, y)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_saxpy_zero_a_is_identity_on_y():
+    x, y = _vec(BLOCK, 7), _vec(BLOCK, 8)
+    np.testing.assert_array_equal(saxpy(jnp.float32(0), x, y), y)
+
+
+def test_saxpy_rejects_unaligned():
+    x, y = _vec(100, 1), _vec(100, 2)
+    with pytest.raises(AssertionError):
+        saxpy(jnp.float32(1), x, y)
+
+
+# --------------------------------------------------------------- jacobi ---
+
+@settings(max_examples=8, deadline=None)
+@given(
+    nb=st.integers(min_value=1, max_value=4),
+    m=st.integers(min_value=4, max_value=64),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_jacobi_matches_ref(nb, m, seed):
+    n = nb * BM
+    g = jnp.asarray(
+        np.random.default_rng(seed).standard_normal((n + 2, m + 2)),
+        jnp.float32,
+    )
+    got = jacobi_step(g)
+    want = ref.jacobi_step_ref(g)
+    assert got.shape == (n, m)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_jacobi_constant_field_is_fixed_point():
+    g = jnp.full((BM + 2, 18), 3.25, jnp.float32)
+    np.testing.assert_allclose(jacobi_step(g), g[1:-1, 1:-1], rtol=1e-6)
+
+
+def test_jacobi_laplace_kernel_weights():
+    # Single hot cell spreads 0.25 to its 4 neighbours after one sweep.
+    g = np.zeros((BM + 2, 10), np.float32)
+    g[5, 5] = 1.0
+    out = np.asarray(jacobi_step(jnp.asarray(g)))
+    assert out[3, 4] == pytest.approx(0.25)  # north (interior idx 4-1, 5-1)
+    assert out[5, 4] == pytest.approx(0.25)  # south
+    assert out[4, 3] == pytest.approx(0.25)  # west
+    assert out[4, 5] == pytest.approx(0.25)  # east
+    assert out[4, 4] == pytest.approx(0.0)   # centre not included
+
+
+# ------------------------------------------------------------------ dot ---
+
+@settings(max_examples=8, deadline=None)
+@given(
+    nblocks=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_dot_matches_ref(nblocks, seed):
+    n = nblocks * BLOCK
+    x, y = _vec(n, seed), _vec(n, seed + 1)
+    got = dot(x, y)
+    want = ref.dot_ref(x, y)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_dot_orthogonal_is_zero():
+    x = jnp.zeros(BLOCK, jnp.float32).at[0].set(1.0)
+    y = jnp.zeros(BLOCK, jnp.float32).at[1].set(1.0)
+    assert float(dot(x, y)) == 0.0
+
+
+# --------------------------------------------------------------- matmul ---
+
+from compile.kernels.matmul import matmul, BM
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    mi=st.integers(min_value=1, max_value=2),
+    ni=st.integers(min_value=1, max_value=2),
+    ki=st.integers(min_value=1, max_value=2),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_matmul_matches_ref(mi, ni, ki, seed):
+    m, n, k = mi * BM, ni * BM, ki * BM
+    r = np.random.default_rng(seed)
+    a = jnp.asarray(r.standard_normal((m, k)), jnp.float32)
+    b = jnp.asarray(r.standard_normal((k, n)), jnp.float32)
+    np.testing.assert_allclose(matmul(a, b), ref.matmul_ref(a, b), rtol=1e-4, atol=1e-3)
+
+
+def test_matmul_identity():
+    eye = jnp.eye(BM, dtype=jnp.float32)
+    x = jnp.asarray(np.random.default_rng(1).standard_normal((BM, BM)), jnp.float32)
+    np.testing.assert_allclose(matmul(eye, x), x, rtol=1e-6)
+
+
+def test_matmul_rejects_unaligned():
+    x = jnp.zeros((100, 128), jnp.float32)
+    y = jnp.zeros((128, 128), jnp.float32)
+    with pytest.raises(AssertionError):
+        matmul(x, y)

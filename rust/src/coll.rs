@@ -1,0 +1,480 @@
+//! Collective operations, generic over anything that can send/recv —
+//! proc communicators, stream communicators, and (the point of the
+//! paper's thread-communicator extension) threadcomms, where these same
+//! algorithms synchronize N×M *threads* across processes.
+//!
+//! Collective traffic runs on a separate context (the high bit of the ctx
+//! id) so user wildcard receives can never intercept it, with a per-comm
+//! operation ordinal as the tag.
+
+use crate::error::Result;
+use crate::request::Status;
+use crate::util::pod::{bytes_of, bytes_of_mut, Pod};
+
+/// Marker bit for collective contexts.
+pub const COLL_CTX_BIT: u32 = 1 << 31;
+
+/// The communication surface collectives need.
+pub trait CommLike {
+    fn rank(&self) -> usize;
+    fn size(&self) -> usize;
+    /// Blocking send on the collective context.
+    fn coll_send(&self, buf: &[u8], dst: usize, tag: i32) -> Result<()>;
+    /// Nonblocking send on the collective context (exchange steps where
+    /// both sides send before receiving must not block on rendezvous).
+    fn coll_isend<'a>(
+        &self,
+        buf: &'a [u8],
+        dst: usize,
+        tag: i32,
+    ) -> Result<crate::request::Request<'a>>;
+    /// Blocking receive on the collective context.
+    fn coll_recv(&self, buf: &mut [u8], src: usize, tag: i32) -> Result<Status>;
+    /// Fresh ordinal for one collective operation (same value on every
+    /// rank by collective-call ordering).
+    fn next_coll_tag(&self) -> i32;
+}
+
+/// `MPI_Barrier` — dissemination algorithm, ⌈log₂ n⌉ rounds.
+pub fn barrier<C: CommLike>(comm: &C) -> Result<()> {
+    let n = comm.size();
+    if n <= 1 {
+        return Ok(());
+    }
+    let me = comm.rank();
+    let base = comm.next_coll_tag();
+    let mut k = 1usize;
+    let mut round = 0;
+    while k < n {
+        let to = (me + k) % n;
+        let from = (me + n - k % n) % n;
+        let tag = base.wrapping_add(round);
+        comm.coll_send(&[], to, tag)?;
+        comm.coll_recv(&mut [], from, tag)?;
+        k <<= 1;
+        round += 1;
+    }
+    Ok(())
+}
+
+/// `MPI_Bcast` — binomial tree from `root`.
+pub fn bcast<C: CommLike>(comm: &C, buf: &mut [u8], root: usize) -> Result<()> {
+    let n = comm.size();
+    if n <= 1 {
+        return Ok(());
+    }
+    let tag = comm.next_coll_tag();
+    // Rank relative to root.
+    let vrank = (comm.rank() + n - root) % n;
+    // Receive from parent.
+    if vrank != 0 {
+        let mut mask = 1usize;
+        while mask <= vrank {
+            mask <<= 1;
+        }
+        mask >>= 1;
+        let parent = (vrank - mask + root) % n;
+        comm.coll_recv(buf, parent, tag)?;
+    }
+    // Forward to children.
+    let mut mask = 1usize;
+    while mask <= vrank {
+        mask <<= 1;
+    }
+    while mask < n {
+        let child_v = vrank + mask;
+        if child_v < n {
+            let child = (child_v + root) % n;
+            comm.coll_send(buf, child, tag)?;
+        }
+        mask <<= 1;
+    }
+    Ok(())
+}
+
+/// Typed `MPI_Bcast`.
+pub fn bcast_t<C: CommLike, T: Pod>(comm: &C, buf: &mut [T], root: usize) -> Result<()> {
+    bcast(comm, bytes_of_mut(buf), root)
+}
+
+/// Typed `MPI_Reduce` with a fold closure (`op(acc, incoming)`), binomial
+/// tree to `root`. `buf` is in-out: input contribution, result at root.
+pub fn reduce_t<C: CommLike, T: Pod>(
+    comm: &C,
+    buf: &mut [T],
+    root: usize,
+    op: impl Fn(&mut T, &T) + Copy,
+) -> Result<()> {
+    let n = comm.size();
+    if n <= 1 {
+        return Ok(());
+    }
+    let tag = comm.next_coll_tag();
+    let vrank = (comm.rank() + n - root) % n;
+    let mut tmp = vec![buf[0]; buf.len()];
+    let mut mask = 1usize;
+    while mask < n {
+        if vrank & mask != 0 {
+            // Send partial to parent and exit.
+            let parent = ((vrank - mask) + root) % n;
+            comm.coll_send(bytes_of(buf), parent, tag)?;
+            break;
+        }
+        let child_v = vrank + mask;
+        if child_v < n {
+            let child = (child_v + root) % n;
+            comm.coll_recv(bytes_of_mut(&mut tmp[..]), child, tag)?;
+            for (a, b) in buf.iter_mut().zip(tmp.iter()) {
+                op(a, b);
+            }
+        }
+        mask <<= 1;
+    }
+    Ok(())
+}
+
+/// Typed `MPI_Allreduce` (reduce to 0, then bcast).
+pub fn allreduce_t<C: CommLike, T: Pod>(
+    comm: &C,
+    buf: &mut [T],
+    op: impl Fn(&mut T, &T) + Copy,
+) -> Result<()> {
+    reduce_t(comm, buf, 0, op)?;
+    bcast_t(comm, buf, 0)
+}
+
+/// Typed `MPI_Allgather` — ring algorithm, n−1 steps. `send.len()`
+/// elements per rank; `recv.len() == n * send.len()`.
+pub fn allgather_t<C: CommLike, T: Pod>(comm: &C, send: &[T], recv: &mut [T]) -> Result<()> {
+    let n = comm.size();
+    let me = comm.rank();
+    let blk = send.len();
+    assert_eq!(recv.len(), n * blk, "allgather recv buffer size");
+    recv[me * blk..(me + 1) * blk].copy_from_slice(send);
+    if n <= 1 {
+        return Ok(());
+    }
+    let tag = comm.next_coll_tag();
+    let right = (me + 1) % n;
+    let left = (me + n - 1) % n;
+    for step in 0..n - 1 {
+        let send_block = (me + n - step) % n;
+        let recv_block = (me + n - step - 1) % n;
+        // Copy out the block to send (can't alias recv while receiving).
+        let out: Vec<T> = recv[send_block * blk..(send_block + 1) * blk].to_vec();
+        let req = comm.coll_isend(bytes_of(&out), right, tag.wrapping_add(step as i32))?;
+        comm.coll_recv(
+            bytes_of_mut(&mut recv[recv_block * blk..(recv_block + 1) * blk]),
+            left,
+            tag.wrapping_add(step as i32),
+        )?;
+        req.wait()?;
+    }
+    Ok(())
+}
+
+/// Typed `MPI_Gather` to `root` (linear).
+pub fn gather_t<C: CommLike, T: Pod>(
+    comm: &C,
+    send: &[T],
+    recv: Option<&mut [T]>,
+    root: usize,
+) -> Result<()> {
+    let n = comm.size();
+    let me = comm.rank();
+    let blk = send.len();
+    let tag = comm.next_coll_tag();
+    if me == root {
+        let recv = recv.expect("root must pass a receive buffer");
+        assert_eq!(recv.len(), n * blk, "gather recv buffer size");
+        recv[me * blk..(me + 1) * blk].copy_from_slice(send);
+        for r in 0..n {
+            if r != root {
+                comm.coll_recv(bytes_of_mut(&mut recv[r * blk..(r + 1) * blk]), r, tag)?;
+            }
+        }
+    } else {
+        comm.coll_send(bytes_of(send), root, tag)?;
+    }
+    Ok(())
+}
+
+/// Typed `MPI_Scatter` from `root` (linear).
+pub fn scatter_t<C: CommLike, T: Pod>(
+    comm: &C,
+    send: Option<&[T]>,
+    recv: &mut [T],
+    root: usize,
+) -> Result<()> {
+    let n = comm.size();
+    let me = comm.rank();
+    let blk = recv.len();
+    let tag = comm.next_coll_tag();
+    if me == root {
+        let send = send.expect("root must pass a send buffer");
+        assert_eq!(send.len(), n * blk, "scatter send buffer size");
+        recv.copy_from_slice(&send[me * blk..(me + 1) * blk]);
+        for r in 0..n {
+            if r != root {
+                comm.coll_send(bytes_of(&send[r * blk..(r + 1) * blk]), r, tag)?;
+            }
+        }
+    } else {
+        comm.coll_recv(bytes_of_mut(recv), root, tag)?;
+    }
+    Ok(())
+}
+
+/// Typed `MPI_Alltoall` — pairwise exchange. `send.len() == recv.len()
+/// == n * blk`.
+pub fn alltoall_t<C: CommLike, T: Pod>(comm: &C, send: &[T], recv: &mut [T]) -> Result<()> {
+    let n = comm.size();
+    let me = comm.rank();
+    assert_eq!(send.len(), recv.len());
+    assert_eq!(send.len() % n, 0);
+    let blk = send.len() / n;
+    let tag = comm.next_coll_tag();
+    recv[me * blk..(me + 1) * blk].copy_from_slice(&send[me * blk..(me + 1) * blk]);
+    for step in 1..n {
+        let to = (me + step) % n;
+        let from = (me + n - step) % n;
+        // Nonblocking send first: both sides of the pairwise exchange
+        // send before receiving, which would deadlock on a blocking
+        // rendezvous send.
+        let req = comm.coll_isend(bytes_of(&send[to * blk..(to + 1) * blk]), to, tag)?;
+        comm.coll_recv(
+            bytes_of_mut(&mut recv[from * blk..(from + 1) * blk]),
+            from,
+            tag,
+        )?;
+        req.wait()?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::universe::Universe;
+
+    #[test]
+    fn barrier_all_ranks() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let before = AtomicUsize::new(0);
+        Universe::run(Universe::with_ranks(4), |world| {
+            before.fetch_add(1, Ordering::SeqCst);
+            barrier(&world).unwrap();
+            // After the barrier, every rank must have arrived.
+            assert_eq!(before.load(Ordering::SeqCst), 4);
+        });
+    }
+
+    #[test]
+    fn bcast_from_each_root() {
+        Universe::run(Universe::with_ranks(4), |world| {
+            for root in 0..4 {
+                let mut v = if world.rank() == root {
+                    [root as u64 * 11 + 3; 8]
+                } else {
+                    [0u64; 8]
+                };
+                bcast_t(&world, &mut v, root).unwrap();
+                assert_eq!(v, [root as u64 * 11 + 3; 8]);
+            }
+        });
+    }
+
+    #[test]
+    fn allreduce_sum() {
+        Universe::run(Universe::with_ranks(4), |world| {
+            let mut v = vec![world.rank() as f64 + 1.0; 16];
+            allreduce_t(&world, &mut v, |a, b| *a += *b).unwrap();
+            // 1+2+3+4 = 10
+            assert!(v.iter().all(|&x| (x - 10.0).abs() < 1e-12));
+        });
+    }
+
+    #[test]
+    fn allreduce_max_nonpow2() {
+        Universe::run(Universe::with_ranks(3), |world| {
+            let mut v = [world.rank() as i64 * 7];
+            allreduce_t(&world, &mut v, |a, b| *a = (*a).max(*b)).unwrap();
+            assert_eq!(v[0], 14);
+        });
+    }
+
+    #[test]
+    fn allgather_ring() {
+        Universe::run(Universe::with_ranks(4), |world| {
+            let send = [world.rank() as u32, world.rank() as u32 * 100];
+            let mut recv = [0u32; 8];
+            allgather_t(&world, &send, &mut recv).unwrap();
+            assert_eq!(recv, [0, 0, 1, 100, 2, 200, 3, 300]);
+        });
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        Universe::run(Universe::with_ranks(4), |world| {
+            let send = [world.rank() as i32; 3];
+            if world.rank() == 2 {
+                let mut all = [0i32; 12];
+                gather_t(&world, &send, Some(&mut all), 2).unwrap();
+                assert_eq!(all, [0, 0, 0, 1, 1, 1, 2, 2, 2, 3, 3, 3]);
+                let mut back = [0i32; 3];
+                scatter_t(&world, Some(&all), &mut back, 2).unwrap();
+                assert_eq!(back, [2, 2, 2]);
+            } else {
+                gather_t::<_, i32>(&world, &send, None, 2).unwrap();
+                let mut back = [0i32; 3];
+                scatter_t(&world, None, &mut back, 2).unwrap();
+                assert_eq!(back, [world.rank() as i32; 3]);
+            }
+        });
+    }
+
+    #[test]
+    fn alltoall_pairwise() {
+        Universe::run(Universe::with_ranks(4), |world| {
+            let me = world.rank() as u32;
+            // send[j] = me * 10 + j
+            let send: Vec<u32> = (0..4).map(|j| me * 10 + j).collect();
+            let mut recv = vec![0u32; 4];
+            alltoall_t(&world, &send, &mut recv).unwrap();
+            // recv[j] = j * 10 + me
+            let want: Vec<u32> = (0..4).map(|j| j * 10 + me).collect();
+            assert_eq!(recv, want);
+        });
+    }
+
+    #[test]
+    fn concurrent_collectives_on_dup_comms() {
+        // Collectives on different comms (dup'd contexts) must not cross.
+        Universe::run(Universe::with_ranks(3), |world| {
+            let a = world.dup();
+            let b = world.dup();
+            let mut va = [world.rank() as u64];
+            let mut vb = [world.rank() as u64 * 1000];
+            allreduce_t(&a, &mut va, |x, y| *x += *y).unwrap();
+            allreduce_t(&b, &mut vb, |x, y| *x += *y).unwrap();
+            assert_eq!(va[0], 3);
+            assert_eq!(vb[0], 3000);
+        });
+    }
+}
+
+/// Typed inclusive `MPI_Scan`: rank r ends with op-fold of ranks 0..=r.
+/// Linear chain (latency-optimal variants are an ablation; see benches).
+pub fn scan_t<C: CommLike, T: Pod>(
+    comm: &C,
+    buf: &mut [T],
+    op: impl Fn(&mut T, &T) + Copy,
+) -> Result<()> {
+    let me = comm.rank();
+    let n = comm.size();
+    if n <= 1 {
+        return Ok(());
+    }
+    let tag = comm.next_coll_tag();
+    let mut incoming = vec![buf[0]; buf.len()];
+    if me > 0 {
+        comm.coll_recv(bytes_of_mut(&mut incoming[..]), me - 1, tag)?;
+        for (a, b) in buf.iter_mut().zip(incoming.iter()) {
+            // Fold the prefix from the left so non-commutative ops work.
+            let mine = *a;
+            *a = *b;
+            op(a, &mine);
+        }
+    }
+    if me + 1 < n {
+        comm.coll_send(bytes_of(buf), me + 1, tag)?;
+    }
+    Ok(())
+}
+
+/// Typed `MPI_Exscan`: rank r ends with the fold of ranks 0..r (rank 0's
+/// buffer is untouched, per MPI semantics).
+pub fn exscan_t<C: CommLike, T: Pod>(
+    comm: &C,
+    buf: &mut [T],
+    op: impl Fn(&mut T, &T) + Copy,
+) -> Result<()> {
+    let me = comm.rank();
+    let n = comm.size();
+    if n <= 1 {
+        return Ok(());
+    }
+    let tag = comm.next_coll_tag();
+    let mine: Vec<T> = buf.to_vec();
+    let mut prefix = vec![buf[0]; buf.len()];
+    if me > 0 {
+        comm.coll_recv(bytes_of_mut(&mut prefix[..]), me - 1, tag)?;
+    }
+    // Forward prefix ∘ mine to the right.
+    if me + 1 < n {
+        let mut fwd = if me == 0 { mine.clone() } else { prefix.clone() };
+        if me > 0 {
+            for (a, b) in fwd.iter_mut().zip(mine.iter()) {
+                op(a, b);
+            }
+        }
+        comm.coll_send(bytes_of(&fwd), me + 1, tag)?;
+    }
+    if me > 0 {
+        buf.copy_from_slice(&prefix);
+    }
+    Ok(())
+}
+
+/// Typed `MPI_Reduce_scatter_block`: reduce `n * blk` elements, scatter
+/// block r to rank r. `send.len() == n * recv.len()`.
+pub fn reduce_scatter_block_t<C: CommLike, T: Pod>(
+    comm: &C,
+    send: &[T],
+    recv: &mut [T],
+    op: impl Fn(&mut T, &T) + Copy,
+) -> Result<()> {
+    let n = comm.size();
+    let blk = recv.len();
+    assert_eq!(send.len(), n * blk, "reduce_scatter_block send size");
+    // Reduce to 0, then scatter (simple composition; pairwise-exchange is
+    // the ablation variant).
+    let mut all = send.to_vec();
+    reduce_t(comm, &mut all, 0, op)?;
+    if comm.rank() == 0 {
+        scatter_t(comm, Some(&all), recv, 0)
+    } else {
+        scatter_t(comm, None, recv, 0)
+    }
+}
+
+/// Typed `MPI_Gatherv` (variable block sizes; root supplies counts).
+pub fn gatherv_t<C: CommLike, T: Pod>(
+    comm: &C,
+    send: &[T],
+    recv: Option<(&mut Vec<T>, &[usize])>,
+    root: usize,
+) -> Result<()> {
+    let me = comm.rank();
+    let tag = comm.next_coll_tag();
+    // Counts are root-side knowledge in MPI; we mirror that.
+    if me == root {
+        let (out, counts) = recv.expect("root must pass (buffer, counts)");
+        assert_eq!(counts.len(), comm.size());
+        out.clear();
+        for r in 0..comm.size() {
+            if r == root {
+                out.extend_from_slice(send);
+            } else if counts[r] > 0 {
+                let mut block = crate::util::pod::zeroed_vec::<T>(counts[r]);
+                comm.coll_recv(bytes_of_mut(&mut block[..]), r, tag)?;
+                out.extend_from_slice(&block);
+            }
+        }
+    } else if !send.is_empty() {
+        comm.coll_send(bytes_of(send), root, tag)?;
+    } else {
+        // Zero-count ranks still participate in the op ordinal.
+    }
+    Ok(())
+}

@@ -1,0 +1,814 @@
+//! Communicators: the MPI object carrying the matching context, group and
+//! VCI mapping, plus the paper's stream-communicator variants.
+//!
+//! * `CommKind::Proc` — conventional communicator: traffic implicitly
+//!   hashed onto a shared endpoint (`ctx % n_shared`), guarded by the
+//!   fabric lock mode (Fig 3a, "implicit scheme").
+//! * `CommKind::Stream` — single-stream communicator
+//!   (`MPIX_Stream_comm_create`): every rank attached one MPIX stream;
+//!   traffic uses the stream's dedicated endpoint with no locking
+//!   (Fig 3b, "explicit scheme").
+//! * `CommKind::Multiplex` — multiple streams per rank
+//!   (`MPIX_Stream_comm_create_multiplex`); sends/recvs name source and
+//!   destination stream indices.
+
+use crate::error::{MpiError, Result};
+use crate::fabric::{
+    Envelope, Fabric, Header, Payload, RecvPtr, SendPtr, INLINE_MAX,
+};
+use crate::matching::{MatchAction, PostedRecv};
+use crate::metrics::Metrics;
+use crate::progress::{self, with_ep};
+use crate::request::{ProgressHandle, ProgressScope, ReqInner, Request, Status};
+use crate::stream::Stream;
+use crate::util::pod::{bytes_of, bytes_of_mut, Pod};
+use crate::{ANY_STREAM};
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+
+pub(crate) enum CommKind {
+    Proc,
+    Stream {
+        local: Option<Stream>,
+        /// Per remote rank: the endpoint its stream owns (or its implicit
+        /// shared vci when the rank attached MPIX_STREAM_NULL).
+        remote_vci: Vec<u16>,
+    },
+    Multiplex {
+        locals: Vec<Stream>,
+        /// remote_vcis[rank][stream_index].
+        remote_vcis: Vec<Vec<u16>>,
+    },
+}
+
+pub(crate) struct CommInner {
+    pub ctx: u32,
+    pub rank: u32,
+    pub size: usize,
+    /// Comm-local rank → world rank.
+    pub group: Arc<Vec<u32>>,
+    pub fabric: Arc<Fabric>,
+    pub kind: CommKind,
+    /// Ordinal of collective *creation* calls on this comm (context-id
+    /// agreement; see `Fabric::agree_ctx`).
+    pub child_seq: AtomicU32,
+    /// Ordinal of collective *operations* (tag disambiguation).
+    pub coll_seq: AtomicU32,
+    /// Ordinal of window creations.
+    pub win_seq: AtomicU32,
+}
+
+/// An MPI communicator handle (cheap to clone; clones share collective
+/// ordinals, as all MPI handles to the same comm must).
+#[derive(Clone)]
+pub struct Comm {
+    pub(crate) inner: Arc<CommInner>,
+}
+
+impl Comm {
+    pub(crate) fn new_proc(
+        fabric: Arc<Fabric>,
+        ctx: u32,
+        rank: u32,
+        group: Arc<Vec<u32>>,
+    ) -> Comm {
+        let size = group.len();
+        Comm {
+            inner: Arc::new(CommInner {
+                ctx,
+                rank,
+                size,
+                group,
+                fabric,
+                kind: CommKind::Proc,
+                child_seq: AtomicU32::new(0),
+                coll_seq: AtomicU32::new(0),
+                win_seq: AtomicU32::new(0),
+            }),
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.inner.rank as usize
+    }
+
+    pub fn size(&self) -> usize {
+        self.inner.size
+    }
+
+    pub fn fabric(&self) -> &Arc<Fabric> {
+        &self.inner.fabric
+    }
+
+    pub(crate) fn ctx(&self) -> u32 {
+        self.inner.ctx
+    }
+
+    /// World rank of a comm-local rank.
+    pub(crate) fn world_rank(&self, local: usize) -> u32 {
+        self.inner.group[local]
+    }
+
+    /// This rank's world ("process") rank — the identifier the
+    /// progress-thread APIs address ranks by.
+    pub fn my_world_rank(&self) -> u32 {
+        self.inner.group[self.inner.rank as usize]
+    }
+
+    /// The shared endpoint this comm's implicit traffic hashes to.
+    fn shared_vci(&self) -> u16 {
+        (self.inner.ctx % self.inner.fabric.cfg.n_shared as u32) as u16
+    }
+
+    /// Local endpoint for operations issued on stream index `idx`.
+    pub(crate) fn my_vci(&self, idx: usize) -> u16 {
+        match &self.inner.kind {
+            CommKind::Proc => self.shared_vci(),
+            CommKind::Stream { local, .. } => {
+                local.as_ref().map(|s| s.vci()).unwrap_or(self.shared_vci())
+            }
+            CommKind::Multiplex { locals, .. } => locals[idx].vci(),
+        }
+    }
+
+    /// Destination endpoint for a send to comm-local `dst` stream `idx`.
+    fn dst_vci(&self, dst: usize, idx: usize) -> u16 {
+        match &self.inner.kind {
+            CommKind::Proc => self.shared_vci(),
+            CommKind::Stream { remote_vci, .. } => remote_vci[dst],
+            CommKind::Multiplex { remote_vcis, .. } => remote_vcis[dst][idx],
+        }
+    }
+
+    pub(crate) fn progress_handle(&self, idx: usize) -> ProgressHandle {
+        // Per-VCI progress (MPICH 4.x): a blocked operation polls the
+        // endpoint its traffic lives on. General progress (Shared) is for
+        // grequests, RMA windows and explicit MPIX_Stream_progress(NULL).
+        let scope = match &self.inner.kind {
+            CommKind::Proc => ProgressScope::Stream(self.shared_vci()),
+            CommKind::Stream { local: None, .. } => ProgressScope::Stream(self.shared_vci()),
+            CommKind::Stream { local: Some(s), .. } => ProgressScope::Stream(s.vci()),
+            CommKind::Multiplex { locals, .. } => ProgressScope::Stream(locals[idx].vci()),
+        };
+        ProgressHandle {
+            fabric: Arc::clone(&self.inner.fabric),
+            rank: self.world_rank(self.rank()),
+            scope,
+        }
+    }
+
+    /// Drive progress for this communicator's context once
+    /// (`MPIX_Stream_progress` on the attached stream, or general
+    /// progress for proc comms).
+    pub fn progress(&self) {
+        self.progress_handle(0).poll();
+    }
+
+    fn check_peer(&self, peer: usize) -> Result<()> {
+        if peer >= self.inner.size {
+            return Err(MpiError::RankOutOfRange {
+                rank: peer as i32,
+                size: self.inner.size,
+            });
+        }
+        Ok(())
+    }
+
+    // -------------------------------------------------------------- send
+
+    /// Blocking standard send (`MPI_Send`): eager messages return as soon
+    /// as the envelope is queued; rendezvous messages block until the
+    /// receiver drains them.
+    pub fn send(&self, buf: &[u8], dst: usize, tag: i32) -> Result<()> {
+        self.stream_send(buf, dst, tag, 0, 0)
+    }
+
+    /// `MPIX_Stream_send`: send naming (source, destination) stream
+    /// indices on a multiplex comm. Indices are ignored for proc comms
+    /// and single-stream comms (always 0).
+    pub fn stream_send(
+        &self,
+        buf: &[u8],
+        dst: usize,
+        tag: i32,
+        src_idx: usize,
+        dst_idx: usize,
+    ) -> Result<()> {
+        self.check_peer(dst)?;
+        let ctx = self.inner.ctx;
+        if buf.len() <= self.inner.fabric.cfg.eager_max {
+            self.push_eager(ctx, buf, dst, tag, src_idx, dst_idx)
+        } else {
+            let req = self.isend_impl(ctx, buf, dst, tag, src_idx, dst_idx)?;
+            req.wait().map(|_| ())
+        }
+    }
+
+    /// Nonblocking send (`MPI_Isend`). The returned request borrows `buf`.
+    pub fn isend<'a>(&self, buf: &'a [u8], dst: usize, tag: i32) -> Result<Request<'a>> {
+        self.check_peer(dst)?;
+        self.isend_impl(self.inner.ctx, buf, dst, tag, 0, 0)
+    }
+
+    /// `MPIX_Stream_isend`.
+    pub fn stream_isend<'a>(
+        &self,
+        buf: &'a [u8],
+        dst: usize,
+        tag: i32,
+        src_idx: usize,
+        dst_idx: usize,
+    ) -> Result<Request<'a>> {
+        self.check_peer(dst)?;
+        self.isend_impl(self.inner.ctx, buf, dst, tag, src_idx, dst_idx)
+    }
+
+    fn isend_impl<'a>(
+        &self,
+        ctx: u32,
+        buf: &'a [u8],
+        dst: usize,
+        tag: i32,
+        src_idx: usize,
+        dst_idx: usize,
+    ) -> Result<Request<'a>> {
+        let fabric = &self.inner.fabric;
+        if buf.len() <= fabric.cfg.eager_max {
+            self.push_eager(ctx, buf, dst, tag, src_idx, dst_idx)?;
+            // Eager data is already copied out of `buf`; the request is
+            // born complete (MPICH allocates a request object here too —
+            // the threadcomm fast path is the one that skips it).
+            Metrics::bump(&fabric.metrics.requests_alloc);
+            return Ok(Request::new(ReqInner::done(), self.progress_handle(src_idx)));
+        }
+        // Two-copy rendezvous.
+        Metrics::bump(&fabric.metrics.rdv);
+        Metrics::bump(&fabric.metrics.requests_alloc);
+        let req = ReqInner::new();
+        let token = fabric.next_token();
+        let me = (self.world_rank(self.rank()), self.my_vci(src_idx));
+        let peer = (self.world_rank(dst), self.dst_vci(dst, dst_idx));
+        let env = Envelope {
+            hdr: self.hdr(ctx, tag, src_idx, dst_idx),
+            payload: Payload::Rts {
+                token,
+                len: buf.len(),
+                reply_rank: me.0,
+                reply_vci: me.1,
+            },
+        };
+        let src_ep = fabric.endpoint(me.0, me.1);
+        with_ep(fabric, src_ep, |st| {
+            st.pending_sends.insert(
+                token,
+                progress::SendXfer {
+                    src: SendPtr(buf.as_ptr()),
+                    len: buf.len(),
+                    cursor: 0,
+                    seq: 0,
+                    dst: None,
+                    req: Arc::clone(&req),
+                },
+            );
+        });
+        self.push_envelope(me, peer, env)?;
+        Ok(Request::new(req, self.progress_handle(src_idx)))
+    }
+
+    /// Queue an eager envelope (inline when it fits the cell).
+    fn push_eager(
+        &self,
+        ctx: u32,
+        buf: &[u8],
+        dst: usize,
+        tag: i32,
+        src_idx: usize,
+        dst_idx: usize,
+    ) -> Result<()> {
+        let fabric = &self.inner.fabric;
+        let me = (self.world_rank(self.rank()), self.my_vci(src_idx));
+        let peer = (self.world_rank(dst), self.dst_vci(dst, dst_idx));
+        let payload = if buf.len() <= INLINE_MAX {
+            Metrics::bump(&fabric.metrics.eager_inline);
+            let mut data = [0u8; INLINE_MAX];
+            data[..buf.len()].copy_from_slice(buf);
+            Payload::Inline {
+                len: buf.len() as u16,
+                data,
+            }
+        } else {
+            Metrics::bump(&fabric.metrics.eager_heap);
+            Payload::Eager(buf.into())
+        };
+        let env = Envelope {
+            hdr: self.hdr(ctx, tag, src_idx, dst_idx),
+            payload,
+        };
+        self.push_envelope(me, peer, env)
+    }
+
+    fn hdr(&self, ctx: u32, tag: i32, src_idx: usize, dst_idx: usize) -> Header {
+        Header {
+            ctx,
+            src: self.inner.rank,
+            tag,
+            src_stream: src_idx as i32,
+            dst_stream: dst_idx as i32,
+        }
+    }
+
+    /// Push with backpressure: when the destination ring is full, run our
+    /// own progress (so mutual floods drain) and retry.
+    pub(crate) fn push_envelope(
+        &self,
+        me: (u32, u16),
+        peer: (u32, u16),
+        env: Envelope,
+    ) -> Result<()> {
+        let fabric = &self.inner.fabric;
+        let src_ep = fabric.endpoint(me.0, me.1);
+        let mut env = Some(env);
+        loop {
+            let full = with_ep(fabric, src_ep, |st| {
+                let ch = fabric.channel(st, me, peer);
+                if fabric.cfg.injection_ns > 0 {
+                    crate::util::spin_ns(fabric.cfg.injection_ns);
+                }
+                match ch.ring.push(env.take().unwrap()) {
+                    Ok(()) => false,
+                    Err(back) => {
+                        env = Some(back);
+                        true
+                    }
+                }
+            });
+            if !full {
+                return Ok(());
+            }
+            // Drain our own endpoint while the peer catches up.
+            progress::poll_endpoint(fabric, me.0, me.1);
+            std::hint::spin_loop();
+        }
+    }
+
+    // -------------------------------------------------------------- recv
+
+    /// Blocking receive (`MPI_Recv`). `src`/`tag` accept wildcards
+    /// ([`crate::ANY_SOURCE`], [`crate::ANY_TAG`]).
+    pub fn recv(&self, buf: &mut [u8], src: i32, tag: i32) -> Result<Status> {
+        let req = self.irecv(buf, src, tag)?;
+        req.wait()
+    }
+
+    /// Nonblocking receive (`MPI_Irecv`).
+    pub fn irecv<'a>(&self, buf: &'a mut [u8], src: i32, tag: i32) -> Result<Request<'a>> {
+        self.irecv_impl(self.inner.ctx, buf, src, tag, ANY_STREAM, 0)
+    }
+
+    /// `MPIX_Stream_recv` (blocking; `src_idx == ANY_STREAM` wildcard).
+    pub fn stream_recv(
+        &self,
+        buf: &mut [u8],
+        src: i32,
+        tag: i32,
+        src_idx: i32,
+        dst_idx: usize,
+    ) -> Result<Status> {
+        self.irecv_impl(self.inner.ctx, buf, src, tag, src_idx, dst_idx)?.wait()
+    }
+
+    /// `MPIX_Stream_irecv`.
+    pub fn stream_irecv<'a>(
+        &self,
+        buf: &'a mut [u8],
+        src: i32,
+        tag: i32,
+        src_idx: i32,
+        dst_idx: usize,
+    ) -> Result<Request<'a>> {
+        self.irecv_impl(self.inner.ctx, buf, src, tag, src_idx, dst_idx)
+    }
+
+    fn irecv_impl<'a>(
+        &self,
+        ctx: u32,
+        buf: &'a mut [u8],
+        src: i32,
+        tag: i32,
+        src_idx: i32,
+        dst_idx: usize,
+    ) -> Result<Request<'a>> {
+        if src != crate::ANY_SOURCE {
+            self.check_peer(src as usize)?;
+        }
+        let fabric = &self.inner.fabric;
+        Metrics::bump(&fabric.metrics.requests_alloc);
+        let req = ReqInner::new();
+        let me = (self.world_rank(self.rank()), self.my_vci(dst_idx));
+        let posted = PostedRecv {
+            ctx,
+            src,
+            tag,
+            src_stream: src_idx,
+            dst_stream: dst_idx as i32,
+            buf: RecvPtr(buf.as_mut_ptr()),
+            cap: buf.len(),
+            req: Arc::clone(&req),
+        };
+        let ep = fabric.endpoint(me.0, me.1);
+        with_ep(fabric, ep, |st| {
+            // Drain arrivals first so the unexpected queue is current.
+            fabric.refresh_inboxes(ep, st);
+            if let Some(MatchAction::StartTwoCopy {
+                token,
+                len,
+                reply_rank,
+                reply_vci,
+                posted,
+                status,
+            }) = st.matching.post(posted)
+            {
+                progress::start_two_copy(
+                    fabric, me.0, me.1, st, token, len, reply_rank, reply_vci, posted, status,
+                );
+            }
+        });
+        Ok(Request::new(req, self.progress_handle(dst_idx)))
+    }
+
+    // ------------------------------------------------------- typed sugar
+
+    /// Typed blocking send.
+    pub fn send_t<T: Pod>(&self, data: &[T], dst: usize, tag: i32) -> Result<()> {
+        self.send(bytes_of(data), dst, tag)
+    }
+
+    /// Typed blocking receive; returns number of elements received.
+    pub fn recv_t<T: Pod>(&self, data: &mut [T], src: i32, tag: i32) -> Result<usize> {
+        let st = self.recv(bytes_of_mut(data), src, tag)?;
+        Ok(st.len / std::mem::size_of::<T>())
+    }
+
+    // -------------------------------------------------- comm management
+
+    /// `MPI_Comm_dup`: same group, fresh context. Collective.
+    pub fn dup(&self) -> Comm {
+        let seq = self.inner.child_seq.fetch_add(1, Ordering::Relaxed);
+        let ctx = self.inner.fabric.agree_ctx(self.inner.ctx, seq * 2);
+        Comm::new_proc(
+            Arc::clone(&self.inner.fabric),
+            ctx,
+            self.inner.rank,
+            Arc::clone(&self.inner.group),
+        )
+    }
+
+    /// `MPI_Comm_split`: collective; ranks sharing `color` land in the
+    /// same child comm, ordered by (`key`, parent rank).
+    pub fn split(&self, color: u32, key: i32) -> Result<Comm> {
+        // Allgather (color, key) over the parent comm.
+        let mine = [color as i64, key as i64];
+        let mut all = vec![0i64; 2 * self.size()];
+        crate::coll::allgather_t(self, &mine, &mut all)?;
+        let seq = self.inner.child_seq.fetch_add(1, Ordering::Relaxed);
+        // Distinct context per color: mix color into the agreement key.
+        let ctx = self
+            .inner
+            .fabric
+            .agree_ctx(self.inner.ctx, seq * 2 + 1 + color.wrapping_mul(0x9E37));
+        let mut members: Vec<(i64, usize)> = (0..self.size())
+            .filter(|&r| all[2 * r] == color as i64)
+            .map(|r| (all[2 * r + 1], r))
+            .collect();
+        members.sort();
+        let group: Vec<u32> = members.iter().map(|&(_, r)| self.world_rank(r)).collect();
+        let my_new_rank = members
+            .iter()
+            .position(|&(_, r)| r == self.rank())
+            .ok_or_else(|| MpiError::Internal("split: caller not in own color".into()))?;
+        Ok(Comm::new_proc(
+            Arc::clone(&self.inner.fabric),
+            ctx,
+            my_new_rank as u32,
+            Arc::new(group),
+        ))
+    }
+
+    /// Next collective-operation ordinal (internal tag disambiguation).
+    pub(crate) fn next_coll_seq(&self) -> u32 {
+        self.inner.coll_seq.fetch_add(1, Ordering::Relaxed)
+    }
+
+    pub(crate) fn next_win_seq(&self) -> u32 {
+        self.inner.win_seq.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// `MPIX_Comm_get_stream(comm, idx)`.
+    pub fn get_stream(&self, idx: usize) -> Option<Stream> {
+        match &self.inner.kind {
+            CommKind::Proc => None,
+            CommKind::Stream { local, .. } => {
+                if idx == 0 {
+                    local.clone()
+                } else {
+                    None
+                }
+            }
+            CommKind::Multiplex { locals, .. } => locals.get(idx).cloned(),
+        }
+    }
+
+    /// Number of local streams attached (0 for proc comms).
+    pub fn stream_count(&self) -> usize {
+        match &self.inner.kind {
+            CommKind::Proc => 0,
+            CommKind::Stream { local, .. } => local.is_some() as usize,
+            CommKind::Multiplex { locals, .. } => locals.len(),
+        }
+    }
+
+    /// `MPIX_Comm_test_threadcomm` analogue: proc/stream comms are never
+    /// threadcomms (the threadcomm type is distinct in this library).
+    pub fn is_threadcomm(&self) -> bool {
+        false
+    }
+}
+
+// ------------------------------------------------------------ collectives
+
+impl crate::coll::CommLike for Comm {
+    fn rank(&self) -> usize {
+        Comm::rank(self)
+    }
+
+    fn size(&self) -> usize {
+        Comm::size(self)
+    }
+
+    fn coll_send(&self, buf: &[u8], dst: usize, tag: i32) -> Result<()> {
+        self.check_peer(dst)?;
+        let ctx = self.inner.ctx | crate::coll::COLL_CTX_BIT;
+        if buf.len() <= self.inner.fabric.cfg.eager_max {
+            self.push_eager(ctx, buf, dst, tag, 0, 0)
+        } else {
+            self.isend_impl(ctx, buf, dst, tag, 0, 0)?.wait().map(|_| ())
+        }
+    }
+
+    fn coll_isend<'a>(&self, buf: &'a [u8], dst: usize, tag: i32) -> Result<Request<'a>> {
+        self.check_peer(dst)?;
+        let ctx = self.inner.ctx | crate::coll::COLL_CTX_BIT;
+        self.isend_impl(ctx, buf, dst, tag, 0, 0)
+    }
+
+    fn coll_recv(&self, buf: &mut [u8], src: usize, tag: i32) -> Result<Status> {
+        let ctx = self.inner.ctx | crate::coll::COLL_CTX_BIT;
+        self.irecv_impl(ctx, buf, src as i32, tag, ANY_STREAM, 0)?.wait()
+    }
+
+    fn next_coll_tag(&self) -> i32 {
+        // Room for up to 64 rounds per operation.
+        (self.next_coll_seq() as i32) << 6
+    }
+}
+
+// ----------------------------------------------------- raw send helpers
+// Shared by Comm and ThreadComm (threadcomm remote traffic rides the proc
+// fabric with its own header addressing).
+
+/// Push one envelope from `me` to `peer` with backpressure (drain own
+/// endpoint while the destination ring is full).
+pub(crate) fn push_envelope_raw(
+    fabric: &Arc<Fabric>,
+    me: (u32, u16),
+    peer: (u32, u16),
+    env: Envelope,
+) -> Result<()> {
+    let src_ep = fabric.endpoint(me.0, me.1);
+    let mut env = Some(env);
+    loop {
+        let full = with_ep(fabric, src_ep, |st| {
+            let ch = fabric.channel(st, me, peer);
+            if fabric.cfg.injection_ns > 0 {
+                crate::util::spin_ns(fabric.cfg.injection_ns);
+            }
+            match ch.ring.push(env.take().unwrap()) {
+                Ok(()) => false,
+                Err(back) => {
+                    env = Some(back);
+                    true
+                }
+            }
+        });
+        if !full {
+            return Ok(());
+        }
+        progress::poll_endpoint(fabric, me.0, me.1);
+        std::hint::spin_loop();
+    }
+}
+
+/// Eager send of `buf` with an explicit header (inline cell when small).
+pub(crate) fn push_eager_raw(
+    fabric: &Arc<Fabric>,
+    me: (u32, u16),
+    peer: (u32, u16),
+    hdr: Header,
+    buf: &[u8],
+) -> Result<()> {
+    let payload = if buf.len() <= INLINE_MAX {
+        Metrics::bump(&fabric.metrics.eager_inline);
+        let mut data = [0u8; INLINE_MAX];
+        data[..buf.len()].copy_from_slice(buf);
+        Payload::Inline {
+            len: buf.len() as u16,
+            data,
+        }
+    } else {
+        Metrics::bump(&fabric.metrics.eager_heap);
+        Payload::Eager(buf.into())
+    };
+    push_envelope_raw(fabric, me, peer, Envelope { hdr, payload })
+}
+
+/// Nonblocking raw send: eager below the threshold, two-copy rendezvous
+/// above it.
+pub(crate) fn isend_raw<'a>(
+    fabric: &Arc<Fabric>,
+    me: (u32, u16),
+    peer: (u32, u16),
+    hdr: Header,
+    buf: &'a [u8],
+    handle: ProgressHandle,
+) -> Result<Request<'a>> {
+    if buf.len() <= fabric.cfg.eager_max {
+        push_eager_raw(fabric, me, peer, hdr, buf)?;
+        Metrics::bump(&fabric.metrics.requests_alloc);
+        return Ok(Request::new(ReqInner::done(), handle));
+    }
+    Metrics::bump(&fabric.metrics.rdv);
+    Metrics::bump(&fabric.metrics.requests_alloc);
+    let req = ReqInner::new();
+    let token = fabric.next_token();
+    let env = Envelope {
+        hdr,
+        payload: Payload::Rts {
+            token,
+            len: buf.len(),
+            reply_rank: me.0,
+            reply_vci: me.1,
+        },
+    };
+    let src_ep = fabric.endpoint(me.0, me.1);
+    with_ep(fabric, src_ep, |st| {
+        st.pending_sends.insert(
+            token,
+            progress::SendXfer {
+                src: SendPtr(buf.as_ptr()),
+                len: buf.len(),
+                cursor: 0,
+                seq: 0,
+                dst: None,
+                req: Arc::clone(&req),
+            },
+        );
+    });
+    push_envelope_raw(fabric, me, peer, env)?;
+    Ok(Request::new(req, handle))
+}
+
+// ------------------------------------------------------------- probing
+
+impl Comm {
+    /// `MPI_Iprobe`: nonblocking check for a matching incoming message
+    /// (drains the endpoint first so arrivals are visible). Returns its
+    /// status without receiving it.
+    pub fn iprobe(&self, src: i32, tag: i32) -> Result<Option<Status>> {
+        if src != crate::ANY_SOURCE {
+            self.check_peer(src as usize)?;
+        }
+        let fabric = &self.inner.fabric;
+        let me = (self.world_rank(self.rank()), self.my_vci(0));
+        // Drain arrivals into the matching engine, then peek.
+        progress::poll_endpoint(fabric, me.0, me.1);
+        let ep = fabric.endpoint(me.0, me.1);
+        let ctx = self.inner.ctx;
+        Ok(with_ep(fabric, ep, |st| st.matching.probe(ctx, src, tag, 0)))
+    }
+
+    /// `MPI_Probe`: block until a matching message is available.
+    pub fn probe(&self, src: i32, tag: i32) -> Result<Status> {
+        let mut spins = 0u32;
+        loop {
+            if let Some(st) = self.iprobe(src, tag)? {
+                return Ok(st);
+            }
+            crate::request::backoff(&mut spins);
+        }
+    }
+}
+
+// ------------------------------------------------- persistent requests
+
+/// A persistent operation (`MPI_Send_init`/`MPI_Recv_init`): captures the
+/// argument set once; `start()` launches an instance. Restartable any
+/// number of times (each start returns a fresh [`Request`] borrowing the
+/// persistent object, which borrows the buffer).
+pub struct PersistentSend<'buf> {
+    comm: Comm,
+    buf: &'buf [u8],
+    dst: usize,
+    tag: i32,
+}
+
+pub struct PersistentRecv<'buf> {
+    comm: Comm,
+    // Raw parts: start() hands out disjoint-lifetime Requests, each
+    // borrowing self mutably — the borrow checker serializes instances.
+    buf: RecvPtr,
+    cap: usize,
+    src: i32,
+    tag: i32,
+    _m: std::marker::PhantomData<&'buf mut [u8]>,
+}
+
+impl Comm {
+    /// `MPI_Send_init`.
+    pub fn send_init<'a>(&self, buf: &'a [u8], dst: usize, tag: i32) -> Result<PersistentSend<'a>> {
+        self.check_peer(dst)?;
+        Ok(PersistentSend {
+            comm: self.clone(),
+            buf,
+            dst,
+            tag,
+        })
+    }
+
+    /// `MPI_Recv_init`.
+    pub fn recv_init<'a>(
+        &self,
+        buf: &'a mut [u8],
+        src: i32,
+        tag: i32,
+    ) -> Result<PersistentRecv<'a>> {
+        if src != crate::ANY_SOURCE {
+            self.check_peer(src as usize)?;
+        }
+        Ok(PersistentRecv {
+            comm: self.clone(),
+            buf: RecvPtr(buf.as_mut_ptr()),
+            cap: buf.len(),
+            src,
+            tag,
+            _m: std::marker::PhantomData,
+        })
+    }
+}
+
+impl<'buf> PersistentSend<'buf> {
+    /// `MPI_Start`.
+    pub fn start(&mut self) -> Result<Request<'_>> {
+        self.comm.isend(self.buf, self.dst, self.tag)
+    }
+}
+
+impl<'buf> PersistentRecv<'buf> {
+    /// `MPI_Start`.
+    pub fn start(&mut self) -> Result<Request<'_>> {
+        let fabric = &self.comm.inner.fabric;
+        Metrics::bump(&fabric.metrics.requests_alloc);
+        let req = ReqInner::new();
+        let me = (
+            self.comm.world_rank(self.comm.rank()),
+            self.comm.my_vci(0),
+        );
+        let posted = PostedRecv {
+            ctx: self.comm.inner.ctx,
+            src: self.src,
+            tag: self.tag,
+            src_stream: ANY_STREAM,
+            dst_stream: 0,
+            buf: self.buf,
+            cap: self.cap,
+            req: Arc::clone(&req),
+        };
+        let ep = fabric.endpoint(me.0, me.1);
+        with_ep(fabric, ep, |st| {
+            fabric.refresh_inboxes(ep, st);
+            if let Some(MatchAction::StartTwoCopy {
+                token,
+                len,
+                reply_rank,
+                reply_vci,
+                posted,
+                status,
+            }) = st.matching.post(posted)
+            {
+                progress::start_two_copy(
+                    fabric, me.0, me.1, st, token, len, reply_rank, reply_vci, posted, status,
+                );
+            }
+        });
+        Ok(Request::new(req, self.comm.progress_handle(0)))
+    }
+}

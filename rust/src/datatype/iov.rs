@@ -1,0 +1,399 @@
+//! The paper's iovec extension: `MPIX_Type_iov_len` / `MPIX_Type_iov`.
+//!
+//! `iov_len` answers "how many whole segments fit in a byte budget" in
+//! O(tree depth + irregular-node fanout) — *not* O(number of segments) —
+//! by skipping uniform subtrees arithmetically. `iov` returns a window
+//! `[iov_offset, iov_offset + max_len)` of the flattened segment list,
+//! skipping whole subtrees the same way, so random access into a
+//! million-fragment subarray costs O(depth + window), the property the
+//! paper's E6 bench demonstrates against brute-force listing.
+
+use super::{Datatype, Inner, Iov, Kind};
+
+impl Datatype {
+    /// `MPIX_Type_iov_len`: number of whole segments within
+    /// `max_iov_bytes` (`None` ≙ -1 ≙ unbounded) and the byte total of
+    /// those segments. With `None` this returns
+    /// `(num_segments, type_size)`.
+    pub fn iov_len(&self, max_iov_bytes: Option<usize>) -> (u64, usize) {
+        match max_iov_bytes {
+            None => (self.0.segs, self.0.size),
+            Some(budget) if budget >= self.0.size => (self.0.segs, self.0.size),
+            Some(budget) => count_within(&self.0, budget),
+        }
+    }
+
+    /// `MPIX_Type_iov`: segments `[iov_offset, iov_offset + max_len)` of
+    /// the flattened list. Returns fewer when the type ends first.
+    pub fn iov(&self, iov_offset: u64, max_len: usize) -> Vec<Iov> {
+        let mut out = Vec::with_capacity(max_len.min(64));
+        let mut skip = iov_offset;
+        emit(&self.0, 0, &mut skip, max_len, &mut out);
+        out
+    }
+
+    /// All segments (convenience; cost O(num_segments)).
+    pub fn iov_all(&self) -> Vec<Iov> {
+        let mut v = Vec::new();
+        self.walk_segments(&mut |offset, len| v.push(Iov { offset, len }));
+        v
+    }
+}
+
+/// (whole segments, their byte total) within `budget`, O(depth + fanout).
+fn count_within(node: &Inner, budget: usize) -> (u64, usize) {
+    if node.size == 0 || budget == 0 {
+        return (0, 0);
+    }
+    if node.dense {
+        return if node.size <= budget { (1, node.size) } else { (0, 0) };
+    }
+    match &node.kind {
+        Kind::Dense => unreachable!("dense handled above"),
+        Kind::Vector {
+            count,
+            blocklen,
+            child,
+            ..
+        } => {
+            let c = &child.0;
+            let (block_segs, block_bytes) = if c.dense {
+                (1u64, c.size * blocklen)
+            } else {
+                (c.segs * *blocklen as u64, c.size * blocklen)
+            };
+            // Whole blocks that fit.
+            let full = (budget / block_bytes).min(*count);
+            let mut segs = full as u64 * block_segs;
+            let mut bytes = full * block_bytes;
+            if full < *count {
+                // Partial block: blocklen children in sequence.
+                let mut rem = budget - bytes;
+                if c.dense {
+                    // A dense block is a single segment — all or nothing,
+                    // and `rem < block_bytes` here, so nothing fits.
+                } else {
+                    for _ in 0..*blocklen {
+                        if rem < c.size {
+                            let (s2, b2) = count_within(c, rem);
+                            segs += s2;
+                            bytes += b2;
+                            break;
+                        }
+                        segs += c.segs;
+                        bytes += c.size;
+                        rem -= c.size;
+                    }
+                }
+            }
+            (segs, bytes)
+        }
+        Kind::Hindexed { blocks, child } => {
+            let c = &child.0;
+            let mut segs = 0u64;
+            let mut bytes = 0usize;
+            let mut rem = budget;
+            for &(_, bl) in blocks {
+                let block_bytes = c.size * bl;
+                if c.dense {
+                    if block_bytes <= rem {
+                        segs += 1;
+                        bytes += block_bytes;
+                        rem -= block_bytes;
+                    } else {
+                        break;
+                    }
+                } else if block_bytes <= rem {
+                    segs += c.segs * bl as u64;
+                    bytes += block_bytes;
+                    rem -= block_bytes;
+                } else {
+                    for _ in 0..bl {
+                        if rem < c.size {
+                            let (s2, b2) = count_within(c, rem);
+                            segs += s2;
+                            bytes += b2;
+                            break;
+                        }
+                        segs += c.segs;
+                        bytes += c.size;
+                        rem -= c.size;
+                    }
+                    break;
+                }
+            }
+            (segs, bytes)
+        }
+        Kind::Struct { fields } => {
+            let mut segs = 0u64;
+            let mut bytes = 0usize;
+            let mut rem = budget;
+            for (_, n, t) in fields {
+                let c = &t.0;
+                let field_bytes = c.size * n;
+                if c.dense {
+                    if field_bytes <= rem {
+                        segs += 1;
+                        bytes += field_bytes;
+                        rem -= field_bytes;
+                    } else {
+                        break;
+                    }
+                } else if field_bytes <= rem {
+                    segs += c.segs * *n as u64;
+                    bytes += field_bytes;
+                    rem -= field_bytes;
+                } else {
+                    for _ in 0..*n {
+                        if rem < c.size {
+                            let (s2, b2) = count_within(c, rem);
+                            segs += s2;
+                            bytes += b2;
+                            break;
+                        }
+                        segs += c.segs;
+                        bytes += c.size;
+                        rem -= c.size;
+                    }
+                    break;
+                }
+            }
+            (segs, bytes)
+        }
+    }
+}
+
+/// Emit segments after skipping `skip`, stopping at `max` emitted.
+/// Skips whole uniform subtrees arithmetically.
+fn emit(node: &Inner, base: isize, skip: &mut u64, max: usize, out: &mut Vec<Iov>) {
+    if node.size == 0 || out.len() >= max {
+        return;
+    }
+    if *skip >= node.segs {
+        *skip -= node.segs;
+        return;
+    }
+    if node.dense {
+        // segs == 1 and skip == 0 here.
+        out.push(Iov {
+            offset: base + node.lb,
+            len: node.size,
+        });
+        return;
+    }
+    match &node.kind {
+        Kind::Dense => unreachable!(),
+        Kind::Vector {
+            count,
+            blocklen,
+            stride,
+            child,
+        } => {
+            let c = &child.0;
+            let block_segs = if c.dense { 1 } else { c.segs * *blocklen as u64 };
+            let first_block = (*skip / block_segs) as usize;
+            *skip -= first_block as u64 * block_segs;
+            for i in first_block..*count {
+                if out.len() >= max {
+                    return;
+                }
+                let block_base = base + stride * i as isize;
+                if c.dense {
+                    if *skip > 0 {
+                        *skip -= 1;
+                    } else {
+                        out.push(Iov {
+                            offset: block_base + c.lb,
+                            len: c.size * blocklen,
+                        });
+                    }
+                } else {
+                    let first_child = (*skip / c.segs) as usize;
+                    *skip -= first_child as u64 * c.segs;
+                    for b in first_child..*blocklen {
+                        if out.len() >= max {
+                            return;
+                        }
+                        emit(c, block_base + c.extent * b as isize, skip, max, out);
+                    }
+                }
+            }
+        }
+        Kind::Hindexed { blocks, child } => {
+            let c = &child.0;
+            for &(disp, bl) in blocks {
+                if out.len() >= max {
+                    return;
+                }
+                let block_segs = if c.dense { 1 } else { c.segs * bl as u64 };
+                if *skip >= block_segs {
+                    *skip -= block_segs;
+                    continue;
+                }
+                if c.dense {
+                    out.push(Iov {
+                        offset: base + disp + c.lb,
+                        len: c.size * bl,
+                    });
+                } else {
+                    let first_child = (*skip / c.segs) as usize;
+                    *skip -= first_child as u64 * c.segs;
+                    for b in first_child..bl {
+                        if out.len() >= max {
+                            return;
+                        }
+                        emit(c, base + disp + c.extent * b as isize, skip, max, out);
+                    }
+                }
+            }
+        }
+        Kind::Struct { fields } => {
+            for (off, n, t) in fields {
+                if out.len() >= max {
+                    return;
+                }
+                let c = &t.0;
+                let field_segs = if c.dense { 1 } else { c.segs * *n as u64 };
+                if *skip >= field_segs {
+                    *skip -= field_segs;
+                    continue;
+                }
+                if c.dense {
+                    out.push(Iov {
+                        offset: base + off + c.lb,
+                        len: c.size * n,
+                    });
+                } else {
+                    let first_child = (*skip / c.segs) as usize;
+                    *skip -= first_child as u64 * c.segs;
+                    for i in first_child..*n {
+                        if out.len() >= max {
+                            return;
+                        }
+                        emit(c, base + off + c.extent * i as isize, skip, max, out);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn subarray_2d() -> Datatype {
+        Datatype::subarray(&[16, 16], &[4, 4], &[2, 3], &Datatype::i32()).unwrap()
+    }
+
+    #[test]
+    fn iov_len_unbounded_matches_totals() {
+        let t = subarray_2d();
+        let (n, b) = t.iov_len(None);
+        assert_eq!(n, t.num_segments());
+        assert_eq!(b, t.size());
+    }
+
+    #[test]
+    fn iov_len_budget_counts_whole_segments() {
+        let t = subarray_2d(); // 4 segments of 16 bytes
+        assert_eq!(t.iov_len(Some(0)), (0, 0));
+        assert_eq!(t.iov_len(Some(15)), (0, 0));
+        assert_eq!(t.iov_len(Some(16)), (1, 16));
+        assert_eq!(t.iov_len(Some(47)), (2, 32));
+        assert_eq!(t.iov_len(Some(1 << 30)), (4, 64));
+    }
+
+    #[test]
+    fn iov_window_matches_walk() {
+        let t = subarray_2d();
+        let all = t.iov_all();
+        assert_eq!(t.iov(0, usize::MAX.min(1000)), all);
+        assert_eq!(t.iov(1, 2), all[1..3].to_vec());
+        assert_eq!(t.iov(3, 10), all[3..].to_vec());
+        assert_eq!(t.iov(4, 10), vec![]);
+        assert_eq!(t.iov(100, 10), vec![]);
+    }
+
+    #[test]
+    fn iov_windows_compose_property() {
+        // Property: concatenating windows of random sizes == full walk,
+        // across a set of randomly generated nested types.
+        let mut rng = Rng::new(42);
+        for case in 0..50 {
+            let t = random_type(&mut rng, 3);
+            let all = t.iov_all();
+            assert_eq!(all.len() as u64, t.num_segments(), "case {case}");
+            let mut got = Vec::new();
+            let mut off = 0u64;
+            while (off as usize) < all.len() {
+                let w = rng.range(1, 5);
+                let chunk = t.iov(off, w);
+                assert!(!chunk.is_empty(), "case {case} off {off}");
+                got.extend_from_slice(&chunk);
+                off += chunk.len() as u64;
+            }
+            assert_eq!(got, all, "case {case}");
+            // Sizes are consistent.
+            let bytes: usize = all.iter().map(|s| s.len).sum();
+            assert_eq!(bytes, t.size(), "case {case}");
+        }
+    }
+
+    #[test]
+    fn iov_len_bisection_property() {
+        // Property: for any budget, iov_len returns exactly the maximal
+        // prefix of whole segments whose byte sum fits the budget.
+        let mut rng = Rng::new(7);
+        for case in 0..50 {
+            let t = random_type(&mut rng, 3);
+            let all = t.iov_all();
+            for _ in 0..8 {
+                let budget = rng.range(0, t.size() + 8);
+                let (n, b) = t.iov_len(Some(budget));
+                let mut acc = 0usize;
+                let mut cnt = 0u64;
+                for s in &all {
+                    if acc + s.len > budget {
+                        break;
+                    }
+                    acc += s.len;
+                    cnt += 1;
+                }
+                assert_eq!((n, b), (cnt, acc), "case {case} budget {budget}");
+            }
+        }
+    }
+
+    use crate::datatype::testutil::random_type;
+
+    #[test]
+    fn paper_typeiov_example() {
+        // The paper's typeiov.c printout: first 4 iovs of the 100³-in-1000³
+        // subarray of 16-byte values.
+        let value = Datatype::bytes(16);
+        let t = Datatype::subarray(
+            &[1000, 1000, 1000],
+            &[100, 100, 100],
+            &[300, 300, 300],
+            &value,
+        )
+        .unwrap();
+        let (iov_len, iov_bytes) = t.iov_len(Some(i32::MAX as usize));
+        assert_eq!(iov_len, 10_000);
+        assert_eq!(iov_bytes, 16_000_000);
+        let iovs = t.iov(0, 4);
+        let base0 = (300isize * 1_000_000 + 300 * 1000 + 300) * 16;
+        let row = 1000 * 16; // one Y step
+        assert_eq!(
+            iovs,
+            vec![
+                Iov { offset: base0, len: 1600 },
+                Iov { offset: base0 + row, len: 1600 },
+                Iov { offset: base0 + 2 * row, len: 1600 },
+                Iov { offset: base0 + 3 * row, len: 1600 },
+            ]
+        );
+    }
+}

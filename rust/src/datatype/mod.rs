@@ -1,0 +1,680 @@
+//! Derived-datatype engine (paper §Derived Datatypes).
+//!
+//! MPI datatypes describe arbitrarily nested non-contiguous layouts at
+//! constant representation cost: a subarray of an N³ volume is a two-level
+//! strided vector regardless of how many fragments it has. This module
+//! implements the constructors of MPI (contiguous, vector, hvector,
+//! indexed_block, hindexed, struct, subarray, resized) plus the paper's
+//! **iovec extension** (`iov_len`, `iov` — see [`iov`]) that makes the
+//! segment list queryable from outside the library, and pack/unpack built
+//! on top of it (see [`pack`]).
+//!
+//! Representation: an immutable tree behind `Arc`. Each node precomputes
+//! `size` (bytes of data), `extent`/`lb` (span), `segs` (number of maximal
+//! contiguous segments per instance) and `dense` (extent == size with no
+//! holes). Constructors normalize dense cases (e.g. a vector whose stride
+//! equals its block span collapses to a contiguous blob) so that `segs`
+//! always counts *maximal* segments — the invariant the iov queries and
+//! property tests rely on.
+
+pub mod iov;
+pub mod pack;
+
+use crate::error::{MpiError, Result};
+use std::sync::Arc;
+
+/// One contiguous segment of a flattened datatype, compatible with
+/// `struct iovec` (paper: `MPIX_Iov`). `offset` is relative to the buffer
+/// base address the type is applied to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Iov {
+    pub offset: isize,
+    pub len: usize,
+}
+
+#[derive(Debug)]
+pub(crate) enum Kind {
+    /// A dense run of `size` bytes (all builtins and normalized dense
+    /// composites collapse to this).
+    Dense,
+    /// `count` children placed every `stride` bytes, each a block of
+    /// `blocklen` consecutive child instances.
+    Vector {
+        count: usize,
+        blocklen: usize,
+        stride: isize,
+        child: Datatype,
+    },
+    /// Blocks of `blocklen` child instances at explicit byte displacements.
+    Hindexed {
+        blocks: Vec<(isize, usize)>, // (byte displacement, blocklen)
+        child: Datatype,
+    },
+    /// Heterogeneous fields at byte offsets.
+    Struct { fields: Vec<(isize, usize, Datatype)> },
+}
+
+#[derive(Debug)]
+pub(crate) struct Inner {
+    pub(crate) kind: Kind,
+    /// Bytes of actual data per instance (MPI_Type_size).
+    pub(crate) size: usize,
+    /// Lower bound (first byte touched relative to base).
+    pub(crate) lb: isize,
+    /// Extent (span from lb to ub, MPI_Type_extent semantics).
+    pub(crate) extent: isize,
+    /// Maximal contiguous segments per instance.
+    pub(crate) segs: u64,
+    /// True iff the instance is one dense run starting at lb with
+    /// extent == size (enables merging by parents).
+    pub(crate) dense: bool,
+}
+
+/// An MPI derived datatype (cheap to clone — `Arc` tree).
+#[derive(Clone, Debug)]
+pub struct Datatype(pub(crate) Arc<Inner>);
+
+impl Datatype {
+    // ----------------------------------------------------------- builtins
+
+    /// A dense builtin of `size` bytes (MPI_BYTE == bytes(1), MPI_INT ==
+    /// bytes(4), ...).
+    pub fn bytes(size: usize) -> Datatype {
+        Datatype(Arc::new(Inner {
+            kind: Kind::Dense,
+            size,
+            lb: 0,
+            extent: size as isize,
+            segs: if size == 0 { 0 } else { 1 },
+            dense: true,
+        }))
+    }
+
+    pub fn u8() -> Datatype {
+        Self::bytes(1)
+    }
+    pub fn i32() -> Datatype {
+        Self::bytes(4)
+    }
+    pub fn f32() -> Datatype {
+        Self::bytes(4)
+    }
+    pub fn f64() -> Datatype {
+        Self::bytes(8)
+    }
+
+    // ------------------------------------------------------- constructors
+
+    /// `MPI_Type_contiguous`.
+    pub fn contiguous(count: usize, child: &Datatype) -> Datatype {
+        Self::vector(count, 1, 1, child)
+    }
+
+    /// `MPI_Type_vector`: `count` blocks of `blocklen` elements, block
+    /// starts `stride` *elements* apart (stride in units of child extent).
+    pub fn vector(count: usize, blocklen: usize, stride: isize, child: &Datatype) -> Datatype {
+        Self::hvector(count, blocklen, stride * child.extent(), child)
+    }
+
+    /// `MPI_Type_create_hvector`: stride in bytes.
+    pub fn hvector(
+        count: usize,
+        blocklen: usize,
+        stride_bytes: isize,
+        child: &Datatype,
+    ) -> Datatype {
+        if count == 0 || blocklen == 0 || child.size() == 0 {
+            return Self::empty();
+        }
+        let c = &child.0;
+        // Segments inside one block: blocklen dense children placed at
+        // child.extent merge iff the child is dense.
+        let block_span = child.extent() * blocklen as isize;
+        let block_dense = c.dense;
+        let segs_per_block = if block_dense { 1 } else { c.segs * blocklen as u64 };
+        // Whole type dense iff blocks are dense and tightly packed.
+        if block_dense && stride_bytes == block_span && c.lb == 0 {
+            return Self::bytes(c.size * blocklen * count);
+        }
+        let size = c.size * blocklen * count;
+        let lb = c.lb
+            + if stride_bytes < 0 {
+                stride_bytes * (count as isize - 1)
+            } else {
+                0
+            };
+        let last_block_start = if stride_bytes < 0 {
+            0
+        } else {
+            stride_bytes * (count as isize - 1)
+        };
+        let ub = last_block_start + c.lb + child.extent() * blocklen as isize;
+        let first_block_lb = c.lb
+            + if stride_bytes < 0 {
+                stride_bytes * (count as isize - 1)
+            } else {
+                0
+            };
+        let extent = ub - first_block_lb;
+        Datatype(Arc::new(Inner {
+            kind: Kind::Vector {
+                count,
+                blocklen,
+                stride: stride_bytes,
+                child: child.clone(),
+            },
+            size,
+            lb,
+            extent,
+            segs: segs_per_block * count as u64,
+            dense: false,
+        }))
+    }
+
+    /// `MPI_Type_create_indexed_block`: displacements in child elements.
+    pub fn indexed_block(blocklen: usize, displs: &[isize], child: &Datatype) -> Datatype {
+        let blocks: Vec<(isize, usize)> = displs
+            .iter()
+            .map(|&d| (d * child.extent(), blocklen))
+            .collect();
+        Self::hindexed(&blocks, child)
+    }
+
+    /// `MPI_Type_create_hindexed`: (byte displacement, blocklen) pairs.
+    pub fn hindexed(blocks: &[(isize, usize)], child: &Datatype) -> Datatype {
+        let blocks: Vec<(isize, usize)> = blocks
+            .iter()
+            .copied()
+            .filter(|&(_, bl)| bl > 0)
+            .collect();
+        if blocks.is_empty() || child.size() == 0 {
+            return Self::empty();
+        }
+        let c = &child.0;
+        let segs_per_child_block = |bl: usize| -> u64 {
+            if c.dense {
+                1
+            } else {
+                c.segs * bl as u64
+            }
+        };
+        let size: usize = blocks.iter().map(|&(_, bl)| c.size * bl).sum();
+        let segs: u64 = blocks.iter().map(|&(_, bl)| segs_per_child_block(bl)).sum();
+        let lb = blocks.iter().map(|&(d, _)| d + c.lb).min().unwrap();
+        let ub = blocks
+            .iter()
+            .map(|&(d, bl)| d + c.lb + child.extent() * bl as isize)
+            .max()
+            .unwrap();
+        // Single dense tightly-packed block collapses.
+        if blocks.len() == 1 && c.dense && c.lb == 0 && blocks[0].0 == 0 {
+            return Self::bytes(c.size * blocks[0].1);
+        }
+        Datatype(Arc::new(Inner {
+            kind: Kind::Hindexed {
+                blocks,
+                child: child.clone(),
+            },
+            size,
+            lb,
+            extent: ub - lb,
+            segs,
+            dense: false,
+        }))
+    }
+
+    /// `MPI_Type_create_struct`: fields (byte offset, count, type).
+    pub fn struct_type(fields: &[(isize, usize, Datatype)]) -> Datatype {
+        let fields: Vec<(isize, usize, Datatype)> = fields
+            .iter()
+            .filter(|(_, n, t)| *n > 0 && t.size() > 0)
+            .cloned()
+            .collect();
+        if fields.is_empty() {
+            return Self::empty();
+        }
+        let size: usize = fields.iter().map(|(_, n, t)| t.size() * n).sum();
+        // n consecutive instances of a dense child form one contiguous run
+        // (extent == size), i.e. one maximal segment per field.
+        let segs: u64 = fields
+            .iter()
+            .map(|(_, n, t)| {
+                if t.0.dense {
+                    1
+                } else {
+                    t.0.segs * *n as u64
+                }
+            })
+            .sum();
+        let lb = fields.iter().map(|(o, _, t)| o + t.0.lb).min().unwrap();
+        let ub = fields
+            .iter()
+            .map(|(o, n, t)| o + t.0.lb + t.extent() * *n as isize)
+            .max()
+            .unwrap();
+        Datatype(Arc::new(Inner {
+            kind: Kind::Struct { fields },
+            size,
+            lb,
+            extent: ub - lb,
+            segs,
+            dense: false,
+        }))
+    }
+
+    /// `MPI_Type_create_subarray` (C order): a sub-volume
+    /// `subsizes` at `starts` inside a `sizes` array of `child` elements.
+    /// Constant-cost representation: nested hvectors + a struct offset —
+    /// never a list of fragments.
+    pub fn subarray(
+        sizes: &[usize],
+        subsizes: &[usize],
+        starts: &[usize],
+        child: &Datatype,
+    ) -> Result<Datatype> {
+        let nd = sizes.len();
+        if subsizes.len() != nd || starts.len() != nd || nd == 0 {
+            return Err(MpiError::Datatype(
+                "subarray: dimension arrays must be equal non-zero length".into(),
+            ));
+        }
+        for d in 0..nd {
+            if subsizes[d] == 0 || starts[d] + subsizes[d] > sizes[d] {
+                return Err(MpiError::Datatype(format!(
+                    "subarray: dim {d}: start {} + subsize {} > size {}",
+                    starts[d], subsizes[d], sizes[d]
+                )));
+            }
+        }
+        // Row strides in child extents, C order (last dim fastest).
+        let mut stride_elems = vec![1isize; nd];
+        for d in (0..nd.saturating_sub(1)).rev() {
+            stride_elems[d] = stride_elems[d + 1] * sizes[d + 1] as isize;
+        }
+        // Innermost: subsizes[nd-1] contiguous child elements.
+        let mut t = Self::contiguous(subsizes[nd - 1], child);
+        // Wrap outward.
+        for d in (0..nd - 1).rev() {
+            t = Self::hvector(subsizes[d], 1, stride_elems[d] * child.extent(), &t);
+        }
+        // Byte offset of the first element.
+        let offset: isize = (0..nd)
+            .map(|d| starts[d] as isize * stride_elems[d] * child.extent())
+            .sum();
+        let total_span: isize = sizes.iter().product::<usize>() as isize * child.extent();
+        let positioned = if offset != 0 {
+            Self::struct_type(&[(offset, 1, t)])
+        } else {
+            t
+        };
+        // Extent of a subarray type is the full array (MPI semantics).
+        Ok(Self::resized(0, total_span, &positioned))
+    }
+
+    /// `MPI_Type_create_resized`: override lb/extent (layout unchanged).
+    pub fn resized(lb: isize, extent: isize, child: &Datatype) -> Datatype {
+        let c = &child.0;
+        Datatype(Arc::new(Inner {
+            kind: clone_kind(&c.kind, child),
+            size: c.size,
+            lb,
+            extent,
+            segs: c.segs,
+            dense: c.dense && lb == 0 && extent == c.size as isize,
+        }))
+    }
+
+    fn empty() -> Datatype {
+        Datatype(Arc::new(Inner {
+            kind: Kind::Dense,
+            size: 0,
+            lb: 0,
+            extent: 0,
+            segs: 0,
+            dense: true,
+        }))
+    }
+
+    // ------------------------------------------------------------ queries
+
+    /// `MPI_Type_size`: bytes of data per instance.
+    pub fn size(&self) -> usize {
+        self.0.size
+    }
+
+    /// `MPI_Type_get_extent` extent part.
+    pub fn extent(&self) -> isize {
+        self.0.extent
+    }
+
+    /// Lower bound.
+    pub fn lb(&self) -> isize {
+        self.0.lb
+    }
+
+    /// True iff the type is one dense run (extent == size, no holes).
+    pub fn is_dense(&self) -> bool {
+        self.0.dense
+    }
+
+    /// Total number of maximal contiguous segments per instance.
+    pub fn num_segments(&self) -> u64 {
+        self.0.segs
+    }
+
+    /// Walk every segment in layout order, calling `f(offset, len)`.
+    /// Offsets are relative to the buffer base. Cost O(num_segments).
+    pub fn walk_segments<F: FnMut(isize, usize)>(&self, f: &mut F) {
+        walk(&self.0, 0, f);
+    }
+}
+
+/// Clone a node's kind (used by `resized`, which shares the child tree).
+fn clone_kind(kind: &Kind, _this: &Datatype) -> Kind {
+    match kind {
+        Kind::Dense => Kind::Dense,
+        Kind::Vector {
+            count,
+            blocklen,
+            stride,
+            child,
+        } => Kind::Vector {
+            count: *count,
+            blocklen: *blocklen,
+            stride: *stride,
+            child: child.clone(),
+        },
+        Kind::Hindexed { blocks, child } => Kind::Hindexed {
+            blocks: blocks.clone(),
+            child: child.clone(),
+        },
+        Kind::Struct { fields } => Kind::Struct {
+            fields: fields.clone(),
+        },
+    }
+}
+
+pub(crate) fn walk<F: FnMut(isize, usize)>(node: &Inner, base: isize, f: &mut F) {
+    if node.size == 0 {
+        return;
+    }
+    match &node.kind {
+        Kind::Dense => f(base, node.size),
+        Kind::Vector {
+            count,
+            blocklen,
+            stride,
+            child,
+        } => {
+            let c = &child.0;
+            for i in 0..*count {
+                let block_base = base + stride * i as isize;
+                if c.dense {
+                    f(block_base + c.lb, c.size * blocklen);
+                } else {
+                    for b in 0..*blocklen {
+                        walk(c, block_base + c.extent * b as isize, f);
+                    }
+                }
+            }
+        }
+        Kind::Hindexed { blocks, child } => {
+            let c = &child.0;
+            for &(disp, bl) in blocks {
+                if c.dense {
+                    f(base + disp + c.lb, c.size * bl);
+                } else {
+                    for b in 0..bl {
+                        walk(c, base + disp + c.extent * b as isize, f);
+                    }
+                }
+            }
+        }
+        Kind::Struct { fields } => {
+            for (off, n, t) in fields {
+                let c = &t.0;
+                if c.dense {
+                    f(base + off + c.lb, c.size * n);
+                } else {
+                    for i in 0..*n {
+                        walk(c, base + off + c.extent * i as isize, f);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Random nested datatype generator shared by property tests across the
+/// datatype, pack, and communication test modules.
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::Datatype;
+    use crate::util::prng::Rng;
+
+    pub(crate) fn random_type(rng: &mut Rng, depth: usize) -> Datatype {
+        if depth == 0 || rng.range(0, 3) == 0 {
+            return Datatype::bytes(rng.range(1, 16));
+        }
+        match rng.range(0, 3) {
+            0 => {
+                let child = random_type(rng, depth - 1);
+                let blocklen = rng.range(1, 3);
+                let count = rng.range(1, 4);
+                // Stride leaves gaps or exactly packs.
+                let min_stride = child.extent().max(1) * blocklen as isize;
+                let stride = min_stride + rng.range(0, 8) as isize;
+                Datatype::hvector(count, blocklen, stride, &child)
+            }
+            1 => {
+                let child = random_type(rng, depth - 1);
+                let n = rng.range(1, 3);
+                let mut blocks = Vec::new();
+                let mut cursor = 0isize;
+                for _ in 0..n {
+                    let bl = rng.range(1, 2);
+                    blocks.push((cursor, bl));
+                    cursor += child.extent().max(1) * bl as isize + rng.range(1, 8) as isize;
+                }
+                Datatype::hindexed(&blocks, &child)
+            }
+            _ => {
+                let a = random_type(rng, depth - 1);
+                let b = random_type(rng, depth - 1);
+                let off_b = a.extent().max(0) + rng.range(1, 8) as isize;
+                Datatype::struct_type(&[(0, 1, a), (off_b, rng.range(1, 2), b)])
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn segs(t: &Datatype) -> Vec<Iov> {
+        let mut v = Vec::new();
+        t.walk_segments(&mut |o, l| v.push(Iov { offset: o, len: l }));
+        v
+    }
+
+    #[test]
+    fn builtin_is_one_segment() {
+        let t = Datatype::bytes(8);
+        assert_eq!(t.size(), 8);
+        assert_eq!(t.extent(), 8);
+        assert_eq!(t.num_segments(), 1);
+        assert!(t.is_dense());
+        assert_eq!(segs(&t), vec![Iov { offset: 0, len: 8 }]);
+    }
+
+    #[test]
+    fn contiguous_collapses_to_dense() {
+        let t = Datatype::contiguous(10, &Datatype::f64());
+        assert!(t.is_dense());
+        assert_eq!(t.size(), 80);
+        assert_eq!(t.num_segments(), 1);
+    }
+
+    #[test]
+    fn vector_strided_segments() {
+        // 3 blocks of 2 f32, stride 4 elements: offsets 0, 16, 32; len 8.
+        let t = Datatype::vector(3, 2, 4, &Datatype::f32());
+        assert_eq!(t.size(), 24);
+        assert_eq!(t.num_segments(), 3);
+        assert_eq!(
+            segs(&t),
+            vec![
+                Iov { offset: 0, len: 8 },
+                Iov { offset: 16, len: 8 },
+                Iov { offset: 32, len: 8 },
+            ]
+        );
+        // extent: last block start 32 + blocklen*4 = 40
+        assert_eq!(t.extent(), 40);
+    }
+
+    #[test]
+    fn vector_tight_stride_collapses() {
+        let t = Datatype::vector(5, 3, 3, &Datatype::i32());
+        assert!(t.is_dense());
+        assert_eq!(t.num_segments(), 1);
+        assert_eq!(t.size(), 60);
+    }
+
+    #[test]
+    fn nested_vector_counts_multiply() {
+        let inner = Datatype::vector(4, 1, 2, &Datatype::f32()); // 4 segs
+        let outer = Datatype::hvector(3, 1, 100, &inner); // 3 * 4 segs
+        assert_eq!(outer.num_segments(), 12);
+        assert_eq!(outer.size(), 48);
+    }
+
+    #[test]
+    fn hindexed_segments() {
+        let t = Datatype::hindexed(&[(0, 2), (100, 1), (40, 3)], &Datatype::f64());
+        assert_eq!(t.num_segments(), 3);
+        assert_eq!(
+            segs(&t),
+            vec![
+                Iov { offset: 0, len: 16 },
+                Iov { offset: 100, len: 8 },
+                Iov { offset: 40, len: 24 },
+            ]
+        );
+        assert_eq!(t.size(), 48);
+    }
+
+    #[test]
+    fn struct_fields() {
+        // struct { f64 a; pad; f32 b[2]; } at offsets 0 and 12
+        let t = Datatype::struct_type(&[
+            (0, 1, Datatype::f64()),
+            (12, 2, Datatype::f32()),
+        ]);
+        assert_eq!(t.size(), 16);
+        assert_eq!(t.num_segments(), 2);
+        assert_eq!(
+            segs(&t),
+            vec![Iov { offset: 0, len: 8 }, Iov { offset: 12, len: 8 }]
+        );
+    }
+
+    #[test]
+    fn subarray_3d_matches_paper_example_structure() {
+        // The paper's typeiov.c: value{2×f64} elements, 1000³ volume,
+        // 100³ sub-volume at (300,300,300). Segment count must be
+        // 100*100 = 10_000 (YZ fragmentation), each 100*16 bytes.
+        let value = Datatype::bytes(16);
+        let t = Datatype::subarray(
+            &[1000, 1000, 1000],
+            &[100, 100, 100],
+            &[300, 300, 300],
+            &value,
+        )
+        .unwrap();
+        assert_eq!(t.num_segments(), 100 * 100);
+        assert_eq!(t.size(), 100 * 100 * 100 * 16);
+        // First segment offset: (300*1000*1000 + 300*1000 + 300) * 16
+        let mut first = None;
+        let mut count = 0u64;
+        t.walk_segments(&mut |o, l| {
+            if first.is_none() {
+                first = Some((o, l));
+            }
+            count += 1;
+        });
+        assert_eq!(count, 10_000);
+        assert_eq!(
+            first.unwrap(),
+            ((300isize * 1_000_000 + 300 * 1000 + 300) * 16, 100 * 16)
+        );
+        // Extent covers the whole array.
+        assert_eq!(t.extent(), 1_000_000_000 * 16);
+    }
+
+    #[test]
+    fn subarray_2d_rows() {
+        // 2D: 8×8 array, 3×4 subarray at (2,1): 3 segments of 4 i32.
+        let t = Datatype::subarray(&[8, 8], &[3, 4], &[2, 1], &Datatype::i32()).unwrap();
+        assert_eq!(t.num_segments(), 3);
+        assert_eq!(
+            segs(&t),
+            vec![
+                Iov { offset: (2 * 8 + 1) * 4, len: 16 },
+                Iov { offset: (3 * 8 + 1) * 4, len: 16 },
+                Iov { offset: (4 * 8 + 1) * 4, len: 16 },
+            ]
+        );
+    }
+
+    #[test]
+    fn subarray_full_dim_merges() {
+        // Sub equals full in the last dim: rows merge only if also
+        // contiguous across rows — 2 full rows out of 4: one segment.
+        let t = Datatype::subarray(&[4, 8], &[2, 8], &[1, 0], &Datatype::i32()).unwrap();
+        // Rows 1..3 of a 4x8: bytes 32..96 contiguous.
+        assert_eq!(t.num_segments(), 1);
+        let s = segs(&t);
+        assert_eq!(s, vec![Iov { offset: 32, len: 64 }]);
+    }
+
+    #[test]
+    fn subarray_validates() {
+        assert!(Datatype::subarray(&[4], &[5], &[0], &Datatype::u8()).is_err());
+        assert!(Datatype::subarray(&[4], &[2], &[3], &Datatype::u8()).is_err());
+        assert!(Datatype::subarray(&[], &[], &[], &Datatype::u8()).is_err());
+    }
+
+    #[test]
+    fn zero_sized_types() {
+        let t = Datatype::contiguous(0, &Datatype::f32());
+        assert_eq!(t.size(), 0);
+        assert_eq!(t.num_segments(), 0);
+        assert_eq!(segs(&t), vec![]);
+    }
+
+    #[test]
+    fn resized_changes_extent_only() {
+        let t = Datatype::vector(2, 1, 2, &Datatype::i32());
+        let r = Datatype::resized(0, 64, &t);
+        assert_eq!(r.extent(), 64);
+        assert_eq!(r.size(), t.size());
+        assert_eq!(segs(&r), segs(&t));
+    }
+
+    #[test]
+    fn negative_stride_vector() {
+        let t = Datatype::hvector(3, 1, -8, &Datatype::f32());
+        assert_eq!(
+            segs(&t),
+            vec![
+                Iov { offset: 0, len: 4 },
+                Iov { offset: -8, len: 4 },
+                Iov { offset: -16, len: 4 },
+            ]
+        );
+        assert_eq!(t.lb(), -16);
+        assert_eq!(t.size(), 12);
+    }
+}

@@ -1,0 +1,159 @@
+//! Pack/unpack built on the iov engine — the "general-purpose data layout
+//! API beyond just MPI communications" usage the paper motivates
+//! (ROMIO-style I/O staging, serialization, halo packing).
+
+use super::Datatype;
+use crate::error::{MpiError, Result};
+
+impl Datatype {
+    /// Gather the typed layout out of `src` into a dense buffer.
+    /// `src` is addressed from its start; every segment must lie within
+    /// `src` (negative offsets are rejected — apply a struct offset to
+    /// shift the layout instead).
+    pub fn pack(&self, src: &[u8]) -> Result<Vec<u8>> {
+        let mut out = Vec::with_capacity(self.size());
+        self.pack_into(src, &mut out)?;
+        Ok(out)
+    }
+
+    /// Pack into a caller-provided Vec (appends exactly `size()` bytes).
+    pub fn pack_into(&self, src: &[u8], out: &mut Vec<u8>) -> Result<()> {
+        let mut err = None;
+        self.walk_segments(&mut |off, len| {
+            if err.is_some() {
+                return;
+            }
+            if off < 0 || (off as usize) + len > src.len() {
+                err = Some(MpiError::Datatype(format!(
+                    "pack: segment [{off}, {off}+{len}) outside source of {} bytes",
+                    src.len()
+                )));
+                return;
+            }
+            out.extend_from_slice(&src[off as usize..off as usize + len]);
+        });
+        match err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Scatter a dense buffer into the typed layout inside `dst`.
+    pub fn unpack(&self, packed: &[u8], dst: &mut [u8]) -> Result<()> {
+        if packed.len() != self.size() {
+            return Err(MpiError::SizeMismatch(format!(
+                "unpack: packed {} bytes != type size {}",
+                packed.len(),
+                self.size()
+            )));
+        }
+        let mut cursor = 0usize;
+        let mut err = None;
+        self.walk_segments(&mut |off, len| {
+            if err.is_some() {
+                return;
+            }
+            if off < 0 || (off as usize) + len > dst.len() {
+                err = Some(MpiError::Datatype(format!(
+                    "unpack: segment [{off}, {off}+{len}) outside destination of {} bytes",
+                    dst.len()
+                )));
+                return;
+            }
+            dst[off as usize..off as usize + len]
+                .copy_from_slice(&packed[cursor..cursor + len]);
+            cursor += len;
+        });
+        match err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn pack_strided_vector() {
+        // 8x4 row-major i32 matrix; pack column 1: a stride-4 vector
+        // shifted by one element via a struct offset.
+        let col = Datatype::vector(8, 1, 4, &Datatype::i32());
+        let t = Datatype::struct_type(&[(4, 1, col)]);
+        let mut src = vec![0u8; 8 * 4 * 4];
+        for r in 0..8u32 {
+            for c in 0..4u32 {
+                let v = r * 10 + c;
+                let idx = ((r * 4 + c) * 4) as usize;
+                src[idx..idx + 4].copy_from_slice(&v.to_le_bytes());
+            }
+        }
+        let packed = t.pack(&src).unwrap();
+        assert_eq!(packed.len(), 32);
+        for r in 0..8u32 {
+            let v = u32::from_le_bytes(packed[(r * 4) as usize..][..4].try_into().unwrap());
+            assert_eq!(v, r * 10 + 1);
+        }
+    }
+
+    #[test]
+    fn unpack_roundtrip_subarray() {
+        let t = Datatype::subarray(&[6, 6], &[3, 2], &[1, 2], &Datatype::u8()).unwrap();
+        let mut rng = Rng::new(5);
+        let mut src = vec![0u8; 36];
+        rng.fill_bytes(&mut src);
+        let packed = t.pack(&src).unwrap();
+        assert_eq!(packed.len(), 6);
+        let mut dst = vec![0u8; 36];
+        t.unpack(&packed, &mut dst).unwrap();
+        // Only the subarray cells are written, and they equal src's.
+        for r in 0..6 {
+            for c in 0..6 {
+                let i = r * 6 + c;
+                if (1..4).contains(&r) && (2..4).contains(&c) {
+                    assert_eq!(dst[i], src[i], "cell ({r},{c})");
+                } else {
+                    assert_eq!(dst[i], 0, "cell ({r},{c})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pack_unpack_identity_property() {
+        // Property: unpack(pack(x)) restores exactly the typed cells, for
+        // random nested types.
+        let mut rng = Rng::new(99);
+        for case in 0..40 {
+            let t = crate::datatype::testutil::random_type(&mut rng, 3);
+            if t.lb() < 0 {
+                continue; // pack API requires non-negative offsets
+            }
+            let span = (t.lb() + t.extent().max(t.size() as isize)) as usize + 16;
+            let mut src = vec![0u8; span];
+            rng.fill_bytes(&mut src);
+            let packed = t.pack(&src).unwrap();
+            assert_eq!(packed.len(), t.size(), "case {case}");
+            let mut dst = vec![0u8; span];
+            t.unpack(&packed, &mut dst).unwrap();
+            let packed2 = t.pack(&dst).unwrap();
+            assert_eq!(packed, packed2, "case {case}");
+        }
+    }
+
+    #[test]
+    fn pack_out_of_bounds_is_error() {
+        let t = Datatype::vector(4, 1, 4, &Datatype::i32());
+        let src = vec![0u8; 8]; // far too small
+        assert!(t.pack(&src).is_err());
+    }
+
+    #[test]
+    fn unpack_wrong_size_is_error() {
+        let t = Datatype::bytes(8);
+        let mut dst = vec![0u8; 8];
+        assert!(t.unpack(&[0u8; 4], &mut dst).is_err());
+    }
+}

@@ -1,0 +1,67 @@
+//! Error and result types for the mpix runtime.
+//!
+//! Modeled on MPI error classes: every public API returns `Result<T>` with
+//! an error that maps onto the MPI error class it would raise in MPICH.
+
+use thiserror::Error;
+
+/// MPI-style error classes raised by the runtime.
+#[derive(Error, Debug)]
+pub enum MpiError {
+    /// `MPI_ERR_TRUNCATE`: receive buffer smaller than the matched message.
+    #[error("message truncated: incoming {incoming} bytes > buffer {capacity} bytes")]
+    Truncate { incoming: usize, capacity: usize },
+
+    /// `MPI_ERR_RANK`: rank outside the communicator's group.
+    #[error("rank {rank} out of range for communicator of size {size}")]
+    RankOutOfRange { rank: i32, size: usize },
+
+    /// `MPI_ERR_TAG`: invalid tag value.
+    #[error("invalid tag {0}")]
+    InvalidTag(i32),
+
+    /// `MPI_ERR_COUNT` / size mismatch in typed operations.
+    #[error("count/size mismatch: {0}")]
+    SizeMismatch(String),
+
+    /// Out of virtual communication interfaces (the paper: stream creation
+    /// "returns failure if it runs out of available endpoints").
+    #[error("out of virtual communication interfaces ({limit} available)")]
+    VciExhausted { limit: usize },
+
+    /// `MPI_ERR_ARG`: invalid argument.
+    #[error("invalid argument: {0}")]
+    InvalidArg(String),
+
+    /// `MPI_ERR_TYPE`: invalid datatype construction or query.
+    #[error("datatype error: {0}")]
+    Datatype(String),
+
+    /// `MPI_ERR_WIN`: RMA window error.
+    #[error("rma window error: {0}")]
+    Rma(String),
+
+    /// Object used after free / before activation (e.g. inactive threadcomm).
+    #[error("object in invalid state: {0}")]
+    InvalidState(String),
+
+    /// Offload stream / enqueue error.
+    #[error("offload error: {0}")]
+    Offload(String),
+
+    /// PJRT runtime error (artifact loading, compilation, execution).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Internal invariant violation — a bug in the runtime.
+    #[error("internal error: {0}")]
+    Internal(String),
+}
+
+pub type Result<T> = std::result::Result<T, MpiError>;
+
+impl From<anyhow::Error> for MpiError {
+    fn from(e: anyhow::Error) -> Self {
+        MpiError::Runtime(format!("{e:#}"))
+    }
+}

@@ -1,0 +1,556 @@
+//! The communication fabric: endpoints (VCIs), channels, envelopes, and
+//! the three locking regimes of the paper's Fig 3/Fig 4.
+//!
+//! Topology: every rank owns `n_shared + max_streams` **endpoints**
+//! (MPICH's virtual communication interfaces). Messages travel over
+//! lazily-created SPSC **channels** keyed by (src endpoint → dst
+//! endpoint). Exactly one of three synchronization regimes guards every
+//! endpoint access:
+//!
+//! * [`LockMode::Global`] — one fabric-wide critical section (MPICH before
+//!   4.0; the red curve of Fig 4),
+//! * [`LockMode::PerVci`] — one lock per endpoint (MPICH 4.x default; the
+//!   green curve),
+//! * stream-owned endpoints — **no lock at all**: an MPIX stream promises a
+//!   serial execution context, so its endpoint is accessed unchecked (the
+//!   blue curve).
+//!
+//! [`HybridLock`] implements all three: `with_locked` for per-VCI,
+//! `with_unchecked` under either the global lock or the stream-ownership
+//! promise.
+
+use crate::error::{MpiError, Result};
+use crate::metrics::Metrics;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::spsc::SpscRing;
+
+/// Payload bytes carried inline in an envelope (the pre-allocated message
+/// cell of MPICH's shm transport; no heap allocation on this path).
+pub const INLINE_MAX: usize = 192;
+
+/// Context id reserved for fabric-internal control traffic (rendezvous
+/// CTS/chunks/FIN, RMA ops).
+pub const CTX_CTRL: u32 = 0;
+/// Context id of the world communicator.
+pub const CTX_WORLD: u32 = 1;
+
+/// Fabric-wide configuration (one per [`crate::universe::Universe`]).
+#[derive(Clone, Debug)]
+pub struct FabricConfig {
+    /// Number of ranks ("processes").
+    pub nranks: usize,
+    /// Shared (implicitly-hashed) endpoints per rank.
+    pub n_shared: usize,
+    /// Maximum stream-owned endpoints per rank (paper: streams fail when
+    /// endpoints are exhausted).
+    pub max_streams: usize,
+    /// Locking regime for shared endpoints.
+    pub lock_mode: LockMode,
+    /// Largest message copied eagerly (heap cell); above this the
+    /// rendezvous protocol engages.
+    pub eager_max: usize,
+    /// Rendezvous chunk size for the two-copy pipelined path.
+    pub chunk_size: usize,
+    /// SPSC channel capacity (envelopes in flight per channel).
+    pub channel_cap: usize,
+    /// Simulated per-message NIC injection overhead in nanoseconds
+    /// (0 = off). Applied outside any lock on the lock-free path and
+    /// inside the critical section otherwise — hardware serialization is
+    /// what Fig 4 measures.
+    pub injection_ns: u64,
+}
+
+impl Default for FabricConfig {
+    fn default() -> Self {
+        Self {
+            nranks: 1,
+            n_shared: 8,
+            max_streams: 24,
+            lock_mode: LockMode::PerVci,
+            eager_max: 64 * 1024,
+            chunk_size: 64 * 1024,
+            channel_cap: 256,
+            injection_ns: 0,
+        }
+    }
+}
+
+/// Locking regime for shared endpoints (Fig 4's three configurations; the
+/// third — lock-free — is a property of stream-owned endpoints rather than
+/// a mode).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LockMode {
+    /// Single fabric-wide critical section.
+    Global,
+    /// Per-endpoint critical sections.
+    PerVci,
+}
+
+// ------------------------------------------------------------ envelopes
+
+/// Raw pointer that may cross threads (rendezvous tokens). Safety is the
+/// runtime's request/lifetime discipline: the pointed-to buffer outlives
+/// the request that registered it (enforced by `Request<'buf>` borrows and
+/// blocking drops).
+#[derive(Clone, Copy, Debug)]
+pub struct SendPtr(pub *const u8);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+#[derive(Clone, Copy, Debug)]
+pub struct RecvPtr(pub *mut u8);
+unsafe impl Send for RecvPtr {}
+unsafe impl Sync for RecvPtr {}
+
+/// Message header (the matching tuple).
+#[derive(Clone, Copy, Debug)]
+pub struct Header {
+    pub ctx: u32,
+    /// Sender rank in the communicator the ctx belongs to (threadcomm:
+    /// global thread rank).
+    pub src: u32,
+    pub tag: i32,
+    /// Multiplex-stream source index (or 0).
+    pub src_stream: i32,
+    /// Multiplex-stream destination index / threadcomm destination thread.
+    pub dst_stream: i32,
+}
+
+/// Payload variants. `Inline` is the no-allocation fast path.
+pub enum Payload {
+    Inline { len: u16, data: [u8; INLINE_MAX] },
+    Eager(Box<[u8]>),
+    /// Single-copy rendezvous (intra-process): receiver copies directly
+    /// from `src` and completes the sender's request.
+    RdvDirect {
+        src: SendPtr,
+        len: usize,
+        sender_req: Arc<crate::request::ReqInner>,
+    },
+    /// Two-copy rendezvous request-to-send: receiver replies CTS to
+    /// (reply_rank, reply_vci); sender-side progress then pumps chunks.
+    Rts {
+        token: u64,
+        len: usize,
+        reply_rank: u32,
+        reply_vci: u16,
+    },
+    /// Control: clear-to-send (ctx == CTX_CTRL).
+    Cts {
+        token: u64,
+        dest_rank: u32,
+        dest_vci: u16,
+    },
+    /// Control: one pipelined chunk of a two-copy transfer.
+    Chunk {
+        token: u64,
+        seq: u32,
+        last: bool,
+        data: Box<[u8]>,
+    },
+    /// Control: transfer complete (receiver → sender).
+    Fin { token: u64 },
+    /// Control: RMA operation or reply (see [`crate::rma`]).
+    Rma(crate::rma::RmaMsg),
+}
+
+impl std::fmt::Debug for Payload {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Payload::Inline { len, .. } => write!(f, "Inline({len})"),
+            Payload::Eager(b) => write!(f, "Eager({})", b.len()),
+            Payload::RdvDirect { len, .. } => write!(f, "RdvDirect({len})"),
+            Payload::Rts { token, len, .. } => write!(f, "Rts(t{token},{len})"),
+            Payload::Cts { token, .. } => write!(f, "Cts(t{token})"),
+            Payload::Chunk { token, seq, .. } => write!(f, "Chunk(t{token},#{seq})"),
+            Payload::Fin { token } => write!(f, "Fin(t{token})"),
+            Payload::Rma(_) => write!(f, "Rma"),
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct Envelope {
+    pub hdr: Header,
+    pub payload: Payload,
+}
+
+impl Envelope {
+    /// Bytes of user data carried (for matching/truncation checks).
+    pub fn data_len(&self) -> usize {
+        match &self.payload {
+            Payload::Inline { len, .. } => *len as usize,
+            Payload::Eager(b) => b.len(),
+            Payload::RdvDirect { len, .. } => *len,
+            Payload::Rts { len, .. } => *len,
+            _ => 0,
+        }
+    }
+}
+
+// ---------------------------------------------------------- hybrid lock
+
+/// A lock that can also be bypassed when exclusion is guaranteed
+/// externally (global critical section held, or stream serial-context
+/// promise). This is the mechanism behind the paper's "skip critical
+/// sections entirely" claim for MPIX streams.
+pub struct HybridLock<T> {
+    lock: Mutex<()>,
+    data: std::cell::UnsafeCell<T>,
+}
+
+unsafe impl<T: Send> Send for HybridLock<T> {}
+unsafe impl<T: Send> Sync for HybridLock<T> {}
+
+impl<T> HybridLock<T> {
+    pub fn new(v: T) -> Self {
+        Self {
+            lock: Mutex::new(()),
+            data: std::cell::UnsafeCell::new(v),
+        }
+    }
+
+    /// Locked access (per-VCI critical section). Counts the acquisition.
+    pub fn with_locked<R>(&self, metrics: &Metrics, f: impl FnOnce(&mut T) -> R) -> R {
+        let _g = self.lock.lock().unwrap();
+        Metrics::bump(&metrics.lock_acquisitions);
+        // SAFETY: mutex held.
+        unsafe { f(&mut *self.data.get()) }
+    }
+
+    /// Unchecked access.
+    ///
+    /// # Safety
+    /// Caller guarantees mutual exclusion: either the fabric global lock is
+    /// held, or the caller is the owning thread of a stream endpoint (the
+    /// MPIX stream serial-execution promise).
+    pub unsafe fn with_unchecked<R>(&self, f: impl FnOnce(&mut T) -> R) -> R {
+        f(&mut *self.data.get())
+    }
+}
+
+// ------------------------------------------------------------- channels
+
+/// A lazily-created SPSC channel from one endpoint to another.
+pub struct Channel {
+    pub ring: SpscRing<Envelope>,
+    /// Source (rank, vci) — receivers use it for diagnostics only.
+    pub src: (u32, u16),
+}
+
+// ------------------------------------------------------------ endpoints
+
+/// Endpoint kind decides the synchronization regime.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EpKind {
+    /// Shared endpoint: guarded per [`LockMode`].
+    Shared,
+    /// Stream-owned endpoint: unchecked under the serial-context promise.
+    StreamOwned,
+}
+
+/// Mutable endpoint state (matching engine + transfer tables + sender
+/// cache), always accessed through the endpoint's [`HybridLock`].
+pub struct EpState {
+    pub matching: crate::matching::MatchEngine,
+    /// In-flight two-copy sends keyed by token (sender side).
+    pub pending_sends: HashMap<u64, crate::progress::SendXfer>,
+    /// In-flight two-copy receives keyed by token (receiver side).
+    pub pending_recvs: HashMap<u64, crate::progress::RecvXfer>,
+    /// Sender-side channel cache (dst rank, dst vci) → channel.
+    pub tx_cache: HashMap<(u32, u16), Arc<Channel>>,
+    /// Receiver-side snapshot of the inbox registry.
+    pub inbox_cache: Vec<Arc<Channel>>,
+    /// Version of `inbox_cache` (compared against the registry's).
+    pub inbox_seen: u64,
+}
+
+impl EpState {
+    fn new() -> Self {
+        Self {
+            matching: crate::matching::MatchEngine::new(),
+            pending_sends: HashMap::new(),
+            pending_recvs: HashMap::new(),
+            tx_cache: HashMap::new(),
+            inbox_cache: Vec::new(),
+            inbox_seen: 0,
+        }
+    }
+}
+
+pub struct Endpoint {
+    pub kind: EpKind,
+    /// Rank ("process") this endpoint belongs to — the scope of the
+    /// Global lock mode's critical section.
+    pub owner: u32,
+    pub state: HybridLock<EpState>,
+    /// Registry of channels that deliver into this endpoint. Senders
+    /// register once per channel (rare, locked); receivers snapshot into
+    /// `EpState::inbox_cache` when the version moves.
+    pub inbox_registry: Mutex<Vec<Arc<Channel>>>,
+    pub inbox_version: AtomicU64,
+}
+
+impl Endpoint {
+    fn new(kind: EpKind, owner: u32) -> Self {
+        Self {
+            kind,
+            owner,
+            state: HybridLock::new(EpState::new()),
+            inbox_registry: Mutex::new(Vec::new()),
+            inbox_version: AtomicU64::new(0),
+        }
+    }
+}
+
+// ------------------------------------------------------------ rank state
+
+/// Per-rank (per-"process") state outside any endpoint.
+pub struct RankState {
+    /// The per-process global critical section ([`LockMode::Global`] —
+    /// MPICH's pre-4.0 `MPIR_ALLFUNC` lock is per process, not global to
+    /// the cluster).
+    pub global: Mutex<()>,
+    /// Generalized requests registered with the progress engine (paper
+    /// extension 1).
+    pub grequests: Mutex<Vec<crate::grequest::GrequestEntry>>,
+    /// Stream-owned VCI allocator: next id and free list.
+    pub stream_free: Mutex<Vec<u16>>,
+    /// Threadcomm routes: ctx → shared threadcomm state, so the proc-level
+    /// progress engine can forward envelopes to destination threads.
+    pub tc_routes: Mutex<HashMap<u32, Arc<crate::threadcomm::TcShared>>>,
+    /// RMA windows exposed by this rank: win id → window state.
+    pub windows: Mutex<HashMap<u32, Arc<crate::rma::WinTarget>>>,
+    /// Origin-side RMA counters of this rank: win id → counters.
+    pub win_origins: Mutex<HashMap<u32, Arc<crate::rma::OriginState>>>,
+    /// Default progress-thread control (paper extension 6).
+    pub progress_ctl: Arc<crate::progress::ProgressCtl>,
+}
+
+impl RankState {
+    fn new(n_shared: usize, max_streams: usize) -> Self {
+        let free = ((n_shared as u16)..(n_shared + max_streams) as u16)
+            .rev()
+            .collect();
+        Self {
+            global: Mutex::new(()),
+            grequests: Mutex::new(Vec::new()),
+            stream_free: Mutex::new(free),
+            tc_routes: Mutex::new(HashMap::new()),
+            windows: Mutex::new(HashMap::new()),
+            win_origins: Mutex::new(HashMap::new()),
+            progress_ctl: Arc::new(crate::progress::ProgressCtl::new()),
+        }
+    }
+}
+
+// --------------------------------------------------------------- fabric
+
+/// The shared fabric: all endpoints of all ranks plus global services.
+pub struct Fabric {
+    pub cfg: FabricConfig,
+    /// eps[rank][vci].
+    pub eps: Vec<Vec<Endpoint>>,
+    pub ranks: Vec<RankState>,
+    pub metrics: Metrics,
+    token_counter: AtomicU64,
+    /// Collective context-id agreement: (parent ctx, seq) → child ctx.
+    ctx_registry: Mutex<HashMap<(u32, u32), u32>>,
+    next_ctx: AtomicU32,
+    /// Window-id agreement: (ctx, seq) → win id.
+    win_registry: Mutex<HashMap<(u32, u32), u32>>,
+    next_win: AtomicU32,
+}
+
+impl Fabric {
+    pub fn new(cfg: FabricConfig) -> Arc<Fabric> {
+        let nvcis = cfg.n_shared + cfg.max_streams;
+        let eps = (0..cfg.nranks)
+            .map(|r| {
+                (0..nvcis)
+                    .map(|v| {
+                        Endpoint::new(
+                            if v < cfg.n_shared {
+                                EpKind::Shared
+                            } else {
+                                EpKind::StreamOwned
+                            },
+                            r as u32,
+                        )
+                    })
+                    .collect()
+            })
+            .collect();
+        let ranks = (0..cfg.nranks)
+            .map(|_| RankState::new(cfg.n_shared, cfg.max_streams))
+            .collect();
+        Arc::new(Fabric {
+            cfg,
+            eps,
+            ranks,
+            metrics: Metrics::default(),
+            token_counter: AtomicU64::new(1),
+            ctx_registry: Mutex::new(HashMap::new()),
+            next_ctx: AtomicU32::new(CTX_WORLD + 1),
+            win_registry: Mutex::new(HashMap::new()),
+            next_win: AtomicU32::new(1),
+        })
+    }
+
+    pub fn next_token(&self) -> u64 {
+        self.token_counter.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Agree on a child context id for a collective creation call: the
+    /// first rank to arrive with (parent, seq) allocates; the rest look it
+    /// up. Collective-call ordering per communicator makes `seq` agree.
+    pub fn agree_ctx(&self, parent: u32, seq: u32) -> u32 {
+        let mut reg = self.ctx_registry.lock().unwrap();
+        *reg.entry((parent, seq))
+            .or_insert_with(|| self.next_ctx.fetch_add(1, Ordering::Relaxed))
+    }
+
+    /// Same agreement scheme for RMA window ids.
+    pub fn agree_win(&self, ctx: u32, seq: u32) -> u32 {
+        let mut reg = self.win_registry.lock().unwrap();
+        *reg.entry((ctx, seq))
+            .or_insert_with(|| self.next_win.fetch_add(1, Ordering::Relaxed))
+    }
+
+    pub fn endpoint(&self, rank: u32, vci: u16) -> &Endpoint {
+        &self.eps[rank as usize][vci as usize]
+    }
+
+    /// Allocate a stream-owned endpoint for `rank`; fails when exhausted
+    /// (paper: "return failure if it runs out of available endpoints").
+    pub fn alloc_stream_vci(&self, rank: u32) -> Result<u16> {
+        self.ranks[rank as usize]
+            .stream_free
+            .lock()
+            .unwrap()
+            .pop()
+            .ok_or(MpiError::VciExhausted {
+                limit: self.cfg.max_streams,
+            })
+    }
+
+    /// Return a stream-owned endpoint to the pool.
+    pub fn free_stream_vci(&self, rank: u32, vci: u16) {
+        self.ranks[rank as usize]
+            .stream_free
+            .lock()
+            .unwrap()
+            .push(vci);
+    }
+
+    /// Sender side: get (and lazily create + register) the channel from
+    /// (src rank, src vci) to (dst rank, dst vci). Must be called with
+    /// exclusion on the source endpoint (its lock, the global lock, or
+    /// stream ownership) — the tx_cache lives in `EpState`.
+    pub fn channel(
+        &self,
+        st: &mut EpState,
+        src: (u32, u16),
+        dst: (u32, u16),
+    ) -> Arc<Channel> {
+        if let Some(ch) = st.tx_cache.get(&dst) {
+            return Arc::clone(ch);
+        }
+        let ch = Arc::new(Channel {
+            ring: SpscRing::with_capacity(self.cfg.channel_cap),
+            src,
+        });
+        let ep = self.endpoint(dst.0, dst.1);
+        ep.inbox_registry.lock().unwrap().push(Arc::clone(&ch));
+        ep.inbox_version.fetch_add(1, Ordering::Release);
+        st.tx_cache.insert(dst, Arc::clone(&ch));
+        ch
+    }
+
+    /// Receiver side: refresh the endpoint's inbox snapshot if new
+    /// channels registered. Call with exclusion on the endpoint.
+    pub fn refresh_inboxes(&self, ep: &Endpoint, st: &mut EpState) {
+        let v = ep.inbox_version.load(Ordering::Acquire);
+        if v != st.inbox_seen {
+            st.inbox_cache = ep.inbox_registry.lock().unwrap().clone();
+            st.inbox_seen = v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_default_sane() {
+        let c = FabricConfig::default();
+        assert!(c.n_shared > 0 && c.max_streams > 0);
+        assert!(c.eager_max >= INLINE_MAX);
+    }
+
+    #[test]
+    fn stream_vci_alloc_exhausts() {
+        let f = Fabric::new(FabricConfig {
+            nranks: 1,
+            max_streams: 2,
+            ..Default::default()
+        });
+        let a = f.alloc_stream_vci(0).unwrap();
+        let b = f.alloc_stream_vci(0).unwrap();
+        assert_ne!(a, b);
+        assert!(matches!(
+            f.alloc_stream_vci(0),
+            Err(MpiError::VciExhausted { .. })
+        ));
+        f.free_stream_vci(0, a);
+        assert_eq!(f.alloc_stream_vci(0).unwrap(), a);
+    }
+
+    #[test]
+    fn ctx_agreement_is_stable() {
+        let f = Fabric::new(FabricConfig::default());
+        let a = f.agree_ctx(1, 0);
+        let b = f.agree_ctx(1, 0);
+        let c = f.agree_ctx(1, 1);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn channel_registry_and_cache() {
+        let f = Fabric::new(FabricConfig {
+            nranks: 2,
+            ..Default::default()
+        });
+        let src_ep = f.endpoint(0, 0);
+        let ch1 = src_ep
+            .state
+            .with_locked(&f.metrics, |st| f.channel(st, (0, 0), (1, 0)));
+        let ch2 = src_ep
+            .state
+            .with_locked(&f.metrics, |st| f.channel(st, (0, 0), (1, 0)));
+        assert!(Arc::ptr_eq(&ch1, &ch2));
+        // Receiver sees it after refresh.
+        let dst_ep = f.endpoint(1, 0);
+        dst_ep.state.with_locked(&f.metrics, |st| {
+            f.refresh_inboxes(dst_ep, st);
+            assert_eq!(st.inbox_cache.len(), 1);
+        });
+    }
+
+    #[test]
+    fn hybrid_lock_counts_acquisitions() {
+        let m = Metrics::default();
+        let l = HybridLock::new(5u32);
+        l.with_locked(&m, |v| *v += 1);
+        assert_eq!(m.snapshot().lock_acquisitions, 1);
+        // Unchecked path does not count (that's the point).
+        unsafe { l.with_unchecked(|v| *v += 1) };
+        assert_eq!(m.snapshot().lock_acquisitions, 1);
+        l.with_locked(&m, |v| assert_eq!(*v, 7));
+    }
+}

@@ -1,0 +1,98 @@
+//! Info objects (`MPI_Info`) including the paper's binary-value extension
+//! `MPIX_Info_set_hex`, used to smuggle opaque handles (a CUDA stream, an
+//! offload-stream token) through the string-typed info interface.
+
+use std::collections::HashMap;
+
+/// An `MPI_Info` object: string keys, string or binary values.
+#[derive(Clone, Debug, Default)]
+pub struct Info {
+    entries: HashMap<String, Vec<u8>>,
+}
+
+impl Info {
+    /// `MPI_Info_create`.
+    pub fn new() -> Info {
+        Info::default()
+    }
+
+    /// `MPI_Info_set`.
+    pub fn set(&mut self, key: &str, value: &str) -> &mut Self {
+        self.entries.insert(key.to_string(), value.as_bytes().to_vec());
+        self
+    }
+
+    /// `MPI_Info_get`.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.entries
+            .get(key)
+            .and_then(|v| std::str::from_utf8(v).ok())
+    }
+
+    /// `MPIX_Info_set_hex`: store an opaque binary value. The paper's
+    /// rationale: "a GPU queuing object not only is not a string but is
+    /// often opaque to the user".
+    pub fn set_hex(&mut self, key: &str, value: &[u8]) -> &mut Self {
+        self.entries.insert(key.to_string(), value.to_vec());
+        self
+    }
+
+    /// Binary value back (any key set by either setter).
+    pub fn get_hex(&self, key: &str) -> Option<&[u8]> {
+        self.entries.get(key).map(|v| v.as_slice())
+    }
+
+    /// Hex fetch decoded as a little-endian u64 (offload tokens).
+    pub fn get_hex_u64(&self, key: &str) -> Option<u64> {
+        let v = self.entries.get(key)?;
+        if v.len() != 8 {
+            return None;
+        }
+        Some(u64::from_le_bytes(v.as_slice().try_into().ok()?))
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn string_roundtrip() {
+        let mut i = Info::new();
+        i.set("type", "offload_stream");
+        assert_eq!(i.get("type"), Some("offload_stream"));
+        assert_eq!(i.get("missing"), None);
+    }
+
+    #[test]
+    fn hex_roundtrip() {
+        let mut i = Info::new();
+        let token = 0xDEAD_BEEF_u64;
+        i.set_hex("value", &token.to_le_bytes());
+        assert_eq!(i.get_hex_u64("value"), Some(token));
+        assert_eq!(i.get_hex("value").unwrap().len(), 8);
+    }
+
+    #[test]
+    fn hex_wrong_width_rejected() {
+        let mut i = Info::new();
+        i.set_hex("value", &[1, 2, 3]);
+        assert_eq!(i.get_hex_u64("value"), None);
+    }
+
+    #[test]
+    fn set_overwrites() {
+        let mut i = Info::new();
+        i.set("k", "a").set("k", "b");
+        assert_eq!(i.get("k"), Some("b"));
+        assert_eq!(i.len(), 1);
+    }
+}

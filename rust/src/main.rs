@@ -1,0 +1,208 @@
+//! `repro` — CLI driver for mpix-rs.
+//!
+//! Subcommands:
+//!   info                         fabric defaults + AOT artifact listing
+//!   kernels                      smoke-run every AOT artifact through PJRT
+//!   pingpong  [--size S] [--iters K]
+//!   msgrate   [--threads T] [--config global|pervci|stream]
+//!   stencil   [--steps K]        single-rank AOT Jacobi smoke run
+//!
+//! (clap is not in the offline crate set; flags are parsed by hand.)
+
+use mpix::fabric::{FabricConfig, LockMode};
+use mpix::universe::Universe;
+use std::time::Instant;
+
+fn flag(args: &[String], name: &str, default: usize) -> usize {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn flag_str<'a>(args: &'a [String], name: &str, default: &'a str) -> &'a str {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .map(String::as_str)
+        .unwrap_or(default)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("info") => info(),
+        Some("kernels") => kernels(),
+        Some("pingpong") => pingpong(&args),
+        Some("msgrate") => msgrate(&args),
+        Some("stencil") => stencil(&args),
+        _ => {
+            eprintln!(
+                "usage: repro <info|kernels|pingpong|msgrate|stencil> [flags]\n\
+                 see the source header for flags; examples/ for the full demos"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn info() {
+    let cfg = FabricConfig::default();
+    println!("mpix-rs — reproduction of 'Designing and Prototyping Extensions to MPI in MPICH'");
+    println!("fabric defaults: {cfg:#?}");
+    let dir = mpix::runtime::Registry::default_dir();
+    match mpix::runtime::Registry::open(&dir) {
+        Ok(reg) => {
+            println!("artifacts ({}):", dir.display());
+            let mut names = reg.names();
+            names.sort();
+            for n in names {
+                let m = reg.meta(n).unwrap();
+                println!("  {n:<12} in={:?} out={:?}", m.inputs, m.outputs);
+            }
+        }
+        Err(e) => println!("artifacts not available: {e}"),
+    }
+}
+
+fn kernels() {
+    let mut reg = mpix::runtime::Registry::open(mpix::runtime::Registry::default_dir())
+        .expect("run `make artifacts` first");
+    let mut names: Vec<String> = reg.names().iter().map(|s| s.to_string()).collect();
+    names.sort();
+    for name in names {
+        let meta = reg.meta(&name).unwrap().clone();
+        let inputs: Vec<Vec<f32>> = meta
+            .inputs
+            .iter()
+            .map(|s| vec![1.0; s.iter().product::<i64>().max(1) as usize])
+            .collect();
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let t0 = Instant::now();
+        let out = reg.exec_f32(&name, &refs).expect("execute");
+        println!(
+            "{name:<12} ok: {} output(s), first={:?}, {:?}",
+            out.len(),
+            out[0].first(),
+            t0.elapsed()
+        );
+    }
+}
+
+fn pingpong(args: &[String]) {
+    let size = flag(args, "--size", 8);
+    let iters = flag(args, "--iters", 10_000);
+    let lat = Universe::run(Universe::with_ranks(2), |world| {
+        let buf = vec![1u8; size];
+        let mut rbuf = vec![0u8; size];
+        mpix::coll::barrier(&world).unwrap();
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            if world.rank() == 0 {
+                world.send(&buf, 1, 0).unwrap();
+                world.recv(&mut rbuf, 1, 0).unwrap();
+            } else {
+                world.recv(&mut rbuf, 0, 0).unwrap();
+                world.send(&buf, 0, 0).unwrap();
+            }
+        }
+        t0.elapsed().as_secs_f64() / iters as f64 / 2.0
+    });
+    println!(
+        "pingpong {size} B x {iters}: half-rt latency {}",
+        mpix::util::stats::fmt_time(lat[0])
+    );
+}
+
+fn msgrate(args: &[String]) {
+    let threads = flag(args, "--threads", 4);
+    let config = flag_str(args, "--config", "stream");
+    let lock_mode = match config {
+        "global" => LockMode::Global,
+        _ => LockMode::PerVci,
+    };
+    let fcfg = FabricConfig {
+        nranks: 2,
+        n_shared: 64,
+        max_streams: threads + 2,
+        lock_mode,
+        ..Default::default()
+    };
+    let use_stream = config == "stream";
+    let rates = Universe::run(fcfg, |world| {
+        let comms: Vec<mpix::Comm> = (0..threads)
+            .map(|_| {
+                if use_stream {
+                    let s = mpix::Stream::create(&world, &mpix::Info::new()).unwrap();
+                    mpix::stream_comm_create(&world, Some(&s)).unwrap()
+                } else {
+                    world.dup()
+                }
+            })
+            .collect();
+        let peer = 1 - world.rank();
+        mpix::coll::barrier(&world).unwrap();
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for comm in &comms {
+                s.spawn(move || {
+                    let b = [0u8; 8];
+                    let mut rb = vec![[0u8; 8]; 32];
+                    for _ in 0..100 {
+                        let mut reqs = Vec::new();
+                        for r in rb.iter_mut() {
+                            reqs.push(comm.irecv(r, peer as i32, 0).unwrap());
+                        }
+                        for _ in 0..32 {
+                            reqs.push(comm.isend(&b, peer, 0).unwrap());
+                        }
+                        mpix::waitall(reqs).unwrap();
+                    }
+                });
+            }
+        });
+        (threads * 32 * 100) as f64 / t0.elapsed().as_secs_f64()
+    });
+    println!(
+        "msgrate config={config} threads={threads}: {} total",
+        mpix::util::stats::fmt_rate(rates.iter().sum())
+    );
+}
+
+/// Single-rank AOT Jacobi smoke run: grid → jacobi_128 → residual curve.
+fn stencil(args: &[String]) {
+    let steps = flag(args, "--steps", 50);
+    let mut reg = mpix::runtime::Registry::open(mpix::runtime::Registry::default_dir())
+        .expect("run `make artifacts` first");
+    let lp = 130usize;
+    let mut grid = vec![0f32; lp * lp];
+    for r in 0..lp {
+        for c in 0..lp {
+            if r == 0 || r == lp - 1 || c == 0 || c == lp - 1 {
+                grid[r * lp + c] = 1.0;
+            }
+        }
+    }
+    let t0 = Instant::now();
+    let mut last_res = f32::INFINITY;
+    for step in 0..steps {
+        let out = reg.exec_f32("jacobi_128", &[&grid]).expect("jacobi");
+        for r in 0..128 {
+            let dst = (r + 1) * lp + 1;
+            grid[dst..dst + 128].copy_from_slice(&out[0][r * 128..(r + 1) * 128]);
+        }
+        let res = out[1][0];
+        assert!(res <= last_res * 1.0001, "residual must not increase");
+        last_res = res;
+        if (step + 1) % 10 == 0 {
+            println!("step {:4}: residual {:.6e}", step + 1, res);
+        }
+    }
+    println!(
+        "{} steps in {:?} ({:.1} µs/step)",
+        steps,
+        t0.elapsed(),
+        t0.elapsed().as_secs_f64() * 1e6 / steps as f64
+    );
+}

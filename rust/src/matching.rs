@@ -1,0 +1,374 @@
+//! Tag matching: posted-receive queue + unexpected-message queue, with
+//! MPI wildcard semantics (`ANY_SOURCE`, `ANY_TAG`) extended with the
+//! paper's stream-index matching (multiplex stream comms, `ANY_STREAM`)
+//! which also carries threadcomm sub-rank addressing.
+
+use crate::fabric::{Envelope, Payload, RecvPtr};
+use crate::request::{ReqInner, Status};
+use crate::{MpiError, ANY_SOURCE, ANY_STREAM, ANY_TAG};
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+/// A posted (pending) receive.
+pub struct PostedRecv {
+    pub ctx: u32,
+    /// Source rank filter (`ANY_SOURCE` = wildcard).
+    pub src: i32,
+    /// Tag filter (`ANY_TAG` = wildcard).
+    pub tag: i32,
+    /// Source stream index filter (`ANY_STREAM` = wildcard).
+    pub src_stream: i32,
+    /// Destination stream index / threadcomm thread id this recv belongs
+    /// to (exact match against the envelope's `dst_stream`).
+    pub dst_stream: i32,
+    pub buf: RecvPtr,
+    pub cap: usize,
+    pub req: Arc<ReqInner>,
+}
+
+impl PostedRecv {
+    fn matches(&self, env: &Envelope) -> bool {
+        env.hdr.ctx == self.ctx
+            && (self.src == ANY_SOURCE || self.src == env.hdr.src as i32)
+            && (self.tag == ANY_TAG || self.tag == env.hdr.tag)
+            && (self.src_stream == ANY_STREAM || self.src_stream == env.hdr.src_stream)
+            && self.dst_stream == env.hdr.dst_stream
+    }
+}
+
+/// What the caller must do next for a matched envelope that cannot be
+/// finished inside the matching engine (rendezvous paths).
+pub enum MatchAction {
+    /// Fully handled (inline/eager copied, request completed).
+    Done,
+    /// Two-copy rendezvous matched: send CTS and register the transfer.
+    StartTwoCopy {
+        token: u64,
+        len: usize,
+        reply_rank: u32,
+        reply_vci: u16,
+        posted: PostedRecv,
+        status: Status,
+    },
+}
+
+/// Per-endpoint (or per-threadcomm-thread) matching engine.
+pub struct MatchEngine {
+    posted: VecDeque<PostedRecv>,
+    unexpected: VecDeque<Envelope>,
+}
+
+impl Default for MatchEngine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MatchEngine {
+    pub fn new() -> Self {
+        Self {
+            posted: VecDeque::new(),
+            unexpected: VecDeque::new(),
+        }
+    }
+
+    pub fn posted_len(&self) -> usize {
+        self.posted.len()
+    }
+
+    pub fn unexpected_len(&self) -> usize {
+        self.unexpected.len()
+    }
+
+    /// Deliver an incoming envelope: match against posted receives (in
+    /// post order) or queue as unexpected.
+    pub fn deliver(&mut self, env: Envelope) -> Option<MatchAction> {
+        if let Some(pos) = self.posted.iter().position(|p| p.matches(&env)) {
+            let posted = self.posted.remove(pos).unwrap();
+            Some(finish_match(posted, env))
+        } else {
+            self.unexpected.push_back(env);
+            None
+        }
+    }
+
+    /// Post a receive: first search the unexpected queue (arrival order),
+    /// otherwise append to the posted queue.
+    pub fn post(&mut self, posted: PostedRecv) -> Option<MatchAction> {
+        if let Some(pos) = self.unexpected.iter().position(|e| posted.matches(e)) {
+            let env = self.unexpected.remove(pos).unwrap();
+            Some(finish_match(posted, env))
+        } else {
+            self.posted.push_back(posted);
+            None
+        }
+    }
+
+    /// `MPI_Iprobe`: peek the unexpected queue for a matching message
+    /// without receiving it. Returns its (source, tag, len).
+    pub fn probe(&self, ctx: u32, src: i32, tag: i32, dst_stream: i32) -> Option<Status> {
+        let pat = ProbePattern {
+            ctx,
+            src,
+            tag,
+            dst_stream,
+        };
+        self.unexpected
+            .iter()
+            .find(|e| pat.matches(e))
+            .map(|e| Status {
+                source: e.hdr.src as i32,
+                tag: e.hdr.tag,
+                len: e.data_len(),
+            })
+    }
+}
+
+struct ProbePattern {
+    ctx: u32,
+    src: i32,
+    tag: i32,
+    dst_stream: i32,
+}
+
+impl ProbePattern {
+    fn matches(&self, env: &Envelope) -> bool {
+        env.hdr.ctx == self.ctx
+            && (self.src == ANY_SOURCE || self.src == env.hdr.src as i32)
+            && (self.tag == ANY_TAG || self.tag == env.hdr.tag)
+            && self.dst_stream == env.hdr.dst_stream
+    }
+}
+
+/// Complete a matched (posted, envelope) pair. Inline/eager payloads are
+/// copied here (receive-side copy); rendezvous payloads either copy
+/// directly from the sender (single-copy) or hand back a
+/// [`MatchAction::StartTwoCopy`].
+fn finish_match(posted: PostedRecv, env: Envelope) -> MatchAction {
+    let status = Status {
+        source: env.hdr.src as i32,
+        tag: env.hdr.tag,
+        len: env.data_len(),
+    };
+    let incoming = env.data_len();
+    if incoming > posted.cap {
+        posted.req.fail(MpiError::Truncate {
+            incoming,
+            capacity: posted.cap,
+        });
+        // Sender-side rendezvous requests must not hang on truncation.
+        if let Payload::RdvDirect { sender_req, .. } = env.payload {
+            sender_req.complete(Status::empty());
+        }
+        return MatchAction::Done;
+    }
+    match env.payload {
+        Payload::Inline { len, data } => {
+            // SAFETY: posted.buf points into a live buffer of at least
+            // `cap` bytes (Request<'buf> borrow discipline).
+            unsafe {
+                std::ptr::copy_nonoverlapping(data.as_ptr(), posted.buf.0, len as usize);
+            }
+            posted.req.complete(status);
+            MatchAction::Done
+        }
+        Payload::Eager(data) => {
+            unsafe {
+                std::ptr::copy_nonoverlapping(data.as_ptr(), posted.buf.0, data.len());
+            }
+            posted.req.complete(status);
+            MatchAction::Done
+        }
+        Payload::RdvDirect {
+            src,
+            len,
+            sender_req,
+        } => {
+            // Single-copy: straight from the sender's buffer.
+            unsafe {
+                std::ptr::copy_nonoverlapping(src.0, posted.buf.0, len);
+            }
+            sender_req.complete(Status::empty());
+            posted.req.complete(status);
+            MatchAction::Done
+        }
+        Payload::Rts {
+            token,
+            len,
+            reply_rank,
+            reply_vci,
+        } => MatchAction::StartTwoCopy {
+            token,
+            len,
+            reply_rank,
+            reply_vci,
+            posted,
+            status,
+        },
+        other => {
+            posted.req.fail(MpiError::Internal(format!(
+                "control payload {other:?} reached the matching engine"
+            )));
+            MatchAction::Done
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::{Header, INLINE_MAX};
+
+    fn env(ctx: u32, src: u32, tag: i32, bytes: &[u8]) -> Envelope {
+        let mut data = [0u8; INLINE_MAX];
+        data[..bytes.len()].copy_from_slice(bytes);
+        Envelope {
+            hdr: Header {
+                ctx,
+                src,
+                tag,
+                src_stream: 0,
+                dst_stream: 0,
+            },
+            payload: Payload::Inline {
+                len: bytes.len() as u16,
+                data,
+            },
+        }
+    }
+
+    fn posted(ctx: u32, src: i32, tag: i32, buf: &mut [u8]) -> (PostedRecv, Arc<ReqInner>) {
+        let req = ReqInner::new();
+        (
+            PostedRecv {
+                ctx,
+                src,
+                tag,
+                src_stream: ANY_STREAM,
+                dst_stream: 0,
+                buf: RecvPtr(buf.as_mut_ptr()),
+                cap: buf.len(),
+                req: Arc::clone(&req),
+            },
+            req,
+        )
+    }
+
+    #[test]
+    fn pre_posted_match() {
+        let mut m = MatchEngine::new();
+        let mut buf = [0u8; 16];
+        let (p, req) = posted(5, 1, 9, &mut buf);
+        assert!(m.post(p).is_none());
+        assert!(m.deliver(env(5, 1, 9, b"hello")).is_some());
+        assert!(req.is_complete());
+        let st = req.status();
+        assert_eq!((st.source, st.tag, st.len), (1, 9, 5));
+        assert_eq!(&buf[..5], b"hello");
+    }
+
+    #[test]
+    fn unexpected_then_post() {
+        let mut m = MatchEngine::new();
+        assert!(m.deliver(env(5, 2, 3, b"abc")).is_none());
+        assert_eq!(m.unexpected_len(), 1);
+        let mut buf = [0u8; 8];
+        let (p, req) = posted(5, 2, 3, &mut buf);
+        assert!(m.post(p).is_some());
+        assert!(req.is_complete());
+        assert_eq!(&buf[..3], b"abc");
+    }
+
+    #[test]
+    fn wildcards_match() {
+        let mut m = MatchEngine::new();
+        let mut buf = [0u8; 8];
+        let (p, req) = posted(5, ANY_SOURCE, ANY_TAG, &mut buf);
+        m.post(p);
+        m.deliver(env(5, 7, 123, b"x"));
+        assert!(req.is_complete());
+        assert_eq!(req.status().source, 7);
+        assert_eq!(req.status().tag, 123);
+    }
+
+    #[test]
+    fn mismatched_goes_unexpected() {
+        let mut m = MatchEngine::new();
+        let mut buf = [0u8; 8];
+        let (p, req) = posted(5, 1, 9, &mut buf);
+        m.post(p);
+        m.deliver(env(5, 1, 8, b"no")); // wrong tag
+        m.deliver(env(6, 1, 9, b"no")); // wrong ctx
+        m.deliver(env(5, 2, 9, b"no")); // wrong src
+        assert!(!req.is_complete());
+        assert_eq!(m.unexpected_len(), 3);
+        assert_eq!(m.posted_len(), 1);
+    }
+
+    #[test]
+    fn fifo_order_preserved_per_source() {
+        let mut m = MatchEngine::new();
+        m.deliver(env(5, 1, 0, b"first"));
+        m.deliver(env(5, 1, 0, b"second"));
+        let mut b1 = [0u8; 8];
+        let (p1, r1) = posted(5, 1, 0, &mut b1);
+        m.post(p1);
+        assert!(r1.is_complete());
+        assert_eq!(&b1[..5], b"first");
+        let mut b2 = [0u8; 8];
+        let (p2, r2) = posted(5, 1, 0, &mut b2);
+        m.post(p2);
+        assert!(r2.is_complete());
+        assert_eq!(&b2[..6], b"second");
+    }
+
+    #[test]
+    fn truncation_fails_request() {
+        let mut m = MatchEngine::new();
+        let mut buf = [0u8; 2];
+        let (p, req) = posted(5, 1, 0, &mut buf);
+        m.post(p);
+        m.deliver(env(5, 1, 0, b"too long"));
+        assert!(req.is_complete());
+        assert!(matches!(
+            req.take_result(),
+            Err(MpiError::Truncate { .. })
+        ));
+    }
+
+    #[test]
+    fn stream_index_matching() {
+        let mut m = MatchEngine::new();
+        let mut buf = [0u8; 8];
+        let req = ReqInner::new();
+        m.post(PostedRecv {
+            ctx: 5,
+            src: ANY_SOURCE,
+            tag: 0,
+            src_stream: 2, // only stream 2
+            dst_stream: 1,
+            buf: RecvPtr(buf.as_mut_ptr()),
+            cap: 8,
+            req: Arc::clone(&req),
+        });
+        // Wrong src_stream: unexpected.
+        let mut e = env(5, 0, 0, b"a");
+        e.hdr.src_stream = 1;
+        e.hdr.dst_stream = 1;
+        m.deliver(e);
+        assert!(!req.is_complete());
+        // Right src_stream but wrong dst_stream: unexpected.
+        let mut e = env(5, 0, 0, b"b");
+        e.hdr.src_stream = 2;
+        e.hdr.dst_stream = 0;
+        m.deliver(e);
+        assert!(!req.is_complete());
+        // Exact: matches.
+        let mut e = env(5, 0, 0, b"c");
+        e.hdr.src_stream = 2;
+        e.hdr.dst_stream = 1;
+        m.deliver(e);
+        assert!(req.is_complete());
+        assert_eq!(buf[0], b'c');
+    }
+}

@@ -1,0 +1,117 @@
+//! Always-on lightweight counters for the communication hot path.
+//!
+//! Relaxed atomics; used by the perf pass (EXPERIMENTS.md §Perf) to verify
+//! structural claims (e.g. "the stream path acquires zero locks per
+//! message", "the eager path performs zero heap allocations").
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+#[derive(Default)]
+pub struct Metrics {
+    /// Messages sent through the eager inline (no-alloc) path.
+    pub eager_inline: AtomicU64,
+    /// Messages sent through the eager heap path.
+    pub eager_heap: AtomicU64,
+    /// Messages sent through the rendezvous path.
+    pub rdv: AtomicU64,
+    /// Rendezvous chunks pumped by sender-side progress.
+    pub rdv_chunks: AtomicU64,
+    /// Mutex acquisitions on the send/recv/progress path.
+    pub lock_acquisitions: AtomicU64,
+    /// Messages that matched a pre-posted receive.
+    pub expected_hits: AtomicU64,
+    /// Messages that landed in the unexpected queue.
+    pub unexpected_hits: AtomicU64,
+    /// Progress-engine poll invocations.
+    pub progress_polls: AtomicU64,
+    /// Generalized-request poll callbacks invoked.
+    pub grequest_polls: AtomicU64,
+    /// RMA target-side operations serviced.
+    pub rma_serviced: AtomicU64,
+    /// Offload-stream operations executed.
+    pub offload_ops: AtomicU64,
+    /// Requests allocated (the threadcomm small-message shortcut skips this).
+    pub requests_alloc: AtomicU64,
+}
+
+impl Metrics {
+    pub fn bump(counter: &AtomicU64) {
+        counter.fetch_add(1, Relaxed);
+    }
+
+    pub fn add(counter: &AtomicU64, n: u64) {
+        counter.fetch_add(n, Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            eager_inline: self.eager_inline.load(Relaxed),
+            eager_heap: self.eager_heap.load(Relaxed),
+            rdv: self.rdv.load(Relaxed),
+            rdv_chunks: self.rdv_chunks.load(Relaxed),
+            lock_acquisitions: self.lock_acquisitions.load(Relaxed),
+            expected_hits: self.expected_hits.load(Relaxed),
+            unexpected_hits: self.unexpected_hits.load(Relaxed),
+            progress_polls: self.progress_polls.load(Relaxed),
+            grequest_polls: self.grequest_polls.load(Relaxed),
+            rma_serviced: self.rma_serviced.load(Relaxed),
+            offload_ops: self.offload_ops.load(Relaxed),
+            requests_alloc: self.requests_alloc.load(Relaxed),
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    pub eager_inline: u64,
+    pub eager_heap: u64,
+    pub rdv: u64,
+    pub rdv_chunks: u64,
+    pub lock_acquisitions: u64,
+    pub expected_hits: u64,
+    pub unexpected_hits: u64,
+    pub progress_polls: u64,
+    pub grequest_polls: u64,
+    pub rma_serviced: u64,
+    pub offload_ops: u64,
+    pub requests_alloc: u64,
+}
+
+impl MetricsSnapshot {
+    /// Difference since an earlier snapshot.
+    pub fn since(&self, earlier: &MetricsSnapshot) -> MetricsSnapshot {
+        MetricsSnapshot {
+            eager_inline: self.eager_inline - earlier.eager_inline,
+            eager_heap: self.eager_heap - earlier.eager_heap,
+            rdv: self.rdv - earlier.rdv,
+            rdv_chunks: self.rdv_chunks - earlier.rdv_chunks,
+            lock_acquisitions: self.lock_acquisitions - earlier.lock_acquisitions,
+            expected_hits: self.expected_hits - earlier.expected_hits,
+            unexpected_hits: self.unexpected_hits - earlier.unexpected_hits,
+            progress_polls: self.progress_polls - earlier.progress_polls,
+            grequest_polls: self.grequest_polls - earlier.grequest_polls,
+            rma_serviced: self.rma_serviced - earlier.rma_serviced,
+            offload_ops: self.offload_ops - earlier.offload_ops,
+            requests_alloc: self.requests_alloc - earlier.requests_alloc,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_diff() {
+        let m = Metrics::default();
+        Metrics::bump(&m.eager_inline);
+        let a = m.snapshot();
+        Metrics::add(&m.eager_inline, 2);
+        Metrics::bump(&m.rdv);
+        let b = m.snapshot();
+        let d = b.since(&a);
+        assert_eq!(d.eager_inline, 2);
+        assert_eq!(d.rdv, 1);
+        assert_eq!(d.eager_heap, 0);
+    }
+}

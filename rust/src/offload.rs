@@ -1,0 +1,442 @@
+//! The offload substrate (paper extension 4's "GPU stream").
+//!
+//! There is no GPU in this testbed; what the enqueue extension actually
+//! depends on is the *offload-context semantics*: an in-order work queue
+//! executed asynchronously from the issuing CPU thread, with completion
+//! events (see DESIGN.md §Hardware-Adaptation). [`OffloadStream`]
+//! reproduces exactly that: a dedicated executor thread drains a FIFO of
+//! operations — kernel launches (the AOT-compiled Pallas artifacts run
+//! through a thread-confined PJRT [`crate::runtime::Registry`]),
+//! host↔device copies, enqueued MPI operations, events, callbacks.
+//!
+//! `MPIX_Info_set_hex` interop: an offload stream exposes an opaque u64
+//! [`OffloadStream::token`] which can be smuggled through an
+//! [`crate::info::Info`] exactly like the paper passes `cudaStream_t`.
+
+use crate::error::{MpiError, Result};
+use crate::metrics::Metrics;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, Weak};
+
+// --------------------------------------------------------- device memory
+
+/// "Device" memory: an f32 buffer owned by the offload side. Host code
+/// must not touch it between enqueue and synchronization (the CUDA
+/// discipline); accessors go through a mutex so violations are safe, just
+/// meaningless.
+#[derive(Clone)]
+pub struct DevBuf {
+    data: Arc<Mutex<Vec<f32>>>,
+}
+
+impl DevBuf {
+    /// `cudaMalloc` analogue.
+    pub fn alloc(len: usize) -> DevBuf {
+        DevBuf {
+            data: Arc::new(Mutex::new(vec![0.0; len])),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Synchronous host read (use after stream synchronization).
+    pub fn to_host(&self) -> Vec<f32> {
+        self.data.lock().unwrap().clone()
+    }
+
+    /// Synchronous host write (initialization).
+    pub fn from_host(&self, src: &[f32]) {
+        let mut d = self.data.lock().unwrap();
+        d[..src.len()].copy_from_slice(src);
+    }
+
+    fn with<R>(&self, f: impl FnOnce(&mut Vec<f32>) -> R) -> R {
+        f(&mut self.data.lock().unwrap())
+    }
+}
+
+// ---------------------------------------------------------------- events
+
+/// Completion event (`cudaEvent_t` analogue): recorded into the stream,
+/// queried or waited from the host — the object grequest `poll_fn`s query.
+pub struct OffloadEvent {
+    done: AtomicBool,
+}
+
+impl OffloadEvent {
+    pub fn new() -> Arc<OffloadEvent> {
+        Arc::new(OffloadEvent {
+            done: AtomicBool::new(false),
+        })
+    }
+
+    /// `cudaEventQuery`.
+    pub fn query(&self) -> bool {
+        self.done.load(Ordering::Acquire)
+    }
+
+    /// Block until recorded.
+    pub fn wait(&self) {
+        while !self.query() {
+            std::thread::yield_now();
+        }
+    }
+
+    fn record(&self) {
+        self.done.store(true, Ordering::Release);
+    }
+}
+
+// ------------------------------------------------------------ operations
+
+type Callback = Box<dyn FnOnce(&mut crate::runtime::Registry) + Send>;
+
+pub(crate) enum Op {
+    /// Launch an AOT kernel: outputs written to the DevBufs in order.
+    Kernel {
+        name: String,
+        inputs: Vec<DevBuf>,
+        outputs: Vec<DevBuf>,
+    },
+    /// `cudaMemcpyAsync(H2D)` — host data captured by value (the enqueue
+    /// copy models the pinned staging a real H2D does).
+    H2D { src: Vec<f32>, dst: DevBuf },
+    /// `cudaMemcpyAsync(D2H)` — completion observable via events/sync.
+    D2H {
+        src: DevBuf,
+        dst: Arc<Mutex<Vec<f32>>>,
+    },
+    /// Enqueued MPI operation (extension 4): executed in-order inside the
+    /// stream context. The closure performs the blocking comm call.
+    Mpi(Box<dyn FnOnce() -> Result<()> + Send>),
+    /// Record an event.
+    Event(Arc<OffloadEvent>),
+    /// Arbitrary work with access to the PJRT registry (used by advanced
+    /// drivers that fuse custom host work into stream order).
+    #[allow(dead_code)]
+    Callback(Callback),
+    Exit,
+}
+
+// ----------------------------------------------------------- the stream
+
+pub struct OffloadShared {
+    token: u64,
+    queue: Mutex<Vec<Op>>,
+    cv: Condvar,
+    /// First error hit by the executor (surfaced at synchronize).
+    error: Mutex<Option<MpiError>>,
+    metrics: Option<Arc<crate::fabric::Fabric>>,
+}
+
+impl OffloadShared {
+    pub fn token(&self) -> u64 {
+        self.token
+    }
+
+    pub(crate) fn push(&self, op: Op) {
+        self.queue.lock().unwrap().push(op);
+        self.cv.notify_one();
+    }
+
+    /// Enqueue an event-record and return the event.
+    pub fn record_event(&self) -> Arc<OffloadEvent> {
+        let ev = OffloadEvent::new();
+        self.push(Op::Event(Arc::clone(&ev)));
+        ev
+    }
+
+    /// `cudaStreamSynchronize`: drain everything enqueued so far.
+    pub fn synchronize(&self) -> Result<()> {
+        self.record_event().wait();
+        if let Some(e) = self.error.lock().unwrap().take() {
+            return Err(e);
+        }
+        Ok(())
+    }
+}
+
+/// An in-order asynchronous offload stream (CUDA-stream analogue) with an
+/// owning executor thread.
+pub struct OffloadStream {
+    shared: Arc<OffloadShared>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+static TOKENS: Mutex<Vec<(u64, Weak<OffloadShared>)>> = Mutex::new(Vec::new());
+static NEXT_TOKEN: AtomicU64 = AtomicU64::new(0x0FF1_0AD0);
+
+/// Resolve an info-hex token back to its stream (used by
+/// `MPIX_Stream_create` with offload hints).
+pub fn lookup(token: u64) -> Option<Arc<OffloadShared>> {
+    TOKENS
+        .lock()
+        .unwrap()
+        .iter()
+        .find(|(t, _)| *t == token)
+        .and_then(|(_, w)| w.upgrade())
+}
+
+impl OffloadStream {
+    /// Create a stream whose executor loads kernels from `artifacts_dir`
+    /// (`None` ≙ the default artifacts directory).
+    pub fn new(artifacts_dir: Option<std::path::PathBuf>) -> OffloadStream {
+        Self::with_metrics(artifacts_dir, None)
+    }
+
+    pub fn with_metrics(
+        artifacts_dir: Option<std::path::PathBuf>,
+        fabric: Option<Arc<crate::fabric::Fabric>>,
+    ) -> OffloadStream {
+        let token = NEXT_TOKEN.fetch_add(1, Ordering::Relaxed);
+        let shared = Arc::new(OffloadShared {
+            token,
+            queue: Mutex::new(Vec::new()),
+            cv: Condvar::new(),
+            error: Mutex::new(None),
+            metrics: fabric,
+        });
+        TOKENS
+            .lock()
+            .unwrap()
+            .push((token, Arc::downgrade(&shared)));
+        let sh = Arc::clone(&shared);
+        let dir = artifacts_dir.unwrap_or_else(crate::runtime::Registry::default_dir);
+        let worker = std::thread::Builder::new()
+            .name(format!("offload-{token:x}"))
+            .spawn(move || executor(sh, dir))
+            .expect("spawn offload executor");
+        OffloadStream {
+            shared,
+            worker: Some(worker),
+        }
+    }
+
+    pub fn shared(&self) -> &Arc<OffloadShared> {
+        &self.shared
+    }
+
+    /// The opaque token to pass through `Info::set_hex` (the paper's
+    /// `cudaStream_t` value).
+    pub fn token(&self) -> u64 {
+        self.shared.token
+    }
+
+    /// Enqueue a kernel launch by artifact name.
+    pub fn launch_kernel(&self, name: &str, inputs: &[DevBuf], outputs: &[DevBuf]) {
+        self.shared.push(Op::Kernel {
+            name: name.to_string(),
+            inputs: inputs.to_vec(),
+            outputs: outputs.to_vec(),
+        });
+    }
+
+    /// `cudaMemcpyAsync` host→device.
+    pub fn memcpy_h2d(&self, src: &[f32], dst: &DevBuf) {
+        self.shared.push(Op::H2D {
+            src: src.to_vec(),
+            dst: dst.clone(),
+        });
+    }
+
+    /// `cudaMemcpyAsync` device→host: the returned cell is filled when
+    /// the stream reaches this op (read it after an event/synchronize).
+    pub fn memcpy_d2h(&self, src: &DevBuf) -> Arc<Mutex<Vec<f32>>> {
+        let dst = Arc::new(Mutex::new(Vec::new()));
+        self.shared.push(Op::D2H {
+            src: src.clone(),
+            dst: Arc::clone(&dst),
+        });
+        dst
+    }
+
+    pub fn record_event(&self) -> Arc<OffloadEvent> {
+        self.shared.record_event()
+    }
+
+    pub fn synchronize(&self) -> Result<()> {
+        self.shared.synchronize()
+    }
+}
+
+impl Drop for OffloadStream {
+    fn drop(&mut self) {
+        self.shared.push(Op::Exit);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        let token = self.shared.token;
+        TOKENS.lock().unwrap().retain(|(t, _)| *t != token);
+    }
+}
+
+/// The executor loop: strictly in-order, one op at a time — the serial
+/// semantics a CUDA stream guarantees and MPIX stream relies on.
+fn executor(sh: Arc<OffloadShared>, artifacts_dir: std::path::PathBuf) {
+    // Thread-confined PJRT registry, created lazily so streams that never
+    // launch kernels don't pay client startup.
+    let mut registry: Option<crate::runtime::Registry> = None;
+    loop {
+        let op = {
+            let mut q = sh.queue.lock().unwrap();
+            while q.is_empty() {
+                q = sh.cv.wait(q).unwrap();
+            }
+            q.remove(0)
+        };
+        if let Some(f) = &sh.metrics {
+            Metrics::bump(&f.metrics.offload_ops);
+        }
+        let fail = |e: MpiError| {
+            let mut slot = sh.error.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(e);
+            }
+        };
+        match op {
+            Op::Exit => break,
+            Op::Event(ev) => ev.record(),
+            Op::H2D { src, dst } => dst.with(|d| {
+                let n = src.len().min(d.len());
+                d[..n].copy_from_slice(&src[..n]);
+            }),
+            Op::D2H { src, dst } => {
+                *dst.lock().unwrap() = src.to_host();
+            }
+            Op::Mpi(f) => {
+                if let Err(e) = f() {
+                    fail(e);
+                }
+            }
+            Op::Callback(f) => {
+                let reg = match ensure_registry(&mut registry, &artifacts_dir) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        fail(e);
+                        continue;
+                    }
+                };
+                f(reg);
+            }
+            Op::Kernel {
+                name,
+                inputs,
+                outputs,
+            } => {
+                let reg = match ensure_registry(&mut registry, &artifacts_dir) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        fail(e);
+                        continue;
+                    }
+                };
+                // Snapshot inputs, run, scatter outputs.
+                let ins: Vec<Vec<f32>> = inputs.iter().map(|b| b.to_host()).collect();
+                let refs: Vec<&[f32]> = ins.iter().map(|v| v.as_slice()).collect();
+                match reg.exec_f32(&name, &refs) {
+                    Ok(outs) => {
+                        if outs.len() != outputs.len() {
+                            fail(MpiError::Offload(format!(
+                                "kernel {name}: {} outputs produced, {} buffers given",
+                                outs.len(),
+                                outputs.len()
+                            )));
+                            continue;
+                        }
+                        for (o, buf) in outs.into_iter().zip(&outputs) {
+                            buf.with(|d| {
+                                let n = o.len().min(d.len());
+                                d[..n].copy_from_slice(&o[..n]);
+                            });
+                        }
+                    }
+                    Err(e) => fail(e),
+                }
+            }
+        }
+    }
+}
+
+fn ensure_registry<'a>(
+    slot: &'a mut Option<crate::runtime::Registry>,
+    dir: &std::path::Path,
+) -> Result<&'a mut crate::runtime::Registry> {
+    if slot.is_none() {
+        *slot = Some(crate::runtime::Registry::open(dir)?);
+    }
+    Ok(slot.as_mut().unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn in_order_execution_and_events() {
+        let s = OffloadStream::new(None);
+        let a = DevBuf::alloc(4);
+        s.memcpy_h2d(&[1.0, 2.0, 3.0, 4.0], &a);
+        let ev1 = s.record_event();
+        let out = s.memcpy_d2h(&a);
+        s.synchronize().unwrap();
+        assert!(ev1.query());
+        assert_eq!(*out.lock().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn token_lookup_roundtrip() {
+        let s = OffloadStream::new(None);
+        let t = s.token();
+        let found = lookup(t).expect("token resolves");
+        assert_eq!(found.token(), t);
+        drop(s);
+        assert!(lookup(t).is_none(), "drop unregisters the token");
+    }
+
+    #[test]
+    fn event_initially_unrecorded() {
+        let ev = OffloadEvent::new();
+        assert!(!ev.query());
+    }
+
+    #[test]
+    fn kernel_launch_saxpy() {
+        if !crate::runtime::Registry::default_dir()
+            .join("manifest.json")
+            .exists()
+        {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let s = OffloadStream::new(None);
+        let n = 4096;
+        let a = DevBuf::alloc(1);
+        let x = DevBuf::alloc(n);
+        let y = DevBuf::alloc(n);
+        let out = DevBuf::alloc(n);
+        s.memcpy_h2d(&[2.0], &a);
+        s.memcpy_h2d(&vec![1.0; n], &x);
+        s.memcpy_h2d(&vec![2.0; n], &y);
+        // The paper's saxpy: y = a*x + y = 2*1 + 2 = 4.
+        s.launch_kernel("saxpy_4k", &[a, x, y], &[out.clone()]);
+        s.synchronize().unwrap();
+        assert!(out.to_host().iter().all(|&v| (v - 4.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn kernel_error_surfaces_at_sync() {
+        let s = OffloadStream::new(Some(std::path::PathBuf::from("/nonexistent")));
+        let b = DevBuf::alloc(1);
+        s.launch_kernel("nope", &[b.clone()], &[b]);
+        assert!(s.synchronize().is_err());
+        // Stream remains usable after an error.
+        s.synchronize().unwrap();
+    }
+}

@@ -1,0 +1,408 @@
+//! The progress engine (paper extensions 1 and 6).
+//!
+//! Everything asynchronous in the runtime advances here: draining endpoint
+//! inboxes into the matching engine, pumping two-copy rendezvous chunks
+//! (the reason the paper's Fig 8 needs progress during computation),
+//! servicing RMA target operations, forwarding threadcomm envelopes, and
+//! invoking generalized-request poll callbacks.
+//!
+//! `MPIX_Stream_progress` ≙ [`stream_progress`]; the default progress
+//! thread of `MPIX_Start_progress_thread` ≙ [`ProgressCtl`] +
+//! [`start_progress_thread`], with the paper's idle/busy/exit spin-up /
+//! spin-down control exposed directly.
+
+use crate::fabric::{Endpoint, Envelope, EpKind, EpState, Fabric, Header, LockMode, Payload, RecvPtr, SendPtr, CTX_CTRL};
+use crate::matching::MatchAction;
+use crate::metrics::Metrics;
+use crate::request::{ProgressScope, ReqInner, Status};
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Sender side of an in-flight two-copy rendezvous.
+pub struct SendXfer {
+    pub src: SendPtr,
+    pub len: usize,
+    /// Next byte to pump.
+    pub cursor: usize,
+    pub seq: u32,
+    /// Destination endpoint, known once the CTS arrives.
+    pub dst: Option<(u32, u16)>,
+    pub req: Arc<ReqInner>,
+}
+
+/// Receiver side of an in-flight two-copy rendezvous.
+pub struct RecvXfer {
+    pub buf: RecvPtr,
+    pub total: usize,
+    pub received: usize,
+    pub req: Arc<ReqInner>,
+    pub status: Status,
+    /// Sender endpoint (for the final FIN).
+    pub from: (u32, u16),
+}
+
+/// Run one progress pass for a request's scope.
+pub fn poll_scope(fabric: &Arc<Fabric>, rank: u32, scope: &ProgressScope) {
+    match scope {
+        ProgressScope::Shared => general_progress(fabric, rank),
+        ProgressScope::Stream(vci) => {
+            poll_endpoint(fabric, rank, *vci);
+        }
+        ProgressScope::Threadcomm(tc, tid) => {
+            crate::threadcomm::poll_thread(fabric, tc, *tid);
+            // Remote threadcomm traffic arrives on the tc context's
+            // endpoint; poll just that one.
+            poll_endpoint(fabric, rank, crate::threadcomm::route_vci(fabric, tc));
+        }
+        ProgressScope::External => std::thread::yield_now(),
+    }
+}
+
+/// `MPIX_Stream_progress(MPIX_STREAM_NULL)`: progress all shared
+/// endpoints of the rank plus rank-level services (grequests).
+pub fn general_progress(fabric: &Arc<Fabric>, rank: u32) {
+    Metrics::bump(&fabric.metrics.progress_polls);
+    for vci in 0..fabric.cfg.n_shared as u16 {
+        poll_endpoint(fabric, rank, vci);
+    }
+    crate::grequest::poll_rank(fabric, rank);
+}
+
+/// `MPIX_Stream_progress(stream)`: progress one stream-owned endpoint.
+///
+/// Safety contract (the stream serial-execution promise): the caller is
+/// the thread that owns the stream, or otherwise guarantees no concurrent
+/// access to the stream's endpoint.
+pub fn stream_progress(fabric: &Arc<Fabric>, rank: u32, vci: u16) {
+    Metrics::bump(&fabric.metrics.progress_polls);
+    poll_endpoint(fabric, rank, vci);
+}
+
+/// Access an endpoint under the regime its kind + the fabric lock mode
+/// dictate (see [`crate::fabric::HybridLock`]).
+pub fn with_ep<R>(
+    fabric: &Fabric,
+    ep: &Endpoint,
+    f: impl FnOnce(&mut EpState) -> R,
+) -> R {
+    match (fabric.cfg.lock_mode, ep.kind) {
+        (LockMode::Global, _) => {
+            // Per-process global critical section (the owning rank's).
+            let _g = fabric.ranks[ep.owner as usize].global.lock().unwrap();
+            Metrics::bump(&fabric.metrics.lock_acquisitions);
+            // SAFETY: the rank-wide critical section is held; all access
+            // to this rank's endpoints goes through it in Global mode.
+            unsafe { ep.state.with_unchecked(f) }
+        }
+        (LockMode::PerVci, EpKind::Shared) => ep.state.with_locked(&fabric.metrics, f),
+        (LockMode::PerVci, EpKind::StreamOwned) => {
+            // SAFETY: stream-owned endpoints are accessed only by the
+            // stream's owning serial context (MPIX stream promise).
+            unsafe { ep.state.with_unchecked(f) }
+        }
+    }
+}
+
+/// Drain one endpoint: deliver matched/unexpected messages, handle
+/// control traffic, pump pending rendezvous sends.
+pub fn poll_endpoint(fabric: &Arc<Fabric>, rank: u32, vci: u16) {
+    let ep = fabric.endpoint(rank, vci);
+    // Idle-endpoint fast path: nothing was ever registered to deliver
+    // here, so there is nothing to drain or pump (pending rendezvous work
+    // always has an inbound channel: CTS/chunks/FIN arrive through one).
+    if ep.inbox_version.load(std::sync::atomic::Ordering::Acquire) == 0 {
+        return;
+    }
+    // Threadcomm envelopes are forwarded *outside* the endpoint exclusion:
+    // their rendezvous follow-ups re-enter this endpoint.
+    let mut tc_deferred: Vec<Envelope> = Vec::new();
+    with_ep(fabric, ep, |st| {
+        fabric.refresh_inboxes(ep, st);
+        let n_inboxes = st.inbox_cache.len();
+        for i in 0..n_inboxes {
+            let ch = Arc::clone(&st.inbox_cache[i]);
+            while let Some(env) = ch.ring.pop() {
+                if env.hdr.ctx != CTX_CTRL && crate::threadcomm::is_tc_ctx(env.hdr.ctx) {
+                    tc_deferred.push(env);
+                } else {
+                    dispatch(fabric, rank, vci, st, env);
+                }
+            }
+        }
+        pump_sends(fabric, rank, vci, st);
+    });
+    for env in tc_deferred {
+        crate::threadcomm::forward(fabric, rank, env);
+    }
+}
+
+/// Route one incoming envelope.
+fn dispatch(fabric: &Arc<Fabric>, rank: u32, vci: u16, st: &mut EpState, env: Envelope) {
+    if env.hdr.ctx == CTX_CTRL {
+        handle_ctrl(fabric, rank, vci, st, env);
+        return;
+    }
+    match st.matching.deliver(env) {
+        None => {
+            Metrics::bump(&fabric.metrics.unexpected_hits);
+        }
+        Some(MatchAction::Done) => {
+            Metrics::bump(&fabric.metrics.expected_hits);
+        }
+        Some(MatchAction::StartTwoCopy {
+            token,
+            len,
+            reply_rank,
+            reply_vci,
+            posted,
+            status,
+        }) => {
+            Metrics::bump(&fabric.metrics.expected_hits);
+            start_two_copy(
+                fabric, rank, vci, st, token, len, reply_rank, reply_vci, posted, status,
+            );
+        }
+    }
+}
+
+/// A matched RTS: register the receive transfer and send CTS back.
+#[allow(clippy::too_many_arguments)]
+pub fn start_two_copy(
+    fabric: &Arc<Fabric>,
+    rank: u32,
+    vci: u16,
+    st: &mut EpState,
+    token: u64,
+    len: usize,
+    reply_rank: u32,
+    reply_vci: u16,
+    posted: crate::matching::PostedRecv,
+    status: Status,
+) {
+    st.pending_recvs.insert(
+        token,
+        RecvXfer {
+            buf: posted.buf,
+            total: len,
+            received: 0,
+            req: posted.req,
+            status,
+            from: (reply_rank, reply_vci),
+        },
+    );
+    send_ctrl(
+        fabric,
+        st,
+        (rank, vci),
+        (reply_rank, reply_vci),
+        Payload::Cts {
+            token,
+            dest_rank: rank,
+            dest_vci: vci,
+        },
+    );
+}
+
+/// Handle a control envelope (rendezvous protocol + RMA).
+fn handle_ctrl(fabric: &Arc<Fabric>, rank: u32, vci: u16, st: &mut EpState, env: Envelope) {
+    match env.payload {
+        Payload::Cts { token, dest_rank, dest_vci } => {
+            if let Some(x) = st.pending_sends.get_mut(&token) {
+                x.dst = Some((dest_rank, dest_vci));
+            }
+            pump_sends(fabric, rank, vci, st);
+        }
+        Payload::Chunk { token, seq, last, data } => {
+            let mut done = None;
+            if let Some(x) = st.pending_recvs.get_mut(&token) {
+                let off = seq as usize * fabric.cfg.chunk_size;
+                debug_assert!(off + data.len() <= x.total);
+                // SAFETY: buf spans `total` bytes (posted cap checked at
+                // match time); borrow alive via Request<'buf>.
+                unsafe {
+                    std::ptr::copy_nonoverlapping(data.as_ptr(), x.buf.0.add(off), data.len());
+                }
+                x.received += data.len();
+                if last {
+                    debug_assert_eq!(x.received, x.total);
+                    x.req.complete(x.status);
+                    done = Some((token, x.from));
+                }
+            }
+            if let Some((token, from)) = done {
+                st.pending_recvs.remove(&token);
+                send_ctrl(fabric, st, (rank, vci), from, Payload::Fin { token });
+            }
+        }
+        Payload::Fin { token } => {
+            if let Some(x) = st.pending_sends.remove(&token) {
+                x.req.complete(Status::empty());
+            }
+        }
+        Payload::Rma(msg) => {
+            crate::rma::handle(fabric, rank, vci, st, env.hdr, msg);
+        }
+        other => {
+            debug_assert!(false, "non-control payload {other:?} on CTX_CTRL");
+        }
+    }
+}
+
+/// Pump active two-copy sends: copy chunks out of the source buffer into
+/// boxed cells and push them (bounded by channel capacity). This is the
+/// work that *requires sender-side progress* — the behavior motivating the
+/// paper's general-progress extension.
+fn pump_sends(fabric: &Arc<Fabric>, rank: u32, vci: u16, st: &mut EpState) {
+    let chunk = fabric.cfg.chunk_size;
+    // Collect keys first (cannot hold &mut entry while calling channel()).
+    let tokens: Vec<u64> = st
+        .pending_sends
+        .iter()
+        .filter(|(_, x)| x.dst.is_some() && x.cursor < x.len)
+        .map(|(t, _)| *t)
+        .collect();
+    for token in tokens {
+        loop {
+            let (dst, cursor, len, seq, src) = {
+                let x = st.pending_sends.get(&token).unwrap();
+                (x.dst.unwrap(), x.cursor, x.len, x.seq, x.src)
+            };
+            if cursor >= len {
+                break;
+            }
+            let n = chunk.min(len - cursor);
+            // SAFETY: sender buffer alive until FIN completes the request.
+            let data: Box<[u8]> =
+                unsafe { std::slice::from_raw_parts(src.0.add(cursor), n) }.into();
+            let last = cursor + n >= len;
+            let env = Envelope {
+                hdr: ctrl_hdr(),
+                payload: Payload::Chunk {
+                    token,
+                    seq,
+                    last,
+                    data,
+                },
+            };
+            let ch = fabric.channel(st, (rank, vci), dst);
+            match ch.ring.push(env) {
+                Ok(()) => {
+                    Metrics::bump(&fabric.metrics.rdv_chunks);
+                    let x = st.pending_sends.get_mut(&token).unwrap();
+                    x.cursor += n;
+                    x.seq += 1;
+                }
+                Err(_) => break, // backpressure: resume next poll
+            }
+        }
+    }
+}
+
+fn ctrl_hdr() -> Header {
+    Header {
+        ctx: CTX_CTRL,
+        src: 0,
+        tag: 0,
+        src_stream: 0,
+        dst_stream: 0,
+    }
+}
+
+/// Push a control envelope from `src` endpoint state to `dst`, spinning
+/// through local pumping if the ring is momentarily full.
+pub fn send_ctrl(
+    fabric: &Arc<Fabric>,
+    st: &mut EpState,
+    src: (u32, u16),
+    dst: (u32, u16),
+    payload: Payload,
+) {
+    let ch = fabric.channel(st, src, dst);
+    let mut env = Envelope {
+        hdr: ctrl_hdr(),
+        payload,
+    };
+    loop {
+        match ch.ring.push(env) {
+            Ok(()) => return,
+            Err(back) => {
+                env = back;
+                // The peer must drain; don't deadlock while holding our
+                // endpoint — just spin (control rings are rarely full).
+                std::hint::spin_loop();
+            }
+        }
+    }
+}
+
+// --------------------------------------------------- progress thread ctl
+
+pub const PROGRESS_IDLE: u8 = 0;
+pub const PROGRESS_BUSY: u8 = 1;
+pub const PROGRESS_EXIT: u8 = 2;
+
+/// Spin-up/spin-down control block for a user (or default) progress
+/// thread — the paper's `volatile int need_progress` pattern, first-class.
+pub struct ProgressCtl {
+    state: AtomicU8,
+    handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Default for ProgressCtl {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ProgressCtl {
+    pub fn new() -> Self {
+        Self {
+            state: AtomicU8::new(PROGRESS_IDLE),
+            handle: Mutex::new(None),
+        }
+    }
+
+    /// Spin the progress thread up (busy polling).
+    pub fn set_busy(&self) {
+        self.state.store(PROGRESS_BUSY, Ordering::Release);
+    }
+
+    /// Spin the progress thread down (idle; 1 ms naps).
+    pub fn set_idle(&self) {
+        self.state.store(PROGRESS_IDLE, Ordering::Release);
+    }
+
+    pub fn state(&self) -> u8 {
+        self.state.load(Ordering::Acquire)
+    }
+}
+
+/// `MPIX_Start_progress_thread(stream)`: spawn the default progress
+/// thread for a scope. `None` ≙ MPIX_STREAM_NULL (general progress).
+pub fn start_progress_thread(fabric: &Arc<Fabric>, rank: u32, stream_vci: Option<u16>) {
+    let ctl = Arc::clone(&fabric.ranks[rank as usize].progress_ctl);
+    let f = Arc::clone(fabric);
+    ctl.set_busy();
+    let ctl2 = Arc::clone(&ctl);
+    let h = std::thread::spawn(move || loop {
+        match ctl2.state() {
+            PROGRESS_BUSY => match stream_vci {
+                Some(v) => stream_progress(&f, rank, v),
+                None => general_progress(&f, rank),
+            },
+            PROGRESS_IDLE => std::thread::sleep(std::time::Duration::from_millis(1)),
+            _ => break,
+        }
+    });
+    *ctl.handle.lock().unwrap() = Some(h);
+}
+
+/// `MPIX_Stop_progress_thread`.
+pub fn stop_progress_thread(fabric: &Arc<Fabric>, rank: u32) {
+    let ctl = &fabric.ranks[rank as usize].progress_ctl;
+    ctl.state.store(PROGRESS_EXIT, Ordering::Release);
+    if let Some(h) = ctl.handle.lock().unwrap().take() {
+        let _ = h.join();
+    }
+    ctl.state.store(PROGRESS_IDLE, Ordering::Release);
+}

@@ -1,0 +1,315 @@
+//! Requests: the completion objects behind nonblocking operations,
+//! `wait`/`test`/`waitall`, and the state machine the generalized-request
+//! extension plugs into.
+
+use crate::error::{MpiError, Result};
+use crate::{ANY_SOURCE, ANY_TAG};
+use std::cell::UnsafeCell;
+use std::marker::PhantomData;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Completion status of a receive (or grequest-supplied status).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Status {
+    pub source: i32,
+    pub tag: i32,
+    pub len: usize,
+}
+
+impl Status {
+    pub fn empty() -> Self {
+        Status {
+            source: ANY_SOURCE,
+            tag: ANY_TAG,
+            len: 0,
+        }
+    }
+}
+
+const PENDING: u8 = 0;
+const COMPLETE: u8 = 1;
+const FAILED: u8 = 2;
+
+/// Shared completion state. Writers fill `status` (or `err`) and then
+/// store the state with Release; readers observe with Acquire.
+pub struct ReqInner {
+    state: AtomicU8,
+    status: UnsafeCell<Status>,
+    err: Mutex<Option<MpiError>>,
+}
+
+// SAFETY: `status` is written exactly once, before the Release store of
+// `state`, and only read after an Acquire load observes completion.
+unsafe impl Send for ReqInner {}
+unsafe impl Sync for ReqInner {}
+
+impl ReqInner {
+    pub fn new() -> Arc<Self> {
+        Arc::new(ReqInner {
+            state: AtomicU8::new(PENDING),
+            status: UnsafeCell::new(Status::empty()),
+            err: Mutex::new(None),
+        })
+    }
+
+    /// Pre-completed request (eager sends).
+    pub fn done() -> Arc<Self> {
+        let r = Self::new();
+        r.complete(Status::empty());
+        r
+    }
+
+    pub fn complete(&self, status: Status) {
+        // SAFETY: single completion writer per request (matching engine or
+        // progress engine), before the Release store.
+        unsafe {
+            *self.status.get() = status;
+        }
+        self.state.store(COMPLETE, Ordering::Release);
+    }
+
+    pub fn fail(&self, e: MpiError) {
+        *self.err.lock().unwrap() = Some(e);
+        self.state.store(FAILED, Ordering::Release);
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.state.load(Ordering::Acquire) != PENDING
+    }
+
+    /// Status after completion (undefined before — callers check first).
+    pub fn status(&self) -> Status {
+        debug_assert!(self.is_complete());
+        // SAFETY: completion observed with Acquire by callers.
+        unsafe { *self.status.get() }
+    }
+
+    pub fn take_result(&self) -> Result<Status> {
+        match self.state.load(Ordering::Acquire) {
+            COMPLETE => Ok(self.status()),
+            FAILED => Err(self
+                .err
+                .lock()
+                .unwrap()
+                .take()
+                .unwrap_or_else(|| MpiError::Internal("request failed without error".into()))),
+            _ => Err(MpiError::Internal("take_result on pending request".into())),
+        }
+    }
+}
+
+/// What a blocked `wait` must poll to make the request completable.
+/// Mirrors the paper's stream-progress semantics: shared-endpoint traffic
+/// progresses via general progress, stream traffic via its own VCI.
+#[derive(Clone)]
+pub enum ProgressScope {
+    /// Poll all shared endpoints of `rank` (MPIX_STREAM_NULL).
+    Shared,
+    /// Poll one stream-owned endpoint (vci) of `rank`.
+    Stream(u16),
+    /// Poll a threadcomm engine (thread id) plus the shared endpoints.
+    Threadcomm(Arc<crate::threadcomm::TcShared>, usize),
+    /// Nothing to poll (externally completed, e.g. enqueue events).
+    External,
+}
+
+/// Handle used by `wait` loops to drive progress for a request.
+#[derive(Clone)]
+pub struct ProgressHandle {
+    pub fabric: Arc<crate::fabric::Fabric>,
+    pub rank: u32,
+    pub scope: ProgressScope,
+}
+
+impl ProgressHandle {
+    pub fn poll(&self) {
+        crate::progress::poll_scope(&self.fabric, self.rank, &self.scope);
+    }
+}
+
+/// A nonblocking-operation handle borrowing the buffers it references
+/// (`'buf`), so the unsafe pointer registered with the matching engine can
+/// never dangle: the request must be waited (or dropped, which waits)
+/// before the buffer's lifetime ends.
+#[must_use = "requests must be waited on"]
+pub struct Request<'buf> {
+    inner: Arc<ReqInner>,
+    progress: ProgressHandle,
+    _buf: PhantomData<&'buf mut [u8]>,
+}
+
+impl<'buf> Request<'buf> {
+    pub fn new(inner: Arc<ReqInner>, progress: ProgressHandle) -> Self {
+        Request {
+            inner,
+            progress,
+            _buf: PhantomData,
+        }
+    }
+
+    /// Nonblocking completion check (`MPI_Test`), driving progress once.
+    pub fn test(&self) -> bool {
+        if self.inner.is_complete() {
+            return true;
+        }
+        self.progress.poll();
+        self.inner.is_complete()
+    }
+
+    /// Completion check WITHOUT driving progress (external progress
+    /// threads or offload executors are expected to complete the
+    /// operation).
+    pub fn test_no_progress(&self) -> bool {
+        self.inner.is_complete()
+    }
+
+    /// Block until complete (`MPI_Wait`).
+    pub fn wait(self) -> Result<Status> {
+        let mut spins = 0u32;
+        while !self.inner.is_complete() {
+            self.progress.poll();
+            backoff(&mut spins);
+        }
+        let r = self.inner.take_result();
+        // The request is complete, so the drop-wait loop exits instantly;
+        // dropping normally releases the Arc refs (mem::forget here would
+        // leak one ReqInner per operation — found the hard way).
+        drop(self);
+        r
+    }
+
+    pub(crate) fn inner(&self) -> &Arc<ReqInner> {
+        &self.inner
+    }
+
+    pub(crate) fn handle(&self) -> &ProgressHandle {
+        &self.progress
+    }
+}
+
+impl Drop for Request<'_> {
+    /// Dropping an incomplete request blocks until completion — the
+    /// registered buffer pointer must not outlive the borrow.
+    fn drop(&mut self) {
+        let mut spins = 0u32;
+        while !self.inner.is_complete() {
+            self.progress.poll();
+            backoff(&mut spins);
+        }
+    }
+}
+
+/// `MPI_Waitall`: wait on a set, driving each scope; also invokes
+/// grequest `wait_fn` batching (see [`crate::grequest`]).
+pub fn waitall(reqs: Vec<Request<'_>>) -> Result<Vec<Status>> {
+    // Give grequest wait_fns a chance to complete whole batches at once.
+    crate::grequest::invoke_wait_fns(&reqs);
+    let mut out = Vec::with_capacity(reqs.len());
+    for r in reqs {
+        out.push(r.wait()?);
+    }
+    Ok(out)
+}
+
+/// `MPI_Waitany`: index of the first completed request.
+pub fn waitany(reqs: &[Request<'_>]) -> usize {
+    loop {
+        for (i, r) in reqs.iter().enumerate() {
+            if r.inner.is_complete() {
+                return i;
+            }
+        }
+        if let Some(r) = reqs.first() {
+            r.progress.poll();
+        }
+        std::hint::spin_loop();
+    }
+}
+
+/// Polling backoff: spin briefly, then yield to the OS so blocked peers
+/// get cycles on oversubscribed hosts (threads > cores is the normal
+/// MPI+Threads regime this library targets).
+#[inline]
+pub fn backoff(spins: &mut u32) {
+    *spins += 1;
+    // Spin long enough to cover in-flight round trips (polling is the
+    // latency path); yield only when genuinely stalled so oversubscribed
+    // hosts (threads > cores) still make progress.
+    if *spins < spin_budget() {
+        std::hint::spin_loop();
+    } else {
+        std::thread::yield_now();
+    }
+}
+
+/// Spin iterations before yielding. Tunable via MPIX_SPIN (default 4096).
+#[inline]
+pub fn spin_budget() -> u32 {
+    use std::sync::atomic::{AtomicU32, Ordering};
+    static BUDGET: AtomicU32 = AtomicU32::new(0);
+    let v = BUDGET.load(Ordering::Relaxed);
+    if v != 0 {
+        return v;
+    }
+    let v = std::env::var("MPIX_SPIN")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4096);
+    BUDGET.store(v, Ordering::Relaxed);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn complete_then_status() {
+        let r = ReqInner::new();
+        assert!(!r.is_complete());
+        r.complete(Status {
+            source: 3,
+            tag: 7,
+            len: 42,
+        });
+        assert!(r.is_complete());
+        assert_eq!(r.status().len, 42);
+        assert_eq!(r.take_result().unwrap().source, 3);
+    }
+
+    #[test]
+    fn fail_surfaces_error() {
+        let r = ReqInner::new();
+        r.fail(MpiError::Truncate {
+            incoming: 10,
+            capacity: 5,
+        });
+        assert!(r.is_complete());
+        assert!(matches!(
+            r.take_result(),
+            Err(MpiError::Truncate { .. })
+        ));
+    }
+
+    #[test]
+    fn done_is_precompleted() {
+        assert!(ReqInner::done().is_complete());
+    }
+
+    #[test]
+    fn cross_thread_completion_visible() {
+        let r = ReqInner::new();
+        let r2 = Arc::clone(&r);
+        let t = std::thread::spawn(move || {
+            r2.complete(Status {
+                source: 1,
+                tag: 2,
+                len: 3,
+            });
+        });
+        t.join().unwrap();
+        assert!(r.is_complete());
+        assert_eq!(r.status().len, 3);
+    }
+}

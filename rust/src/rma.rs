@@ -1,0 +1,787 @@
+//! One-sided communication (RMA): windows, put/get/accumulate, and
+//! passive-target lock/unlock synchronization.
+//!
+//! This is the substrate behind the paper's general-progress extension
+//! (Fig 8 and progress.c): target-side RMA service happens **only inside
+//! the target's progress engine**, so a busy target delays passive-target
+//! operations until it (or its progress thread) polls — exactly the
+//! behavior E4 measures with and without `MPIX_Start_progress_thread`.
+
+
+use crate::comm::Comm;
+use crate::error::Result;
+use crate::fabric::{Envelope, EpState, Fabric, Header, Payload, RecvPtr, CTX_CTRL};
+use crate::metrics::Metrics;
+use crate::progress;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Accumulate operations (`MPI_Op` subset on f64/i64 elements).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccOp {
+    /// Replace (`MPI_REPLACE`) — equivalent to put under the lock.
+    Replace,
+    SumF64,
+    SumI64,
+    MaxF64,
+    MinF64,
+}
+
+/// RMA wire messages (carried on `CTX_CTRL`).
+pub enum RmaMsg {
+    LockReq {
+        win: u32,
+        exclusive: bool,
+        origin: u32,
+        origin_vci: u16,
+    },
+    LockGrant {
+        win: u32,
+    },
+    Unlock {
+        win: u32,
+        origin: u32,
+        origin_vci: u16,
+    },
+    UnlockAck {
+        win: u32,
+    },
+    Put {
+        win: u32,
+        offset: usize,
+        data: Box<[u8]>,
+        origin: u32,
+        origin_vci: u16,
+    },
+    Get {
+        win: u32,
+        offset: usize,
+        len: usize,
+        dest: RecvPtr,
+        origin: u32,
+        origin_vci: u16,
+    },
+    GetResp {
+        win: u32,
+        dest: RecvPtr,
+        data: Box<[u8]>,
+    },
+    Acc {
+        win: u32,
+        offset: usize,
+        data: Box<[u8]>,
+        op: AccOp,
+        origin: u32,
+        origin_vci: u16,
+    },
+    /// Acknowledges a Put/Acc (origin completion counting).
+    OpAck {
+        win: u32,
+    },
+    /// `MPI_Fetch_and_op`: atomically apply `op` with `data` at offset,
+    /// returning the prior value into the origin's `dest`.
+    FetchOp {
+        win: u32,
+        offset: usize,
+        data: Box<[u8]>,
+        op: AccOp,
+        dest: RecvPtr,
+        origin: u32,
+        origin_vci: u16,
+    },
+    /// `MPI_Compare_and_swap` (8-byte values).
+    Cas {
+        win: u32,
+        offset: usize,
+        compare: [u8; 8],
+        swap: [u8; 8],
+        dest: RecvPtr,
+        origin: u32,
+        origin_vci: u16,
+    },
+    /// Reply carrying a fetched prior value.
+    FetchResp {
+        win: u32,
+        dest: RecvPtr,
+        old: Box<[u8]>,
+    },
+}
+
+/// Target-side lock state.
+#[derive(Default)]
+struct LockState {
+    exclusive_held: bool,
+    shared_count: usize,
+    /// Waiting lock requests: (exclusive, origin, origin_vci).
+    waiters: VecDeque<(bool, u32, u16)>,
+}
+
+/// Target-side window state registered with the rank (serviced by its
+/// progress engine).
+pub struct WinTarget {
+    pub id: u32,
+    /// Window memory (owned; raw access from the progress engine).
+    mem: Mutex<Vec<u8>>,
+    lock: Mutex<LockState>,
+}
+
+impl WinTarget {
+    pub fn len(&self) -> usize {
+        self.mem.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Origin-side completion counters (per window).
+pub struct OriginState {
+    /// Outstanding operations awaiting ack/response.
+    pending_ops: AtomicUsize,
+    /// Lock grants received but not yet consumed.
+    grants: AtomicUsize,
+    /// Unlock acks.
+    unlock_acks: AtomicUsize,
+}
+
+/// An RMA window (`MPI_Win`).
+pub struct Window {
+    comm: Comm,
+    id: u32,
+    target: Arc<WinTarget>,
+    origin: Arc<OriginState>,
+    /// The endpoint RMA traffic of this window uses.
+    vci: u16,
+}
+
+fn register_origin(fabric: &Arc<Fabric>, rank: u32, win: u32, st: Arc<OriginState>) {
+    fabric.ranks[rank as usize]
+        .win_origins
+        .lock()
+        .unwrap()
+        .insert(win, st);
+}
+
+fn find_origin(fabric: &Arc<Fabric>, rank: u32, win: u32) -> Option<Arc<OriginState>> {
+    fabric.ranks[rank as usize]
+        .win_origins
+        .lock()
+        .unwrap()
+        .get(&win)
+        .cloned()
+}
+
+fn unregister_origin(fabric: &Arc<Fabric>, rank: u32, win: u32) {
+    fabric.ranks[rank as usize]
+        .win_origins
+        .lock()
+        .unwrap()
+        .remove(&win);
+}
+
+impl Window {
+    /// `MPI_Win_create` (collective): every rank exposes `local_size`
+    /// bytes initialized from `init` (or zeros).
+    pub fn create(comm: &Comm, local_size: usize, init: Option<&[u8]>) -> Result<Window> {
+        let seq = comm.next_win_seq();
+        let id = comm.fabric().agree_win(comm.ctx(), seq);
+        let mut mem = vec![0u8; local_size];
+        if let Some(b) = init {
+            mem[..b.len()].copy_from_slice(b);
+        }
+        let target = Arc::new(WinTarget {
+            id,
+            mem: Mutex::new(mem),
+            lock: Mutex::new(LockState::default()),
+        });
+        let fabric = comm.fabric();
+        let me = comm.world_rank(comm.rank());
+        fabric.ranks[me as usize]
+            .windows
+            .lock()
+            .unwrap()
+            .insert(id, Arc::clone(&target));
+        let origin = Arc::new(OriginState {
+            pending_ops: AtomicUsize::new(0),
+            grants: AtomicUsize::new(0),
+            unlock_acks: AtomicUsize::new(0),
+        });
+        register_origin(fabric, me, id, Arc::clone(&origin));
+        let win = Window {
+            comm: comm.clone(),
+            id,
+            target,
+            origin,
+            vci: comm.my_vci(0),
+        };
+        // All ranks must have registered before any origin fires.
+        crate::coll::barrier(comm)?;
+        Ok(win)
+    }
+
+    pub fn id(&self) -> u32 {
+        self.id
+    }
+
+    /// Read from the local window memory.
+    pub fn read_local(&self, offset: usize, out: &mut [u8]) {
+        let mem = self.target.mem.lock().unwrap();
+        out.copy_from_slice(&mem[offset..offset + out.len()]);
+    }
+
+    /// Write into the local window memory.
+    pub fn write_local(&self, offset: usize, data: &[u8]) {
+        let mut mem = self.target.mem.lock().unwrap();
+        mem[offset..offset + data.len()].copy_from_slice(data);
+    }
+
+    fn me(&self) -> (u32, u16) {
+        (self.comm.world_rank(self.comm.rank()), self.vci)
+    }
+
+    fn peer(&self, target: usize) -> (u32, u16) {
+        (self.comm.world_rank(target), self.vci)
+    }
+
+    fn send_rma(&self, target: usize, msg: RmaMsg) {
+        let fabric = self.comm.fabric();
+        let me = self.me();
+        let env = Envelope {
+            hdr: Header {
+                ctx: CTX_CTRL,
+                src: me.0,
+                tag: 0,
+                src_stream: 0,
+                dst_stream: 0,
+            },
+            payload: Payload::Rma(msg),
+        };
+        crate::comm::push_envelope_raw(fabric, me, self.peer(target), env)
+            .expect("rma send failed");
+    }
+
+    fn poll(&self) {
+        progress::general_progress(self.comm.fabric(), self.me().0);
+    }
+
+    /// `MPI_Win_lock` (passive target). Blocks until the target's
+    /// progress engine grants the lock.
+    pub fn lock(&self, target: usize, exclusive: bool) -> Result<()> {
+        let me = self.me();
+        self.send_rma(
+            target,
+            RmaMsg::LockReq {
+                win: self.id,
+                exclusive,
+                origin: me.0,
+                origin_vci: me.1,
+            },
+        );
+        while self.origin.grants.load(Ordering::Acquire) == 0 {
+            self.poll();
+            std::hint::spin_loop();
+        }
+        self.origin.grants.fetch_sub(1, Ordering::AcqRel);
+        Ok(())
+    }
+
+    /// `MPI_Put` (nonblocking; completes at unlock/flush).
+    pub fn put(&self, data: &[u8], target: usize, offset: usize) -> Result<()> {
+        let me = self.me();
+        self.origin.pending_ops.fetch_add(1, Ordering::AcqRel);
+        self.send_rma(
+            target,
+            RmaMsg::Put {
+                win: self.id,
+                offset,
+                data: data.into(),
+                origin: me.0,
+                origin_vci: me.1,
+            },
+        );
+        Ok(())
+    }
+
+    /// `MPI_Get` (nonblocking; `out` must stay valid until unlock/flush —
+    /// enforced by the borrow in the `flush`/`unlock` epoch discipline:
+    /// callers hold `out` until those return).
+    pub fn get(&self, out: &mut [u8], target: usize, offset: usize) -> Result<()> {
+        let me = self.me();
+        self.origin.pending_ops.fetch_add(1, Ordering::AcqRel);
+        self.send_rma(
+            target,
+            RmaMsg::Get {
+                win: self.id,
+                offset,
+                len: out.len(),
+                dest: RecvPtr(out.as_mut_ptr()),
+                origin: me.0,
+                origin_vci: me.1,
+            },
+        );
+        Ok(())
+    }
+
+    /// `MPI_Accumulate` on f64/i64 elements.
+    pub fn accumulate(&self, data: &[u8], target: usize, offset: usize, op: AccOp) -> Result<()> {
+        let me = self.me();
+        self.origin.pending_ops.fetch_add(1, Ordering::AcqRel);
+        self.send_rma(
+            target,
+            RmaMsg::Acc {
+                win: self.id,
+                offset,
+                data: data.into(),
+                op,
+                origin: me.0,
+                origin_vci: me.1,
+            },
+        );
+        Ok(())
+    }
+
+    /// `MPI_Fetch_and_op` (single element of `data.len()` bytes): the
+    /// prior target value lands in `old` when the epoch flushes.
+    pub fn fetch_and_op(
+        &self,
+        data: &[u8],
+        old: &mut [u8],
+        target: usize,
+        offset: usize,
+        op: AccOp,
+    ) -> Result<()> {
+        let me = self.me();
+        self.origin.pending_ops.fetch_add(1, Ordering::AcqRel);
+        self.send_rma(
+            target,
+            RmaMsg::FetchOp {
+                win: self.id,
+                offset,
+                data: data.into(),
+                op,
+                dest: RecvPtr(old.as_mut_ptr()),
+                origin: me.0,
+                origin_vci: me.1,
+            },
+        );
+        Ok(())
+    }
+
+    /// `MPI_Compare_and_swap` on 8-byte values; the prior value lands in
+    /// `old` when the epoch flushes.
+    pub fn compare_and_swap(
+        &self,
+        compare: u64,
+        swap: u64,
+        old: &mut [u8; 8],
+        target: usize,
+        offset: usize,
+    ) -> Result<()> {
+        let me = self.me();
+        self.origin.pending_ops.fetch_add(1, Ordering::AcqRel);
+        self.send_rma(
+            target,
+            RmaMsg::Cas {
+                win: self.id,
+                offset,
+                compare: compare.to_le_bytes(),
+                swap: swap.to_le_bytes(),
+                dest: RecvPtr(old.as_mut_ptr()),
+                origin: me.0,
+                origin_vci: me.1,
+            },
+        );
+        Ok(())
+    }
+
+    /// `MPI_Win_flush`: wait for all outstanding operations to complete
+    /// at the origin.
+    pub fn flush(&self) -> Result<()> {
+        while self.origin.pending_ops.load(Ordering::Acquire) > 0 {
+            self.poll();
+            std::hint::spin_loop();
+        }
+        Ok(())
+    }
+
+    /// `MPI_Win_unlock`: flush, then release the target lock.
+    pub fn unlock(&self, target: usize) -> Result<()> {
+        self.flush()?;
+        let me = self.me();
+        self.send_rma(
+            target,
+            RmaMsg::Unlock {
+                win: self.id,
+                origin: me.0,
+                origin_vci: me.1,
+            },
+        );
+        while self.origin.unlock_acks.load(Ordering::Acquire) == 0 {
+            self.poll();
+            std::hint::spin_loop();
+        }
+        self.origin.unlock_acks.fetch_sub(1, Ordering::AcqRel);
+        Ok(())
+    }
+
+    /// `MPI_Win_fence`: active-target epoch boundary (flush + barrier).
+    pub fn fence(&self) -> Result<()> {
+        self.flush()?;
+        crate::coll::barrier(&self.comm)?;
+        Ok(())
+    }
+}
+
+impl Drop for Window {
+    fn drop(&mut self) {
+        let fabric = self.comm.fabric();
+        let me = self.comm.world_rank(self.comm.rank());
+        fabric.ranks[me as usize]
+            .windows
+            .lock()
+            .unwrap()
+            .remove(&self.id);
+        unregister_origin(fabric, me, self.id);
+    }
+}
+
+/// Progress-engine hook: service an RMA message arriving at (rank, vci).
+/// Target-side ops touch the window; origin-side replies bump counters.
+pub fn handle(
+    fabric: &Arc<Fabric>,
+    rank: u32,
+    vci: u16,
+    st: &mut EpState,
+    _hdr: Header,
+    msg: RmaMsg,
+) {
+    Metrics::bump(&fabric.metrics.rma_serviced);
+    let reply = |st: &mut EpState, origin: u32, origin_vci: u16, msg: RmaMsg| {
+        progress::send_ctrl(
+            fabric,
+            st,
+            (rank, vci),
+            (origin, origin_vci),
+            Payload::Rma(msg),
+        );
+    };
+    let win_of = |id: u32| -> Option<Arc<WinTarget>> {
+        fabric.ranks[rank as usize].windows.lock().unwrap().get(&id).cloned()
+    };
+    match msg {
+        RmaMsg::LockReq {
+            win,
+            exclusive,
+            origin,
+            origin_vci,
+        } => {
+            let Some(w) = win_of(win) else { return };
+            let granted = {
+                let mut l = w.lock.lock().unwrap();
+                if exclusive {
+                    if !l.exclusive_held && l.shared_count == 0 {
+                        l.exclusive_held = true;
+                        true
+                    } else {
+                        l.waiters.push_back((true, origin, origin_vci));
+                        false
+                    }
+                } else if !l.exclusive_held {
+                    l.shared_count += 1;
+                    true
+                } else {
+                    l.waiters.push_back((false, origin, origin_vci));
+                    false
+                }
+            };
+            if granted {
+                reply(st, origin, origin_vci, RmaMsg::LockGrant { win });
+            }
+        }
+        RmaMsg::Unlock {
+            win,
+            origin,
+            origin_vci,
+        } => {
+            let Some(w) = win_of(win) else { return };
+            // Release and grant waiters.
+            let mut grants: Vec<(u32, u16)> = Vec::new();
+            {
+                let mut l = w.lock.lock().unwrap();
+                if l.exclusive_held {
+                    l.exclusive_held = false;
+                } else if l.shared_count > 0 {
+                    l.shared_count -= 1;
+                }
+                while let Some(&(ex, o, ov)) = l.waiters.front() {
+                    if ex {
+                        if !l.exclusive_held && l.shared_count == 0 {
+                            l.exclusive_held = true;
+                            l.waiters.pop_front();
+                            grants.push((o, ov));
+                        }
+                        break;
+                    } else if !l.exclusive_held {
+                        l.shared_count += 1;
+                        l.waiters.pop_front();
+                        grants.push((o, ov));
+                    } else {
+                        break;
+                    }
+                }
+            }
+            for (o, ov) in grants {
+                reply(st, o, ov, RmaMsg::LockGrant { win });
+            }
+            reply(st, origin, origin_vci, RmaMsg::UnlockAck { win });
+        }
+        RmaMsg::Put {
+            win,
+            offset,
+            data,
+            origin,
+            origin_vci,
+        } => {
+            if let Some(w) = win_of(win) {
+                let mut mem = w.mem.lock().unwrap();
+                mem[offset..offset + data.len()].copy_from_slice(&data);
+            }
+            reply(st, origin, origin_vci, RmaMsg::OpAck { win });
+        }
+        RmaMsg::Get {
+            win,
+            offset,
+            len,
+            dest,
+            origin,
+            origin_vci,
+        } => {
+            let data: Box<[u8]> = if let Some(w) = win_of(win) {
+                let mem = w.mem.lock().unwrap();
+                mem[offset..offset + len].into()
+            } else {
+                vec![0u8; len].into()
+            };
+            reply(
+                st,
+                origin,
+                origin_vci,
+                RmaMsg::GetResp { win, dest, data },
+            );
+        }
+        RmaMsg::Acc {
+            win,
+            offset,
+            data,
+            op,
+            origin,
+            origin_vci,
+        } => {
+            if let Some(w) = win_of(win) {
+                let mut mem = w.mem.lock().unwrap();
+                apply_acc(&mut mem[offset..offset + data.len()], &data, op);
+            }
+            reply(st, origin, origin_vci, RmaMsg::OpAck { win });
+        }
+        RmaMsg::FetchOp {
+            win,
+            offset,
+            data,
+            op,
+            dest,
+            origin,
+            origin_vci,
+        } => {
+            let old: Box<[u8]> = if let Some(w) = win_of(win) {
+                let mut mem = w.mem.lock().unwrap();
+                let prior: Box<[u8]> = mem[offset..offset + data.len()].into();
+                apply_acc(&mut mem[offset..offset + data.len()], &data, op);
+                prior
+            } else {
+                vec![0u8; data.len()].into()
+            };
+            reply(st, origin, origin_vci, RmaMsg::FetchResp { win, dest, old });
+        }
+        RmaMsg::Cas {
+            win,
+            offset,
+            compare,
+            swap,
+            dest,
+            origin,
+            origin_vci,
+        } => {
+            let old: Box<[u8]> = if let Some(w) = win_of(win) {
+                let mut mem = w.mem.lock().unwrap();
+                let prior: [u8; 8] = mem[offset..offset + 8].try_into().unwrap();
+                if prior == compare {
+                    mem[offset..offset + 8].copy_from_slice(&swap);
+                }
+                Box::new(prior)
+            } else {
+                Box::new([0u8; 8])
+            };
+            reply(st, origin, origin_vci, RmaMsg::FetchResp { win, dest, old });
+        }
+        // ------------------------------------------- origin-side replies
+        RmaMsg::FetchResp { win, dest, old } => {
+            // SAFETY: dest points into the origin's still-borrowed result
+            // buffer (epoch discipline: valid until flush/unlock).
+            unsafe {
+                std::ptr::copy_nonoverlapping(old.as_ptr(), dest.0, old.len());
+            }
+            if let Some(o) = find_origin(fabric, rank, win) {
+                o.pending_ops.fetch_sub(1, Ordering::AcqRel);
+            }
+        }
+        RmaMsg::LockGrant { win } => {
+            if let Some(o) = find_origin(fabric, rank, win) {
+                o.grants.fetch_add(1, Ordering::AcqRel);
+            }
+        }
+        RmaMsg::UnlockAck { win } => {
+            if let Some(o) = find_origin(fabric, rank, win) {
+                o.unlock_acks.fetch_add(1, Ordering::AcqRel);
+            }
+        }
+        RmaMsg::OpAck { win } => {
+            if let Some(o) = find_origin(fabric, rank, win) {
+                o.pending_ops.fetch_sub(1, Ordering::AcqRel);
+            }
+        }
+        RmaMsg::GetResp { win, dest, data } => {
+            // SAFETY: dest points into the origin's still-borrowed get
+            // buffer (epoch discipline: valid until flush/unlock).
+            unsafe {
+                std::ptr::copy_nonoverlapping(data.as_ptr(), dest.0, data.len());
+            }
+            if let Some(o) = find_origin(fabric, rank, win) {
+                o.pending_ops.fetch_sub(1, Ordering::AcqRel);
+            }
+        }
+    }
+}
+
+fn apply_acc(dst: &mut [u8], src: &[u8], op: AccOp) {
+    match op {
+        AccOp::Replace => dst.copy_from_slice(src),
+        AccOp::SumF64 => binop_f64(dst, src, |a, b| a + b),
+        AccOp::MaxF64 => binop_f64(dst, src, f64::max),
+        AccOp::MinF64 => binop_f64(dst, src, f64::min),
+        AccOp::SumI64 => {
+            for (d, s) in dst.chunks_exact_mut(8).zip(src.chunks_exact(8)) {
+                let a = i64::from_le_bytes(d[..8].try_into().unwrap());
+                let b = i64::from_le_bytes(s[..8].try_into().unwrap());
+                d.copy_from_slice(&(a.wrapping_add(b)).to_le_bytes());
+            }
+        }
+    }
+}
+
+fn binop_f64(dst: &mut [u8], src: &[u8], f: impl Fn(f64, f64) -> f64) {
+    for (d, s) in dst.chunks_exact_mut(8).zip(src.chunks_exact(8)) {
+        let a = f64::from_le_bytes(d[..8].try_into().unwrap());
+        let b = f64::from_le_bytes(s[..8].try_into().unwrap());
+        d.copy_from_slice(&f(a, b).to_le_bytes());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::universe::Universe;
+
+    #[test]
+    fn put_get_roundtrip() {
+        Universe::run(Universe::with_ranks(2), |world| {
+            let init: Vec<u8> = (0..64u8).collect();
+            let win = Window::create(&world, 64, Some(&init)).unwrap();
+            if world.rank() == 0 {
+                win.lock(1, false).unwrap();
+                let mut buf = [0u8; 16];
+                win.get(&mut buf, 1, 8).unwrap();
+                win.unlock(1).unwrap();
+                assert_eq!(&buf[..], &init[8..24]);
+                win.lock(1, true).unwrap();
+                win.put(&[0xAA; 4], 1, 0).unwrap();
+                win.unlock(1).unwrap();
+                world.send(b"done", 1, 0).unwrap();
+            } else {
+                // Target: drive progress until origin finishes.
+                let mut b = [0u8; 4];
+                world.recv(&mut b, 0, 0).unwrap();
+                let mut out = [0u8; 4];
+                win.read_local(0, &mut out);
+                assert_eq!(out, [0xAA; 4]);
+            }
+            crate::coll::barrier(&world).unwrap();
+        });
+    }
+
+    #[test]
+    fn accumulate_sum_f64() {
+        Universe::run(Universe::with_ranks(3), |world| {
+            let init = 1.0f64.to_le_bytes();
+            let win = Window::create(&world, 8, Some(&init)).unwrap();
+            if world.rank() != 0 {
+                // Both origins add their rank value to target 0.
+                win.lock(0, false).unwrap();
+                let v = (world.rank() as f64).to_le_bytes();
+                win.accumulate(&v, 0, 0, AccOp::SumF64).unwrap();
+                win.unlock(0).unwrap();
+            }
+            crate::coll::barrier(&world).unwrap();
+            if world.rank() == 0 {
+                let mut out = [0u8; 8];
+                win.read_local(0, &mut out);
+                let got = f64::from_le_bytes(out);
+                assert_eq!(got, 1.0 + 1.0 + 2.0);
+            }
+            crate::coll::barrier(&world).unwrap();
+        });
+    }
+
+    #[test]
+    fn exclusive_lock_serializes() {
+        Universe::run(Universe::with_ranks(3), |world| {
+            let win = Window::create(&world, 16, None).unwrap();
+            if world.rank() != 0 {
+                win.lock(0, true).unwrap();
+                // Read-modify-write that would race without the lock.
+                let mut b = [0u8; 8];
+                win.get(&mut b, 0, 0).unwrap();
+                win.flush().unwrap();
+                let v = u64::from_le_bytes(b) + 1;
+                win.put(&v.to_le_bytes(), 0, 0).unwrap();
+                win.unlock(0).unwrap();
+            }
+            crate::coll::barrier(&world).unwrap();
+            if world.rank() == 0 {
+                let mut out = [0u8; 8];
+                win.read_local(0, &mut out);
+                assert_eq!(u64::from_le_bytes(out), 2);
+            }
+            crate::coll::barrier(&world).unwrap();
+        });
+    }
+
+    #[test]
+    fn fence_epochs() {
+        Universe::run(Universe::with_ranks(2), |world| {
+            let win = Window::create(&world, 8, None).unwrap();
+            win.fence().unwrap();
+            if world.rank() == 0 {
+                win.put(&7u64.to_le_bytes(), 1, 0).unwrap();
+            }
+            win.fence().unwrap();
+            if world.rank() == 1 {
+                let mut out = [0u8; 8];
+                win.read_local(0, &mut out);
+                assert_eq!(u64::from_le_bytes(out), 7);
+            }
+            win.fence().unwrap();
+        });
+    }
+}

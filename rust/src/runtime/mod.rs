@@ -1,0 +1,288 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and execute them from Rust.
+//!
+//! Interchange is HLO *text* (see aot.py — jax ≥ 0.5 serialized protos
+//! use 64-bit ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids). One [`Registry`] wraps one PJRT client plus all
+//! compiled executables; xla handles are raw pointers without `Send`, so
+//! a Registry is **thread-confined** — each offload-stream worker owns
+//! its own (the CUDA-context-per-thread analogy).
+
+use crate::error::{MpiError, Result};
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Shape + file metadata for one artifact entry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EntryMeta {
+    pub file: String,
+    /// Input shapes (all float32).
+    pub inputs: Vec<Vec<i64>>,
+    /// Output shapes (all float32).
+    pub outputs: Vec<Vec<i64>>,
+}
+
+/// Parse `manifest.json` into entry metadata.
+pub fn parse_manifest(text: &str) -> Result<HashMap<String, EntryMeta>> {
+    let j = Json::parse(text).map_err(MpiError::Runtime)?;
+    let obj = j
+        .as_obj()
+        .ok_or_else(|| MpiError::Runtime("manifest root must be an object".into()))?;
+    let mut out = HashMap::new();
+    for (name, e) in obj {
+        let shapes = |key: &str| -> Result<Vec<Vec<i64>>> {
+            e.get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| MpiError::Runtime(format!("{name}: missing {key}")))?
+                .iter()
+                .map(|s| {
+                    let dt = s.get("dtype").and_then(Json::as_str).unwrap_or("");
+                    if dt != "float32" {
+                        return Err(MpiError::Runtime(format!(
+                            "{name}: unsupported dtype {dt}"
+                        )));
+                    }
+                    Ok(s.get("shape")
+                        .and_then(Json::as_arr)
+                        .ok_or_else(|| MpiError::Runtime(format!("{name}: bad shape")))?
+                        .iter()
+                        .filter_map(Json::as_i64)
+                        .collect())
+                })
+                .collect()
+        };
+        out.insert(
+            name.clone(),
+            EntryMeta {
+                file: e
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| MpiError::Runtime(format!("{name}: missing file")))?
+                    .to_string(),
+                inputs: shapes("inputs")?,
+                outputs: shapes("outputs")?,
+            },
+        );
+    }
+    Ok(out)
+}
+
+/// A loaded+compiled artifact.
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    meta: EntryMeta,
+}
+
+/// PJRT CPU client + compiled executables, keyed by artifact name.
+/// Thread-confined (not `Send`).
+pub struct Registry {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: HashMap<String, EntryMeta>,
+    compiled: HashMap<String, Compiled>,
+}
+
+impl Registry {
+    /// Open the artifacts directory (reads `manifest.json`; compiles
+    /// lazily on first execution of each entry).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Registry> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+            MpiError::Runtime(format!(
+                "cannot read {}/manifest.json: {e} (run `make artifacts`)",
+                dir.display()
+            ))
+        })?;
+        let manifest = parse_manifest(&text)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| MpiError::Runtime(format!("PJRT CPU client: {e:?}")))?;
+        Ok(Registry {
+            client,
+            dir,
+            manifest,
+            compiled: HashMap::new(),
+        })
+    }
+
+    /// Default artifacts location (repo-root/artifacts or $ARTIFACTS_DIR).
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("ARTIFACTS_DIR")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.manifest.keys().map(String::as_str).collect()
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&EntryMeta> {
+        self.manifest.get(name)
+    }
+
+    fn compile(&mut self, name: &str) -> Result<()> {
+        if self.compiled.contains_key(name) {
+            return Ok(());
+        }
+        let meta = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| MpiError::Runtime(format!("unknown artifact {name:?}")))?
+            .clone();
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| MpiError::Runtime(format!("parse {}: {e:?}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| MpiError::Runtime(format!("compile {name}: {e:?}")))?;
+        self.compiled.insert(name.to_string(), Compiled { exe, meta });
+        Ok(())
+    }
+
+    /// Execute an artifact on f32 buffers. Input lengths must match the
+    /// manifest shapes; returns one `Vec<f32>` per output.
+    pub fn exec_f32(&mut self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        self.compile(name)?;
+        let c = self.compiled.get(name).unwrap();
+        if inputs.len() != c.meta.inputs.len() {
+            return Err(MpiError::SizeMismatch(format!(
+                "{name}: {} inputs given, {} expected",
+                inputs.len(),
+                c.meta.inputs.len()
+            )));
+        }
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (i, (buf, shape)) in inputs.iter().zip(&c.meta.inputs).enumerate() {
+            let want: i64 = shape.iter().product::<i64>().max(1);
+            if buf.len() as i64 != want {
+                return Err(MpiError::SizeMismatch(format!(
+                    "{name}: input {i} has {} elements, shape {shape:?} wants {want}",
+                    buf.len()
+                )));
+            }
+            let lit = xla::Literal::vec1(buf)
+                .reshape(shape)
+                .map_err(|e| MpiError::Runtime(format!("reshape input {i}: {e:?}")))?;
+            lits.push(lit);
+        }
+        let result = c
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| MpiError::Runtime(format!("execute {name}: {e:?}")))?;
+        let root = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| MpiError::Runtime(format!("fetch result: {e:?}")))?;
+        // aot.py lowers with return_tuple=True: root is always a tuple.
+        let parts = root
+            .to_tuple()
+            .map_err(|e| MpiError::Runtime(format!("untuple: {e:?}")))?;
+        let mut out = Vec::with_capacity(parts.len());
+        for (i, p) in parts.into_iter().enumerate() {
+            out.push(
+                p.to_vec::<f32>()
+                    .map_err(|e| MpiError::Runtime(format!("output {i}: {e:?}")))?,
+            );
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_ready() -> bool {
+        Registry::default_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let text = r#"{"k": {"file": "k.hlo.txt",
+            "inputs": [{"shape": [2, 3], "dtype": "float32"}],
+            "outputs": [{"shape": [6], "dtype": "float32"}]}}"#;
+        let m = parse_manifest(text).unwrap();
+        assert_eq!(m["k"].inputs, vec![vec![2, 3]]);
+        assert_eq!(m["k"].outputs, vec![vec![6]]);
+    }
+
+    #[test]
+    fn manifest_rejects_bad_dtype() {
+        let text = r#"{"k": {"file": "k", "inputs":
+            [{"shape": [1], "dtype": "int8"}], "outputs": []}}"#;
+        assert!(parse_manifest(text).is_err());
+    }
+
+    #[test]
+    fn saxpy_executes_against_oracle() {
+        if !artifacts_ready() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut reg = Registry::open(Registry::default_dir()).unwrap();
+        let n = 4096;
+        let a = vec![2.5f32];
+        let x: Vec<f32> = (0..n).map(|i| i as f32 * 0.001).collect();
+        let y: Vec<f32> = (0..n).map(|i| 1.0 - i as f32 * 0.0005).collect();
+        let out = reg.exec_f32("saxpy_4k", &[&a, &x, &y]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].len(), n);
+        for i in 0..n {
+            let want = 2.5 * x[i] + y[i];
+            assert!((out[0][i] - want).abs() < 1e-5, "i={i}");
+        }
+    }
+
+    #[test]
+    fn jacobi_two_outputs() {
+        if !artifacts_ready() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut reg = Registry::open(Registry::default_dir()).unwrap();
+        // Constant field: interior unchanged, residual 0.
+        let grid = vec![3.25f32; 34 * 34];
+        let out = reg.exec_f32("jacobi_32", &[&grid]).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].len(), 32 * 32);
+        assert!(out[0].iter().all(|&v| (v - 3.25).abs() < 1e-6));
+        assert!(out[1][0].abs() < 1e-9);
+    }
+
+    #[test]
+    fn matmul_identity_through_pjrt() {
+        if !artifacts_ready() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut reg = Registry::open(Registry::default_dir()).unwrap();
+        // I * X == X through the tiled MXU-style kernel.
+        let n = 256usize;
+        let mut eye = vec![0f32; n * n];
+        for i in 0..n {
+            eye[i * n + i] = 1.0;
+        }
+        let x: Vec<f32> = (0..n * n).map(|i| (i % 97) as f32 * 0.25).collect();
+        let out = reg.exec_f32("matmul_256", &[&eye, &x]).unwrap();
+        assert_eq!(out[0].len(), n * n);
+        for i in 0..n * n {
+            assert!((out[0][i] - x[i]).abs() < 1e-4, "i={i}");
+        }
+    }
+
+    #[test]
+    fn input_validation() {
+        if !artifacts_ready() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut reg = Registry::open(Registry::default_dir()).unwrap();
+        let bad = vec![0f32; 3];
+        assert!(matches!(
+            reg.exec_f32("saxpy_4k", &[&bad]),
+            Err(MpiError::SizeMismatch(_))
+        ));
+        assert!(reg.exec_f32("nope", &[]).is_err());
+    }
+}

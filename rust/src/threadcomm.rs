@@ -1,0 +1,754 @@
+//! Thread communicators (paper extension 5): MPI communicators whose
+//! ranks are *threads* — the MPI×Threads model.
+//!
+//! `Threadcomm::init(parent, nthreads)` (collective over the parent proc
+//! comm, outside parallel regions) creates a communicator of size
+//! `Σ nthreads_p`. Inside a parallel region each of the `nthreads` local
+//! threads calls [`Threadcomm::start`] and receives a [`ThreadComm`]
+//! handle that behaves like an MPI rank: point-to-point, wildcards, and
+//! every collective in [`crate::coll`] work across the N×M thread ranks.
+//!
+//! Transport: intra-process messages go straight into the destination
+//! thread's matching engine — small ones through the inline cell with
+//! **no request-object allocation** (the Fig 7 small-message latency
+//! shortcut) and large ones by **single-copy** directly from the sender's
+//! buffer (the Fig 7 large-message bandwidth win). Remote messages ride
+//! the parent fabric: the proc-level progress engine recognizes
+//! threadcomm contexts and forwards envelopes to the destination thread's
+//! engine, so inter-process behavior (two-copy eager/rendezvous) is
+//! unchanged.
+
+use crate::comm::Comm;
+use crate::error::{MpiError, Result};
+use crate::fabric::{Envelope, Fabric, Header, Payload, RecvPtr, SendPtr, INLINE_MAX};
+use crate::matching::{MatchAction, MatchEngine, PostedRecv};
+use crate::metrics::Metrics;
+use crate::request::{ProgressHandle, ProgressScope, ReqInner, Request, Status};
+use crate::util::pod::{bytes_of, bytes_of_mut, Pod};
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Marker bit for threadcomm contexts (progress-engine forwarding).
+pub const TC_CTX_BIT: u32 = 1 << 30;
+
+/// Intra-process eager ceiling: up to this size messages are copied
+/// through a heap cell with no rendezvous handshake (and no sender
+/// request); above it the single-copy direct path engages.
+pub const TC_EAGER_MAX: usize = 8192;
+
+/// True iff the context belongs to a threadcomm (collective-flagged or
+/// not).
+pub fn is_tc_ctx(ctx: u32) -> bool {
+    ctx & TC_CTX_BIT != 0
+}
+
+/// Process-shared threadcomm state.
+pub struct TcShared {
+    pub ctx: u32,
+    parent: Comm,
+    /// Threads on this process.
+    pub nlocal: usize,
+    /// Threads per process.
+    pub counts: Vec<usize>,
+    /// Global thread rank of each process's thread 0.
+    pub offsets: Vec<usize>,
+    pub total: usize,
+    /// Per local thread: matching engine (delivered to by local senders
+    /// and by the proc-level forwarder).
+    engines: Vec<Mutex<MatchEngine>>,
+    active: AtomicBool,
+    arrivals: AtomicUsize,
+    epoch: AtomicUsize,
+}
+
+/// The per-process threadcomm object returned by `init` (inactive until
+/// `start`).
+pub struct Threadcomm {
+    shared: Arc<TcShared>,
+}
+
+impl Threadcomm {
+    /// `MPIX_Threadcomm_init`: collective over `parent`; different
+    /// processes may specify different thread counts.
+    pub fn init(parent: &Comm, nthreads: usize) -> Result<Threadcomm> {
+        if nthreads == 0 {
+            return Err(MpiError::InvalidArg("nthreads must be > 0".into()));
+        }
+        let seq = parent.inner.child_seq.fetch_add(1, Ordering::Relaxed);
+        let raw = parent
+            .fabric()
+            .agree_ctx(parent.ctx(), 0x2000_0000 | seq);
+        let ctx = raw | TC_CTX_BIT;
+        let mine = [nthreads as u64];
+        let mut all = vec![0u64; parent.size()];
+        crate::coll::allgather_t(parent, &mine, &mut all)?;
+        let counts: Vec<usize> = all.iter().map(|&c| c as usize).collect();
+        let mut offsets = Vec::with_capacity(counts.len());
+        let mut acc = 0usize;
+        for &c in &counts {
+            offsets.push(acc);
+            acc += c;
+        }
+        let shared = Arc::new(TcShared {
+            ctx,
+            parent: parent.clone(),
+            nlocal: nthreads,
+            counts,
+            offsets,
+            total: acc,
+            engines: (0..nthreads).map(|_| Mutex::new(MatchEngine::new())).collect(),
+            active: AtomicBool::new(false),
+            arrivals: AtomicUsize::new(0),
+            epoch: AtomicUsize::new(0),
+        });
+        // Register the forwarding route so proc-level progress can
+        // deliver remote envelopes to thread engines.
+        let fabric = parent.fabric();
+        let world_rank = parent.world_rank(parent.rank());
+        fabric.ranks[world_rank as usize]
+            .tc_routes
+            .lock()
+            .unwrap()
+            .insert(ctx, Arc::clone(&shared));
+        Ok(Threadcomm { shared })
+    }
+
+    /// `MPIX_Threadcomm_start`: called inside the parallel region by
+    /// exactly `nthreads` threads; returns the thread's rank handle.
+    pub fn start(&self) -> ThreadComm {
+        let sh = &self.shared;
+        let epoch = sh.epoch.load(Ordering::Acquire);
+        let tid = sh.arrivals.fetch_add(1, Ordering::AcqRel);
+        assert!(
+            tid < sh.nlocal,
+            "more threads ({}) than declared ({})",
+            tid + 1,
+            sh.nlocal
+        );
+        if tid == sh.nlocal - 1 {
+            sh.active.store(true, Ordering::Release);
+            sh.epoch.store(epoch + 1, Ordering::Release);
+        } else {
+            while sh.epoch.load(Ordering::Acquire) == epoch {
+                std::hint::spin_loop();
+            }
+        }
+        let my_proc = self.shared.parent.rank();
+        ThreadComm {
+            shared: Arc::clone(sh),
+            tid,
+            rank: sh.offsets[my_proc] + tid,
+            coll_seq: Cell::new(0),
+        }
+    }
+
+    /// `MPIX_Threadcomm_free` (explicit; also runs on drop).
+    pub fn free(self) {}
+
+    pub fn shared(&self) -> &Arc<TcShared> {
+        &self.shared
+    }
+}
+
+impl Drop for Threadcomm {
+    fn drop(&mut self) {
+        let fabric = self.shared.parent.fabric();
+        let world_rank = self.shared.parent.world_rank(self.shared.parent.rank());
+        fabric.ranks[world_rank as usize]
+            .tc_routes
+            .lock()
+            .unwrap()
+            .remove(&self.shared.ctx);
+    }
+}
+
+/// A thread's rank handle inside an active threadcomm. Not `Sync`: each
+/// thread uses its own handle (the thread *is* the rank).
+pub struct ThreadComm {
+    shared: Arc<TcShared>,
+    tid: usize,
+    rank: usize,
+    coll_seq: Cell<u32>,
+}
+
+impl ThreadComm {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn size(&self) -> usize {
+        self.shared.total
+    }
+
+    pub fn tid(&self) -> usize {
+        self.tid
+    }
+
+    /// `MPIX_Comm_test_threadcomm`.
+    pub fn is_threadcomm(&self) -> bool {
+        true
+    }
+
+    /// `MPIX_Threadcomm_finish`: collective among the local threads.
+    pub fn finish(self) {
+        let sh = &self.shared;
+        let epoch = sh.epoch.load(Ordering::Acquire);
+        let left = sh.arrivals.fetch_sub(1, Ordering::AcqRel) - 1;
+        if left == 0 {
+            sh.active.store(false, Ordering::Release);
+            sh.epoch.store(epoch + 1, Ordering::Release);
+        } else {
+            while sh.epoch.load(Ordering::Acquire) == epoch {
+                std::hint::spin_loop();
+            }
+        }
+    }
+
+    fn check_active(&self) -> Result<()> {
+        if !self.shared.active.load(Ordering::Acquire) {
+            return Err(MpiError::InvalidState(
+                "threadcomm used outside start/finish".into(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// (process, local tid) of a global thread rank.
+    fn locate(&self, rank: usize) -> Result<(usize, usize)> {
+        if rank >= self.shared.total {
+            return Err(MpiError::RankOutOfRange {
+                rank: rank as i32,
+                size: self.shared.total,
+            });
+        }
+        // offsets is sorted; find the owning process.
+        let p = match self.shared.offsets.binary_search(&rank) {
+            Ok(p) => p,
+            Err(ins) => ins - 1,
+        };
+        Ok((p, rank - self.shared.offsets[p]))
+    }
+
+    fn progress_handle(&self) -> ProgressHandle {
+        let parent = &self.shared.parent;
+        ProgressHandle {
+            fabric: Arc::clone(parent.fabric()),
+            rank: parent.world_rank(parent.rank()),
+            scope: ProgressScope::Threadcomm(Arc::clone(&self.shared), self.tid),
+        }
+    }
+
+    fn hdr(&self, ctx: u32, tag: i32, dst_tid: usize) -> Header {
+        Header {
+            ctx,
+            src: self.rank as u32,
+            tag,
+            src_stream: 0,
+            dst_stream: dst_tid as i32,
+        }
+    }
+
+    // ------------------------------------------------------------- send
+
+    fn send_ctx(&self, ctx: u32, buf: &[u8], dst: usize, tag: i32) -> Result<()> {
+        self.check_active()?;
+        let (p, t) = self.locate(dst)?;
+        let sh = &self.shared;
+        if p == sh.parent.rank() {
+            // Intra-process path.
+            if buf.len() <= INLINE_MAX {
+                // Fast path: inline cell, no request object (the latency
+                // shortcut Fig 7a measures).
+                Metrics::bump(&sh.parent.fabric().metrics.eager_inline);
+                let mut data = [0u8; INLINE_MAX];
+                data[..buf.len()].copy_from_slice(buf);
+                let env = Envelope {
+                    hdr: self.hdr(ctx, tag, t),
+                    payload: Payload::Inline {
+                        len: buf.len() as u16,
+                        data,
+                    },
+                };
+                deliver_local(sh, t, env, sh.parent.fabric());
+                Ok(())
+            } else if buf.len() <= TC_EAGER_MAX {
+                // Mid-size eager: heap cell, still no rendezvous
+                // handshake and no sender request.
+                Metrics::bump(&sh.parent.fabric().metrics.eager_heap);
+                let env = Envelope {
+                    hdr: self.hdr(ctx, tag, t),
+                    payload: Payload::Eager(buf.into()),
+                };
+                deliver_local(sh, t, env, sh.parent.fabric());
+                Ok(())
+            } else {
+                // Single-copy: receiver copies straight from our buffer;
+                // we block until it does.
+                self.isend_intra(ctx, buf, t, tag)?.wait().map(|_| ())
+            }
+        } else {
+            // Remote: ride the proc fabric.
+            let req = self.isend_remote(ctx, buf, p, t, tag)?;
+            req.wait().map(|_| ())
+        }
+    }
+
+    /// Blocking send to a global thread rank.
+    pub fn send(&self, buf: &[u8], dst: usize, tag: i32) -> Result<()> {
+        self.send_ctx(self.shared.ctx, buf, dst, tag)
+    }
+
+    fn isend_intra<'a>(
+        &self,
+        ctx: u32,
+        buf: &'a [u8],
+        dst_tid: usize,
+        tag: i32,
+    ) -> Result<Request<'a>> {
+        let sh = &self.shared;
+        Metrics::bump(&sh.parent.fabric().metrics.rdv);
+        Metrics::bump(&sh.parent.fabric().metrics.requests_alloc);
+        let req = ReqInner::new();
+        let env = Envelope {
+            hdr: self.hdr(ctx, tag, dst_tid),
+            payload: Payload::RdvDirect {
+                src: SendPtr(buf.as_ptr()),
+                len: buf.len(),
+                sender_req: Arc::clone(&req),
+            },
+        };
+        deliver_local(sh, dst_tid, env, sh.parent.fabric());
+        Ok(Request::new(req, self.progress_handle()))
+    }
+
+    fn isend_remote<'a>(
+        &self,
+        ctx: u32,
+        buf: &'a [u8],
+        proc: usize,
+        dst_tid: usize,
+        tag: i32,
+    ) -> Result<Request<'a>> {
+        let sh = &self.shared;
+        let fabric = sh.parent.fabric();
+        let vci = tc_vci(fabric, ctx);
+        let me = (sh.parent.world_rank(sh.parent.rank()), vci);
+        let peer = (sh.parent.world_rank(proc), vci);
+        crate::comm::isend_raw(
+            fabric,
+            me,
+            peer,
+            self.hdr(ctx, tag, dst_tid),
+            buf,
+            self.progress_handle(),
+        )
+    }
+
+    /// Nonblocking send.
+    pub fn isend<'a>(&self, buf: &'a [u8], dst: usize, tag: i32) -> Result<Request<'a>> {
+        self.check_active()?;
+        let ctx = self.shared.ctx;
+        let (p, t) = self.locate(dst)?;
+        if p == self.shared.parent.rank() {
+            if buf.len() <= TC_EAGER_MAX {
+                self.send_ctx(ctx, buf, dst, tag)?;
+                Metrics::bump(&self.shared.parent.fabric().metrics.requests_alloc);
+                return Ok(Request::new(ReqInner::done(), self.progress_handle()));
+            }
+            self.isend_intra(ctx, buf, t, tag)
+        } else {
+            self.isend_remote(ctx, buf, p, t, tag)
+        }
+    }
+
+    // ------------------------------------------------------------- recv
+
+    fn irecv_ctx<'a>(
+        &self,
+        ctx: u32,
+        buf: &'a mut [u8],
+        src: i32,
+        tag: i32,
+    ) -> Result<Request<'a>> {
+        self.check_active()?;
+        if src != crate::ANY_SOURCE && src as usize >= self.shared.total {
+            return Err(MpiError::RankOutOfRange {
+                rank: src,
+                size: self.shared.total,
+            });
+        }
+        let fabric = self.shared.parent.fabric();
+        Metrics::bump(&fabric.metrics.requests_alloc);
+        let req = ReqInner::new();
+        let posted = PostedRecv {
+            ctx,
+            src,
+            tag,
+            src_stream: crate::ANY_STREAM,
+            dst_stream: self.tid as i32,
+            buf: RecvPtr(buf.as_mut_ptr()),
+            cap: buf.len(),
+            req: Arc::clone(&req),
+        };
+        let action = self.shared.engines[self.tid].lock().unwrap().post(posted);
+        if let Some(act) = action {
+            self.run_match_action(act);
+        }
+        Ok(Request::new(req, self.progress_handle()))
+    }
+
+    /// Nonblocking receive (wildcards allowed).
+    pub fn irecv<'a>(&self, buf: &'a mut [u8], src: i32, tag: i32) -> Result<Request<'a>> {
+        self.irecv_ctx(self.shared.ctx, buf, src, tag)
+    }
+
+    /// Blocking receive.
+    pub fn recv(&self, buf: &mut [u8], src: i32, tag: i32) -> Result<Status> {
+        self.irecv(buf, src, tag)?.wait()
+    }
+
+    /// Two-copy rendezvous follow-up for remote senders (intra messages
+    /// never produce this action).
+    fn run_match_action(&self, act: MatchAction) {
+        if let MatchAction::StartTwoCopy {
+            token,
+            len,
+            reply_rank,
+            reply_vci,
+            posted,
+            status,
+        } = act
+        {
+            let sh = &self.shared;
+            let fabric = sh.parent.fabric();
+            let vci = tc_vci(fabric, sh.ctx);
+            let me = sh.parent.world_rank(sh.parent.rank());
+            let ep = fabric.endpoint(me, vci);
+            crate::progress::with_ep(fabric, ep, |st| {
+                crate::progress::start_two_copy(
+                    fabric, me, vci, st, token, len, reply_rank, reply_vci, posted, status,
+                );
+            });
+        }
+    }
+
+    // ------------------------------------------------------ typed sugar
+
+    pub fn send_t<T: Pod>(&self, data: &[T], dst: usize, tag: i32) -> Result<()> {
+        self.send(bytes_of(data), dst, tag)
+    }
+
+    pub fn recv_t<T: Pod>(&self, data: &mut [T], src: i32, tag: i32) -> Result<usize> {
+        let st = self.recv(bytes_of_mut(data), src, tag)?;
+        Ok(st.len / std::mem::size_of::<T>())
+    }
+}
+
+/// Endpoint a threadcomm's remote traffic uses, from its shared state.
+pub fn route_vci(fabric: &Fabric, tc: &TcShared) -> u16 {
+    tc_vci(fabric, tc.ctx)
+}
+
+/// The endpoint threadcomm remote traffic uses (deterministic on ctx so
+/// both sides agree).
+fn tc_vci(fabric: &Fabric, ctx: u32) -> u16 {
+    ((ctx & !(crate::coll::COLL_CTX_BIT | TC_CTX_BIT)) % fabric.cfg.n_shared as u32) as u16
+}
+
+/// Deliver an envelope into a local thread's engine, running any
+/// rendezvous follow-up against the proc endpoint.
+fn deliver_local(sh: &TcShared, tid: usize, env: Envelope, fabric: &Arc<Fabric>) {
+    let action = sh.engines[tid].lock().unwrap().deliver(env);
+    if let Some(MatchAction::StartTwoCopy {
+        token,
+        len,
+        reply_rank,
+        reply_vci,
+        posted,
+        status,
+    }) = action
+    {
+        let vci = tc_vci(fabric, sh.ctx);
+        let me = sh.parent.world_rank(sh.parent.rank());
+        let ep = fabric.endpoint(me, vci);
+        crate::progress::with_ep(fabric, ep, |st| {
+            crate::progress::start_two_copy(
+                fabric, me, vci, st, token, len, reply_rank, reply_vci, posted, status,
+            );
+        });
+    }
+}
+
+/// Called by the proc-level progress engine for envelopes whose ctx has
+/// the TC bit: forward into the destination thread's engine. Runs inside
+/// the endpoint's exclusion, so rendezvous follow-ups reuse `st`.
+pub fn forward(fabric: &Arc<Fabric>, rank: u32, env: Envelope) {
+    let route = {
+        let routes = fabric.ranks[rank as usize].tc_routes.lock().unwrap();
+        routes.get(&(env.hdr.ctx & !crate::coll::COLL_CTX_BIT)).cloned()
+    };
+    let Some(sh) = route else {
+        // Race with free: drop the message (matches MPI semantics of
+        // communicating on a freed communicator — erroneous program).
+        return;
+    };
+    let tid = env.hdr.dst_stream as usize;
+    deliver_local(&sh, tid, env, fabric);
+}
+
+/// Progress hook for a blocked threadcomm operation: nothing to drain for
+/// intra traffic (delivery is direct), but remote traffic needs the
+/// shared endpoints polled — handled by the caller (`poll_scope`).
+pub fn poll_thread(_fabric: &Arc<Fabric>, _tc: &Arc<TcShared>, _tid: usize) {}
+
+// --------------------------------------------------------- collectives
+
+impl crate::coll::CommLike for ThreadComm {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn size(&self) -> usize {
+        self.shared.total
+    }
+
+    fn coll_send(&self, buf: &[u8], dst: usize, tag: i32) -> Result<()> {
+        self.send_ctx(self.shared.ctx | crate::coll::COLL_CTX_BIT, buf, dst, tag)
+    }
+
+    fn coll_isend<'a>(&self, buf: &'a [u8], dst: usize, tag: i32) -> Result<Request<'a>> {
+        let ctx = self.shared.ctx | crate::coll::COLL_CTX_BIT;
+        let (p, t) = self.locate(dst)?;
+        if p == self.shared.parent.rank() {
+            if buf.len() <= TC_EAGER_MAX {
+                self.send_ctx(ctx, buf, dst, tag)?;
+                return Ok(Request::new(ReqInner::done(), self.progress_handle()));
+            }
+            self.isend_intra(ctx, buf, t, tag)
+        } else {
+            self.isend_remote(ctx, buf, p, t, tag)
+        }
+    }
+
+    fn coll_recv(&self, buf: &mut [u8], src: usize, tag: i32) -> Result<Status> {
+        self.irecv_ctx(
+            self.shared.ctx | crate::coll::COLL_CTX_BIT,
+            buf,
+            src as i32,
+            tag,
+        )?
+        .wait()
+    }
+
+    fn next_coll_tag(&self) -> i32 {
+        let s = self.coll_seq.get();
+        self.coll_seq.set(s.wrapping_add(1));
+        (s as i32) << 6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::universe::Universe;
+
+    /// Run a 2-proc × NT-thread threadcomm region, calling `f(tc)` on
+    /// every thread rank.
+    fn run_tc<F>(nprocs: usize, nt: usize, f: F)
+    where
+        F: Fn(&ThreadComm) + Sync,
+    {
+        Universe::run(Universe::with_ranks(nprocs), |world| {
+            let tc = Threadcomm::init(&world, nt).unwrap();
+            std::thread::scope(|s| {
+                for _ in 0..nt {
+                    let tc = &tc;
+                    let f = &f;
+                    s.spawn(move || {
+                        let h = tc.start();
+                        f(&h);
+                        h.finish();
+                    });
+                }
+            });
+        });
+    }
+
+    #[test]
+    fn ranks_are_n_times_m() {
+        // The paper's example output: 2 procs × 4 threads = ranks 0..8.
+        use std::sync::atomic::AtomicU32;
+        let seen = AtomicU32::new(0);
+        run_tc(2, 4, |h| {
+            assert_eq!(h.size(), 8);
+            assert!(h.rank() < 8);
+            seen.fetch_or(1 << h.rank(), Ordering::SeqCst);
+        });
+        assert_eq!(seen.load(Ordering::SeqCst), 0xFF);
+    }
+
+    #[test]
+    fn intra_process_small_message() {
+        run_tc(1, 2, |h| {
+            if h.rank() == 0 {
+                h.send(b"hi", 1, 5).unwrap();
+            } else {
+                let mut b = [0u8; 4];
+                let st = h.recv(&mut b, 0, 5).unwrap();
+                assert_eq!(st.len, 2);
+                assert_eq!(&b[..2], b"hi");
+            }
+        });
+    }
+
+    #[test]
+    fn intra_process_single_copy_large() {
+        run_tc(1, 2, |h| {
+            let n = 1 << 20;
+            if h.rank() == 0 {
+                let data: Vec<u8> = (0..n).map(|i| (i % 251) as u8).collect();
+                h.send(&data, 1, 0).unwrap();
+            } else {
+                let mut b = vec![0u8; n];
+                let st = h.recv(&mut b, 0, 0).unwrap();
+                assert_eq!(st.len, n);
+                assert!(b.iter().enumerate().all(|(i, &v)| v == (i % 251) as u8));
+            }
+        });
+    }
+
+    #[test]
+    fn cross_process_thread_ranks() {
+        run_tc(2, 2, |h| {
+            // Ring: rank r sends to (r+1)%4.
+            let next = (h.rank() + 1) % 4;
+            let prev = (h.rank() + 3) % 4;
+            let payload = [h.rank() as u8];
+            let req = h.isend(&payload, next, 1).unwrap();
+            let mut b = [0u8; 1];
+            let st = h.recv(&mut b, prev as i32, 1).unwrap();
+            assert_eq!(st.source, prev as i32);
+            assert_eq!(b[0], prev as u8);
+            req.wait().unwrap();
+        });
+    }
+
+    #[test]
+    fn cross_process_large_rendezvous() {
+        run_tc(2, 2, |h| {
+            let n = 300_000; // above eager_max: exercises RTS/CTS/chunks
+            if h.rank() == 0 {
+                let data: Vec<u8> = (0..n).map(|i| (i * 7 % 253) as u8).collect();
+                h.send(&data, 3, 9).unwrap(); // thread 1 of proc 1
+            } else if h.rank() == 3 {
+                let mut b = vec![0u8; n];
+                let st = h.recv(&mut b, 0, 9).unwrap();
+                assert_eq!(st.len, n);
+                assert!(b.iter().enumerate().all(|(i, &v)| v == (i * 7 % 253) as u8));
+            }
+        });
+    }
+
+    #[test]
+    fn wildcard_recv_from_any_thread() {
+        run_tc(1, 4, |h| {
+            if h.rank() == 0 {
+                let mut got = [false; 4];
+                for _ in 0..3 {
+                    let mut b = [0u8; 1];
+                    let st = h.recv(&mut b, crate::ANY_SOURCE, 2).unwrap();
+                    got[st.source as usize] = true;
+                    assert_eq!(b[0], st.source as u8);
+                }
+                assert!(got[1] && got[2] && got[3]);
+            } else {
+                h.send(&[h.rank() as u8], 0, 2).unwrap();
+            }
+        });
+    }
+
+    #[test]
+    fn collectives_across_thread_ranks() {
+        run_tc(2, 2, |h| {
+            // Barrier, then allreduce over all 4 thread ranks.
+            crate::coll::barrier(h).unwrap();
+            let mut v = [h.rank() as u64 + 1];
+            crate::coll::allreduce_t(h, &mut v, |a, b| *a += *b).unwrap();
+            assert_eq!(v[0], 1 + 2 + 3 + 4);
+            // Bcast from thread rank 3.
+            let mut x = [0u32; 4];
+            if h.rank() == 3 {
+                x = [9, 8, 7, 6];
+            }
+            crate::coll::bcast_t(h, &mut x, 3).unwrap();
+            assert_eq!(x, [9, 8, 7, 6]);
+        });
+    }
+
+    #[test]
+    fn inactive_use_is_error() {
+        Universe::run(Universe::with_ranks(1), |world| {
+            let tc = Threadcomm::init(&world, 1).unwrap();
+            let h = tc.start();
+            h.finish();
+            // After finish, a stale handle errors.
+            let h2 = ThreadComm {
+                shared: Arc::clone(tc.shared()),
+                tid: 0,
+                rank: 0,
+                coll_seq: Cell::new(0),
+            };
+            assert!(h2.send(b"x", 0, 0).is_err());
+        });
+    }
+
+    #[test]
+    fn restartable_across_parallel_regions() {
+        // The paper: "it can be activated and deactivated multiple times".
+        Universe::run(Universe::with_ranks(1), |world| {
+            let tc = Threadcomm::init(&world, 2).unwrap();
+            for round in 0..3 {
+                std::thread::scope(|s| {
+                    for _ in 0..2 {
+                        let tc = &tc;
+                        s.spawn(move || {
+                            let h = tc.start();
+                            if h.rank() == 0 {
+                                h.send(&[round as u8], 1, 0).unwrap();
+                            } else {
+                                let mut b = [0u8; 1];
+                                h.recv(&mut b, 0, 0).unwrap();
+                                assert_eq!(b[0], round as u8);
+                            }
+                            h.finish();
+                        });
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn asymmetric_thread_counts() {
+        // Different processes may specify different numbers of threads.
+        Universe::run(Universe::with_ranks(2), |world| {
+            let nt = if world.rank() == 0 { 1 } else { 3 };
+            let tc = Threadcomm::init(&world, nt).unwrap();
+            std::thread::scope(|s| {
+                for _ in 0..nt {
+                    let tc = &tc;
+                    s.spawn(move || {
+                        let h = tc.start();
+                        assert_eq!(h.size(), 4);
+                        crate::coll::barrier(&h).unwrap();
+                        let mut v = [h.rank() as u64];
+                        crate::coll::allreduce_t(&h, &mut v, |a, b| *a += *b).unwrap();
+                        assert_eq!(v[0], 0 + 1 + 2 + 3);
+                        h.finish();
+                    });
+                }
+            });
+        });
+    }
+}

@@ -1,0 +1,91 @@
+//! The launcher: spawns N ranks ("processes") as OS threads over one
+//! shared fabric and hands each its world communicator.
+//!
+//! Real MPICH ranks are processes; here they are threads with a strict
+//! no-shared-memory discipline on the proc-comm path (all data crosses
+//! through fabric channels — see DESIGN.md §Hardware-Adaptation). This is
+//! what lets one binary host the whole "cluster" while preserving the
+//! copy/protocol behavior the paper measures.
+
+use crate::comm::Comm;
+use crate::fabric::{Fabric, FabricConfig, CTX_WORLD};
+use std::sync::Arc;
+
+pub struct Universe;
+
+impl Universe {
+    /// Launch `cfg.nranks` ranks, run `f(world)` on each, join, and
+    /// return each rank's result ordered by rank.
+    pub fn run<T, F>(cfg: FabricConfig, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(Comm) -> T + Sync,
+    {
+        let fabric = Fabric::new(cfg);
+        Self::run_on(&fabric, &f)
+    }
+
+    /// Launch over an existing fabric (benches reuse fabrics to avoid
+    /// re-allocating endpoints between samples).
+    pub fn run_on<T, F>(fabric: &Arc<Fabric>, f: &F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(Comm) -> T + Sync,
+    {
+        let n = fabric.cfg.nranks;
+        let group = Arc::new((0..n as u32).collect::<Vec<_>>());
+        std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(n);
+            for rank in 0..n {
+                let fabric = Arc::clone(fabric);
+                let group = Arc::clone(&group);
+                let f = &f;
+                handles.push(s.spawn(move || {
+                    let world = Comm::new_proc(fabric, CTX_WORLD, rank as u32, group);
+                    f(world)
+                }));
+            }
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("rank panicked"))
+                .collect()
+        })
+    }
+
+    /// Convenience: default config with `n` ranks.
+    pub fn with_ranks(n: usize) -> FabricConfig {
+        FabricConfig {
+            nranks: n,
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranks_see_world() {
+        let out = Universe::run(Universe::with_ranks(4), |world| {
+            (world.rank(), world.size())
+        });
+        assert_eq!(out, vec![(0, 4), (1, 4), (2, 4), (3, 4)]);
+    }
+
+    #[test]
+    fn simple_send_recv() {
+        Universe::run(Universe::with_ranks(2), |world| {
+            if world.rank() == 0 {
+                world.send(b"ping", 1, 7).unwrap();
+            } else {
+                let mut buf = [0u8; 8];
+                let st = world.recv(&mut buf, 0, 7).unwrap();
+                assert_eq!(st.len, 4);
+                assert_eq!(&buf[..4], b"ping");
+                assert_eq!(st.source, 0);
+                assert_eq!(st.tag, 7);
+            }
+        });
+    }
+}

@@ -1,0 +1,20 @@
+//! Small substrate utilities: lock-free SPSC ring, PRNG, Pod bytes,
+//! timing/statistics helpers shared by benches and tests.
+
+pub mod json;
+pub mod pod;
+pub mod prng;
+pub mod spsc;
+pub mod stats;
+
+/// Busy-spin for approximately `ns` nanoseconds (calibrated coarse spin).
+/// Used by benches to model computation or injection overheads.
+pub fn spin_ns(ns: u64) {
+    if ns == 0 {
+        return;
+    }
+    let start = std::time::Instant::now();
+    while (start.elapsed().as_nanos() as u64) < ns {
+        std::hint::spin_loop();
+    }
+}

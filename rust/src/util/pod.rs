@@ -1,0 +1,90 @@
+//! Plain-old-data marker + byte-view helpers for typed communication.
+//!
+//! The wire format of the runtime is bytes; typed convenience APIs
+//! (`send_t`, `allreduce_t`, ...) view `&[T]` as `&[u8]` through this
+//! trait. Only primitives with no padding and no invalid bit patterns
+//! implement it.
+
+/// Types that can be safely viewed as raw bytes (no padding, any bit
+/// pattern valid).
+///
+/// # Safety
+/// Implementors must be `#[repr(C)]`/primitive with every bit pattern a
+/// valid value.
+pub unsafe trait Pod: Copy + Send + Sync + 'static {}
+
+unsafe impl Pod for u8 {}
+unsafe impl Pod for i8 {}
+unsafe impl Pod for u16 {}
+unsafe impl Pod for i16 {}
+unsafe impl Pod for u32 {}
+unsafe impl Pod for i32 {}
+unsafe impl Pod for u64 {}
+unsafe impl Pod for i64 {}
+unsafe impl Pod for usize {}
+unsafe impl Pod for f32 {}
+unsafe impl Pod for f64 {}
+
+/// View a Pod slice as bytes.
+pub fn bytes_of<T: Pod>(xs: &[T]) -> &[u8] {
+    // SAFETY: T is Pod — no padding, all bit patterns valid.
+    unsafe {
+        std::slice::from_raw_parts(xs.as_ptr() as *const u8, std::mem::size_of_val(xs))
+    }
+}
+
+/// View a mutable Pod slice as bytes.
+pub fn bytes_of_mut<T: Pod>(xs: &mut [T]) -> &mut [u8] {
+    // SAFETY: as above; exclusive borrow carried through.
+    unsafe {
+        std::slice::from_raw_parts_mut(
+            xs.as_mut_ptr() as *mut u8,
+            std::mem::size_of_val(xs),
+        )
+    }
+}
+
+/// Reinterpret bytes as a Pod slice (length must divide evenly; alignment
+/// must hold — the runtime always allocates aligned buffers).
+pub fn cast_slice<T: Pod>(bytes: &[u8]) -> &[T] {
+    let sz = std::mem::size_of::<T>();
+    assert_eq!(bytes.len() % sz, 0, "byte length not a multiple of element size");
+    assert_eq!(bytes.as_ptr() as usize % std::mem::align_of::<T>(), 0, "misaligned cast");
+    // SAFETY: length and alignment checked above; T is Pod.
+    unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const T, bytes.len() / sz) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let xs = [1.0f32, -2.5, 3.25];
+        let b = bytes_of(&xs);
+        assert_eq!(b.len(), 12);
+        let back: &[f32] = cast_slice(b);
+        assert_eq!(back, &xs);
+    }
+
+    #[test]
+    fn bytes_of_mut_writes_through() {
+        let mut xs = [0u32; 2];
+        bytes_of_mut(&mut xs)[0] = 0xAB;
+        assert_eq!(xs[0], 0xAB);
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple")]
+    fn cast_rejects_bad_length() {
+        let b = [0u8; 5];
+        let _: &[u32] = cast_slice(&b);
+    }
+}
+
+/// A zero-initialized Vec of Pod elements (all-zero bits are valid for
+/// every Pod type).
+pub fn zeroed_vec<T: Pod>(n: usize) -> Vec<T> {
+    // SAFETY: T is Pod — the all-zeros bit pattern is a valid value.
+    vec![unsafe { std::mem::zeroed() }; n]
+}

@@ -1,0 +1,166 @@
+//! Bounded lock-free single-producer/single-consumer ring.
+//!
+//! This is the "stream" fast path of the fabric: when an MPIX stream owns a
+//! VCI, exactly one thread produces into and one thread consumes from each
+//! (src, dst, vci) channel, so a wait-free SPSC ring replaces the per-VCI
+//! mutex entirely (the paper's lock-elimination argument, Fig 3b).
+
+use crossbeam_utils::CachePadded;
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+pub struct SpscRing<T> {
+    buf: Box<[UnsafeCell<MaybeUninit<T>>]>,
+    mask: usize,
+    /// Next slot to write (owned by producer; read by consumer).
+    head: CachePadded<AtomicUsize>,
+    /// Next slot to read (owned by consumer; read by producer).
+    tail: CachePadded<AtomicUsize>,
+}
+
+// SAFETY: single producer + single consumer discipline is enforced by the
+// owning fabric (one sender endpoint, one receiver endpoint per channel).
+unsafe impl<T: Send> Send for SpscRing<T> {}
+unsafe impl<T: Send> Sync for SpscRing<T> {}
+
+impl<T> SpscRing<T> {
+    /// Create a ring with capacity rounded up to a power of two (>= 2).
+    pub fn with_capacity(cap: usize) -> Self {
+        let cap = cap.next_power_of_two().max(2);
+        let buf = (0..cap)
+            .map(|_| UnsafeCell::new(MaybeUninit::uninit()))
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        Self {
+            buf,
+            mask: cap - 1,
+            head: CachePadded::new(AtomicUsize::new(0)),
+            tail: CachePadded::new(AtomicUsize::new(0)),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.mask + 1
+    }
+
+    /// Producer side: returns `Err(v)` when the ring is full.
+    pub fn push(&self, v: T) -> std::result::Result<(), T> {
+        let head = self.head.load(Ordering::Relaxed);
+        let tail = self.tail.load(Ordering::Acquire);
+        if head.wrapping_sub(tail) == self.capacity() {
+            return Err(v);
+        }
+        // SAFETY: slot is unoccupied (head - tail < capacity) and only the
+        // single producer writes heads.
+        unsafe {
+            (*self.buf[head & self.mask].get()).write(v);
+        }
+        self.head.store(head.wrapping_add(1), Ordering::Release);
+        Ok(())
+    }
+
+    /// Consumer side: returns `None` when the ring is empty.
+    pub fn pop(&self) -> Option<T> {
+        let tail = self.tail.load(Ordering::Relaxed);
+        let head = self.head.load(Ordering::Acquire);
+        if tail == head {
+            return None;
+        }
+        // SAFETY: slot was fully written before head release; only the
+        // single consumer advances tail.
+        let v = unsafe { (*self.buf[tail & self.mask].get()).assume_init_read() };
+        self.tail.store(tail.wrapping_add(1), Ordering::Release);
+        Some(v)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tail.load(Ordering::Relaxed) == self.head.load(Ordering::Acquire)
+    }
+
+    pub fn len(&self) -> usize {
+        let head = self.head.load(Ordering::Acquire);
+        let tail = self.tail.load(Ordering::Acquire);
+        head.wrapping_sub(tail)
+    }
+}
+
+impl<T> Drop for SpscRing<T> {
+    fn drop(&mut self) {
+        while self.pop().is_some() {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn push_pop_roundtrip() {
+        let r = SpscRing::with_capacity(4);
+        assert!(r.is_empty());
+        r.push(1u32).unwrap();
+        r.push(2).unwrap();
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.pop(), Some(1));
+        assert_eq!(r.pop(), Some(2));
+        assert_eq!(r.pop(), None);
+    }
+
+    #[test]
+    fn full_ring_rejects() {
+        let r = SpscRing::with_capacity(2);
+        r.push(1u8).unwrap();
+        r.push(2).unwrap();
+        assert_eq!(r.push(3), Err(3));
+        assert_eq!(r.pop(), Some(1));
+        r.push(3).unwrap();
+    }
+
+    #[test]
+    fn capacity_rounds_to_pow2() {
+        assert_eq!(SpscRing::<u8>::with_capacity(3).capacity(), 4);
+        assert_eq!(SpscRing::<u8>::with_capacity(0).capacity(), 2);
+    }
+
+    #[test]
+    fn cross_thread_fifo() {
+        let r = Arc::new(SpscRing::with_capacity(8));
+        let p = Arc::clone(&r);
+        let n = 100_000u64;
+        let producer = std::thread::spawn(move || {
+            for i in 0..n {
+                let mut v = i;
+                loop {
+                    match p.push(v) {
+                        Ok(()) => break,
+                        Err(back) => {
+                            v = back;
+                            std::hint::spin_loop();
+                        }
+                    }
+                }
+            }
+        });
+        let mut expect = 0u64;
+        while expect < n {
+            if let Some(v) = r.pop() {
+                assert_eq!(v, expect);
+                expect += 1;
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+        producer.join().unwrap();
+    }
+
+    #[test]
+    fn drops_remaining_items() {
+        // Box payloads must be dropped by the ring, not leaked.
+        let r = SpscRing::with_capacity(4);
+        r.push(Box::new(42)).unwrap();
+        r.push(Box::new(43)).unwrap();
+        drop(r); // miri/asan would flag a leak here if Drop were wrong
+    }
+}

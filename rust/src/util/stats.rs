@@ -1,0 +1,141 @@
+//! Timing and statistics helpers for the bench harness.
+//!
+//! criterion is unavailable in the offline crate set; this provides the
+//! same discipline (warmup, repeated samples, mean/σ/percentiles) with a
+//! criterion-style one-line report per case.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub samples: Vec<f64>, // seconds per iteration
+}
+
+impl Summary {
+    pub fn from_samples(mut samples: Vec<f64>) -> Self {
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Self { samples }
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn stddev(&self) -> f64 {
+        let m = self.mean();
+        let var = self
+            .samples
+            .iter()
+            .map(|x| (x - m) * (x - m))
+            .sum::<f64>()
+            / self.samples.len().max(1) as f64;
+        var.sqrt()
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        let idx = ((self.samples.len() - 1) as f64 * p / 100.0).round() as usize;
+        self.samples[idx]
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples[0]
+    }
+}
+
+/// Format seconds in a human scale (ns/µs/ms/s).
+pub fn fmt_time(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.3} ms", secs * 1e3)
+    } else {
+        format!("{:.3} s", secs)
+    }
+}
+
+/// Format a rate (per-second count).
+pub fn fmt_rate(per_sec: f64) -> String {
+    if per_sec >= 1e9 {
+        format!("{:.2} G/s", per_sec / 1e9)
+    } else if per_sec >= 1e6 {
+        format!("{:.2} M/s", per_sec / 1e6)
+    } else if per_sec >= 1e3 {
+        format!("{:.2} K/s", per_sec / 1e3)
+    } else {
+        format!("{:.1} /s", per_sec)
+    }
+}
+
+/// Run `f()` (which performs `iters_per_sample` inner iterations) for
+/// `samples` timed samples after `warmup` untimed runs; returns per-
+/// iteration seconds.
+pub fn bench_loop<F: FnMut()>(
+    warmup: usize,
+    samples: usize,
+    iters_per_sample: usize,
+    mut f: F,
+) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed();
+        out.push(dt.as_secs_f64() / iters_per_sample as f64);
+    }
+    Summary::from_samples(out)
+}
+
+/// criterion-style report line.
+pub fn report(name: &str, s: &Summary) {
+    println!(
+        "{:<44} time: [{} {} {}]  σ={}",
+        name,
+        fmt_time(s.min()),
+        fmt_time(s.mean()),
+        fmt_time(s.percentile(95.0)),
+        fmt_time(s.stddev()),
+    );
+}
+
+/// Measure a single closure's wall time.
+pub fn time_it<T, F: FnOnce() -> T>(f: F) -> (T, Duration) {
+    let t0 = Instant::now();
+    let v = f();
+    (v, t0.elapsed())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_stats() {
+        let s = Summary::from_samples(vec![3.0, 1.0, 2.0]);
+        assert_eq!(s.min(), 1.0);
+        assert!((s.mean() - 2.0).abs() < 1e-12);
+        assert_eq!(s.percentile(100.0), 3.0);
+        assert_eq!(s.percentile(0.0), 1.0);
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert!(fmt_time(2e-9).contains("ns"));
+        assert!(fmt_time(2e-6).contains("µs"));
+        assert!(fmt_time(2e-3).contains("ms"));
+        assert!(fmt_time(2.0).contains(" s"));
+        assert!(fmt_rate(5e6).contains("M/s"));
+    }
+
+    #[test]
+    fn bench_loop_runs_expected_counts() {
+        let mut n = 0;
+        let s = bench_loop(2, 3, 10, || n += 1);
+        assert_eq!(n, 5);
+        assert_eq!(s.samples.len(), 3);
+    }
+}

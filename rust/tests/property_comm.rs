@@ -1,0 +1,215 @@
+//! Property tests over the communication core (hand-rolled xorshift
+//! generators — proptest is not in the offline crate set).
+//!
+//! Each property runs many seeded cases; failures print the seed for
+//! replay.
+
+use mpix::coll;
+use mpix::datatype::Datatype;
+use mpix::fabric::FabricConfig;
+use mpix::threadcomm::Threadcomm;
+use mpix::universe::Universe;
+use mpix::util::prng::Rng;
+
+/// Property: payload integrity for arbitrary sizes and values across the
+/// eager/rendezvous boundary, both directions at once.
+#[test]
+fn prop_payload_integrity_bidirectional() {
+    for case in 0..8 {
+        let seed = 0xA11CE + case * 7919;
+        Universe::run(Universe::with_ranks(2), |world| {
+            let mut rng = Rng::new(seed);
+            for round in 0..6 {
+                let n = rng.range(1, 300_000);
+                let mut data = vec![0u8; n];
+                Rng::new(seed ^ round ^ world.rank() as u64).fill_bytes(&mut data);
+                let peer = 1 - world.rank();
+                let req = world.isend(&data, peer, round as i32).unwrap();
+                let mut got = vec![0u8; n];
+                world.recv(&mut got, peer as i32, round as i32).unwrap();
+                let mut want = vec![0u8; n];
+                Rng::new(seed ^ round ^ peer as u64).fill_bytes(&mut want);
+                assert_eq!(got, want, "case {case} round {round} n {n}");
+                req.wait().unwrap();
+            }
+        });
+    }
+}
+
+/// Property: collectives agree with a scalar oracle for random sizes,
+/// rank counts and operations.
+#[test]
+fn prop_collectives_match_oracle() {
+    for case in 0..6 {
+        let seed = 0xC0FFEE + case * 104_729;
+        let mut rng = Rng::new(seed);
+        let nranks = rng.range(2, 5);
+        let nelem = rng.range(1, 64);
+        let op = rng.range(0, 2); // 0=sum 1=max 2=min
+        let cfg = FabricConfig {
+            nranks,
+            ..Default::default()
+        };
+        Universe::run(cfg, |world| {
+            let mut mine: Vec<i64> = (0..nelem)
+                .map(|i| {
+                    let mut r = Rng::new(seed ^ (world.rank() as u64) << 8 ^ i as u64);
+                    r.next_u64() as i64 % 1000
+                })
+                .collect();
+            let orig = mine.clone();
+            match op {
+                0 => coll::allreduce_t(&world, &mut mine, |a, b| *a += *b).unwrap(),
+                1 => coll::allreduce_t(&world, &mut mine, |a, b| *a = (*a).max(*b)).unwrap(),
+                _ => coll::allreduce_t(&world, &mut mine, |a, b| *a = (*a).min(*b)).unwrap(),
+            }
+            // Oracle: recompute from every rank's deterministic input.
+            for i in 0..nelem {
+                let vals: Vec<i64> = (0..nranks)
+                    .map(|r| {
+                        let mut rr = Rng::new(seed ^ (r as u64) << 8 ^ i as u64);
+                        rr.next_u64() as i64 % 1000
+                    })
+                    .collect();
+                let want = match op {
+                    0 => vals.iter().sum::<i64>(),
+                    1 => *vals.iter().max().unwrap(),
+                    _ => *vals.iter().min().unwrap(),
+                };
+                assert_eq!(mine[i], want, "case {case} elem {i} (mine was {:?})", orig[i]);
+            }
+        });
+    }
+}
+
+/// Property: pack → send → unpack through random nested datatypes equals
+/// direct typed copy.
+#[test]
+fn prop_datatype_exchange_roundtrip() {
+    for case in 0..10u64 {
+        let seed = 0xDA7A + case * 65_537;
+        Universe::run(Universe::with_ranks(2), |world| {
+            // Both ranks construct the SAME datatype from the seed.
+            let mut rng = Rng::new(seed);
+            let t = random_safe_type(&mut rng, 3);
+            let span = (t.lb() + t.extent().max(t.size() as isize)) as usize + 32;
+            if world.rank() == 0 {
+                let mut src = vec![0u8; span];
+                Rng::new(seed + 1).fill_bytes(&mut src);
+                let packed = t.pack(&src).unwrap();
+                world.send(&packed, 1, 0).unwrap();
+            } else {
+                let mut packed = vec![0u8; t.size()];
+                world.recv(&mut packed, 0, 0).unwrap();
+                let mut dst = vec![0u8; span];
+                t.unpack(&packed, &mut dst).unwrap();
+                // Every typed cell equals the sender's buffer cell.
+                let mut src = vec![0u8; span];
+                Rng::new(seed + 1).fill_bytes(&mut src);
+                let want = t.pack(&src).unwrap();
+                let got = t.pack(&dst).unwrap();
+                assert_eq!(got, want, "case {case}");
+            }
+        });
+    }
+}
+
+/// Non-negative-offset random nested datatype.
+fn random_safe_type(rng: &mut Rng, depth: usize) -> Datatype {
+    if depth == 0 || rng.range(0, 3) == 0 {
+        return Datatype::bytes(rng.range(1, 12));
+    }
+    match rng.range(0, 2) {
+        0 => {
+            let child = random_safe_type(rng, depth - 1);
+            let blocklen = rng.range(1, 3);
+            let count = rng.range(1, 4);
+            let stride = child.extent().max(1) * blocklen as isize + rng.range(0, 6) as isize;
+            Datatype::hvector(count, blocklen, stride, &child)
+        }
+        _ => {
+            let a = random_safe_type(rng, depth - 1);
+            let b = random_safe_type(rng, depth - 1);
+            let off = a.extent().max(0) + rng.range(0, 8) as isize;
+            Datatype::struct_type(&[(0, 1, a), (off, 1, b)])
+        }
+    }
+}
+
+/// Property: threadcomm rank numbering is a bijection onto 0..N*M for
+/// random process/thread shapes, and a token ring over it completes.
+#[test]
+fn prop_threadcomm_rank_bijection() {
+    for case in 0..4 {
+        let mut rng = Rng::new(0xBEEF + case);
+        let nprocs = rng.range(1, 3);
+        let nthreads = rng.range(1, 4);
+        let cfg = FabricConfig {
+            nranks: nprocs,
+            ..Default::default()
+        };
+        let seen = std::sync::Mutex::new(Vec::<usize>::new());
+        Universe::run(cfg, |world| {
+            let tc = Threadcomm::init(&world, nthreads).unwrap();
+            std::thread::scope(|s| {
+                for _ in 0..nthreads {
+                    let tc = &tc;
+                    let seen = &seen;
+                    s.spawn(move || {
+                        let h = tc.start();
+                        seen.lock().unwrap().push(h.rank());
+                        // Token ring across every thread rank.
+                        let n = h.size();
+                        if n > 1 {
+                            let next = (h.rank() + 1) % n;
+                            let prev = (h.rank() + n - 1) % n;
+                            let tok = [h.rank() as u64];
+                            let req = h
+                                .isend(mpix::util::pod::bytes_of(&tok), next, 0)
+                                .unwrap();
+                            let mut got = [0u64];
+                            h.recv(mpix::util::pod::bytes_of_mut(&mut got), prev as i32, 0)
+                                .unwrap();
+                            assert_eq!(got[0], prev as u64);
+                            req.wait().unwrap();
+                        }
+                        h.finish();
+                    });
+                }
+            });
+        });
+        let mut ranks = seen.into_inner().unwrap();
+        ranks.sort_unstable();
+        let total = nprocs * nthreads;
+        assert_eq!(ranks, (0..total).collect::<Vec<_>>(), "case {case}");
+    }
+}
+
+/// Property: request state machine — test() is monotone (never reports
+/// complete then pending), and waitall equals individual waits.
+#[test]
+fn prop_request_state_monotone() {
+    Universe::run(Universe::with_ranks(2), |world| {
+        for round in 0..50 {
+            if world.rank() == 0 {
+                let data = vec![round as u8; 300_000]; // rendezvous path
+                let req = world.isend(&data, 1, 0).unwrap();
+                let mut was_complete = false;
+                loop {
+                    let c = req.test();
+                    assert!(!(was_complete && !c), "test() regressed");
+                    was_complete = c;
+                    if c {
+                        break;
+                    }
+                }
+                req.wait().unwrap();
+            } else {
+                std::thread::sleep(std::time::Duration::from_micros(100));
+                let mut buf = vec![0u8; 300_000];
+                world.recv(&mut buf, 0, 0).unwrap();
+                assert!(buf.iter().all(|&b| b == round as u8));
+            }
+        }
+    });
+}
