@@ -43,7 +43,7 @@ fn run(enqueued: bool) -> (f64, f64) {
         mpix::coll::barrier(&world).unwrap();
 
         let t0 = Instant::now();
-        let mut issue = 0f64;
+        let issue;
         if world.rank() == 0 {
             let x = DevBuf::alloc(N);
             x.from_host(&vec![1.0; N]);

@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# CI gate: formatting, lints, tier-1 build+test, and bench compilation.
+# Run from anywhere; operates on the repo root. Requires a Rust toolchain
+# (rustup component add rustfmt clippy). No network access is needed —
+# the workspace has zero external dependencies.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "==> cargo fmt --check"
+cargo fmt --all -- --check
+
+echo "==> cargo clippy (deny warnings)"
+cargo clippy --workspace --all-targets -- -D warnings
+
+echo "==> tier-1: cargo build --release && cargo test -q"
+cargo build --release
+cargo test -q
+
+echo "==> benches compile"
+cargo bench --no-run
+
+echo "ci.sh OK"

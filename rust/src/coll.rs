@@ -47,7 +47,7 @@ pub fn barrier<C: CommLike>(comm: &C) -> Result<()> {
     let mut round = 0;
     while k < n {
         let to = (me + k) % n;
-        let from = (me + n - k % n) % n;
+        let from = (me + n - k) % n;
         let tag = base.wrapping_add(round);
         comm.coll_send(&[], to, tag)?;
         comm.coll_recv(&mut [], from, tag)?;
@@ -267,6 +267,36 @@ mod tests {
             // After the barrier, every rank must have arrived.
             assert_eq!(before.load(Ordering::SeqCst), 4);
         });
+    }
+
+    #[test]
+    fn barrier_nonpow2_sizes() {
+        // Regression for the partner-index precedence accident:
+        // `(me + n - k % n) % n` parsed as `k % n`, which only happened to
+        // be correct because the dissemination loop keeps k < n. The
+        // partner must be `(me + n - k) % n` at every round, exercised
+        // here over non-power-of-two comm sizes.
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        for &n in &[3usize, 5, 7] {
+            let arrived = AtomicUsize::new(0);
+            let departed = AtomicUsize::new(0);
+            Universe::run(Universe::with_ranks(n), |world| {
+                for round in 0..3 {
+                    arrived.fetch_add(1, Ordering::SeqCst);
+                    barrier(&world).unwrap();
+                    // Every rank must have arrived at this round's barrier
+                    // before any rank passes it.
+                    assert!(
+                        arrived.load(Ordering::SeqCst) >= (round + 1) * n,
+                        "size {n} round {round}: barrier released early"
+                    );
+                    departed.fetch_add(1, Ordering::SeqCst);
+                    barrier(&world).unwrap();
+                }
+            });
+            assert_eq!(arrived.into_inner(), 3 * n);
+            assert_eq!(departed.into_inner(), 3 * n);
+        }
     }
 
     #[test]

@@ -22,7 +22,7 @@ use crate::progress::{self, with_ep};
 use crate::request::{ProgressHandle, ProgressScope, ReqInner, Request, Status};
 use crate::stream::Stream;
 use crate::util::pod::{bytes_of, bytes_of_mut, Pod};
-use crate::{ANY_STREAM};
+use crate::ANY_STREAM;
 use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::Arc;
 

@@ -2,66 +2,104 @@
 //!
 //! Modeled on MPI error classes: every public API returns `Result<T>` with
 //! an error that maps onto the MPI error class it would raise in MPICH.
+//! (`thiserror` is not in the offline crate set; the `Display` and
+//! `Error` impls are written by hand.)
 
-use thiserror::Error;
+use std::fmt;
 
 /// MPI-style error classes raised by the runtime.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum MpiError {
     /// `MPI_ERR_TRUNCATE`: receive buffer smaller than the matched message.
-    #[error("message truncated: incoming {incoming} bytes > buffer {capacity} bytes")]
     Truncate { incoming: usize, capacity: usize },
 
     /// `MPI_ERR_RANK`: rank outside the communicator's group.
-    #[error("rank {rank} out of range for communicator of size {size}")]
     RankOutOfRange { rank: i32, size: usize },
 
     /// `MPI_ERR_TAG`: invalid tag value.
-    #[error("invalid tag {0}")]
     InvalidTag(i32),
 
     /// `MPI_ERR_COUNT` / size mismatch in typed operations.
-    #[error("count/size mismatch: {0}")]
     SizeMismatch(String),
 
     /// Out of virtual communication interfaces (the paper: stream creation
     /// "returns failure if it runs out of available endpoints").
-    #[error("out of virtual communication interfaces ({limit} available)")]
     VciExhausted { limit: usize },
 
     /// `MPI_ERR_ARG`: invalid argument.
-    #[error("invalid argument: {0}")]
     InvalidArg(String),
 
     /// `MPI_ERR_TYPE`: invalid datatype construction or query.
-    #[error("datatype error: {0}")]
     Datatype(String),
 
     /// `MPI_ERR_WIN`: RMA window error.
-    #[error("rma window error: {0}")]
     Rma(String),
 
     /// Object used after free / before activation (e.g. inactive threadcomm).
-    #[error("object in invalid state: {0}")]
     InvalidState(String),
 
     /// Offload stream / enqueue error.
-    #[error("offload error: {0}")]
     Offload(String),
 
     /// PJRT runtime error (artifact loading, compilation, execution).
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Internal invariant violation — a bug in the runtime.
-    #[error("internal error: {0}")]
     Internal(String),
 }
 
+impl fmt::Display for MpiError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MpiError::Truncate { incoming, capacity } => write!(
+                f,
+                "message truncated: incoming {incoming} bytes > buffer {capacity} bytes"
+            ),
+            MpiError::RankOutOfRange { rank, size } => {
+                write!(f, "rank {rank} out of range for communicator of size {size}")
+            }
+            MpiError::InvalidTag(tag) => write!(f, "invalid tag {tag}"),
+            MpiError::SizeMismatch(s) => write!(f, "count/size mismatch: {s}"),
+            MpiError::VciExhausted { limit } => write!(
+                f,
+                "out of virtual communication interfaces ({limit} available)"
+            ),
+            MpiError::InvalidArg(s) => write!(f, "invalid argument: {s}"),
+            MpiError::Datatype(s) => write!(f, "datatype error: {s}"),
+            MpiError::Rma(s) => write!(f, "rma window error: {s}"),
+            MpiError::InvalidState(s) => write!(f, "object in invalid state: {s}"),
+            MpiError::Offload(s) => write!(f, "offload error: {s}"),
+            MpiError::Runtime(s) => write!(f, "runtime error: {s}"),
+            MpiError::Internal(s) => write!(f, "internal error: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for MpiError {}
+
 pub type Result<T> = std::result::Result<T, MpiError>;
 
-impl From<anyhow::Error> for MpiError {
-    fn from(e: anyhow::Error) -> Self {
-        MpiError::Runtime(format!("{e:#}"))
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_mpi_class_wording() {
+        let e = MpiError::Truncate {
+            incoming: 10,
+            capacity: 4,
+        };
+        assert_eq!(
+            e.to_string(),
+            "message truncated: incoming 10 bytes > buffer 4 bytes"
+        );
+        let e = MpiError::VciExhausted { limit: 24 };
+        assert!(e.to_string().contains("24 available"));
+    }
+
+    #[test]
+    fn is_std_error() {
+        fn takes_err(_: &dyn std::error::Error) {}
+        takes_err(&MpiError::InvalidTag(-2));
     }
 }

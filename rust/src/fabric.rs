@@ -21,7 +21,7 @@
 
 use crate::error::{MpiError, Result};
 use crate::metrics::Metrics;
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -266,6 +266,12 @@ pub struct EpState {
     pub inbox_cache: Vec<Arc<Channel>>,
     /// Version of `inbox_cache` (compared against the registry's).
     pub inbox_seen: u64,
+    /// Inbound envelopes popped off the rings but not yet dispatched:
+    /// a backpressured `progress::send_ctrl` stashes arrivals here (to
+    /// free the peer's pushes without re-entering the dispatch path);
+    /// the next progress pass dispatches them, in order, before popping
+    /// the rings again — preserving per-channel FIFO.
+    pub rx_backlog: VecDeque<Envelope>,
 }
 
 impl EpState {
@@ -277,6 +283,7 @@ impl EpState {
             tx_cache: HashMap::new(),
             inbox_cache: Vec::new(),
             inbox_seen: 0,
+            rx_backlog: VecDeque::new(),
         }
     }
 }

@@ -408,10 +408,7 @@ mod tests {
 
     #[test]
     fn kernel_launch_saxpy() {
-        if !crate::runtime::Registry::default_dir()
-            .join("manifest.json")
-            .exists()
-        {
+        if !crate::runtime::Registry::artifacts_ready() {
             eprintln!("skipping: artifacts not built");
             return;
         }

@@ -11,7 +11,10 @@
 //! [`start_progress_thread`], with the paper's idle/busy/exit spin-up /
 //! spin-down control exposed directly.
 
-use crate::fabric::{Endpoint, Envelope, EpKind, EpState, Fabric, Header, LockMode, Payload, RecvPtr, SendPtr, CTX_CTRL};
+use crate::fabric::{
+    Endpoint, Envelope, EpKind, EpState, Fabric, Header, LockMode, Payload, RecvPtr, SendPtr,
+    CTX_CTRL,
+};
 use crate::matching::MatchAction;
 use crate::metrics::Metrics;
 use crate::request::{ProgressScope, ReqInner, Status};
@@ -118,14 +121,27 @@ pub fn poll_endpoint(fabric: &Arc<Fabric>, rank: u32, vci: u16) {
     let mut tc_deferred: Vec<Envelope> = Vec::new();
     with_ep(fabric, ep, |st| {
         fabric.refresh_inboxes(ep, st);
+        // Envelopes a backpressured send_ctrl stashed come first — they
+        // arrived before anything still sitting in the rings. Dispatching
+        // may stash more (send_ctrl under pressure); pop_front sees those
+        // too, in order.
+        while let Some(env) = st.rx_backlog.pop_front() {
+            deliver_or_defer(fabric, rank, vci, st, env, &mut tc_deferred);
+        }
         let n_inboxes = st.inbox_cache.len();
         for i in 0..n_inboxes {
             let ch = Arc::clone(&st.inbox_cache[i]);
-            while let Some(env) = ch.ring.pop() {
-                if env.hdr.ctx != CTX_CTRL && crate::threadcomm::is_tc_ctx(env.hdr.ctx) {
-                    tc_deferred.push(env);
-                } else {
-                    dispatch(fabric, rank, vci, st, env);
+            loop {
+                // A dispatch below may have stashed arrivals (send_ctrl
+                // under backpressure); those are older than anything
+                // still in the rings, so keep the backlog ahead of new
+                // pops or per-channel FIFO breaks.
+                while let Some(env) = st.rx_backlog.pop_front() {
+                    deliver_or_defer(fabric, rank, vci, st, env, &mut tc_deferred);
+                }
+                match ch.ring.pop() {
+                    Some(env) => deliver_or_defer(fabric, rank, vci, st, env, &mut tc_deferred),
+                    None => break,
                 }
             }
         }
@@ -133,6 +149,24 @@ pub fn poll_endpoint(fabric: &Arc<Fabric>, rank: u32, vci: u16) {
     });
     for env in tc_deferred {
         crate::threadcomm::forward(fabric, rank, env);
+    }
+}
+
+/// Dispatch one inbound envelope, or defer it: threadcomm envelopes must
+/// be forwarded outside the endpoint exclusion (their rendezvous
+/// follow-ups re-enter this endpoint).
+fn deliver_or_defer(
+    fabric: &Arc<Fabric>,
+    rank: u32,
+    vci: u16,
+    st: &mut EpState,
+    env: Envelope,
+    tc_deferred: &mut Vec<Envelope>,
+) {
+    if env.hdr.ctx != CTX_CTRL && crate::threadcomm::is_tc_ctx(env.hdr.ctx) {
+        tc_deferred.push(env);
+    } else {
+        dispatch(fabric, rank, vci, st, env);
     }
 }
 
@@ -308,8 +342,19 @@ fn ctrl_hdr() -> Header {
     }
 }
 
-/// Push a control envelope from `src` endpoint state to `dst`, spinning
-/// through local pumping if the ring is momentarily full.
+/// Push a control envelope from `src` endpoint state to `dst`, stashing
+/// our own inbound traffic between retries when the ring is full.
+///
+/// The stash is what makes a full ring safe: two peers whose rings to
+/// each other are both full would otherwise spin forever, each holding
+/// its endpoint exclusion and waiting for the other to consume
+/// (mutual-livelock). Popping our inbound rings into
+/// [`crate::fabric::EpState::rx_backlog`] frees the peer's pushes — and
+/// the peer stashing likewise frees ours — without *dispatching* here,
+/// which would recurse back into `send_ctrl` with unbounded depth. The
+/// stashed envelopes are dispatched, in order, by the next
+/// [`poll_endpoint`] pass. The spin is bounded by the MPIX_SPIN budget,
+/// after which each retry yields the core instead of busy-waiting.
 pub fn send_ctrl(
     fabric: &Arc<Fabric>,
     st: &mut EpState,
@@ -322,14 +367,46 @@ pub fn send_ctrl(
         hdr: ctrl_hdr(),
         payload,
     };
+    let mut spins = 0u32;
     loop {
         match ch.ring.push(env) {
             Ok(()) => return,
             Err(back) => {
                 env = back;
-                // The peer must drain; don't deadlock while holding our
-                // endpoint — just spin (control rings are rarely full).
-                std::hint::spin_loop();
+                stash_inbound(fabric, src.0, src.1, st);
+                crate::request::backoff(&mut spins);
+            }
+        }
+    }
+}
+
+/// Pop inbound envelopes from (rank, vci)'s rings into the endpoint's
+/// `rx_backlog` WITHOUT dispatching — freeing ring slots so a blocked
+/// peer can make progress. Caller holds the endpoint exclusion.
+///
+/// Pops are capped at one ring's worth per call: that is enough to
+/// unblock a peer stuck mid-push, while keeping the rings' chunk
+/// backpressure meaningful — an uncapped drain would let a peer's
+/// `pump_sends` copy an entire rendezvous transfer into `rx_backlog`
+/// during one stall. Accumulation across retries stays bounded by the
+/// peers' in-flight send bytes.
+fn stash_inbound(fabric: &Arc<Fabric>, rank: u32, vci: u16, st: &mut EpState) {
+    let ep = fabric.endpoint(rank, vci);
+    fabric.refresh_inboxes(ep, st);
+    let mut quota = fabric.cfg.channel_cap.max(1);
+    let n_inboxes = st.inbox_cache.len();
+    for i in 0..n_inboxes {
+        if quota == 0 {
+            return;
+        }
+        let ch = Arc::clone(&st.inbox_cache[i]);
+        while quota > 0 {
+            match ch.ring.pop() {
+                Some(env) => {
+                    st.rx_backlog.push_back(env);
+                    quota -= 1;
+                }
+                None => break,
             }
         }
     }
@@ -379,8 +456,22 @@ impl ProgressCtl {
 
 /// `MPIX_Start_progress_thread(stream)`: spawn the default progress
 /// thread for a scope. `None` ≙ MPIX_STREAM_NULL (general progress).
+///
+/// Calling this while a progress thread is already running stops and
+/// joins the existing thread before installing the replacement —
+/// overwriting the handle would leave a detached busy-poll loop running
+/// forever.
 pub fn start_progress_thread(fabric: &Arc<Fabric>, rank: u32, stream_vci: Option<u16>) {
     let ctl = Arc::clone(&fabric.ranks[rank as usize].progress_ctl);
+    // Hold the handle lock across the whole stop/join/spawn/store
+    // sequence so concurrent start (or start racing stop) calls cannot
+    // interleave and leak a detached thread. The progress thread itself
+    // never takes this lock, so joining under it cannot deadlock.
+    let mut slot = ctl.handle.lock().unwrap();
+    if let Some(h) = slot.take() {
+        ctl.state.store(PROGRESS_EXIT, Ordering::Release);
+        let _ = h.join();
+    }
     let f = Arc::clone(fabric);
     ctl.set_busy();
     let ctl2 = Arc::clone(&ctl);
@@ -394,15 +485,46 @@ pub fn start_progress_thread(fabric: &Arc<Fabric>, rank: u32, stream_vci: Option
             _ => break,
         }
     });
-    *ctl.handle.lock().unwrap() = Some(h);
+    *slot = Some(h);
 }
 
 /// `MPIX_Stop_progress_thread`.
 pub fn stop_progress_thread(fabric: &Arc<Fabric>, rank: u32) {
     let ctl = &fabric.ranks[rank as usize].progress_ctl;
+    // Same lock discipline as start_progress_thread: state transitions
+    // and the join happen under the handle lock so a concurrent start
+    // cannot observe a half-stopped control block.
+    let mut slot = ctl.handle.lock().unwrap();
     ctl.state.store(PROGRESS_EXIT, Ordering::Release);
-    if let Some(h) = ctl.handle.lock().unwrap().take() {
+    if let Some(h) = slot.take() {
         let _ = h.join();
     }
     ctl.state.store(PROGRESS_IDLE, Ordering::Release);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::FabricConfig;
+
+    #[test]
+    fn progress_thread_restart_stops_previous() {
+        // Regression: a second start used to overwrite `ctl.handle`
+        // without joining the first thread, leaking a detached busy-poll
+        // loop. Restarting must stop-and-join, and one stop afterwards
+        // must leave no thread behind.
+        let f = Fabric::new(FabricConfig {
+            nranks: 1,
+            ..Default::default()
+        });
+        start_progress_thread(&f, 0, None);
+        assert_eq!(f.ranks[0].progress_ctl.state(), PROGRESS_BUSY);
+        start_progress_thread(&f, 0, Some(f.cfg.n_shared as u16));
+        assert_eq!(f.ranks[0].progress_ctl.state(), PROGRESS_BUSY);
+        stop_progress_thread(&f, 0);
+        assert_eq!(f.ranks[0].progress_ctl.state(), PROGRESS_IDLE);
+        assert!(f.ranks[0].progress_ctl.handle.lock().unwrap().is_none());
+        // Stopping again is a no-op, not a hang.
+        stop_progress_thread(&f, 0);
+    }
 }

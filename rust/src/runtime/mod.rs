@@ -8,6 +8,8 @@
 //! a Registry is **thread-confined** — each offload-stream worker owns
 //! its own (the CUDA-context-per-thread analogy).
 
+mod xla;
+
 use crate::error::{MpiError, Result};
 use crate::util::json::Json;
 use std::collections::HashMap;
@@ -105,11 +107,33 @@ impl Registry {
         })
     }
 
+    /// True when a real PJRT backend is linked in. The offline build
+    /// ships a stub backend (see `runtime/xla.rs`) that parses manifests
+    /// but cannot execute artifacts; artifact-executing tests gate on
+    /// this in addition to the manifest existing.
+    pub fn backend_available() -> bool {
+        xla::AVAILABLE
+    }
+
     /// Default artifacts location (repo-root/artifacts or $ARTIFACTS_DIR).
+    /// `python/compile/aot.py` writes to `../artifacts` relative to
+    /// `python/`, i.e. the repo root — one level above this crate's
+    /// manifest dir.
     pub fn default_dir() -> PathBuf {
         std::env::var_os("ARTIFACTS_DIR")
             .map(PathBuf::from)
-            .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+            .unwrap_or_else(|| {
+                PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+                    .join("..")
+                    .join("artifacts")
+            })
+    }
+
+    /// True when artifact-executing code paths can actually run: a real
+    /// PJRT backend is linked AND the AOT manifest exists. Tests that
+    /// execute kernels gate on this and skip otherwise.
+    pub fn artifacts_ready() -> bool {
+        Self::backend_available() && Self::default_dir().join("manifest.json").exists()
     }
 
     pub fn names(&self) -> Vec<&str> {
@@ -194,7 +218,7 @@ mod tests {
     use super::*;
 
     fn artifacts_ready() -> bool {
-        Registry::default_dir().join("manifest.json").exists()
+        Registry::artifacts_ready()
     }
 
     #[test]

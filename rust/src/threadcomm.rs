@@ -744,7 +744,7 @@ mod tests {
                         crate::coll::barrier(&h).unwrap();
                         let mut v = [h.rank() as u64];
                         crate::coll::allreduce_t(&h, &mut v, |a, b| *a += *b).unwrap();
-                        assert_eq!(v[0], 0 + 1 + 2 + 3);
+                        assert_eq!(v[0], 6); // 0+1+2+3
                         h.finish();
                     });
                 }

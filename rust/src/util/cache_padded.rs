@@ -1,0 +1,58 @@
+//! Cache-line padding (in-tree replacement for
+//! `crossbeam_utils::CachePadded` — the offline crate set has no
+//! external dependencies).
+//!
+//! Aligning the SPSC ring's head and tail counters to separate cache
+//! lines prevents false sharing between the producer and consumer cores.
+//! 128 bytes covers the adjacent-line prefetcher pairs on x86_64 and the
+//! 128-byte lines on apple-silicon class aarch64.
+
+/// Pads and aligns `T` to (at least) one false-sharing-free cache block.
+#[derive(Debug, Default)]
+#[repr(align(128))]
+pub struct CachePadded<T> {
+    value: T,
+}
+
+impl<T> CachePadded<T> {
+    pub const fn new(value: T) -> CachePadded<T> {
+        CachePadded { value }
+    }
+
+    pub fn into_inner(self) -> T {
+        self.value
+    }
+}
+
+impl<T> std::ops::Deref for CachePadded<T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        &self.value
+    }
+}
+
+impl<T> std::ops::DerefMut for CachePadded<T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.value
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aligned_to_128() {
+        assert_eq!(std::mem::align_of::<CachePadded<u8>>(), 128);
+        assert_eq!(std::mem::align_of::<CachePadded<[u8; 200]>>(), 128);
+    }
+
+    #[test]
+    fn deref_roundtrip() {
+        let mut c = CachePadded::new(41u32);
+        *c += 1;
+        assert_eq!(*c, 42);
+        assert_eq!(c.into_inner(), 42);
+    }
+}

@@ -1,6 +1,7 @@
 //! Small substrate utilities: lock-free SPSC ring, PRNG, Pod bytes,
 //! timing/statistics helpers shared by benches and tests.
 
+pub mod cache_padded;
 pub mod json;
 pub mod pod;
 pub mod prng;

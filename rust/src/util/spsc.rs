@@ -5,7 +5,7 @@
 //! (src, dst, vci) channel, so a wait-free SPSC ring replaces the per-VCI
 //! mutex entirely (the paper's lock-elimination argument, Fig 3b).
 
-use crossbeam_utils::CachePadded;
+use crate::util::cache_padded::CachePadded;
 use std::cell::UnsafeCell;
 use std::mem::MaybeUninit;
 use std::sync::atomic::{AtomicUsize, Ordering};

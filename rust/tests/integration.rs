@@ -12,9 +12,7 @@ use mpix::util::prng::Rng;
 use mpix::{MpiError, ANY_SOURCE, ANY_TAG};
 
 fn artifacts_ready() -> bool {
-    mpix::runtime::Registry::default_dir()
-        .join("manifest.json")
-        .exists()
+    mpix::runtime::Registry::artifacts_ready()
 }
 
 // ------------------------------------------------------------ messaging
@@ -190,7 +188,7 @@ fn comm_split_subgroups() {
         // Allreduce within the subgroup only.
         let mut v = [world.rank() as u64];
         coll::allreduce_t(&sub, &mut v, |a, b| *a += *b).unwrap();
-        let want = if color == 0 { 0 + 2 } else { 1 + 3 };
+        let want = if color == 0 { 2 } else { 4 }; // 0+2 or 1+3
         assert_eq!(v[0], want);
     });
 }
@@ -247,6 +245,72 @@ fn stream_comm_isolated_from_world() {
             assert_eq!(&b, b"world!");
             sc.recv(&mut b, 0, 0).unwrap();
             assert_eq!(&b, b"stream");
+        }
+    });
+}
+
+#[test]
+fn any_stream_wildcard_multiplex_recv() {
+    // The paper: "-1 can be used in source_stream_index to specify an
+    // any-stream receive". Two source streams on rank 0 both send to
+    // rank 1's stream 0; one ANY_STREAM receive loop serves both, then a
+    // specific source_stream_index still filters.
+    Universe::run(Universe::with_ranks(2), |world| {
+        let s0 = Stream::create(&world, &Info::new()).unwrap();
+        let s1 = Stream::create(&world, &Info::new()).unwrap();
+        let mc = mpix::stream::stream_comm_create_multiplex(&world, &[s0, s1]).unwrap();
+        if world.rank() == 0 {
+            mc.stream_send(b"a", 1, 3, 0, 0).unwrap();
+            mc.stream_send(b"b", 1, 3, 1, 0).unwrap();
+            // Second wave for the specific-index phase.
+            mc.stream_send(b"c", 1, 4, 1, 0).unwrap();
+        } else {
+            // source_stream_index = -1 (ANY_STREAM): matches either
+            // source stream, arrival order across channels is free.
+            let mut got = Vec::new();
+            for _ in 0..2 {
+                let mut b = [0u8; 1];
+                let st = mc.stream_recv(&mut b, 0, 3, mpix::ANY_STREAM, 0).unwrap();
+                assert_eq!(st.source, 0);
+                assert_eq!(st.len, 1);
+                got.push(b[0]);
+            }
+            got.sort_unstable();
+            assert_eq!(got, vec![b'a', b'b']);
+            // A specific source stream index still matches exactly.
+            let mut b = [0u8; 1];
+            mc.stream_recv(&mut b, 0, 4, 1, 0).unwrap();
+            assert_eq!(b[0], b'c');
+        }
+        coll::barrier(&world).unwrap();
+    });
+}
+
+#[test]
+fn mutual_rendezvous_flood_tiny_rings() {
+    // Regression for the send_ctrl livelock: with tiny channel rings and
+    // both ranks running two-copy rendezvous at each other, the control
+    // rings (CTS/chunks/FIN) fill in both directions. send_ctrl must
+    // stash its own inbound traffic between retries (freeing the peer's
+    // pushes) or the two peers spin forever, each holding its endpoint
+    // exclusion.
+    let cfg = FabricConfig {
+        nranks: 2,
+        channel_cap: 2,
+        eager_max: 64,
+        chunk_size: 64,
+        ..Default::default()
+    };
+    Universe::run(cfg, |world| {
+        let peer = 1 - world.rank();
+        let n = 16 * 1024; // 256 chunks per message at chunk_size 64
+        let data = vec![world.rank() as u8 + 1; n];
+        for round in 0..4 {
+            let req = world.isend(&data, peer, round).unwrap();
+            let mut buf = vec![0u8; n];
+            world.recv(&mut buf, peer as i32, round).unwrap();
+            assert!(buf.iter().all(|&b| b == peer as u8 + 1), "round {round}");
+            req.wait().unwrap();
         }
     });
 }
