@@ -14,12 +14,17 @@
 //! counts beyond the core count oversubscribe; see EXPERIMENTS.md).
 //!
 //! Run: `cargo bench --offline --bench fig4_message_rate`
+//!
+//! Each run is appended to `BENCH_fig4.json` at the repo root, so the
+//! message-rate trajectory accumulates across commits (see README
+//! §Benches for the format).
 
 use mpix::fabric::{FabricConfig, LockMode};
 use mpix::info::Info;
 use mpix::stream::{stream_comm_create, Stream};
 use mpix::universe::Universe;
-use mpix::util::stats::fmt_rate;
+use mpix::util::json::Json;
+use mpix::util::stats::{fmt_rate, record_bench_run, unix_now};
 use std::time::Instant;
 
 const MSG: usize = 8;
@@ -98,6 +103,7 @@ fn main() {
     );
     let thread_counts = [1usize, 2, 4, 8, 16];
     let mut stream_win_high_t = Vec::new();
+    let (mut col_g, mut col_v, mut col_s) = (Vec::new(), Vec::new(), Vec::new());
     for &t in &thread_counts {
         // Best-of-3 per config (scheduler noise on an oversubscribed box).
         let best = |c| (0..3).map(|_| run(c, t)).fold(0f64, f64::max);
@@ -112,10 +118,28 @@ fn main() {
             fmt_rate(s),
             s / v
         );
+        col_g.push(g);
+        col_v.push(v);
+        col_s.push(s);
         if t >= 2 {
             stream_win_high_t.push(s / v);
         }
     }
     let mean_win: f64 = stream_win_high_t.iter().sum::<f64>() / stream_win_high_t.len() as f64;
     println!("\nmean stream/per-vci speedup at ≥2 threads: {mean_win:.2}x (paper: ~1.2x)");
+
+    record_bench_run(
+        "fig4",
+        "Fig 4",
+        "total messages/sec across thread pairs, 8-byte Isend/Irecv",
+        Json::obj([
+            ("unix_time", Json::Num(unix_now())),
+            ("msg_bytes", Json::Num(MSG as f64)),
+            ("threads", Json::nums(thread_counts.iter().map(|&t| t as f64))),
+            ("global", Json::nums(col_g)),
+            ("per_vci", Json::nums(col_v)),
+            ("stream", Json::nums(col_s)),
+            ("mean_stream_over_pervci", Json::Num(mean_win)),
+        ]),
+    );
 }

@@ -12,10 +12,15 @@
 //! (single-copy vs two-copy), with a decline past cache sizes.
 //!
 //! Run: `cargo bench --offline --bench fig7_p2p`
+//!
+//! Each run is appended to `BENCH_fig7.json` at the repo root, so the
+//! latency/bandwidth trajectory accumulates across commits (see README
+//! §Benches for the format).
 
 use mpix::threadcomm::{ThreadComm, Threadcomm};
 use mpix::universe::Universe;
-use mpix::util::stats::{fmt_rate, fmt_time};
+use mpix::util::json::Json;
+use mpix::util::stats::{fmt_rate, fmt_time, record_bench_run, unix_now};
 use std::time::Instant;
 
 const LAT_SIZES: &[usize] = &[8, 32, 128, 512, 2048, 8192, 32768, 65536];
@@ -126,15 +131,19 @@ fn tc_measure(f: impl Fn(&ThreadComm) -> f64 + Sync) -> f64 {
 fn main() {
     println!("E2 / Fig 7(a) — p2p latency: MPI-everywhere vs threadcomm");
     println!("{:>10} {:>14} {:>14} {:>8}", "size", "mpi-proc", "threadcomm", "tc/proc");
+    let (mut lat_p, mut lat_t) = (Vec::new(), Vec::new());
     for &s in LAT_SIZES {
         let p = proc_measure(|c| pingpong(c, s, LAT_ITERS));
         let t = tc_measure(|h| pingpong(h, s, LAT_ITERS));
         println!("{:>10} {:>14} {:>14} {:>8.2}", s, fmt_time(p), fmt_time(t), t / p);
+        lat_p.push(p);
+        lat_t.push(t);
     }
 
     println!();
     println!("E3 / Fig 7(b) — p2p bandwidth: MPI-everywhere vs threadcomm");
     println!("{:>10} {:>14} {:>14} {:>8}", "size", "mpi-proc", "threadcomm", "tc/proc");
+    let (mut bw_p, mut bw_t) = (Vec::new(), Vec::new());
     for &s in BW_SIZES {
         let p = proc_measure(|c| bw_run(c, s));
         let t = tc_measure(|h| bw_run(h, s));
@@ -145,5 +154,22 @@ fn main() {
             fmt_rate(t),
             t / p
         );
+        bw_p.push(p);
+        bw_t.push(t);
     }
+
+    record_bench_run(
+        "fig7",
+        "Fig 7",
+        "latency seconds (a) and bandwidth bytes/sec (b), mpi-proc vs threadcomm",
+        Json::obj([
+            ("unix_time", Json::Num(unix_now())),
+            ("lat_sizes", Json::nums(LAT_SIZES.iter().map(|&s| s as f64))),
+            ("lat_proc_s", Json::nums(lat_p)),
+            ("lat_threadcomm_s", Json::nums(lat_t)),
+            ("bw_sizes", Json::nums(BW_SIZES.iter().map(|&s| s as f64))),
+            ("bw_proc_bps", Json::nums(bw_p)),
+            ("bw_threadcomm_bps", Json::nums(bw_t)),
+        ]),
+    );
 }

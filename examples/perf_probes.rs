@@ -1,4 +1,9 @@
 //! Perf probes for the message path (the instrument behind EXPERIMENTS.md §Perf).
+//!
+//! Besides the timing probes, the rendezvous-flood section surfaces the
+//! structural hot-path counters: chunk-pool hits vs misses (allocation-
+//! free steady state) and inbox-registry refreshes skipped (the sharded
+//! registry's fast path).
 use mpix::universe::Universe;
 use std::time::Instant;
 
@@ -61,4 +66,45 @@ fn main() {
         (W * R) as f64 / dt
     });
     println!("window msgrate : {:.0} msg/s/rank", rates[0]);
+
+    // Rendezvous flood: chunk-pool and registry counters over a two-copy
+    // pingpong of 1 MiB messages (16 chunks each at the default 64 KiB).
+    const N: usize = 1 << 20;
+    const ROUNDS: usize = 200;
+    let stats = Universe::run(Universe::with_ranks(2), |world| {
+        let data = vec![7u8; N];
+        let mut buf = vec![0u8; N];
+        mpix::coll::barrier(&world).unwrap();
+        let m0 = world.fabric().snapshot();
+        let t0 = Instant::now();
+        for _ in 0..ROUNDS {
+            if world.rank() == 0 {
+                world.send(&data, 1, 0).unwrap();
+                world.recv(&mut buf, 1, 0).unwrap();
+            } else {
+                world.recv(&mut buf, 0, 0).unwrap();
+                world.send(&data, 0, 0).unwrap();
+            }
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        mpix::coll::barrier(&world).unwrap();
+        (world.fabric().snapshot().since(&m0), dt)
+    });
+    let (d, dt) = &stats[0];
+    let acquires = d.pool_hits + d.pool_misses;
+    println!(
+        "rdv flood      : {:.2} GB/s, {} chunks",
+        (2 * ROUNDS * N) as f64 / dt / 1e9,
+        d.rdv_chunks
+    );
+    println!(
+        "chunk pool     : {} hits / {} misses ({:.2}% hit rate)",
+        d.pool_hits,
+        d.pool_misses,
+        100.0 * d.pool_hits as f64 / acquires.max(1) as f64
+    );
+    println!(
+        "inbox registry : {} refreshes skipped (no new channels)",
+        d.inbox_refresh_skips
+    );
 }

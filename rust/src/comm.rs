@@ -266,7 +266,7 @@ impl Comm {
                     len: buf.len(),
                     cursor: 0,
                     seq: 0,
-                    dst: None,
+                    ch: None,
                     req: Arc::clone(&req),
                 },
             );
@@ -668,7 +668,7 @@ pub(crate) fn isend_raw<'a>(
                 len: buf.len(),
                 cursor: 0,
                 seq: 0,
-                dst: None,
+                ch: None,
                 req: Arc::clone(&req),
             },
         );

@@ -31,6 +31,13 @@ use crate::util::spsc::SpscRing;
 /// cell of MPICH's shm transport; no heap allocation on this path).
 pub const INLINE_MAX: usize = 192;
 
+/// Cap on inbox-registry shards per endpoint: below it every source
+/// rank gets its own bucket; above it ranks share buckets by
+/// `src % shard_count`. Bounds per-endpoint registry state (which is
+/// per VCI, so fabric-wide it scales with ranks × VCIs × shards) and
+/// the per-refresh shard-version scan at high rank counts.
+pub const MAX_INBOX_SHARDS: usize = 64;
+
 /// Context id reserved for fabric-internal control traffic (rendezvous
 /// CTS/chunks/FIN, RMA ops).
 pub const CTX_CTRL: u32 = 0;
@@ -144,12 +151,15 @@ pub enum Payload {
         dest_rank: u32,
         dest_vci: u16,
     },
-    /// Control: one pipelined chunk of a two-copy transfer.
+    /// Control: one pipelined chunk of a two-copy transfer. The cell is
+    /// pooled: dropping it after the receive-side copy returns it to the
+    /// sending endpoint's chunk pool (see [`crate::util::pool`]), so the
+    /// steady-state chunk path allocates nothing.
     Chunk {
         token: u64,
         seq: u32,
         last: bool,
-        data: Box<[u8]>,
+        data: crate::util::pool::PooledBuf,
     },
     /// Control: transfer complete (receiver → sender).
     Fin { token: u64 },
@@ -262,10 +272,16 @@ pub struct EpState {
     pub pending_recvs: HashMap<u64, crate::progress::RecvXfer>,
     /// Sender-side channel cache (dst rank, dst vci) → channel.
     pub tx_cache: HashMap<(u32, u16), Arc<Channel>>,
-    /// Receiver-side snapshot of the inbox registry.
-    pub inbox_cache: Vec<Arc<Channel>>,
-    /// Version of `inbox_cache` (compared against the registry's).
+    /// Receiver-side snapshot of the endpoint's sharded inbox registry,
+    /// one bucket per source-rank shard (sized lazily on first refresh).
+    pub inbox_cache: Vec<InboxBucket>,
+    /// Aggregate registry version at the last refresh: a single load
+    /// decides whether any bucket needs re-examining at all.
     pub inbox_seen: u64,
+    /// Sender-side recycling pool for rendezvous chunk cells (see
+    /// [`crate::util::pool`]); `acquire` runs under this endpoint's
+    /// exclusion, which is the pool's single-consumer guarantee.
+    pub chunk_pool: crate::util::pool::LocalChunkPool,
     /// Inbound envelopes popped off the rings but not yet dispatched:
     /// a backpressured `progress::send_ctrl` stashes arrivals here (to
     /// free the peer's pushes without re-entering the dispatch path);
@@ -283,8 +299,86 @@ impl EpState {
             tx_cache: HashMap::new(),
             inbox_cache: Vec::new(),
             inbox_seen: 0,
+            chunk_pool: crate::util::pool::LocalChunkPool::new(),
             rx_backlog: VecDeque::new(),
         }
+    }
+}
+
+/// One receiver-side snapshot bucket, mirroring one [`InboxShard`].
+#[derive(Default)]
+pub struct InboxBucket {
+    pub chans: Vec<Arc<Channel>>,
+    /// Shard version this bucket was last copied at.
+    pub seen: u64,
+}
+
+/// One shard of an endpoint's inbox registry: the channels whose source
+/// ranks hash to this bucket, plus a version that moves only when *this*
+/// bucket changes.
+pub struct InboxShard {
+    pub chans: Mutex<Vec<Arc<Channel>>>,
+    pub version: AtomicU64,
+}
+
+/// Sharded registry of the channels that deliver into one endpoint
+/// (bucket count capped by [`MAX_INBOX_SHARDS`]).
+///
+/// Registration (rare: first message between an endpoint pair) locks a
+/// single source-rank bucket — O(1) regardless of how many channels the
+/// endpoint already has. The receiver's refresh compares one aggregate
+/// version, then per-bucket versions, and copies **only the buckets that
+/// moved** — incremental where the old flat registry cloned the entire
+/// channel list on every change, an O(channels) cost that grows with
+/// rank × stream counts.
+pub struct InboxRegistry {
+    shards: Box<[InboxShard]>,
+    /// Bumped (after the shard version) on every registration; a zero
+    /// value doubles as the idle-endpoint fast path.
+    version: AtomicU64,
+}
+
+impl InboxRegistry {
+    fn new(buckets: usize) -> Self {
+        let shards = (0..buckets.max(1))
+            .map(|_| InboxShard {
+                chans: Mutex::new(Vec::new()),
+                version: AtomicU64::new(0),
+            })
+            .collect();
+        Self {
+            shards,
+            version: AtomicU64::new(0),
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shards(&self) -> &[InboxShard] {
+        &self.shards
+    }
+
+    /// Register a channel delivering from `src_rank`: lock one bucket,
+    /// push, publish. The shard version is released *before* the
+    /// aggregate so a reader that observes the aggregate move also
+    /// observes the shard's new version and contents.
+    pub fn register(&self, src_rank: u32, ch: Arc<Channel>) {
+        let shard = &self.shards[src_rank as usize % self.shards.len()];
+        shard.chans.lock().unwrap().push(ch);
+        shard.version.fetch_add(1, Ordering::Release);
+        self.version.fetch_add(1, Ordering::Release);
+    }
+
+    /// Aggregate version (one acquire load — the refresh fast path).
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+
+    /// Whether any channel was ever registered (idle-endpoint check).
+    pub fn has_registrations(&self) -> bool {
+        self.version() != 0
     }
 }
 
@@ -294,21 +388,26 @@ pub struct Endpoint {
     /// Global lock mode's critical section.
     pub owner: u32,
     pub state: HybridLock<EpState>,
-    /// Registry of channels that deliver into this endpoint. Senders
-    /// register once per channel (rare, locked); receivers snapshot into
-    /// `EpState::inbox_cache` when the version moves.
-    pub inbox_registry: Mutex<Vec<Arc<Channel>>>,
-    pub inbox_version: AtomicU64,
+    /// Sharded registry of channels that deliver into this endpoint.
+    /// Senders register once per channel (rare, one bucket locked);
+    /// receivers snapshot changed buckets into `EpState::inbox_cache`.
+    pub inboxes: InboxRegistry,
+    /// Refreshes that skipped (nothing registered since the last look).
+    /// Per endpoint — not in the shared [`Metrics`] struct — so the poll
+    /// fast path never touches a fabric-wide cache line: stream-owned
+    /// endpoints bump it uncontended, shared endpoints under their own
+    /// exclusion. [`Fabric::snapshot`] aggregates.
+    pub refresh_skips: AtomicU64,
 }
 
 impl Endpoint {
-    fn new(kind: EpKind, owner: u32) -> Self {
+    fn new(kind: EpKind, owner: u32, shards: usize) -> Self {
         Self {
             kind,
             owner,
             state: HybridLock::new(EpState::new()),
-            inbox_registry: Mutex::new(Vec::new()),
-            inbox_version: AtomicU64::new(0),
+            inboxes: InboxRegistry::new(shards),
+            refresh_skips: AtomicU64::new(0),
         }
     }
 }
@@ -386,6 +485,12 @@ impl Fabric {
                                 EpKind::StreamOwned
                             },
                             r as u32,
+                            // One bucket per source rank, capped: past the
+                            // cap, ranks share buckets (register hashes by
+                            // src % shard_count) so per-endpoint registry
+                            // state and the refresh version scan stay
+                            // bounded at high rank counts.
+                            cfg.nranks.min(MAX_INBOX_SHARDS),
                         )
                     })
                     .collect()
@@ -431,6 +536,20 @@ impl Fabric {
         &self.eps[rank as usize][vci as usize]
     }
 
+    /// Fabric-wide metrics snapshot: the shared [`Metrics`] counters plus
+    /// the per-endpoint tallies ([`Endpoint::refresh_skips`]) that are
+    /// kept off the shared cache line on purpose.
+    pub fn snapshot(&self) -> crate::metrics::MetricsSnapshot {
+        let mut s = self.metrics.snapshot();
+        s.inbox_refresh_skips = self
+            .eps
+            .iter()
+            .flatten()
+            .map(|e| e.refresh_skips.load(Ordering::Relaxed))
+            .sum();
+        s
+    }
+
     /// Allocate a stream-owned endpoint for `rank`; fails when exhausted
     /// (paper: "return failure if it runs out of available endpoints").
     pub fn alloc_stream_vci(&self, rank: u32) -> Result<u16> {
@@ -471,20 +590,38 @@ impl Fabric {
             src,
         });
         let ep = self.endpoint(dst.0, dst.1);
-        ep.inbox_registry.lock().unwrap().push(Arc::clone(&ch));
-        ep.inbox_version.fetch_add(1, Ordering::Release);
+        ep.inboxes.register(src.0, Arc::clone(&ch));
         st.tx_cache.insert(dst, Arc::clone(&ch));
         ch
     }
 
     /// Receiver side: refresh the endpoint's inbox snapshot if new
     /// channels registered. Call with exclusion on the endpoint.
+    ///
+    /// Incremental: one aggregate-version load decides whether anything
+    /// changed (counted in [`Endpoint::refresh_skips`] when not); when
+    /// it did, only the buckets whose shard version moved are re-copied.
+    /// A registration racing this refresh (shard published, aggregate
+    /// not yet) is picked up by the next refresh — same
+    /// eventual-visibility contract as the old flat registry.
     pub fn refresh_inboxes(&self, ep: &Endpoint, st: &mut EpState) {
-        let v = ep.inbox_version.load(Ordering::Acquire);
-        if v != st.inbox_seen {
-            st.inbox_cache = ep.inbox_registry.lock().unwrap().clone();
-            st.inbox_seen = v;
+        let v = ep.inboxes.version();
+        if v == st.inbox_seen {
+            ep.refresh_skips.fetch_add(1, Ordering::Relaxed);
+            return;
         }
+        if st.inbox_cache.len() != ep.inboxes.shard_count() {
+            st.inbox_cache
+                .resize_with(ep.inboxes.shard_count(), InboxBucket::default);
+        }
+        for (bucket, shard) in st.inbox_cache.iter_mut().zip(ep.inboxes.shards()) {
+            let sv = shard.version.load(Ordering::Acquire);
+            if sv != bucket.seen {
+                bucket.chans.clone_from(&shard.chans.lock().unwrap());
+                bucket.seen = sv;
+            }
+        }
+        st.inbox_seen = v;
     }
 }
 
@@ -545,7 +682,53 @@ mod tests {
         let dst_ep = f.endpoint(1, 0);
         dst_ep.state.with_locked(&f.metrics, |st| {
             f.refresh_inboxes(dst_ep, st);
-            assert_eq!(st.inbox_cache.len(), 1);
+            let total: usize = st.inbox_cache.iter().map(|b| b.chans.len()).sum();
+            assert_eq!(total, 1);
+        });
+    }
+
+    #[test]
+    fn sharded_registry_refresh_is_incremental() {
+        let f = Fabric::new(FabricConfig {
+            nranks: 3,
+            ..Default::default()
+        });
+        let dst = f.endpoint(2, 0);
+        // Rank 0 registers a channel into rank 2's endpoint.
+        f.endpoint(0, 0).state.with_locked(&f.metrics, |st| {
+            f.channel(st, (0, 0), (2, 0));
+        });
+        let seen0 = dst.state.with_locked(&f.metrics, |st| {
+            f.refresh_inboxes(dst, st);
+            let total: usize = st.inbox_cache.iter().map(|b| b.chans.len()).sum();
+            assert_eq!(total, 1);
+            st.inbox_cache[0].seen
+        });
+        // No new registration: the refresh takes the skip fast path
+        // (tallied on the endpoint, aggregated by Fabric::snapshot).
+        let skips0 = f.snapshot().inbox_refresh_skips;
+        dst.state
+            .with_locked(&f.metrics, |st| f.refresh_inboxes(dst, st));
+        assert_eq!(f.snapshot().inbox_refresh_skips, skips0 + 1);
+        assert_eq!(dst.refresh_skips.load(Ordering::Relaxed), 1);
+        // Rank 1 registers: only shard 1's version moves.
+        f.endpoint(1, 0).state.with_locked(&f.metrics, |st| {
+            f.channel(st, (1, 0), (2, 0));
+        });
+        let vs: Vec<u64> = dst
+            .inboxes
+            .shards()
+            .iter()
+            .map(|s| s.version.load(Ordering::Acquire))
+            .collect();
+        assert_eq!(vs, vec![1, 1, 0]);
+        dst.state.with_locked(&f.metrics, |st| {
+            f.refresh_inboxes(dst, st);
+            // Bucket 0 untouched by the second refresh; bucket 1 copied.
+            assert_eq!(st.inbox_cache[0].seen, seen0);
+            assert_eq!(st.inbox_cache[0].chans.len(), 1);
+            assert_eq!(st.inbox_cache[1].chans.len(), 1);
+            assert_eq!(st.inbox_cache[2].chans.len(), 0);
         });
     }
 

@@ -16,6 +16,35 @@
 //! Pallas kernels AOT-lowered to HLO text by `python/compile/` and run
 //! from Rust through the PJRT CPU client ([`runtime`]). Python never runs
 //! on the communication path.
+//!
+//! # Module map
+//!
+//! The layered tour with data-flow diagrams lives in `ARCHITECTURE.md`
+//! at the repo root; the short version, top down:
+//!
+//! | Layer | Modules |
+//! |---|---|
+//! | Launcher: N ranks as threads over one fabric | [`universe`] |
+//! | API surface: communicators, requests, collectives, RMA, IO | [`comm`], [`request`], [`coll`], [`rma`], [`io`], [`datatype`], [`info`] |
+//! | Paper extensions | [`grequest`] (1), [`datatype`] (2), [`stream`] (3), [`enqueue`] + [`offload`] (4), [`threadcomm`] (5), [`progress`] (6) |
+//! | Transport: endpoints/VCIs, channels, matching | [`fabric`], [`matching`] |
+//! | Substrate: SPSC ring, chunk pool, counters | [`util::spsc`], [`util::pool`], [`metrics`] |
+//! | Kernel runtime: PJRT client for AOT artifacts | [`runtime`] |
+//!
+//! # Hot path
+//!
+//! The per-message path is engineered allocation-free in steady state:
+//! eager messages ≤ [`fabric::INLINE_MAX`] ride inline cells, rendezvous
+//! chunks recycle through a per-endpoint [`util::pool::ChunkPool`], the
+//! chunk channel is resolved once per transfer (cached in
+//! [`progress::SendXfer`]), and the receiver's inbox registry is sharded
+//! per source rank so registration is O(1) and refresh incremental
+//! ([`fabric::InboxRegistry`]). Every claim is counted —
+//! `pool_hits`/`pool_misses` and `lock_acquisitions` in
+//! [`metrics::Metrics`], refresh skips per endpoint
+//! ([`fabric::Endpoint::refresh_skips`], aggregated by
+//! [`fabric::Fabric::snapshot`]) — so the structural properties are
+//! testable, not aspirational.
 
 pub mod coll;
 pub mod comm;

@@ -42,6 +42,9 @@ pub enum MatchAction {
     /// Fully handled (inline/eager copied, request completed).
     Done,
     /// Two-copy rendezvous matched: send CTS and register the transfer.
+    /// The chunks themselves never pass through the matching engine —
+    /// they arrive on `CTX_CTRL` as pooled cells and are copied straight
+    /// into the registered receive buffer by the progress engine.
     StartTwoCopy {
         token: u64,
         len: usize,

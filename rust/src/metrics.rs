@@ -16,6 +16,10 @@ pub struct Metrics {
     pub rdv: AtomicU64,
     /// Rendezvous chunks pumped by sender-side progress.
     pub rdv_chunks: AtomicU64,
+    /// Chunk-pool acquisitions served by a recycled cell (no allocation).
+    pub pool_hits: AtomicU64,
+    /// Chunk-pool acquisitions that had to allocate a fresh cell.
+    pub pool_misses: AtomicU64,
     /// Mutex acquisitions on the send/recv/progress path.
     pub lock_acquisitions: AtomicU64,
     /// Messages that matched a pre-posted receive.
@@ -49,6 +53,11 @@ impl Metrics {
             eager_heap: self.eager_heap.load(Relaxed),
             rdv: self.rdv.load(Relaxed),
             rdv_chunks: self.rdv_chunks.load(Relaxed),
+            pool_hits: self.pool_hits.load(Relaxed),
+            pool_misses: self.pool_misses.load(Relaxed),
+            // Counted per endpoint to keep the poll fast path off this
+            // struct's shared cache line; `Fabric::snapshot` fills it.
+            inbox_refresh_skips: 0,
             lock_acquisitions: self.lock_acquisitions.load(Relaxed),
             expected_hits: self.expected_hits.load(Relaxed),
             unexpected_hits: self.unexpected_hits.load(Relaxed),
@@ -67,6 +76,13 @@ pub struct MetricsSnapshot {
     pub eager_heap: u64,
     pub rdv: u64,
     pub rdv_chunks: u64,
+    pub pool_hits: u64,
+    pub pool_misses: u64,
+    /// Inbox-registry refreshes skipped (no channel registered since the
+    /// last look). Tallied per endpoint — `crate::fabric::Fabric::snapshot`
+    /// fills it in; a bare `Metrics::snapshot` reports 0. Diff snapshots
+    /// from the same source.
+    pub inbox_refresh_skips: u64,
     pub lock_acquisitions: u64,
     pub expected_hits: u64,
     pub unexpected_hits: u64,
@@ -85,6 +101,9 @@ impl MetricsSnapshot {
             eager_heap: self.eager_heap - earlier.eager_heap,
             rdv: self.rdv - earlier.rdv,
             rdv_chunks: self.rdv_chunks - earlier.rdv_chunks,
+            pool_hits: self.pool_hits - earlier.pool_hits,
+            pool_misses: self.pool_misses - earlier.pool_misses,
+            inbox_refresh_skips: self.inbox_refresh_skips - earlier.inbox_refresh_skips,
             lock_acquisitions: self.lock_acquisitions - earlier.lock_acquisitions,
             expected_hits: self.expected_hits - earlier.expected_hits,
             unexpected_hits: self.unexpected_hits - earlier.unexpected_hits,

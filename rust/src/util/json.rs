@@ -1,9 +1,13 @@
-//! Minimal JSON parser (objects, arrays, strings, numbers, bools, null) —
-//! enough to read `artifacts/manifest.json`. serde_json is not in the
-//! offline crate set; this recursive-descent parser is ~150 lines and
-//! fully tested.
+//! Minimal JSON parser **and serializer** (objects, arrays, strings,
+//! numbers, bools, null) — enough to read `artifacts/manifest.json` and
+//! to read-modify-write the `BENCH_*.json` result files at the repo
+//! root. serde_json is not in the offline crate set; this
+//! recursive-descent parser is ~150 lines and fully tested. The
+//! serializer emits object keys in sorted order so rewritten files diff
+//! deterministically.
 
 use std::collections::HashMap;
+use std::fmt;
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
@@ -64,6 +68,71 @@ impl Json {
             _ => None,
         }
     }
+
+    /// Build an object from `(key, value)` pairs.
+    pub fn obj<'a>(pairs: impl IntoIterator<Item = (&'a str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Build an array of numbers (bench result columns).
+    pub fn nums(vals: impl IntoIterator<Item = f64>) -> Json {
+        Json::Arr(vals.into_iter().map(Json::Num).collect())
+    }
+}
+
+// ------------------------------------------------------------ serializer
+
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Json::Null => f.write_str("null"),
+            Json::Bool(b) => write!(f, "{b}"),
+            // Non-finite numbers have no JSON representation.
+            Json::Num(n) if !n.is_finite() => f.write_str("null"),
+            Json::Num(n) => write!(f, "{n}"),
+            Json::Str(s) => write_escaped(f, s),
+            Json::Arr(v) => {
+                f.write_str("[")?;
+                for (i, e) in v.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write!(f, "{e}")?;
+                }
+                f.write_str("]")
+            }
+            Json::Obj(m) => {
+                let mut keys: Vec<&String> = m.keys().collect();
+                keys.sort();
+                f.write_str("{")?;
+                for (i, k) in keys.into_iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write_escaped(f, k)?;
+                    f.write_str(":")?;
+                    write!(f, "{}", m[k])?;
+                }
+                f.write_str("}")
+            }
+        }
+    }
+}
+
+fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
+    f.write_str("\"")?;
+    for c in s.chars() {
+        match c {
+            '"' => f.write_str("\\\"")?,
+            '\\' => f.write_str("\\\\")?,
+            '\n' => f.write_str("\\n")?,
+            '\t' => f.write_str("\\t")?,
+            '\r' => f.write_str("\\r")?,
+            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+            c => write!(f, "{c}")?,
+        }
+    }
+    f.write_str("\"")
 }
 
 struct Parser<'a> {
@@ -296,5 +365,27 @@ mod tests {
     fn empty_containers() {
         assert_eq!(Json::parse("{}").unwrap(), Json::Obj(HashMap::new()));
         assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
+    }
+
+    #[test]
+    fn serialize_roundtrips() {
+        let v = Json::obj([
+            ("name", Json::Str("fig4".into())),
+            ("rates", Json::nums([1.0, 2.5, -3e3])),
+            ("ok", Json::Bool(true)),
+            ("none", Json::Null),
+            ("text", Json::Str("a\"b\\c\nd".into())),
+        ]);
+        let s = v.to_string();
+        assert_eq!(Json::parse(&s).unwrap(), v);
+        // Keys are emitted sorted → deterministic output.
+        assert_eq!(s, v.to_string());
+        assert!(s.find("\"name\"").unwrap() < s.find("\"ok\"").unwrap());
+    }
+
+    #[test]
+    fn serialize_integers_stay_integral() {
+        assert_eq!(Json::Num(40.0).to_string(), "40");
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
     }
 }

@@ -1,9 +1,11 @@
-//! Small substrate utilities: lock-free SPSC ring, PRNG, Pod bytes,
-//! timing/statistics helpers shared by benches and tests.
+//! Small substrate utilities: lock-free SPSC ring, recycling chunk pool,
+//! PRNG, Pod bytes, timing/statistics helpers shared by benches and
+//! tests.
 
 pub mod cache_padded;
 pub mod json;
 pub mod pod;
+pub mod pool;
 pub mod prng;
 pub mod spsc;
 pub mod stats;

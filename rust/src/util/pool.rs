@@ -1,0 +1,287 @@
+//! Recycling buffer pool for rendezvous chunk cells.
+//!
+//! `progress::pump_sends` used to allocate one `Box<[u8]>` per pipelined
+//! chunk and the receiver freed it after the copy-out — one heap
+//! round-trip per chunk, on the hottest large-message path in the
+//! runtime. This module replaces that with a per-endpoint pool:
+//!
+//! * the **sender** owns a [`LocalChunkPool`] inside its `EpState` and
+//!   [`LocalChunkPool::acquire`]s cells under the endpoint exclusion,
+//! * each cell travels inside `Payload::Chunk` as a [`PooledBuf`],
+//! * the **receiver** simply drops the `PooledBuf` after copying out;
+//!   `Drop` pushes the cell onto the owning pool's lock-free **MPSC
+//!   return stack** ([`ChunkPool`]),
+//! * the sender's next `acquire` drains the return stack into its local
+//!   cache with a single atomic `swap`.
+//!
+//! Steady state (ring full of in-flight cells, receiver keeping up) the
+//! chunk path performs **zero heap allocations**: cell count is bounded
+//! by the channel capacity plus a couple of in-hand cells, and every
+//! `acquire` is a pool hit (see `Metrics::pool_hits` /
+//! `Metrics::pool_misses`).
+//!
+//! ## Why the return stack is safe without locks
+//!
+//! The classic Treiber-stack ABA hazard needs a *popping* CAS that
+//! dereferences a node other threads may concurrently pop and re-push.
+//! Here the consumer never pops nodes one-by-one: [`ChunkPool`] is
+//! strictly multi-producer (any receiver thread `give_back`s) /
+//! single-consumer (the owning endpoint, serialized by its exclusion
+//! regime), and the consumer takes the **whole chain** with one
+//! `swap(null)`. After the swap the chain is exclusively owned, so
+//! walking it touches no shared state; the producers' push CAS loop
+//! never dereferences the head it reads. No ABA window exists.
+
+use std::ops::Deref;
+use std::ptr;
+use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// One pooled chunk cell: the payload bytes plus the intrusive link used
+/// while the cell sits in the return stack. The `Vec` keeps its capacity
+/// across recycles, so refills never reallocate once warmed up.
+pub struct ChunkCell {
+    data: Vec<u8>,
+    next: AtomicPtr<ChunkCell>,
+}
+
+/// The shared half of a chunk pool: a lock-free multi-producer /
+/// single-consumer return stack. Receivers push freed cells; the owning
+/// endpoint drains them in bulk. See the module docs for the ABA
+/// argument.
+pub struct ChunkPool {
+    returns: AtomicPtr<ChunkCell>,
+    allocated: AtomicU64,
+}
+
+impl ChunkPool {
+    fn new() -> Arc<ChunkPool> {
+        Arc::new(ChunkPool {
+            returns: AtomicPtr::new(ptr::null_mut()),
+            allocated: AtomicU64::new(0),
+        })
+    }
+
+    /// Total cells ever allocated by this pool (diagnostics: bounded and
+    /// small under steady-state traffic — that is the point).
+    pub fn allocated(&self) -> u64 {
+        self.allocated.load(Ordering::Relaxed)
+    }
+
+    /// Return a cell to the pool (any thread; lock-free push).
+    fn give_back(&self, cell: Box<ChunkCell>) {
+        let p = Box::into_raw(cell);
+        let mut head = self.returns.load(Ordering::Relaxed);
+        loop {
+            // SAFETY: `p` came from `Box::into_raw` above and is not yet
+            // visible to any other thread.
+            unsafe { (*p).next.store(head, Ordering::Relaxed) };
+            match self
+                .returns
+                .compare_exchange_weak(head, p, Ordering::Release, Ordering::Relaxed)
+            {
+                Ok(_) => return,
+                Err(h) => head = h,
+            }
+        }
+    }
+
+    /// Take the entire return chain (single consumer; one atomic swap).
+    fn drain_into(&self, cache: &mut Vec<Box<ChunkCell>>) {
+        let mut p = self.returns.swap(ptr::null_mut(), Ordering::Acquire);
+        while !p.is_null() {
+            // SAFETY: every node was produced by `Box::into_raw` in
+            // `give_back`, and the swap above made this chain exclusively
+            // ours.
+            let cell = unsafe { Box::from_raw(p) };
+            p = cell.next.load(Ordering::Relaxed);
+            cache.push(cell);
+        }
+    }
+}
+
+impl Drop for ChunkPool {
+    fn drop(&mut self) {
+        // Free whatever is still parked in the return stack. Cells held
+        // by live `PooledBuf`s keep the pool alive through their `Arc`,
+        // so nothing can race this.
+        let mut p = *self.returns.get_mut();
+        while !p.is_null() {
+            // SAFETY: exclusive access (`&mut self`); nodes come from
+            // `Box::into_raw`.
+            let cell = unsafe { Box::from_raw(p) };
+            p = cell.next.load(Ordering::Relaxed);
+            drop(cell);
+        }
+    }
+}
+
+/// The owner-side handle: the shared return stack plus a local cell
+/// cache popped without any synchronization. Lives in `EpState`, so all
+/// access is serialized by the endpoint's exclusion regime — that is
+/// what makes this pool's consumer side single-threaded.
+pub struct LocalChunkPool {
+    shared: Arc<ChunkPool>,
+    cache: Vec<Box<ChunkCell>>,
+}
+
+impl Default for LocalChunkPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LocalChunkPool {
+    pub fn new() -> Self {
+        Self {
+            shared: ChunkPool::new(),
+            cache: Vec::new(),
+        }
+    }
+
+    /// Hand out a cell: recycled when one is available (local cache,
+    /// refilled in bulk from the return stack), freshly allocated with
+    /// `cap` byte capacity otherwise. Check [`PooledBuf::recycled`] to
+    /// account hits vs misses.
+    pub fn acquire(&mut self, cap: usize) -> PooledBuf {
+        if self.cache.is_empty() {
+            self.shared.drain_into(&mut self.cache);
+        }
+        match self.cache.pop() {
+            Some(mut cell) => {
+                cell.data.clear();
+                PooledBuf {
+                    cell: Some(cell),
+                    pool: Arc::clone(&self.shared),
+                    recycled: true,
+                }
+            }
+            None => {
+                self.shared.allocated.fetch_add(1, Ordering::Relaxed);
+                PooledBuf {
+                    cell: Some(Box::new(ChunkCell {
+                        data: Vec::with_capacity(cap),
+                        next: AtomicPtr::new(ptr::null_mut()),
+                    })),
+                    pool: Arc::clone(&self.shared),
+                    recycled: false,
+                }
+            }
+        }
+    }
+
+    /// The shared half (tests and diagnostics).
+    pub fn shared(&self) -> &Arc<ChunkPool> {
+        &self.shared
+    }
+}
+
+/// An acquired chunk cell. Dereferences to the filled bytes; dropping it
+/// returns the cell to the owning pool from any thread — the receive
+/// side of the rendezvous path needs no knowledge of the pool beyond
+/// this.
+pub struct PooledBuf {
+    cell: Option<Box<ChunkCell>>,
+    pool: Arc<ChunkPool>,
+    recycled: bool,
+}
+
+impl PooledBuf {
+    /// True when this cell came out of the pool rather than the
+    /// allocator (the steady-state case).
+    pub fn recycled(&self) -> bool {
+        self.recycled
+    }
+
+    /// Replace the cell's contents with `src`. Never reallocates once
+    /// the cell's capacity has reached the fabric chunk size.
+    pub fn copy_from(&mut self, src: &[u8]) {
+        let data = &mut self.cell.as_mut().expect("cell present until drop").data;
+        data.clear();
+        data.extend_from_slice(src);
+    }
+}
+
+impl Deref for PooledBuf {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        &self.cell.as_ref().expect("cell present until drop").data
+    }
+}
+
+impl std::fmt::Debug for PooledBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "PooledBuf({} bytes)", self.len())
+    }
+}
+
+impl Drop for PooledBuf {
+    fn drop(&mut self) {
+        if let Some(cell) = self.cell.take() {
+            self.pool.give_back(cell);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn miss_then_hit_roundtrip() {
+        let mut pool = LocalChunkPool::new();
+        let mut a = pool.acquire(64);
+        assert!(!a.recycled());
+        a.copy_from(b"hello");
+        assert_eq!(&a[..], b"hello");
+        drop(a);
+        let b = pool.acquire(64);
+        assert!(b.recycled());
+        assert_eq!(pool.shared().allocated(), 1);
+    }
+
+    #[test]
+    fn recycled_cell_keeps_its_buffer() {
+        let mut pool = LocalChunkPool::new();
+        let mut a = pool.acquire(64);
+        a.copy_from(&[7u8; 64]);
+        let p0 = a.as_ptr();
+        drop(a);
+        let mut b = pool.acquire(64);
+        b.copy_from(&[9u8; 64]);
+        // Same backing storage: the refill did not reallocate.
+        assert_eq!(b.as_ptr(), p0);
+        assert_eq!(&b[..], &[9u8; 64]);
+    }
+
+    #[test]
+    fn cross_thread_return() {
+        let mut pool = LocalChunkPool::new();
+        let mut cells: Vec<PooledBuf> = (0..4).map(|_| pool.acquire(16)).collect();
+        cells.iter_mut().for_each(|c| c.copy_from(&[1u8; 16]));
+        assert_eq!(pool.shared().allocated(), 4);
+        let hs: Vec<_> = cells
+            .into_iter()
+            .map(|c| std::thread::spawn(move || drop(c)))
+            .collect();
+        hs.into_iter().for_each(|h| h.join().unwrap());
+        // All four came back; no new allocation needed.
+        for _ in 0..4 {
+            assert!(pool.acquire(16).recycled());
+        }
+        assert_eq!(pool.shared().allocated(), 4);
+    }
+
+    #[test]
+    fn drop_orders_do_not_leak() {
+        // Pool dropped while a cell is still out: the PooledBuf's Arc
+        // keeps the shared stack alive; its drop parks the cell there and
+        // the last Arc frees the chain. (miri/asan would flag leaks.)
+        let mut pool = LocalChunkPool::new();
+        let a = pool.acquire(8);
+        let b = pool.acquire(8);
+        drop(pool);
+        drop(a);
+        drop(b);
+    }
+}

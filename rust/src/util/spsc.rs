@@ -4,6 +4,12 @@
 //! VCI, exactly one thread produces into and one thread consumes from each
 //! (src, dst, vci) channel, so a wait-free SPSC ring replaces the per-VCI
 //! mutex entirely (the paper's lock-elimination argument, Fig 3b).
+//!
+//! Slots carry envelopes **by value** — including rendezvous chunk
+//! envelopes whose payload is a pooled cell ([`crate::util::pool`]).
+//! A rejected `push` hands the value back (`Err(v)`), and the `Drop`
+//! impl pops whatever is left, so pooled cells are recycled (not leaked)
+//! on both the backpressure and teardown paths.
 
 use crate::util::cache_padded::CachePadded;
 use std::cell::UnsafeCell;
@@ -76,6 +82,16 @@ impl<T> SpscRing<T> {
 
     pub fn is_empty(&self) -> bool {
         self.tail.load(Ordering::Relaxed) == self.head.load(Ordering::Acquire)
+    }
+
+    /// Producer-side fullness probe: exact for the single producer
+    /// (`head` is ours; a stale `tail` can only *over*-report fullness,
+    /// never hand out a slot that is not free). Lets the rendezvous pump
+    /// skip the chunk copy entirely when a push could not succeed.
+    pub fn is_full(&self) -> bool {
+        let head = self.head.load(Ordering::Relaxed);
+        let tail = self.tail.load(Ordering::Acquire);
+        head.wrapping_sub(tail) == self.capacity()
     }
 
     pub fn len(&self) -> usize {

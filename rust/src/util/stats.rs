@@ -2,8 +2,11 @@
 //!
 //! criterion is unavailable in the offline crate set; this provides the
 //! same discipline (warmup, repeated samples, mean/σ/percentiles) with a
-//! criterion-style one-line report per case.
+//! criterion-style one-line report per case, plus the `BENCH_*.json`
+//! recorder that accumulates the perf trajectory at the repo root (see
+//! README §Benches for the file format).
 
+use crate::util::json::Json;
 use std::time::{Duration, Instant};
 
 #[derive(Clone, Debug)]
@@ -109,6 +112,111 @@ pub fn time_it<T, F: FnOnce() -> T>(f: F) -> (T, Duration) {
     (v, t0.elapsed())
 }
 
+// ------------------------------------------------- bench-result recorder
+
+/// Merge one bench run into the accumulated results document: append to
+/// the `runs` array when `existing` is a compatible document, start a
+/// fresh one otherwise. Pure (testable) core of [`record_bench_run`].
+pub fn merge_bench_run(
+    existing: Option<Json>,
+    bench: &str,
+    figure: &str,
+    metric: &str,
+    run: Json,
+) -> Json {
+    let mut doc = match existing {
+        Some(j) if j.get("runs").and_then(Json::as_arr).is_some() => j,
+        _ => Json::obj([
+            ("bench", Json::Str(bench.into())),
+            ("figure", Json::Str(figure.into())),
+            ("metric", Json::Str(metric.into())),
+            ("runs", Json::Arr(Vec::new())),
+        ]),
+    };
+    if let Json::Obj(m) = &mut doc {
+        if let Some(Json::Arr(runs)) = m.get_mut("runs") {
+            runs.push(run);
+        }
+    }
+    doc
+}
+
+/// Record one bench run into `BENCH_<bench>.json` at the repo root
+/// (read-modify-write; the file accumulates a perf trajectory across
+/// commits). Set `BENCH_LABEL` (e.g. `BENCH_LABEL=before`) to tag the
+/// run — that is how the before/after pairs the `protocol` field of the
+/// committed files asks for are distinguished. An existing file that
+/// cannot be parsed — or lacks a `runs` array — is moved aside to a
+/// timestamped `.bak` rather than silently overwritten: the trajectory
+/// is the point of the file. Failures are reported, not fatal — a
+/// read-only checkout must not break the bench itself.
+pub fn record_bench_run(bench: &str, figure: &str, metric: &str, mut run: Json) {
+    if let Json::Obj(m) = &mut run {
+        if let Ok(label) = std::env::var("BENCH_LABEL") {
+            if !label.is_empty() {
+                m.insert("label".into(), Json::Str(label));
+            }
+        }
+    }
+    // The crate manifest lives in rust/; the repo root is its parent.
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate dir has a parent");
+    let path = root.join(format!("BENCH_{bench}.json"));
+    let existing = match std::fs::read_to_string(&path) {
+        // Only a genuinely absent file starts fresh; any other read
+        // error (permissions, invalid UTF-8, transient IO) must not be
+        // mistaken for "no trajectory yet" and overwritten.
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => None,
+        Err(e) => {
+            eprintln!(
+                "could not read {} ({e}); refusing to overwrite it",
+                path.display()
+            );
+            return;
+        }
+        Ok(text) => {
+            let parsed = Json::parse(&text)
+                .ok()
+                .filter(|j| j.get("runs").and_then(Json::as_arr).is_some());
+            if parsed.is_none() {
+                // Timestamped so repeated corruption never clobbers an
+                // earlier preserved file.
+                let bak = path.with_extension(format!("json.{}.bak", unix_now() as u64));
+                match std::fs::rename(&path, &bak) {
+                    Ok(()) => eprintln!(
+                        "{} is not a results document; moved aside to {}",
+                        path.display(),
+                        bak.display()
+                    ),
+                    Err(e) => {
+                        eprintln!(
+                            "{} is not a results document and could not be moved aside \
+                             ({e}); refusing to overwrite it",
+                            path.display()
+                        );
+                        return;
+                    }
+                }
+            }
+            parsed
+        }
+    };
+    let doc = merge_bench_run(existing, bench, figure, metric, run);
+    match std::fs::write(&path, format!("{doc}\n")) {
+        Ok(()) => println!("recorded run -> {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}
+
+/// Seconds since the Unix epoch (run timestamps in `BENCH_*.json`).
+pub fn unix_now() -> f64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -137,5 +245,28 @@ mod tests {
         let s = bench_loop(2, 3, 10, || n += 1);
         assert_eq!(n, 5);
         assert_eq!(s.samples.len(), 3);
+    }
+
+    #[test]
+    fn merge_bench_run_appends_and_heals() {
+        let run = |label: &str| Json::obj([("label", Json::Str(label.into()))]);
+        // Fresh document when nothing (or garbage) exists.
+        let d1 = merge_bench_run(None, "fig4", "Fig 4", "msg/s", run("a"));
+        assert_eq!(d1.get("bench").unwrap().as_str(), Some("fig4"));
+        assert_eq!(d1.get("runs").unwrap().as_arr().unwrap().len(), 1);
+        let healed = merge_bench_run(
+            Some(Json::Str("not a doc".into())),
+            "fig4",
+            "Fig 4",
+            "msg/s",
+            run("x"),
+        );
+        assert_eq!(healed.get("runs").unwrap().as_arr().unwrap().len(), 1);
+        // Appends to an existing document, preserving prior runs.
+        let d2 = merge_bench_run(Some(d1), "fig4", "Fig 4", "msg/s", run("b"));
+        let runs = d2.get("runs").unwrap().as_arr().unwrap();
+        assert_eq!(runs.len(), 2);
+        assert_eq!(runs[0].get("label").unwrap().as_str(), Some("a"));
+        assert_eq!(runs[1].get("label").unwrap().as_str(), Some("b"));
     }
 }

@@ -305,13 +305,36 @@ fn mutual_rendezvous_flood_tiny_rings() {
         let peer = 1 - world.rank();
         let n = 16 * 1024; // 256 chunks per message at chunk_size 64
         let data = vec![world.rank() as u8 + 1; n];
-        for round in 0..4 {
+        for round in 0..16 {
             let req = world.isend(&data, peer, round).unwrap();
             let mut buf = vec![0u8; n];
             world.recv(&mut buf, peer as i32, round).unwrap();
             assert!(buf.iter().all(|&b| b == peer as u8 + 1), "round {round}");
             req.wait().unwrap();
         }
+        // All 8192 chunks are accounted once both ranks reach here.
+        coll::barrier(&world).unwrap();
+        // Allocation-free steady state: chunk cells recycle through the
+        // per-endpoint pool, so misses are bounded by the peak number of
+        // cells alive at once — ring occupancy plus whatever a send_ctrl
+        // stall parked in rx_backlog, which stash_inbound bounds at one
+        // in-flight transfer (256 chunks) per endpoint. In practice the
+        // hit rate lands ≥99%; the assertion also admits the documented
+        // worst-case stall bound (≤600 misses across both endpoints) so
+        // scheduler luck on an oversubscribed box cannot flake it, while
+        // a genuine recycling regression (per-chunk allocation ⇒ ~8192
+        // misses) still fails loudly. The exact-count check lives in
+        // progress::tests.
+        let m = world.fabric().metrics.snapshot();
+        let total = m.pool_hits + m.pool_misses;
+        assert!(total >= 8192, "expected ≥8192 chunk acquires, saw {total}");
+        let hit_rate = m.pool_hits as f64 / total as f64;
+        assert!(
+            hit_rate >= 0.99 || m.pool_misses <= 600,
+            "chunk-pool recycling broke: hit rate {hit_rate:.4} ({} hits / {} misses)",
+            m.pool_hits,
+            m.pool_misses
+        );
     });
 }
 
