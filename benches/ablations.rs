@@ -5,13 +5,21 @@
 //!      implicit scheme collides and threads contend;
 //!  A2. eager/rendezvous threshold — where the two-copy handshake starts
 //!      paying off;
-//!  A3. rendezvous chunk size — pipelining granularity vs per-chunk cost.
+//!  A3. rendezvous chunk size — pipelining granularity vs per-chunk cost;
+//!  A5. reduce_scatter schedule — reduce+scatter composition vs pairwise
+//!      exchange (the ablation `coll::reduce_scatter` documents);
+//!  A6. bcast schedule — binomial tree vs pipelined chain.
+//!
+//! A5/A6 append their curves to `BENCH_coll.json` at the repo root (tag
+//! with `BENCH_LABEL=...`) alongside the `coll` bench's crossover data.
 //!
 //! Run: `cargo bench --offline --bench ablations`
 
+use mpix::coll;
 use mpix::fabric::FabricConfig;
 use mpix::universe::Universe;
-use mpix::util::stats::{fmt_rate, fmt_time};
+use mpix::util::json::Json;
+use mpix::util::stats::{fmt_rate, fmt_time, record_bench_run, unix_now};
 use std::time::Instant;
 
 /// A1: 4 thread pairs over per-vci mode with a varying shared-endpoint
@@ -51,6 +59,47 @@ fn vci_pool(n_shared: usize) -> f64 {
         (threads * 32 * 50) as f64 / t0.elapsed().as_secs_f64()
     });
     rates.iter().sum()
+}
+
+/// A5: per-op latency of one reduce_scatter schedule over 4 ranks.
+fn reduce_scatter_algo(blk: usize, pairwise: bool) -> f64 {
+    const ITERS: usize = 200;
+    let out = Universe::run(Universe::with_ranks(4), |world| {
+        let send = vec![world.rank() as f64; 4 * blk];
+        let mut recv = vec![0f64; blk];
+        coll::barrier(&world).unwrap();
+        let t0 = Instant::now();
+        for _ in 0..ITERS {
+            if pairwise {
+                coll::reduce_scatter_block_pairwise_t(&world, &send, &mut recv, |a, b| *a += *b)
+                    .unwrap();
+            } else {
+                coll::reduce_scatter_block_linear_t(&world, &send, &mut recv, |a, b| *a += *b)
+                    .unwrap();
+            }
+        }
+        t0.elapsed().as_secs_f64() / ITERS as f64
+    });
+    out[0]
+}
+
+/// A6: per-op latency of one bcast schedule over 4 ranks.
+fn bcast_algo(bytes: usize, chain: bool) -> f64 {
+    const ITERS: usize = 200;
+    let out = Universe::run(Universe::with_ranks(4), |world| {
+        let mut buf = vec![world.rank() as u8; bytes];
+        coll::barrier(&world).unwrap();
+        let t0 = Instant::now();
+        for _ in 0..ITERS {
+            if chain {
+                coll::bcast_chain(&world, &mut buf, 0).unwrap();
+            } else {
+                coll::bcast_binomial(&world, &mut buf, 0).unwrap();
+            }
+        }
+        t0.elapsed().as_secs_f64() / ITERS as f64
+    });
+    out[0]
 }
 
 /// A2/A3: one-directional bandwidth at `size` under a given config.
@@ -123,6 +172,50 @@ fn main() {
         let bw = bandwidth(cfg, 1 << 20);
         println!("{:>12} {:>14} {:>12}", c, fmt_rate(bw), (1 << 20) / c);
     }
+
+    println!();
+    println!("A5 — reduce_scatter schedule: reduce+scatter vs pairwise (4 ranks)");
+    println!("{:>12} {:>14} {:>14}", "f64/rank blk", "linear", "pairwise");
+    let rs_blks = [16usize, 256, 4096];
+    let mut rs_linear = Vec::new();
+    let mut rs_pairwise = Vec::new();
+    for &blk in &rs_blks {
+        let l = reduce_scatter_algo(blk, false);
+        let p = reduce_scatter_algo(blk, true);
+        rs_linear.push(l);
+        rs_pairwise.push(p);
+        println!("{:>12} {:>14} {:>14}", blk, fmt_time(l), fmt_time(p));
+    }
+
+    println!();
+    println!("A6 — bcast schedule: binomial tree vs pipelined chain (4 ranks)");
+    println!("{:>12} {:>14} {:>14}", "bytes", "binomial", "chain");
+    let bc_sizes = [512usize, 32 * 1024, 512 * 1024];
+    let mut bc_binomial = Vec::new();
+    let mut bc_chain = Vec::new();
+    for &b in &bc_sizes {
+        let t = bcast_algo(b, false);
+        let c = bcast_algo(b, true);
+        bc_binomial.push(t);
+        bc_chain.push(c);
+        println!("{:>12} {:>14} {:>14}", b, fmt_time(t), fmt_time(c));
+    }
+
+    record_bench_run(
+        "coll",
+        "E8",
+        "seconds per op (4 ranks)",
+        Json::obj([
+            ("unix_time", Json::Num(unix_now())),
+            ("section", Json::Str("reduce_scatter_bcast_ablation".into())),
+            ("rs_blocks_f64", Json::nums(rs_blks.iter().map(|&b| b as f64))),
+            ("reduce_scatter_linear", Json::nums(rs_linear)),
+            ("reduce_scatter_pairwise", Json::nums(rs_pairwise)),
+            ("bcast_bytes", Json::nums(bc_sizes.iter().map(|&b| b as f64))),
+            ("bcast_binomial", Json::nums(bc_binomial)),
+            ("bcast_chain", Json::nums(bc_chain)),
+        ]),
+    );
 
     println!();
     println!("A4 — wait-loop spin budget (latency vs core yield, 8 B ping-pong)");

@@ -1,19 +1,26 @@
-//! E8 — collectives across thread ranks: the thread-communicator
-//! extension runs the *same* collective algorithms over N×M thread ranks
-//! that proc comms use, with the intra-process fast path making
-//! small-message collectives cheaper than their MPI-everywhere
-//! equivalents (paper: "a highly effective alternative to the
-//! MPI-everywhere model").
+//! E8 — collectives across thread ranks and across algorithms.
 //!
+//! Part 1 (thread ranks): the thread-communicator extension runs the
+//! *same* collective algorithms over N×M thread ranks that proc comms
+//! use, with the intra-process fast path making small-message
+//! collectives cheaper than their MPI-everywhere equivalents (paper: "a
+//! highly effective alternative to the MPI-everywhere model").
 //! Compares allreduce latency: 4 proc ranks vs 1 proc × 4 threads vs
 //! 2 procs × 2 threads.
+//!
+//! Part 2 (algorithms): tree-vs-ring allreduce and ring-vs-recursive-
+//! doubling allgather across payload sizes — the crossover data behind
+//! the `coll::select` auto heuristic. Each run appends to
+//! `BENCH_coll.json` at the repo root (tag with `BENCH_LABEL=...`), so
+//! the heuristic's crossover points stay measurable across commits.
 //!
 //! Run: `cargo bench --offline --bench coll`
 
 use mpix::coll;
 use mpix::threadcomm::Threadcomm;
 use mpix::universe::Universe;
-use mpix::util::stats::fmt_time;
+use mpix::util::json::Json;
+use mpix::util::stats::{fmt_time, record_bench_run, unix_now};
 use std::time::Instant;
 
 const SIZES: &[usize] = &[1, 8, 64, 512, 4096]; // f64 elements
@@ -60,6 +67,45 @@ fn tc_allreduce(nprocs: usize, nthreads: usize, nelem: usize) -> f64 {
     out.into_iter().find(|v| *v > 0.0).unwrap_or(0.0)
 }
 
+/// One explicit allreduce schedule over 4 proc ranks (bypasses the
+/// selector so both sides of the crossover are measured at every size).
+fn algo_allreduce(nelem: usize, ring: bool) -> f64 {
+    let out = Universe::run(Universe::with_ranks(4), |world| {
+        let mut v = vec![world.rank() as f64; nelem];
+        coll::barrier(&world).unwrap();
+        let t0 = Instant::now();
+        for _ in 0..ITERS {
+            if ring {
+                coll::allreduce_ring_t(&world, &mut v, |a, b| *a += *b).unwrap();
+            } else {
+                coll::allreduce_tree_t(&world, &mut v, |a, b| *a += *b).unwrap();
+            }
+        }
+        t0.elapsed().as_secs_f64() / ITERS as f64
+    });
+    out[0]
+}
+
+/// One explicit allgather schedule over 4 proc ranks (power of two, so
+/// recursive doubling runs as itself rather than falling back).
+fn algo_allgather(nelem: usize, recdbl: bool) -> f64 {
+    let out = Universe::run(Universe::with_ranks(4), |world| {
+        let send = vec![world.rank() as f64; nelem];
+        let mut recv = vec![0f64; 4 * nelem];
+        coll::barrier(&world).unwrap();
+        let t0 = Instant::now();
+        for _ in 0..ITERS {
+            if recdbl {
+                coll::allgather_recdbl_t(&world, &send, &mut recv).unwrap();
+            } else {
+                coll::allgather_ring_t(&world, &send, &mut recv).unwrap();
+            }
+        }
+        t0.elapsed().as_secs_f64() / ITERS as f64
+    });
+    out[0]
+}
+
 fn main() {
     // 4 rank-threads on 2 cores: yield quickly when blocked.
     std::env::set_var("MPIX_SPIN", "16");
@@ -80,4 +126,45 @@ fn main() {
             fmt_time(t22)
         );
     }
+
+    println!();
+    println!("E8b — allreduce algorithm crossover (4 proc ranks)");
+    println!("{:>10} {:>14} {:>14}", "f64 elems", "tree", "ring");
+    let mut ar_tree = Vec::new();
+    let mut ar_ring = Vec::new();
+    for &n in SIZES {
+        let t = algo_allreduce(n, false);
+        let r = algo_allreduce(n, true);
+        ar_tree.push(t);
+        ar_ring.push(r);
+        println!("{:>10} {:>14} {:>14}", n, fmt_time(t), fmt_time(r));
+    }
+
+    println!();
+    println!("E8c — allgather algorithm crossover (4 proc ranks)");
+    println!("{:>10} {:>14} {:>14}", "f64 elems", "ring", "recdbl");
+    let mut ag_ring = Vec::new();
+    let mut ag_recdbl = Vec::new();
+    for &n in SIZES {
+        let r = algo_allgather(n, false);
+        let d = algo_allgather(n, true);
+        ag_ring.push(r);
+        ag_recdbl.push(d);
+        println!("{:>10} {:>14} {:>14}", n, fmt_time(r), fmt_time(d));
+    }
+
+    record_bench_run(
+        "coll",
+        "E8",
+        "seconds per op (4 ranks)",
+        Json::obj([
+            ("unix_time", Json::Num(unix_now())),
+            ("section", Json::Str("allreduce_allgather_crossover".into())),
+            ("sizes_f64", Json::nums(SIZES.iter().map(|&n| n as f64))),
+            ("allreduce_tree", Json::nums(ar_tree)),
+            ("allreduce_ring", Json::nums(ar_ring)),
+            ("allgather_ring", Json::nums(ag_ring)),
+            ("allgather_recdbl", Json::nums(ag_recdbl)),
+        ]),
+    );
 }

@@ -1,25 +1,76 @@
 #!/usr/bin/env bash
-# CI gate: formatting, lints, tier-1 build+test, and bench compilation.
-# Run from anywhere; operates on the repo root. Requires a Rust toolchain
-# (rustup component add rustfmt clippy). No network access is needed —
-# the workspace has zero external dependencies.
+# CI gate: formatting, lints, docs, tier-1 build+test, and bench
+# compilation. Run from anywhere; operates on the repo root. Requires a
+# Rust toolchain (rustup component add rustfmt clippy; rust-toolchain.toml
+# pins the channel). No network access is needed — the workspace has zero
+# external dependencies.
+#
+# This script is the single source of truth for what CI runs: the GitHub
+# workflow (.github/workflows/ci.yml) invokes one stage flag per job, and
+# local runs use the same flags.
+#
+#   ./ci.sh            # all stages (the full local gate)
+#   ./ci.sh all        # same
+#   ./ci.sh quick      # tier-1 only: build + test
+#   ./ci.sh fmt        # cargo fmt --check
+#   ./ci.sh clippy     # cargo clippy -D warnings
+#   ./ci.sh doc        # cargo doc -D warnings (doc rot fails the build)
+#   ./ci.sh test       # tier-1 build+test, then BENCH_*.json validation
+#   ./ci.sh bench      # benches compile (no run)
 set -euo pipefail
 cd "$(dirname "$0")"
 
-echo "==> cargo fmt --check"
-cargo fmt --all -- --check
+stage_fmt() {
+    echo "==> cargo fmt --check"
+    cargo fmt --all -- --check
+}
 
-echo "==> cargo clippy (deny warnings)"
-cargo clippy --workspace --all-targets -- -D warnings
+stage_clippy() {
+    echo "==> cargo clippy (deny warnings)"
+    cargo clippy --workspace --all-targets -- -D warnings
+}
 
-echo "==> cargo doc --no-deps (deny warnings: doc rot fails the build)"
-RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --workspace
+stage_doc() {
+    echo "==> cargo doc --no-deps (deny warnings: doc rot fails the build)"
+    RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --workspace
+}
 
-echo "==> tier-1: cargo build --release && cargo test -q"
-cargo build --release
-cargo test -q
+stage_quick() {
+    echo "==> tier-1: cargo build --release && cargo test -q"
+    cargo build --release
+    cargo test -q
+}
 
-echo "==> benches compile"
-cargo bench --no-run
+stage_test() {
+    stage_quick
+    echo "==> BENCH_*.json well-formedness (malformed appends fail the gate)"
+    cargo run --release --example validate_bench
+}
 
-echo "ci.sh OK"
+stage_bench() {
+    echo "==> benches compile"
+    cargo bench --no-run
+}
+
+stage="${1:-all}"
+case "$stage" in
+    fmt) stage_fmt ;;
+    clippy) stage_clippy ;;
+    doc) stage_doc ;;
+    test) stage_test ;;
+    bench) stage_bench ;;
+    quick) stage_quick ;;
+    all)
+        stage_fmt
+        stage_clippy
+        stage_doc
+        stage_test
+        stage_bench
+        ;;
+    *)
+        echo "usage: $0 [fmt|clippy|doc|test|bench|quick|all]" >&2
+        exit 2
+        ;;
+esac
+
+echo "ci.sh $stage OK"

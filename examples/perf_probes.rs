@@ -107,4 +107,26 @@ fn main() {
         "inbox registry : {} refreshes skipped (no new channels)",
         d.inbox_refresh_skips
     );
+
+    // Collective algorithm selection: the same allreduce call dispatches
+    // to the binomial tree at small counts and to the ring at large
+    // counts; the per-algorithm counters make the switch observable.
+    // Double barrier around m0: every rank snapshots before any rank
+    // dispatches, so the deltas are exact (4 + 4).
+    let deltas = Universe::run(Universe::with_ranks(4), |world| {
+        mpix::coll::barrier(&world).unwrap();
+        let m0 = world.fabric().metrics.snapshot();
+        mpix::coll::barrier(&world).unwrap();
+        let mut small = [world.rank() as f64; 8];
+        mpix::coll::allreduce_t(&world, &mut small, |a, b| *a += *b).unwrap();
+        let mut big = vec![world.rank() as f64; 4096];
+        mpix::coll::allreduce_t(&world, &mut big, |a, b| *a += *b).unwrap();
+        mpix::coll::barrier(&world).unwrap();
+        world.fabric().metrics.snapshot().since(&m0)
+    });
+    let d = &deltas[0];
+    println!(
+        "coll dispatch  : allreduce tree={} ring={} (64 B -> tree, 32 KiB -> ring)",
+        d.coll_allreduce_tree, d.coll_allreduce_ring
+    );
 }

@@ -1,0 +1,70 @@
+//! Well-formedness gate for the `BENCH_*.json` trajectory files at the
+//! repo root (run by `ci.sh test`): a malformed append fails CI instead
+//! of silently corrupting the perf trajectory the files exist to keep.
+//!
+//! A valid results document (see `util::stats::record_bench_run`) is a
+//! top-level object with string `bench`/`figure`/`metric` fields and a
+//! `runs` array whose entries are objects.
+
+use mpix::util::json::Json;
+use std::path::Path;
+
+fn check_doc(name: &str, text: &str) -> Result<usize, String> {
+    let doc = Json::parse(text).map_err(|e| format!("{name}: parse error: {e}"))?;
+    for key in ["bench", "figure", "metric"] {
+        if doc.get(key).and_then(Json::as_str).is_none() {
+            return Err(format!("{name}: missing string field {key:?}"));
+        }
+    }
+    let runs = doc
+        .get("runs")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("{name}: missing `runs` array"))?;
+    for (i, run) in runs.iter().enumerate() {
+        if run.as_obj().is_none() {
+            return Err(format!("{name}: runs[{i}] is not an object"));
+        }
+    }
+    Ok(runs.len())
+}
+
+fn main() {
+    // The crate manifest lives in rust/; the repo root is its parent.
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate dir has a parent");
+    let dir = std::fs::read_dir(root).expect("read repo root");
+    let mut entries: Vec<_> = dir.flatten().collect();
+    entries.sort_by_key(|e| e.file_name());
+    let mut seen = 0usize;
+    let mut bad = 0usize;
+    for entry in entries {
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if !(name.starts_with("BENCH_") && name.ends_with(".json")) {
+            continue;
+        }
+        seen += 1;
+        match std::fs::read_to_string(entry.path()) {
+            Err(e) => {
+                eprintln!("{name}: unreadable: {e}");
+                bad += 1;
+            }
+            Ok(text) => match check_doc(&name, &text) {
+                Ok(nruns) => println!("{name}: ok ({nruns} runs)"),
+                Err(msg) => {
+                    eprintln!("{msg}");
+                    bad += 1;
+                }
+            },
+        }
+    }
+    if seen == 0 {
+        eprintln!("no BENCH_*.json files found at {}", root.display());
+        std::process::exit(1);
+    }
+    if bad > 0 {
+        eprintln!("{bad} of {seen} BENCH_*.json files are malformed");
+        std::process::exit(1);
+    }
+    println!("validated {seen} BENCH_*.json result files");
+}

@@ -1,0 +1,89 @@
+//! `MPI_Allgather` schedules: ring and recursive doubling.
+
+use super::CommLike;
+use crate::error::Result;
+use crate::metrics::Metrics;
+use crate::util::pod::{bytes_of, bytes_of_mut, zeroed_vec, Pod};
+
+/// Ring allgather, n−1 steps: each step passes one block to the right
+/// neighbor. Bandwidth-optimal (every byte crosses each link once); n−1
+/// rounds of latency.
+pub fn allgather_ring_t<C: CommLike, T: Pod>(comm: &C, send: &[T], recv: &mut [T]) -> Result<()> {
+    let n = comm.size();
+    let me = comm.rank();
+    let blk = send.len();
+    assert_eq!(recv.len(), n * blk, "allgather recv buffer size");
+    recv[me * blk..(me + 1) * blk].copy_from_slice(send);
+    if n <= 1 {
+        return Ok(());
+    }
+    Metrics::bump(&comm.metrics().coll_allgather_ring);
+    // One tag for every step: all traffic flows left→right and per-pair
+    // delivery is FIFO, so steps cannot cross — and the schedule stays
+    // inside the 64-tag per-operation window at any comm size.
+    let tag = comm.next_coll_tag();
+    let right = (me + 1) % n;
+    let left = (me + n - 1) % n;
+    // One scratch block for the whole call: stages the outgoing block so
+    // the isend cannot alias the receive; `req.wait()` completes before
+    // the next iteration reuses it.
+    let mut out = zeroed_vec::<T>(blk);
+    for step in 0..n - 1 {
+        let send_block = (me + n - step) % n;
+        let recv_block = (me + n - step - 1) % n;
+        out.copy_from_slice(&recv[send_block * blk..(send_block + 1) * blk]);
+        let req = comm.coll_isend(bytes_of(&out), right, tag)?;
+        comm.coll_recv(
+            bytes_of_mut(&mut recv[recv_block * blk..(recv_block + 1) * blk]),
+            left,
+            tag,
+        )?;
+        req.wait()?;
+    }
+    Ok(())
+}
+
+/// Recursive-doubling allgather, log₂ n steps: at step k each rank
+/// exchanges its accumulated 2ᵏ-block group with the partner `me ^ 2ᵏ`.
+/// Latency-optimal for small blocks; power-of-two sizes only — other
+/// sizes delegate to [`allgather_ring_t`] (which then tallies the ring
+/// counter, reflecting the path actually run).
+pub fn allgather_recdbl_t<C: CommLike, T: Pod>(comm: &C, send: &[T], recv: &mut [T]) -> Result<()> {
+    let n = comm.size();
+    if !n.is_power_of_two() {
+        return allgather_ring_t(comm, send, recv);
+    }
+    let me = comm.rank();
+    let blk = send.len();
+    assert_eq!(recv.len(), n * blk, "allgather recv buffer size");
+    recv[me * blk..(me + 1) * blk].copy_from_slice(send);
+    if n <= 1 {
+        return Ok(());
+    }
+    Metrics::bump(&comm.metrics().coll_allgather_recdbl);
+    // log₂ n steps with per-step tags stays well inside the 64-tag
+    // per-operation window.
+    let tag = comm.next_coll_tag();
+    // One scratch buffer sized for the final (largest) exchanged group.
+    let mut out = zeroed_vec::<T>(n / 2 * blk);
+    let mut mask = 1usize;
+    let mut step = 0i32;
+    while mask < n {
+        let partner = me ^ mask;
+        // The aligned group of `mask` blocks this rank has accumulated.
+        let my_start = me & !(mask - 1);
+        let peer_start = partner & !(mask - 1);
+        let group = mask * blk;
+        out[..group].copy_from_slice(&recv[my_start * blk..my_start * blk + group]);
+        let req = comm.coll_isend(bytes_of(&out[..group]), partner, tag.wrapping_add(step))?;
+        comm.coll_recv(
+            bytes_of_mut(&mut recv[peer_start * blk..peer_start * blk + group]),
+            partner,
+            tag.wrapping_add(step),
+        )?;
+        req.wait()?;
+        mask <<= 1;
+        step += 1;
+    }
+    Ok(())
+}

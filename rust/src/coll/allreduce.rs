@@ -1,0 +1,86 @@
+//! `MPI_Allreduce` schedules: binomial tree and ring.
+
+use super::{bcast, reduce_t, CommLike};
+use crate::error::Result;
+use crate::metrics::Metrics;
+use crate::util::pod::{bytes_of, bytes_of_mut, Pod};
+
+/// Tree allreduce: binomial reduce to rank 0, binomial bcast back.
+/// 2·log₂ n rounds of full-count messages — latency-optimal, the small-
+/// payload pick.
+pub fn allreduce_tree_t<C: CommLike, T: Pod>(
+    comm: &C,
+    buf: &mut [T],
+    op: impl Fn(&mut T, &T) + Copy,
+) -> Result<()> {
+    if comm.size() <= 1 {
+        return Ok(());
+    }
+    Metrics::bump(&comm.metrics().coll_allreduce_tree);
+    reduce_t(comm, buf, 0, op)?;
+    bcast::binomial(comm, bytes_of_mut(buf), 0)
+}
+
+/// Ring allreduce: ring reduce-scatter (n−1 steps) then ring allgather
+/// (n−1 steps). Every rank sends ≈ 2·count/n elements per step, so
+/// bandwidth is optimal for large counts; requires a commutative op
+/// (partials fold in ring-arrival order).
+pub fn allreduce_ring_t<C: CommLike, T: Pod>(
+    comm: &C,
+    buf: &mut [T],
+    op: impl Fn(&mut T, &T) + Copy,
+) -> Result<()> {
+    let n = comm.size();
+    let me = comm.rank();
+    if n <= 1 {
+        return Ok(());
+    }
+    Metrics::bump(&comm.metrics().coll_allreduce_ring);
+    let count = buf.len();
+    if count == 0 {
+        return Ok(());
+    }
+    let tag = comm.next_coll_tag();
+    // Near-equal partition: segment r covers `seg(r)` = (start, len); the
+    // first `count % n` segments carry one extra element. Segments may be
+    // empty when count < n (zero-length exchanges are still matched, so
+    // the schedule stays uniform).
+    let q = count / n;
+    let rem = count % n;
+    let seg = |r: usize| (r * q + r.min(rem), q + usize::from(r < rem));
+    let right = (me + 1) % n;
+    let left = (me + n - 1) % n;
+    let max_seg = q + usize::from(rem > 0);
+    // Two scratch segments for the whole call (not per step): `out`
+    // stages the outgoing segment so the isend cannot alias the
+    // receive-side fold, `tmp` lands the incoming partial. `req.wait()`
+    // completes before the next iteration reuses them.
+    let mut tmp = vec![buf[0]; max_seg];
+    let mut out = vec![buf[0]; max_seg];
+    // Phase 1 — ring reduce-scatter: at step s, send segment (me−s) and
+    // fold the incoming partial into segment (me−s−1). After n−1 steps
+    // this rank owns the fully reduced segment (me+1) mod n.
+    for s in 0..n - 1 {
+        let (ss, sl) = seg((me + n - s) % n);
+        let (rs, rl) = seg((me + n - s - 1) % n);
+        out[..sl].copy_from_slice(&buf[ss..ss + sl]);
+        let req = comm.coll_isend(bytes_of(&out[..sl]), right, tag)?;
+        comm.coll_recv(bytes_of_mut(&mut tmp[..rl]), left, tag)?;
+        req.wait()?;
+        for (a, b) in buf[rs..rs + rl].iter_mut().zip(tmp[..rl].iter()) {
+            op(a, b);
+        }
+    }
+    // Phase 2 — ring allgather of the reduced segments: at step s, pass
+    // segment (me+1−s) along and receive segment (me−s).
+    let tag2 = tag.wrapping_add(1);
+    for s in 0..n - 1 {
+        let (ss, sl) = seg((me + 1 + n - s) % n);
+        let (rs, rl) = seg((me + n - s) % n);
+        out[..sl].copy_from_slice(&buf[ss..ss + sl]);
+        let req = comm.coll_isend(bytes_of(&out[..sl]), right, tag2)?;
+        comm.coll_recv(bytes_of_mut(&mut buf[rs..rs + rl]), left, tag2)?;
+        req.wait()?;
+    }
+    Ok(())
+}

@@ -1,0 +1,98 @@
+//! `MPI_Bcast` schedules: binomial tree and pipelined chain.
+
+use super::select::BCAST_CHAIN_CHUNK_BYTES;
+use super::CommLike;
+use crate::error::Result;
+use crate::metrics::Metrics;
+use crate::util::pod::{bytes_of_mut, Pod};
+
+/// Binomial-tree bcast (log₂ n rounds of full-message hops). Latency-
+/// optimal for small payloads; the whole message crosses every tree
+/// level, so large payloads prefer [`bcast_chain`].
+pub fn bcast_binomial<C: CommLike>(comm: &C, buf: &mut [u8], root: usize) -> Result<()> {
+    let n = comm.size();
+    if n <= 1 {
+        return Ok(());
+    }
+    Metrics::bump(&comm.metrics().coll_bcast_binomial);
+    binomial(comm, buf, root)
+}
+
+/// Raw binomial schedule, shared with the tree-allreduce composition
+/// (which tallies its own op-level counter instead).
+pub(super) fn binomial<C: CommLike>(comm: &C, buf: &mut [u8], root: usize) -> Result<()> {
+    let n = comm.size();
+    let tag = comm.next_coll_tag();
+    // Rank relative to root.
+    let vrank = (comm.rank() + n - root) % n;
+    // Receive from parent.
+    if vrank != 0 {
+        let mut mask = 1usize;
+        while mask <= vrank {
+            mask <<= 1;
+        }
+        mask >>= 1;
+        let parent = (vrank - mask + root) % n;
+        comm.coll_recv(buf, parent, tag)?;
+    }
+    // Forward to children.
+    let mut mask = 1usize;
+    while mask <= vrank {
+        mask <<= 1;
+    }
+    while mask < n {
+        let child_v = vrank + mask;
+        if child_v < n {
+            let child = (child_v + root) % n;
+            comm.coll_send(buf, child, tag)?;
+        }
+        mask <<= 1;
+    }
+    Ok(())
+}
+
+/// Pipelined-chain bcast: ranks form a chain in root-relative order and
+/// relay [`BCAST_CHAIN_CHUNK_BYTES`]-sized chunks, so chunk `c` flows
+/// down the chain while chunk `c+1` is still arriving. `coll_isend`
+/// keeps every forward nonblocking; the borrow is split per chunk so
+/// sends stay outstanding while later chunks are received.
+pub fn bcast_chain<C: CommLike>(comm: &C, buf: &mut [u8], root: usize) -> Result<()> {
+    let n = comm.size();
+    if n <= 1 || buf.is_empty() {
+        return Ok(());
+    }
+    Metrics::bump(&comm.metrics().coll_bcast_chain);
+    let tag = comm.next_coll_tag();
+    let vrank = (comm.rank() + n - root) % n;
+    let prev = (comm.rank() + n - 1) % n;
+    let next = (comm.rank() + 1) % n;
+    let last = vrank == n - 1;
+    let mut rest: &mut [u8] = buf;
+    let mut reqs = Vec::new();
+    while !rest.is_empty() {
+        let take = BCAST_CHAIN_CHUNK_BYTES.min(rest.len());
+        let (cur, tail) = std::mem::take(&mut rest).split_at_mut(take);
+        rest = tail;
+        if vrank != 0 {
+            // Per-pair delivery is FIFO, so every chunk shares one tag.
+            comm.coll_recv(cur, prev, tag)?;
+        }
+        if !last {
+            reqs.push(comm.coll_isend(cur, next, tag)?);
+        }
+    }
+    for req in reqs {
+        req.wait()?;
+    }
+    Ok(())
+}
+
+/// Typed binomial bcast.
+pub fn bcast_binomial_t<C: CommLike, T: Pod>(comm: &C, buf: &mut [T], root: usize) -> Result<()> {
+    bcast_binomial(comm, bytes_of_mut(buf), root)
+}
+
+/// Typed chain bcast.
+pub fn bcast_chain_t<C: CommLike, T: Pod>(comm: &C, buf: &mut [T], root: usize) -> Result<()> {
+    bcast_chain(comm, bytes_of_mut(buf), root)
+}

@@ -6,8 +6,37 @@
 //! Collective traffic runs on a separate context (the high bit of the ctx
 //! id) so user wildcard receives can never intercept it, with a per-comm
 //! operation ordinal as the tag.
+//!
+//! # Algorithm selection
+//!
+//! Ops with more than one schedule (allreduce, bcast, reduce_scatter,
+//! allgather) dispatch through a per-communicator [`CollSelector`]:
+//! `MPIX_COLL_<OP>=<algo>` env overrides (read at comm creation),
+//! `mpix_coll_<op>` info keys ([`crate::Comm::apply_coll_info`]), or an
+//! auto heuristic on payload bytes and comm size ([`select`] documents
+//! the crossovers). Each algorithm tallies a dispatch counter in
+//! [`crate::metrics::Metrics`], so the chosen path is observable — the
+//! cross-algorithm agreement tests and `MPIX_COLL_*` switch tests assert
+//! against those counters. Explicit per-algorithm entry points
+//! ([`allreduce_ring_t`], [`bcast_chain_t`], …) bypass the selector for
+//! ablations and benches.
+
+mod allgather;
+mod allreduce;
+mod bcast;
+mod reduce_scatter;
+pub mod select;
+#[cfg(test)]
+mod tests;
+
+pub use allgather::{allgather_recdbl_t, allgather_ring_t};
+pub use allreduce::{allreduce_ring_t, allreduce_tree_t};
+pub use bcast::{bcast_binomial, bcast_binomial_t, bcast_chain, bcast_chain_t};
+pub use reduce_scatter::{reduce_scatter_block_linear_t, reduce_scatter_block_pairwise_t};
+pub use select::{CollAlgo, CollOp, CollSelector};
 
 use crate::error::Result;
+use crate::metrics::Metrics;
 use crate::request::Status;
 use crate::util::pod::{bytes_of, bytes_of_mut, Pod};
 
@@ -33,6 +62,11 @@ pub trait CommLike {
     /// Fresh ordinal for one collective operation (same value on every
     /// rank by collective-call ordering).
     fn next_coll_tag(&self) -> i32;
+    /// The algorithm selector carrying this communicator's env/info
+    /// overrides (see [`select`]).
+    fn selector(&self) -> &CollSelector;
+    /// The counter sink the per-algorithm dispatch tallies land in.
+    fn metrics(&self) -> &Metrics;
 }
 
 /// `MPI_Barrier` — dissemination algorithm, ⌈log₂ n⌉ rounds.
@@ -57,39 +91,17 @@ pub fn barrier<C: CommLike>(comm: &C) -> Result<()> {
     Ok(())
 }
 
-/// `MPI_Bcast` — binomial tree from `root`.
+/// `MPI_Bcast` — selector-dispatched: binomial tree for small payloads,
+/// pipelined chain for large ones (`MPIX_COLL_BCAST=tree|chain`).
 pub fn bcast<C: CommLike>(comm: &C, buf: &mut [u8], root: usize) -> Result<()> {
     let n = comm.size();
     if n <= 1 {
         return Ok(());
     }
-    let tag = comm.next_coll_tag();
-    // Rank relative to root.
-    let vrank = (comm.rank() + n - root) % n;
-    // Receive from parent.
-    if vrank != 0 {
-        let mut mask = 1usize;
-        while mask <= vrank {
-            mask <<= 1;
-        }
-        mask >>= 1;
-        let parent = (vrank - mask + root) % n;
-        comm.coll_recv(buf, parent, tag)?;
+    match comm.selector().choose(CollOp::Bcast, buf.len(), n) {
+        CollAlgo::Chain => bcast_chain(comm, buf, root),
+        _ => bcast_binomial(comm, buf, root),
     }
-    // Forward to children.
-    let mut mask = 1usize;
-    while mask <= vrank {
-        mask <<= 1;
-    }
-    while mask < n {
-        let child_v = vrank + mask;
-        if child_v < n {
-            let child = (child_v + root) % n;
-            comm.coll_send(buf, child, tag)?;
-        }
-        mask <<= 1;
-    }
-    Ok(())
 }
 
 /// Typed `MPI_Bcast`.
@@ -133,44 +145,36 @@ pub fn reduce_t<C: CommLike, T: Pod>(
     Ok(())
 }
 
-/// Typed `MPI_Allreduce` (reduce to 0, then bcast).
+/// Typed `MPI_Allreduce` — selector-dispatched: binomial tree
+/// (reduce + bcast) for small counts, ring (reduce_scatter + allgather)
+/// for large ones (`MPIX_COLL_ALLREDUCE=tree|ring`).
 pub fn allreduce_t<C: CommLike, T: Pod>(
     comm: &C,
     buf: &mut [T],
     op: impl Fn(&mut T, &T) + Copy,
 ) -> Result<()> {
-    reduce_t(comm, buf, 0, op)?;
-    bcast_t(comm, buf, 0)
-}
-
-/// Typed `MPI_Allgather` — ring algorithm, n−1 steps. `send.len()`
-/// elements per rank; `recv.len() == n * send.len()`.
-pub fn allgather_t<C: CommLike, T: Pod>(comm: &C, send: &[T], recv: &mut [T]) -> Result<()> {
     let n = comm.size();
-    let me = comm.rank();
-    let blk = send.len();
-    assert_eq!(recv.len(), n * blk, "allgather recv buffer size");
-    recv[me * blk..(me + 1) * blk].copy_from_slice(send);
     if n <= 1 {
         return Ok(());
     }
-    let tag = comm.next_coll_tag();
-    let right = (me + 1) % n;
-    let left = (me + n - 1) % n;
-    for step in 0..n - 1 {
-        let send_block = (me + n - step) % n;
-        let recv_block = (me + n - step - 1) % n;
-        // Copy out the block to send (can't alias recv while receiving).
-        let out: Vec<T> = recv[send_block * blk..(send_block + 1) * blk].to_vec();
-        let req = comm.coll_isend(bytes_of(&out), right, tag.wrapping_add(step as i32))?;
-        comm.coll_recv(
-            bytes_of_mut(&mut recv[recv_block * blk..(recv_block + 1) * blk]),
-            left,
-            tag.wrapping_add(step as i32),
-        )?;
-        req.wait()?;
+    let bytes = buf.len() * std::mem::size_of::<T>();
+    match comm.selector().choose(CollOp::Allreduce, bytes, n) {
+        CollAlgo::Ring => allreduce_ring_t(comm, buf, op),
+        _ => allreduce_tree_t(comm, buf, op),
     }
-    Ok(())
+}
+
+/// Typed `MPI_Allgather` — selector-dispatched: recursive doubling for
+/// small payloads on power-of-two sizes, ring otherwise
+/// (`MPIX_COLL_ALLGATHER=ring|recdbl`). `send.len()` elements per rank;
+/// `recv.len() == n * send.len()`.
+pub fn allgather_t<C: CommLike, T: Pod>(comm: &C, send: &[T], recv: &mut [T]) -> Result<()> {
+    let n = comm.size();
+    let bytes = recv.len() * std::mem::size_of::<T>();
+    match comm.selector().choose(CollOp::Allgather, bytes, n) {
+        CollAlgo::RecDbl => allgather_recdbl_t(comm, send, recv),
+        _ => allgather_ring_t(comm, send, recv),
+    }
 }
 
 /// Typed `MPI_Gather` to `root` (linear).
@@ -252,147 +256,6 @@ pub fn alltoall_t<C: CommLike, T: Pod>(comm: &C, send: &[T], recv: &mut [T]) -> 
     Ok(())
 }
 
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::universe::Universe;
-
-    #[test]
-    fn barrier_all_ranks() {
-        use std::sync::atomic::{AtomicUsize, Ordering};
-        let before = AtomicUsize::new(0);
-        Universe::run(Universe::with_ranks(4), |world| {
-            before.fetch_add(1, Ordering::SeqCst);
-            barrier(&world).unwrap();
-            // After the barrier, every rank must have arrived.
-            assert_eq!(before.load(Ordering::SeqCst), 4);
-        });
-    }
-
-    #[test]
-    fn barrier_nonpow2_sizes() {
-        // Regression for the partner-index precedence accident:
-        // `(me + n - k % n) % n` parsed as `k % n`, which only happened to
-        // be correct because the dissemination loop keeps k < n. The
-        // partner must be `(me + n - k) % n` at every round, exercised
-        // here over non-power-of-two comm sizes.
-        use std::sync::atomic::{AtomicUsize, Ordering};
-        for &n in &[3usize, 5, 7] {
-            let arrived = AtomicUsize::new(0);
-            let departed = AtomicUsize::new(0);
-            Universe::run(Universe::with_ranks(n), |world| {
-                for round in 0..3 {
-                    arrived.fetch_add(1, Ordering::SeqCst);
-                    barrier(&world).unwrap();
-                    // Every rank must have arrived at this round's barrier
-                    // before any rank passes it.
-                    assert!(
-                        arrived.load(Ordering::SeqCst) >= (round + 1) * n,
-                        "size {n} round {round}: barrier released early"
-                    );
-                    departed.fetch_add(1, Ordering::SeqCst);
-                    barrier(&world).unwrap();
-                }
-            });
-            assert_eq!(arrived.into_inner(), 3 * n);
-            assert_eq!(departed.into_inner(), 3 * n);
-        }
-    }
-
-    #[test]
-    fn bcast_from_each_root() {
-        Universe::run(Universe::with_ranks(4), |world| {
-            for root in 0..4 {
-                let mut v = if world.rank() == root {
-                    [root as u64 * 11 + 3; 8]
-                } else {
-                    [0u64; 8]
-                };
-                bcast_t(&world, &mut v, root).unwrap();
-                assert_eq!(v, [root as u64 * 11 + 3; 8]);
-            }
-        });
-    }
-
-    #[test]
-    fn allreduce_sum() {
-        Universe::run(Universe::with_ranks(4), |world| {
-            let mut v = vec![world.rank() as f64 + 1.0; 16];
-            allreduce_t(&world, &mut v, |a, b| *a += *b).unwrap();
-            // 1+2+3+4 = 10
-            assert!(v.iter().all(|&x| (x - 10.0).abs() < 1e-12));
-        });
-    }
-
-    #[test]
-    fn allreduce_max_nonpow2() {
-        Universe::run(Universe::with_ranks(3), |world| {
-            let mut v = [world.rank() as i64 * 7];
-            allreduce_t(&world, &mut v, |a, b| *a = (*a).max(*b)).unwrap();
-            assert_eq!(v[0], 14);
-        });
-    }
-
-    #[test]
-    fn allgather_ring() {
-        Universe::run(Universe::with_ranks(4), |world| {
-            let send = [world.rank() as u32, world.rank() as u32 * 100];
-            let mut recv = [0u32; 8];
-            allgather_t(&world, &send, &mut recv).unwrap();
-            assert_eq!(recv, [0, 0, 1, 100, 2, 200, 3, 300]);
-        });
-    }
-
-    #[test]
-    fn gather_scatter_roundtrip() {
-        Universe::run(Universe::with_ranks(4), |world| {
-            let send = [world.rank() as i32; 3];
-            if world.rank() == 2 {
-                let mut all = [0i32; 12];
-                gather_t(&world, &send, Some(&mut all), 2).unwrap();
-                assert_eq!(all, [0, 0, 0, 1, 1, 1, 2, 2, 2, 3, 3, 3]);
-                let mut back = [0i32; 3];
-                scatter_t(&world, Some(&all), &mut back, 2).unwrap();
-                assert_eq!(back, [2, 2, 2]);
-            } else {
-                gather_t::<_, i32>(&world, &send, None, 2).unwrap();
-                let mut back = [0i32; 3];
-                scatter_t(&world, None, &mut back, 2).unwrap();
-                assert_eq!(back, [world.rank() as i32; 3]);
-            }
-        });
-    }
-
-    #[test]
-    fn alltoall_pairwise() {
-        Universe::run(Universe::with_ranks(4), |world| {
-            let me = world.rank() as u32;
-            // send[j] = me * 10 + j
-            let send: Vec<u32> = (0..4).map(|j| me * 10 + j).collect();
-            let mut recv = vec![0u32; 4];
-            alltoall_t(&world, &send, &mut recv).unwrap();
-            // recv[j] = j * 10 + me
-            let want: Vec<u32> = (0..4).map(|j| j * 10 + me).collect();
-            assert_eq!(recv, want);
-        });
-    }
-
-    #[test]
-    fn concurrent_collectives_on_dup_comms() {
-        // Collectives on different comms (dup'd contexts) must not cross.
-        Universe::run(Universe::with_ranks(3), |world| {
-            let a = world.dup();
-            let b = world.dup();
-            let mut va = [world.rank() as u64];
-            let mut vb = [world.rank() as u64 * 1000];
-            allreduce_t(&a, &mut va, |x, y| *x += *y).unwrap();
-            allreduce_t(&b, &mut vb, |x, y| *x += *y).unwrap();
-            assert_eq!(va[0], 3);
-            assert_eq!(vb[0], 3000);
-        });
-    }
-}
-
 /// Typed inclusive `MPI_Scan`: rank r ends with op-fold of ranks 0..=r.
 /// Linear chain (latency-optimal variants are an ablation; see benches).
 pub fn scan_t<C: CommLike, T: Pod>(
@@ -457,7 +320,11 @@ pub fn exscan_t<C: CommLike, T: Pod>(
 }
 
 /// Typed `MPI_Reduce_scatter_block`: reduce `n * blk` elements, scatter
-/// block r to rank r. `send.len() == n * recv.len()`.
+/// block r to rank r — selector-dispatched: reduce+scatter composition
+/// for small payloads, pairwise exchange for large ones
+/// (`MPIX_COLL_REDUCE_SCATTER=linear|pairwise`). `send.len()` must be
+/// `n * recv.len()`; a mismatch is an `MpiError::SizeMismatch`, not a
+/// panic.
 pub fn reduce_scatter_block_t<C: CommLike, T: Pod>(
     comm: &C,
     send: &[T],
@@ -465,16 +332,10 @@ pub fn reduce_scatter_block_t<C: CommLike, T: Pod>(
     op: impl Fn(&mut T, &T) + Copy,
 ) -> Result<()> {
     let n = comm.size();
-    let blk = recv.len();
-    assert_eq!(send.len(), n * blk, "reduce_scatter_block send size");
-    // Reduce to 0, then scatter (simple composition; pairwise-exchange is
-    // the ablation variant).
-    let mut all = send.to_vec();
-    reduce_t(comm, &mut all, 0, op)?;
-    if comm.rank() == 0 {
-        scatter_t(comm, Some(&all), recv, 0)
-    } else {
-        scatter_t(comm, None, recv, 0)
+    let bytes = send.len() * std::mem::size_of::<T>();
+    match comm.selector().choose(CollOp::ReduceScatter, bytes, n) {
+        CollAlgo::Pairwise => reduce_scatter_block_pairwise_t(comm, send, recv, op),
+        _ => reduce_scatter_block_linear_t(comm, send, recv, op),
     }
 }
 

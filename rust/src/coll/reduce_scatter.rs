@@ -1,0 +1,82 @@
+//! `MPI_Reduce_scatter_block` schedules: reduce+scatter composition and
+//! pairwise exchange (the ablation variant).
+
+use super::{reduce_t, scatter_t, CommLike};
+use crate::error::{MpiError, Result};
+use crate::metrics::Metrics;
+use crate::util::pod::{bytes_of, bytes_of_mut, zeroed_vec, Pod};
+
+/// Check `send.len() == n * recv.len()`, returning the block size.
+/// Error discipline: a size mismatch is an `MPI_ERR_COUNT`-class error,
+/// not a panic.
+fn validate<C: CommLike, T: Pod>(comm: &C, send: &[T], recv: &[T]) -> Result<usize> {
+    let n = comm.size();
+    let blk = recv.len();
+    if send.len() != n * blk {
+        return Err(MpiError::SizeMismatch(format!(
+            "reduce_scatter_block: send has {} elements, want size * recv = {n} * {blk} = {}",
+            send.len(),
+            n * blk
+        )));
+    }
+    Ok(blk)
+}
+
+/// Reference composition: binomial reduce of the full `n·blk` buffer to
+/// rank 0, then linear scatter of the blocks. Simple and fine for small
+/// payloads; the root reduces and retransmits everything.
+pub fn reduce_scatter_block_linear_t<C: CommLike, T: Pod>(
+    comm: &C,
+    send: &[T],
+    recv: &mut [T],
+    op: impl Fn(&mut T, &T) + Copy,
+) -> Result<()> {
+    validate(comm, send, recv)?;
+    if comm.size() <= 1 {
+        recv.copy_from_slice(send);
+        return Ok(());
+    }
+    Metrics::bump(&comm.metrics().coll_reduce_scatter_linear);
+    let mut all = send.to_vec();
+    reduce_t(comm, &mut all, 0, op)?;
+    if comm.rank() == 0 {
+        scatter_t(comm, Some(&all), recv, 0)
+    } else {
+        scatter_t(comm, None, recv, 0)
+    }
+}
+
+/// Pairwise exchange, n−1 steps: at step s, send block (me+s) to rank
+/// me+s and fold the block arriving from rank me−s into the local
+/// result. Each rank moves only its own n−1 blocks (no root bottleneck);
+/// requires a commutative op (partials fold in arrival order).
+pub fn reduce_scatter_block_pairwise_t<C: CommLike, T: Pod>(
+    comm: &C,
+    send: &[T],
+    recv: &mut [T],
+    op: impl Fn(&mut T, &T) + Copy,
+) -> Result<()> {
+    let blk = validate(comm, send, recv)?;
+    let n = comm.size();
+    let me = comm.rank();
+    recv.copy_from_slice(&send[me * blk..(me + 1) * blk]);
+    if n <= 1 {
+        return Ok(());
+    }
+    Metrics::bump(&comm.metrics().coll_reduce_scatter_pairwise);
+    let tag = comm.next_coll_tag();
+    let mut tmp = zeroed_vec::<T>(blk);
+    for s in 1..n {
+        let dst = (me + s) % n;
+        let src = (me + n - s) % n;
+        // Nonblocking send first: both sides of the pairwise exchange
+        // send before receiving (same discipline as alltoall).
+        let req = comm.coll_isend(bytes_of(&send[dst * blk..(dst + 1) * blk]), dst, tag)?;
+        comm.coll_recv(bytes_of_mut(&mut tmp[..]), src, tag)?;
+        req.wait()?;
+        for (a, b) in recv.iter_mut().zip(tmp.iter()) {
+            op(a, b);
+        }
+    }
+    Ok(())
+}

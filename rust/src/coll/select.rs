@@ -1,0 +1,313 @@
+//! Algorithm selection: which schedule runs a given collective call.
+//!
+//! Modeled on "Extending MPI with User-Level Schedules" (arXiv:1909.11762):
+//! a collective is a *selectable schedule*, not a hard-coded algorithm. The
+//! selector resolves, per operation, in priority order:
+//!
+//! 1. a **forced** algorithm — from the `MPIX_COLL_<OP>` environment
+//!    variable read at communicator creation, or from an
+//!    `mpix_coll_<op>` info key applied afterwards
+//!    ([`crate::Comm::apply_coll_info`]);
+//! 2. the **auto heuristic** on payload bytes and communicator size
+//!    (crossover constants below, measured by `benches/coll.rs` and the
+//!    `benches/ablations.rs` A5/A6 sweeps into `BENCH_coll.json`).
+//!
+//! Every dispatch is tallied into a per-algorithm counter in
+//! [`crate::metrics::Metrics`], so tests can assert which path actually
+//! ran rather than trusting the selector.
+//!
+//! The reduction-carrying ops (allreduce, reduce_scatter) assume the
+//! fold closure is **commutative and associative** when more than one
+//! algorithm is eligible: the ring and pairwise schedules fold partial
+//! results in ring-arrival order, not rank order. Non-commutative users
+//! should force `Tree` / `Linear`.
+
+use crate::error::{MpiError, Result};
+use crate::info::Info;
+use std::sync::atomic::{AtomicU8, Ordering::Relaxed};
+
+/// Payload bytes at which auto allreduce switches from binomial tree
+/// (latency-bound) to ring reduce_scatter+allgather (bandwidth-bound).
+pub const ALLREDUCE_RING_MIN_BYTES: usize = 8 * 1024;
+
+/// Payload bytes at which auto bcast switches from binomial tree to the
+/// pipelined chain.
+pub const BCAST_CHAIN_MIN_BYTES: usize = 32 * 1024;
+
+/// Pipelining granularity of the chain bcast.
+pub const BCAST_CHAIN_CHUNK_BYTES: usize = 8 * 1024;
+
+/// Total send-buffer bytes at which auto reduce_scatter switches from
+/// the reduce+scatter composition to pairwise exchange.
+pub const REDUCE_SCATTER_PAIRWISE_MIN_BYTES: usize = 4 * 1024;
+
+/// Total recv-buffer bytes up to which auto allgather prefers recursive
+/// doubling (log₂ n rounds) on power-of-two sizes; above it, ring.
+pub const ALLGATHER_RECDBL_MAX_BYTES: usize = 16 * 1024;
+
+/// The collective operations with more than one schedule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CollOp {
+    Allreduce,
+    Bcast,
+    ReduceScatter,
+    Allgather,
+}
+
+impl CollOp {
+    pub const ALL: [CollOp; 4] = [
+        CollOp::Allreduce,
+        CollOp::Bcast,
+        CollOp::ReduceScatter,
+        CollOp::Allgather,
+    ];
+
+    fn idx(self) -> usize {
+        match self {
+            CollOp::Allreduce => 0,
+            CollOp::Bcast => 1,
+            CollOp::ReduceScatter => 2,
+            CollOp::Allgather => 3,
+        }
+    }
+
+    /// Environment variable consulted at communicator creation.
+    pub fn env_key(self) -> &'static str {
+        match self {
+            CollOp::Allreduce => "MPIX_COLL_ALLREDUCE",
+            CollOp::Bcast => "MPIX_COLL_BCAST",
+            CollOp::ReduceScatter => "MPIX_COLL_REDUCE_SCATTER",
+            CollOp::Allgather => "MPIX_COLL_ALLGATHER",
+        }
+    }
+
+    /// Info key accepted by [`crate::Comm::apply_coll_info`].
+    pub fn info_key(self) -> &'static str {
+        match self {
+            CollOp::Allreduce => "mpix_coll_allreduce",
+            CollOp::Bcast => "mpix_coll_bcast",
+            CollOp::ReduceScatter => "mpix_coll_reduce_scatter",
+            CollOp::Allgather => "mpix_coll_allgather",
+        }
+    }
+
+    /// Which algorithms implement this op.
+    pub fn accepts(self, algo: CollAlgo) -> bool {
+        use CollAlgo::*;
+        match self {
+            CollOp::Allreduce => matches!(algo, Auto | Tree | Ring),
+            CollOp::Bcast => matches!(algo, Auto | Tree | Chain),
+            CollOp::ReduceScatter => matches!(algo, Auto | Linear | Pairwise),
+            CollOp::Allgather => matches!(algo, Auto | Ring | RecDbl),
+        }
+    }
+}
+
+/// A collective schedule. Which variants apply depends on the op — see
+/// [`CollOp::accepts`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CollAlgo {
+    /// Let the size/count heuristic decide per call.
+    #[default]
+    Auto,
+    /// Binomial tree (bcast; allreduce as reduce-to-0 + bcast).
+    Tree,
+    /// Ring schedule (allgather; allreduce as reduce_scatter + allgather).
+    Ring,
+    /// Pipelined chain (bcast), chunked at [`BCAST_CHAIN_CHUNK_BYTES`].
+    Chain,
+    /// Pairwise exchange (reduce_scatter) — the ablation variant.
+    Pairwise,
+    /// Recursive doubling (allgather); power-of-two sizes only, silently
+    /// falls back to ring otherwise.
+    RecDbl,
+    /// Reference composition (reduce_scatter as reduce + scatter).
+    Linear,
+}
+
+impl CollAlgo {
+    /// Parse a user-supplied name (env value or info value).
+    pub fn parse(s: &str) -> Option<CollAlgo> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Some(CollAlgo::Auto),
+            "tree" | "binomial" => Some(CollAlgo::Tree),
+            "ring" => Some(CollAlgo::Ring),
+            "chain" | "pipeline" => Some(CollAlgo::Chain),
+            "pairwise" => Some(CollAlgo::Pairwise),
+            "recdbl" | "recursive_doubling" | "recursive-doubling" => Some(CollAlgo::RecDbl),
+            "linear" => Some(CollAlgo::Linear),
+            _ => None,
+        }
+    }
+
+    fn code(self) -> u8 {
+        match self {
+            CollAlgo::Auto => 0,
+            CollAlgo::Tree => 1,
+            CollAlgo::Ring => 2,
+            CollAlgo::Chain => 3,
+            CollAlgo::Pairwise => 4,
+            CollAlgo::RecDbl => 5,
+            CollAlgo::Linear => 6,
+        }
+    }
+
+    fn from_code(c: u8) -> CollAlgo {
+        match c {
+            1 => CollAlgo::Tree,
+            2 => CollAlgo::Ring,
+            3 => CollAlgo::Chain,
+            4 => CollAlgo::Pairwise,
+            5 => CollAlgo::RecDbl,
+            6 => CollAlgo::Linear,
+            _ => CollAlgo::Auto,
+        }
+    }
+}
+
+/// Per-communicator algorithm overrides. One slot per [`CollOp`];
+/// `Auto` (the default) defers to the heuristic. Lock-free: collectives
+/// read the slots on every dispatch.
+///
+/// Overrides must be applied symmetrically on every rank (like any MPI
+/// info key that changes a collective's schedule): the algorithms are
+/// SPMD and all ranks must run the same one. The env-var path satisfies
+/// this by construction; `apply_coll_info` is the caller's obligation.
+pub struct CollSelector {
+    slots: [AtomicU8; 4],
+}
+
+impl CollSelector {
+    /// All-auto selector.
+    pub fn new() -> CollSelector {
+        CollSelector {
+            slots: std::array::from_fn(|_| AtomicU8::new(0)),
+        }
+    }
+
+    /// Snapshot of `parent`'s slots: child communicators (dup/split,
+    /// stream comms, threadcomms) inherit the parent's overrides, the
+    /// way MPI info hints propagate through `MPI_Comm_dup`.
+    pub fn inherited(parent: &CollSelector) -> CollSelector {
+        let sel = CollSelector::new();
+        for (dst, src) in sel.slots.iter().zip(parent.slots.iter()) {
+            dst.store(src.load(Relaxed), Relaxed);
+        }
+        sel
+    }
+
+    /// Read `MPIX_COLL_<OP>` overrides from the environment (done once
+    /// per top-level communicator creation; children inherit instead).
+    /// Unknown or inapplicable values are ignored — an env var cannot
+    /// fail comm creation.
+    pub fn from_env() -> CollSelector {
+        let sel = CollSelector::new();
+        for op in CollOp::ALL {
+            if let Ok(v) = std::env::var(op.env_key()) {
+                if let Some(algo) = CollAlgo::parse(&v) {
+                    if op.accepts(algo) {
+                        sel.slots[op.idx()].store(algo.code(), Relaxed);
+                    }
+                }
+            }
+        }
+        sel
+    }
+
+    /// Force `op` onto `algo` (`Auto` restores the heuristic).
+    pub fn force(&self, op: CollOp, algo: CollAlgo) -> Result<()> {
+        check(op, algo)?;
+        self.slots[op.idx()].store(algo.code(), Relaxed);
+        Ok(())
+    }
+
+    /// Apply `mpix_coll_<op>` info keys. Unlike the env path this is an
+    /// explicit API call, so unknown values are errors — and the apply
+    /// is transactional: every key is validated before any slot is
+    /// stored, so an `Err` leaves the selector untouched.
+    pub fn apply_info(&self, info: &Info) -> Result<()> {
+        let mut updates: [Option<CollAlgo>; 4] = [None; 4];
+        for op in CollOp::ALL {
+            if let Some(v) = info.get(op.info_key()) {
+                let algo = CollAlgo::parse(v).ok_or_else(|| {
+                    MpiError::InvalidArg(format!("unknown {} algorithm {v:?}", op.info_key()))
+                })?;
+                check(op, algo)?;
+                updates[op.idx()] = Some(algo);
+            }
+        }
+        for op in CollOp::ALL {
+            if let Some(algo) = updates[op.idx()] {
+                self.slots[op.idx()].store(algo.code(), Relaxed);
+            }
+        }
+        Ok(())
+    }
+
+    /// The forced algorithm for `op`, or `Auto`.
+    pub fn forced(&self, op: CollOp) -> CollAlgo {
+        CollAlgo::from_code(self.slots[op.idx()].load(Relaxed))
+    }
+
+    /// Resolve the algorithm for one call: the forced override if any,
+    /// else the heuristic on payload `bytes` and communicator size
+    /// `ranks`. Deterministic in (op, bytes, ranks), so every rank of a
+    /// collective resolves identically.
+    pub fn choose(&self, op: CollOp, bytes: usize, ranks: usize) -> CollAlgo {
+        match self.forced(op) {
+            CollAlgo::Auto => heuristic(op, bytes, ranks),
+            forced => forced,
+        }
+    }
+}
+
+impl Default for CollSelector {
+    fn default() -> Self {
+        CollSelector::new()
+    }
+}
+
+/// `algo` must be one of `op`'s schedules (or `Auto`).
+fn check(op: CollOp, algo: CollAlgo) -> Result<()> {
+    if op.accepts(algo) {
+        Ok(())
+    } else {
+        Err(MpiError::InvalidArg(format!("{algo:?} does not implement {op:?}")))
+    }
+}
+
+/// The auto heuristic (see the crossover constants above). Small
+/// payloads take the latency-optimal log₂ n schedules; large payloads
+/// take the bandwidth-optimal ring/pairwise schedules.
+fn heuristic(op: CollOp, bytes: usize, ranks: usize) -> CollAlgo {
+    match op {
+        CollOp::Allreduce => {
+            if ranks > 2 && bytes >= ALLREDUCE_RING_MIN_BYTES {
+                CollAlgo::Ring
+            } else {
+                CollAlgo::Tree
+            }
+        }
+        CollOp::Bcast => {
+            if ranks > 2 && bytes >= BCAST_CHAIN_MIN_BYTES {
+                CollAlgo::Chain
+            } else {
+                CollAlgo::Tree
+            }
+        }
+        CollOp::ReduceScatter => {
+            if ranks > 2 && bytes >= REDUCE_SCATTER_PAIRWISE_MIN_BYTES {
+                CollAlgo::Pairwise
+            } else {
+                CollAlgo::Linear
+            }
+        }
+        CollOp::Allgather => {
+            if ranks.is_power_of_two() && bytes <= ALLGATHER_RECDBL_MAX_BYTES {
+                CollAlgo::RecDbl
+            } else {
+                CollAlgo::Ring
+            }
+        }
+    }
+}

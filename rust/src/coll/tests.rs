@@ -1,0 +1,387 @@
+use super::*;
+use crate::universe::Universe;
+
+// ------------------------------------------------------------- schedules
+
+#[test]
+fn barrier_all_ranks() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    let before = AtomicUsize::new(0);
+    Universe::run(Universe::with_ranks(4), |world| {
+        before.fetch_add(1, Ordering::SeqCst);
+        barrier(&world).unwrap();
+        // After the barrier, every rank must have arrived.
+        assert_eq!(before.load(Ordering::SeqCst), 4);
+    });
+}
+
+#[test]
+fn barrier_nonpow2_sizes() {
+    // Regression for the partner-index precedence accident:
+    // `(me + n - k % n) % n` parsed as `k % n`, which only happened to
+    // be correct because the dissemination loop keeps k < n. The
+    // partner must be `(me + n - k) % n` at every round, exercised
+    // here over non-power-of-two comm sizes.
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    for &n in &[3usize, 5, 7] {
+        let arrived = AtomicUsize::new(0);
+        let departed = AtomicUsize::new(0);
+        Universe::run(Universe::with_ranks(n), |world| {
+            for round in 0..3 {
+                arrived.fetch_add(1, Ordering::SeqCst);
+                barrier(&world).unwrap();
+                // Every rank must have arrived at this round's barrier
+                // before any rank passes it.
+                assert!(
+                    arrived.load(Ordering::SeqCst) >= (round + 1) * n,
+                    "size {n} round {round}: barrier released early"
+                );
+                departed.fetch_add(1, Ordering::SeqCst);
+                barrier(&world).unwrap();
+            }
+        });
+        assert_eq!(arrived.into_inner(), 3 * n);
+        assert_eq!(departed.into_inner(), 3 * n);
+    }
+}
+
+#[test]
+fn bcast_from_each_root() {
+    Universe::run(Universe::with_ranks(4), |world| {
+        for root in 0..4 {
+            let mut v = if world.rank() == root {
+                [root as u64 * 11 + 3; 8]
+            } else {
+                [0u64; 8]
+            };
+            bcast_t(&world, &mut v, root).unwrap();
+            assert_eq!(v, [root as u64 * 11 + 3; 8]);
+        }
+    });
+}
+
+#[test]
+fn allreduce_sum() {
+    Universe::run(Universe::with_ranks(4), |world| {
+        let mut v = vec![world.rank() as f64 + 1.0; 16];
+        allreduce_t(&world, &mut v, |a, b| *a += *b).unwrap();
+        // 1+2+3+4 = 10
+        assert!(v.iter().all(|&x| (x - 10.0).abs() < 1e-12));
+    });
+}
+
+#[test]
+fn allreduce_max_nonpow2() {
+    Universe::run(Universe::with_ranks(3), |world| {
+        let mut v = [world.rank() as i64 * 7];
+        allreduce_t(&world, &mut v, |a, b| *a = (*a).max(*b)).unwrap();
+        assert_eq!(v[0], 14);
+    });
+}
+
+#[test]
+fn allgather_ring() {
+    Universe::run(Universe::with_ranks(4), |world| {
+        let send = [world.rank() as u32, world.rank() as u32 * 100];
+        let mut recv = [0u32; 8];
+        allgather_t(&world, &send, &mut recv).unwrap();
+        assert_eq!(recv, [0, 0, 1, 100, 2, 200, 3, 300]);
+    });
+}
+
+#[test]
+fn gather_scatter_roundtrip() {
+    Universe::run(Universe::with_ranks(4), |world| {
+        let send = [world.rank() as i32; 3];
+        if world.rank() == 2 {
+            let mut all = [0i32; 12];
+            gather_t(&world, &send, Some(&mut all), 2).unwrap();
+            assert_eq!(all, [0, 0, 0, 1, 1, 1, 2, 2, 2, 3, 3, 3]);
+            let mut back = [0i32; 3];
+            scatter_t(&world, Some(&all), &mut back, 2).unwrap();
+            assert_eq!(back, [2, 2, 2]);
+        } else {
+            gather_t::<_, i32>(&world, &send, None, 2).unwrap();
+            let mut back = [0i32; 3];
+            scatter_t(&world, None, &mut back, 2).unwrap();
+            assert_eq!(back, [world.rank() as i32; 3]);
+        }
+    });
+}
+
+#[test]
+fn alltoall_pairwise() {
+    Universe::run(Universe::with_ranks(4), |world| {
+        let me = world.rank() as u32;
+        // send[j] = me * 10 + j
+        let send: Vec<u32> = (0..4).map(|j| me * 10 + j).collect();
+        let mut recv = vec![0u32; 4];
+        alltoall_t(&world, &send, &mut recv).unwrap();
+        // recv[j] = j * 10 + me
+        let want: Vec<u32> = (0..4).map(|j| j * 10 + me).collect();
+        assert_eq!(recv, want);
+    });
+}
+
+#[test]
+fn concurrent_collectives_on_dup_comms() {
+    // Collectives on different comms (dup'd contexts) must not cross.
+    Universe::run(Universe::with_ranks(3), |world| {
+        let a = world.dup();
+        let b = world.dup();
+        let mut va = [world.rank() as u64];
+        let mut vb = [world.rank() as u64 * 1000];
+        allreduce_t(&a, &mut va, |x, y| *x += *y).unwrap();
+        allreduce_t(&b, &mut vb, |x, y| *x += *y).unwrap();
+        assert_eq!(va[0], 3);
+        assert_eq!(vb[0], 3000);
+    });
+}
+
+// ---------------------------------------------------- selection framework
+
+#[test]
+fn algo_names_parse() {
+    assert_eq!(CollAlgo::parse("ring"), Some(CollAlgo::Ring));
+    assert_eq!(CollAlgo::parse("Tree"), Some(CollAlgo::Tree));
+    assert_eq!(CollAlgo::parse("binomial"), Some(CollAlgo::Tree));
+    assert_eq!(CollAlgo::parse(" chain "), Some(CollAlgo::Chain));
+    assert_eq!(CollAlgo::parse("pipeline"), Some(CollAlgo::Chain));
+    assert_eq!(CollAlgo::parse("pairwise"), Some(CollAlgo::Pairwise));
+    assert_eq!(CollAlgo::parse("recdbl"), Some(CollAlgo::RecDbl));
+    assert_eq!(CollAlgo::parse("recursive_doubling"), Some(CollAlgo::RecDbl));
+    assert_eq!(CollAlgo::parse("linear"), Some(CollAlgo::Linear));
+    assert_eq!(CollAlgo::parse("auto"), Some(CollAlgo::Auto));
+    assert_eq!(CollAlgo::parse("bogus"), None);
+}
+
+#[test]
+fn selector_forces_and_rejects() {
+    let sel = CollSelector::new();
+    assert_eq!(sel.forced(CollOp::Allreduce), CollAlgo::Auto);
+    sel.force(CollOp::Allreduce, CollAlgo::Ring).unwrap();
+    assert_eq!(sel.forced(CollOp::Allreduce), CollAlgo::Ring);
+    // A forced algorithm wins at any size.
+    assert_eq!(sel.choose(CollOp::Allreduce, 8, 4), CollAlgo::Ring);
+    sel.force(CollOp::Allreduce, CollAlgo::Auto).unwrap();
+    assert_eq!(sel.choose(CollOp::Allreduce, 8, 4), CollAlgo::Tree);
+    // Chain is a bcast schedule, not an allreduce one.
+    assert!(sel.force(CollOp::Allreduce, CollAlgo::Chain).is_err());
+}
+
+#[test]
+fn heuristic_crossovers() {
+    let sel = CollSelector::new();
+    let ar = select::ALLREDUCE_RING_MIN_BYTES;
+    assert_eq!(sel.choose(CollOp::Allreduce, ar - 1, 4), CollAlgo::Tree);
+    assert_eq!(sel.choose(CollOp::Allreduce, ar, 4), CollAlgo::Ring);
+    // Two ranks: ring degenerates, tree always wins.
+    assert_eq!(sel.choose(CollOp::Allreduce, ar * 4, 2), CollAlgo::Tree);
+    let bc = select::BCAST_CHAIN_MIN_BYTES;
+    assert_eq!(sel.choose(CollOp::Bcast, bc - 1, 8), CollAlgo::Tree);
+    assert_eq!(sel.choose(CollOp::Bcast, bc, 8), CollAlgo::Chain);
+    let ag = select::ALLGATHER_RECDBL_MAX_BYTES;
+    assert_eq!(sel.choose(CollOp::Allgather, ag, 4), CollAlgo::RecDbl);
+    assert_eq!(sel.choose(CollOp::Allgather, ag + 1, 4), CollAlgo::Ring);
+    // Recursive doubling never auto-selected off powers of two.
+    assert_eq!(sel.choose(CollOp::Allgather, 64, 6), CollAlgo::Ring);
+}
+
+#[test]
+fn info_override_rejects_unknown_algo() {
+    let sel = CollSelector::new();
+    let mut info = crate::info::Info::new();
+    info.set("mpix_coll_bcast", "chain");
+    sel.apply_info(&info).unwrap();
+    assert_eq!(sel.forced(CollOp::Bcast), CollAlgo::Chain);
+    info.set("mpix_coll_allgather", "nonsense");
+    assert!(sel.apply_info(&info).is_err());
+    // Valid algo name, wrong op.
+    info.set("mpix_coll_allgather", "pairwise");
+    assert!(sel.apply_info(&info).is_err());
+}
+
+#[test]
+fn info_apply_is_transactional() {
+    // A failed apply must leave every slot untouched, even ones named by
+    // valid keys in the same info object.
+    let sel = CollSelector::new();
+    let mut info = crate::info::Info::new();
+    info.set("mpix_coll_allreduce", "ring");
+    info.set("mpix_coll_allgather", "bogus");
+    assert!(sel.apply_info(&info).is_err());
+    assert_eq!(sel.forced(CollOp::Allreduce), CollAlgo::Auto);
+}
+
+#[test]
+fn forced_path_is_observable_in_metrics() {
+    // The selector's choice must be visible in the per-algorithm
+    // dispatch counters, not just in the answer.
+    Universe::run(Universe::with_ranks(4), |world| {
+        // Metrics are fabric-global, so each rank's window (m0..final
+        // snapshot) is fenced with barriers: its own dispatch is always
+        // inside the window, other ranks' may race in — assert ≥ 1 for
+        // the forced path and == 0 for the other.
+        let mut info = crate::info::Info::new();
+        info.set("mpix_coll_allreduce", "ring");
+        world.apply_coll_info(&info).unwrap();
+        barrier(&world).unwrap();
+        let m0 = world.fabric().metrics.snapshot();
+        let mut v = [world.rank() as u64 + 1];
+        allreduce_t(&world, &mut v, |a, b| *a += *b).unwrap();
+        assert_eq!(v[0], 10);
+        barrier(&world).unwrap();
+        let d = world.fabric().metrics.snapshot().since(&m0);
+        assert!(d.coll_allreduce_ring >= 1, "ring dispatch not observed");
+        assert_eq!(d.coll_allreduce_tree, 0);
+
+        info.set("mpix_coll_allreduce", "tree");
+        world.apply_coll_info(&info).unwrap();
+        barrier(&world).unwrap();
+        let m1 = world.fabric().metrics.snapshot();
+        allreduce_t(&world, &mut v, |a, b| *a += *b).unwrap();
+        barrier(&world).unwrap();
+        let d = world.fabric().metrics.snapshot().since(&m1);
+        assert!(d.coll_allreduce_tree >= 1, "tree dispatch not observed");
+        assert_eq!(d.coll_allreduce_ring, 0);
+    });
+}
+
+#[test]
+fn children_inherit_forced_algo() {
+    // Info-applied overrides propagate through comm creation like MPI
+    // info hints through MPI_Comm_dup — a non-commutative user who
+    // forced `tree` must not silently get the ring schedule back on a
+    // dup'd or split comm.
+    Universe::run(Universe::with_ranks(2), |world| {
+        let mut info = crate::info::Info::new();
+        info.set("mpix_coll_allreduce", "ring");
+        world.apply_coll_info(&info).unwrap();
+        let dup = world.dup();
+        assert_eq!(dup.coll_selector().forced(CollOp::Allreduce), CollAlgo::Ring);
+        let split = world.split(0, 0).unwrap();
+        assert_eq!(split.coll_selector().forced(CollOp::Allreduce), CollAlgo::Ring);
+        // The child's selector is a snapshot, not a live alias.
+        info.set("mpix_coll_allreduce", "tree");
+        world.apply_coll_info(&info).unwrap();
+        assert_eq!(dup.coll_selector().forced(CollOp::Allreduce), CollAlgo::Ring);
+    });
+}
+
+// --------------------------------------------- cross-algorithm agreement
+
+/// Every allreduce schedule must produce the reference result at comm
+/// sizes 2–8 (incl. non-powers-of-two) and counts that exercise uneven
+/// and empty ring segments.
+#[test]
+fn allreduce_algorithms_agree() {
+    for n in 2..=8usize {
+        for &count in &[1usize, 5, 13] {
+            Universe::run(Universe::with_ranks(n), |world| {
+                let me = world.rank() as u64;
+                let init: Vec<u64> = (0..count as u64).map(|i| me * 1000 + i + 1).collect();
+                let want: Vec<u64> = (0..count as u64)
+                    .map(|i| (0..n as u64).map(|r| r * 1000 + i + 1).sum())
+                    .collect();
+                let mut tree = init.clone();
+                allreduce_tree_t(&world, &mut tree, |a, b| *a += *b).unwrap();
+                assert_eq!(tree, want, "tree n={n} count={count}");
+                let mut ring = init.clone();
+                allreduce_ring_t(&world, &mut ring, |a, b| *a += *b).unwrap();
+                assert_eq!(ring, want, "ring n={n} count={count}");
+            });
+        }
+    }
+}
+
+/// Every bcast schedule must agree at comm sizes 2–8, from both end
+/// roots, for single-chunk and multi-chunk (pipelined) payloads.
+#[test]
+fn bcast_algorithms_agree() {
+    for n in 2..=8usize {
+        Universe::run(Universe::with_ranks(n), |world| {
+            for root in [0, n - 1] {
+                for &len in &[3usize, 20_000] {
+                    let fill = |i: usize| ((i * 7 + root * 13 + len) % 251) as u8;
+                    let want: Vec<u8> = (0..len).map(fill).collect();
+                    for algo in ["binomial", "chain"] {
+                        let mut buf = if world.rank() == root {
+                            want.clone()
+                        } else {
+                            vec![0u8; len]
+                        };
+                        match algo {
+                            "binomial" => bcast_binomial(&world, &mut buf, root).unwrap(),
+                            _ => bcast_chain(&world, &mut buf, root).unwrap(),
+                        }
+                        assert_eq!(buf, want, "{algo} n={n} root={root} len={len}");
+                    }
+                }
+            }
+        });
+    }
+}
+
+/// Every allgather schedule must agree at comm sizes 2–8 (recursive
+/// doubling delegates to ring off powers of two).
+#[test]
+fn allgather_algorithms_agree() {
+    for n in 2..=8usize {
+        Universe::run(Universe::with_ranks(n), |world| {
+            let me = world.rank() as u32;
+            let send = [me * 10 + 1, me * 10 + 2, me * 10 + 3];
+            let want: Vec<u32> = (0..n as u32)
+                .flat_map(|r| [r * 10 + 1, r * 10 + 2, r * 10 + 3])
+                .collect();
+            let mut ring = vec![0u32; 3 * n];
+            allgather_ring_t(&world, &send, &mut ring).unwrap();
+            assert_eq!(ring, want, "ring n={n}");
+            let mut recdbl = vec![0u32; 3 * n];
+            allgather_recdbl_t(&world, &send, &mut recdbl).unwrap();
+            assert_eq!(recdbl, want, "recdbl n={n}");
+        });
+    }
+}
+
+/// Every reduce_scatter schedule must agree at comm sizes 2–8.
+#[test]
+fn reduce_scatter_algorithms_agree() {
+    const BLK: usize = 3;
+    for n in 2..=8usize {
+        Universe::run(Universe::with_ranks(n), |world| {
+            let me = world.rank() as u64;
+            let send: Vec<u64> = (0..n * BLK)
+                .map(|i| me * 100 + (i / BLK) as u64 * 10 + (i % BLK) as u64)
+                .collect();
+            let j = world.rank() as u64;
+            let want: Vec<u64> = (0..BLK as u64)
+                .map(|k| (0..n as u64).map(|r| r * 100 + j * 10 + k).sum())
+                .collect();
+            let mut linear = vec![0u64; BLK];
+            reduce_scatter_block_linear_t(&world, &send, &mut linear, |a, b| *a += *b).unwrap();
+            assert_eq!(linear, want, "linear n={n}");
+            let mut pairwise = vec![0u64; BLK];
+            reduce_scatter_block_pairwise_t(&world, &send, &mut pairwise, |a, b| *a += *b).unwrap();
+            assert_eq!(pairwise, want, "pairwise n={n}");
+        });
+    }
+}
+
+/// Size mismatches are MPI-style errors, not panics (error-discipline
+/// regression for `reduce_scatter_block_t`).
+#[test]
+fn reduce_scatter_size_mismatch_is_error() {
+    Universe::run(Universe::with_ranks(2), |world| {
+        let send = [1u64; 3]; // want 2 * recv.len() = 4
+        let mut recv = [0u64; 2];
+        let err = reduce_scatter_block_t(&world, &send, &mut recv, |a, b| *a += *b).unwrap_err();
+        assert!(matches!(err, crate::error::MpiError::SizeMismatch(_)), "{err}");
+        // Both variants enforce the same discipline when called directly.
+        assert!(reduce_scatter_block_linear_t(&world, &send, &mut recv, |a, b| *a += *b).is_err());
+        assert!(
+            reduce_scatter_block_pairwise_t(&world, &send, &mut recv, |a, b| *a += *b).is_err()
+        );
+        // The comm survives the error.
+        barrier(&world).unwrap();
+    });
+}

@@ -12,10 +12,12 @@
 //!   (`MPIX_Stream_comm_create_multiplex`); sends/recvs name source and
 //!   destination stream indices.
 
+use crate::coll::CollSelector;
 use crate::error::{MpiError, Result};
 use crate::fabric::{
     Envelope, Fabric, Header, Payload, RecvPtr, SendPtr, INLINE_MAX,
 };
+use crate::info::Info;
 use crate::matching::{MatchAction, PostedRecv};
 use crate::metrics::Metrics;
 use crate::progress::{self, with_ep};
@@ -56,6 +58,9 @@ pub(crate) struct CommInner {
     pub coll_seq: AtomicU32,
     /// Ordinal of window creations.
     pub win_seq: AtomicU32,
+    /// Collective algorithm selection: `MPIX_COLL_*` env overrides read
+    /// at creation, `mpix_coll_*` info keys via [`Comm::apply_coll_info`].
+    pub coll_sel: CollSelector,
 }
 
 /// An MPI communicator handle (cheap to clone; clones share collective
@@ -72,6 +77,19 @@ impl Comm {
         rank: u32,
         group: Arc<Vec<u32>>,
     ) -> Comm {
+        Comm::new_proc_with_sel(fabric, ctx, rank, group, CollSelector::from_env())
+    }
+
+    /// `new_proc` with an explicit selector: child communicators pass an
+    /// inherited copy of the parent's, so info-applied overrides survive
+    /// dup/split the way MPI info hints propagate through comm creation.
+    pub(crate) fn new_proc_with_sel(
+        fabric: Arc<Fabric>,
+        ctx: u32,
+        rank: u32,
+        group: Arc<Vec<u32>>,
+        coll_sel: CollSelector,
+    ) -> Comm {
         let size = group.len();
         Comm {
             inner: Arc::new(CommInner {
@@ -84,6 +102,7 @@ impl Comm {
                 child_seq: AtomicU32::new(0),
                 coll_seq: AtomicU32::new(0),
                 win_seq: AtomicU32::new(0),
+                coll_sel,
             }),
         }
     }
@@ -451,15 +470,17 @@ impl Comm {
 
     // -------------------------------------------------- comm management
 
-    /// `MPI_Comm_dup`: same group, fresh context. Collective.
+    /// `MPI_Comm_dup`: same group, fresh context, inherited collective
+    /// selector. Collective.
     pub fn dup(&self) -> Comm {
         let seq = self.inner.child_seq.fetch_add(1, Ordering::Relaxed);
         let ctx = self.inner.fabric.agree_ctx(self.inner.ctx, seq * 2);
-        Comm::new_proc(
+        Comm::new_proc_with_sel(
             Arc::clone(&self.inner.fabric),
             ctx,
             self.inner.rank,
             Arc::clone(&self.inner.group),
+            CollSelector::inherited(&self.inner.coll_sel),
         )
     }
 
@@ -486,11 +507,12 @@ impl Comm {
             .iter()
             .position(|&(_, r)| r == self.rank())
             .ok_or_else(|| MpiError::Internal("split: caller not in own color".into()))?;
-        Ok(Comm::new_proc(
+        Ok(Comm::new_proc_with_sel(
             Arc::clone(&self.inner.fabric),
             ctx,
             my_new_rank as u32,
             Arc::new(group),
+            CollSelector::inherited(&self.inner.coll_sel),
         ))
     }
 
@@ -532,6 +554,22 @@ impl Comm {
     pub fn is_threadcomm(&self) -> bool {
         false
     }
+
+    /// Apply `mpix_coll_<op>` info keys (e.g. `mpix_coll_allreduce =
+    /// "ring"`) to this communicator's collective-algorithm selector —
+    /// the info-key analogue of the `MPIX_COLL_<OP>` env overrides. Must
+    /// be called symmetrically on every rank, like the MPI info keys it
+    /// mirrors. Affects every handle cloned from this comm, and child
+    /// comms created afterwards (dup/split/stream comms/threadcomms)
+    /// inherit the overrides at creation.
+    pub fn apply_coll_info(&self, info: &Info) -> Result<()> {
+        self.inner.coll_sel.apply_info(info)
+    }
+
+    /// This communicator's collective-algorithm selector.
+    pub fn coll_selector(&self) -> &CollSelector {
+        &self.inner.coll_sel
+    }
 }
 
 // ------------------------------------------------------------ collectives
@@ -569,6 +607,14 @@ impl crate::coll::CommLike for Comm {
     fn next_coll_tag(&self) -> i32 {
         // Room for up to 64 rounds per operation.
         (self.next_coll_seq() as i32) << 6
+    }
+
+    fn selector(&self) -> &CollSelector {
+        &self.inner.coll_sel
+    }
+
+    fn metrics(&self) -> &Metrics {
+        &self.inner.fabric.metrics
     }
 }
 

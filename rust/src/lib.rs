@@ -31,6 +31,13 @@
 //! | Substrate: SPSC ring, chunk pool, counters | [`util::spsc`], [`util::pool`], [`metrics`] |
 //! | Kernel runtime: PJRT client for AOT artifacts | [`runtime`] |
 //!
+//! Collectives are *selectable schedules* ([`coll::select`]): each
+//! multi-algorithm op (allreduce, bcast, reduce_scatter, allgather)
+//! dispatches through a per-communicator [`coll::CollSelector`] driven
+//! by `MPIX_COLL_<OP>` env overrides, `mpix_coll_<op>` info keys, or a
+//! size heuristic, with per-algorithm dispatch counters in
+//! [`metrics::Metrics`].
+//!
 //! # Hot path
 //!
 //! The per-message path is engineered allocation-free in steady state:

@@ -36,6 +36,22 @@ pub struct Metrics {
     pub offload_ops: AtomicU64,
     /// Requests allocated (the threadcomm small-message shortcut skips this).
     pub requests_alloc: AtomicU64,
+    /// Allreduce dispatches to the binomial-tree schedule.
+    pub coll_allreduce_tree: AtomicU64,
+    /// Allreduce dispatches to the ring schedule.
+    pub coll_allreduce_ring: AtomicU64,
+    /// Bcast dispatches to the binomial-tree schedule.
+    pub coll_bcast_binomial: AtomicU64,
+    /// Bcast dispatches to the pipelined-chain schedule.
+    pub coll_bcast_chain: AtomicU64,
+    /// Reduce_scatter dispatches to the reduce+scatter composition.
+    pub coll_reduce_scatter_linear: AtomicU64,
+    /// Reduce_scatter dispatches to pairwise exchange.
+    pub coll_reduce_scatter_pairwise: AtomicU64,
+    /// Allgather dispatches to the ring schedule.
+    pub coll_allgather_ring: AtomicU64,
+    /// Allgather dispatches to recursive doubling.
+    pub coll_allgather_recdbl: AtomicU64,
 }
 
 impl Metrics {
@@ -66,6 +82,14 @@ impl Metrics {
             rma_serviced: self.rma_serviced.load(Relaxed),
             offload_ops: self.offload_ops.load(Relaxed),
             requests_alloc: self.requests_alloc.load(Relaxed),
+            coll_allreduce_tree: self.coll_allreduce_tree.load(Relaxed),
+            coll_allreduce_ring: self.coll_allreduce_ring.load(Relaxed),
+            coll_bcast_binomial: self.coll_bcast_binomial.load(Relaxed),
+            coll_bcast_chain: self.coll_bcast_chain.load(Relaxed),
+            coll_reduce_scatter_linear: self.coll_reduce_scatter_linear.load(Relaxed),
+            coll_reduce_scatter_pairwise: self.coll_reduce_scatter_pairwise.load(Relaxed),
+            coll_allgather_ring: self.coll_allgather_ring.load(Relaxed),
+            coll_allgather_recdbl: self.coll_allgather_recdbl.load(Relaxed),
         }
     }
 }
@@ -91,6 +115,16 @@ pub struct MetricsSnapshot {
     pub rma_serviced: u64,
     pub offload_ops: u64,
     pub requests_alloc: u64,
+    /// Per-algorithm collective dispatch tallies (see `coll::select`):
+    /// which schedule each multi-algorithm collective actually ran.
+    pub coll_allreduce_tree: u64,
+    pub coll_allreduce_ring: u64,
+    pub coll_bcast_binomial: u64,
+    pub coll_bcast_chain: u64,
+    pub coll_reduce_scatter_linear: u64,
+    pub coll_reduce_scatter_pairwise: u64,
+    pub coll_allgather_ring: u64,
+    pub coll_allgather_recdbl: u64,
 }
 
 impl MetricsSnapshot {
@@ -112,6 +146,16 @@ impl MetricsSnapshot {
             rma_serviced: self.rma_serviced - earlier.rma_serviced,
             offload_ops: self.offload_ops - earlier.offload_ops,
             requests_alloc: self.requests_alloc - earlier.requests_alloc,
+            coll_allreduce_tree: self.coll_allreduce_tree - earlier.coll_allreduce_tree,
+            coll_allreduce_ring: self.coll_allreduce_ring - earlier.coll_allreduce_ring,
+            coll_bcast_binomial: self.coll_bcast_binomial - earlier.coll_bcast_binomial,
+            coll_bcast_chain: self.coll_bcast_chain - earlier.coll_bcast_chain,
+            coll_reduce_scatter_linear: self.coll_reduce_scatter_linear
+                - earlier.coll_reduce_scatter_linear,
+            coll_reduce_scatter_pairwise: self.coll_reduce_scatter_pairwise
+                - earlier.coll_reduce_scatter_pairwise,
+            coll_allgather_ring: self.coll_allgather_ring - earlier.coll_allgather_ring,
+            coll_allgather_recdbl: self.coll_allgather_recdbl - earlier.coll_allgather_recdbl,
         }
     }
 }

@@ -129,6 +129,7 @@ pub fn stream_comm_create(comm: &Comm, stream: Option<&Stream>) -> Result<Comm> 
             child_seq: AtomicU32::new(0),
             coll_seq: AtomicU32::new(0),
             win_seq: AtomicU32::new(0),
+            coll_sel: crate::coll::CollSelector::inherited(&comm.inner.coll_sel),
         }),
     })
 }
@@ -179,6 +180,7 @@ pub fn stream_comm_create_multiplex(comm: &Comm, streams: &[Stream]) -> Result<C
             child_seq: AtomicU32::new(0),
             coll_seq: AtomicU32::new(0),
             win_seq: AtomicU32::new(0),
+            coll_sel: crate::coll::CollSelector::inherited(&comm.inner.coll_sel),
         }),
     })
 }

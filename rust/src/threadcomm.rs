@@ -18,6 +18,7 @@
 //! engine, so inter-process behavior (two-copy eager/rendezvous) is
 //! unchanged.
 
+use crate::coll::CollSelector;
 use crate::comm::Comm;
 use crate::error::{MpiError, Result};
 use crate::fabric::{Envelope, Fabric, Header, Payload, RecvPtr, SendPtr, INLINE_MAX};
@@ -60,6 +61,10 @@ pub struct TcShared {
     active: AtomicBool,
     arrivals: AtomicUsize,
     epoch: AtomicUsize,
+    /// Collective algorithm selection for the thread ranks (env
+    /// overrides at init; `mpix_coll_*` info keys via
+    /// [`Threadcomm::apply_coll_info`]).
+    coll_sel: CollSelector,
 }
 
 /// The per-process threadcomm object returned by `init` (inactive until
@@ -101,6 +106,7 @@ impl Threadcomm {
             active: AtomicBool::new(false),
             arrivals: AtomicUsize::new(0),
             epoch: AtomicUsize::new(0),
+            coll_sel: CollSelector::inherited(parent.coll_selector()),
         });
         // Register the forwarding route so proc-level progress can
         // deliver remote envelopes to thread engines.
@@ -145,6 +151,12 @@ impl Threadcomm {
 
     /// `MPIX_Threadcomm_free` (explicit; also runs on drop).
     pub fn free(self) {}
+
+    /// Apply `mpix_coll_<op>` info keys to the thread ranks' collective
+    /// selector (call before `start`, symmetrically on every process).
+    pub fn apply_coll_info(&self, info: &crate::info::Info) -> Result<()> {
+        self.shared.coll_sel.apply_info(info)
+    }
 
     pub fn shared(&self) -> &Arc<TcShared> {
         &self.shared
@@ -545,6 +557,14 @@ impl crate::coll::CommLike for ThreadComm {
         let s = self.coll_seq.get();
         self.coll_seq.set(s.wrapping_add(1));
         (s as i32) << 6
+    }
+
+    fn selector(&self) -> &CollSelector {
+        &self.shared.coll_sel
+    }
+
+    fn metrics(&self) -> &Metrics {
+        &self.shared.parent.fabric().metrics
     }
 }
 

@@ -646,6 +646,124 @@ fn persistent_requests_restart() {
 }
 
 #[test]
+fn env_override_switches_allreduce_algorithm() {
+    // `MPIX_COLL_ALLREDUCE=ring|tree` must observably switch the
+    // dispatched schedule — asserted via the per-algorithm dispatch
+    // counters, not just the (identical) results. The env var is read at
+    // comm creation, i.e. inside Universe::run. The payload is far below
+    // the ring crossover, so seeing the ring counter move proves the
+    // override beat the heuristic.
+    //
+    // On set_var in a parallel test binary: every in-tree env access
+    // goes through std::env (internally locked; nothing calls libc
+    // getenv directly), and a concurrent test whose comms pick up the
+    // override merely runs the other — agreement-tested — schedule.
+    // The counters asserted below live on THIS universe's fabric, so
+    // other tests cannot perturb them.
+    for (val, want_ring) in [("ring", true), ("tree", false)] {
+        std::env::set_var("MPIX_COLL_ALLREDUCE", val);
+        let counts = Universe::run(Universe::with_ranks(3), |world| {
+            coll::barrier(&world).unwrap();
+            let m0 = world.fabric().metrics.snapshot();
+            let mut v = [world.rank() as u64 + 1; 4];
+            coll::allreduce_t(&world, &mut v, |a, b| *a += *b).unwrap();
+            assert_eq!(v, [6; 4]);
+            coll::barrier(&world).unwrap();
+            let d = world.fabric().metrics.snapshot().since(&m0);
+            (d.coll_allreduce_ring, d.coll_allreduce_tree)
+        });
+        std::env::remove_var("MPIX_COLL_ALLREDUCE");
+        // Each rank's window contains at least its own dispatch; other
+        // ranks' bumps may race in or out of it.
+        let (ring, tree) = counts[0];
+        if want_ring {
+            assert!(ring >= 1, "MPIX_COLL_ALLREDUCE={val}: ring path not taken");
+            assert_eq!(tree, 0, "MPIX_COLL_ALLREDUCE={val}: tree path taken");
+        } else {
+            assert!(tree >= 1, "MPIX_COLL_ALLREDUCE={val}: tree path not taken");
+            assert_eq!(ring, 0, "MPIX_COLL_ALLREDUCE={val}: ring path taken");
+        }
+    }
+}
+
+#[test]
+fn threadcomm_coll_info_forces_ring() {
+    // The info-key override applies to thread-rank collectives too: the
+    // same CollSelector plumbing serves proc comms and threadcomms.
+    Universe::run(Universe::with_ranks(2), |world| {
+        let tc = Threadcomm::init(&world, 2).unwrap();
+        let mut info = Info::new();
+        info.set("mpix_coll_allreduce", "ring");
+        tc.apply_coll_info(&info).unwrap();
+        let m0 = world.fabric().metrics.snapshot();
+        std::thread::scope(|s| {
+            for _ in 0..2 {
+                let tc = &tc;
+                s.spawn(move || {
+                    let h = tc.start();
+                    let mut v = [h.rank() as u64 + 1];
+                    coll::allreduce_t(&h, &mut v, |a, b| *a += *b).unwrap();
+                    assert_eq!(v[0], 1 + 2 + 3 + 4);
+                    h.finish();
+                });
+            }
+        });
+        coll::barrier(&world).unwrap();
+        let d = world.fabric().metrics.snapshot().since(&m0);
+        // This process's two thread ranks dispatched after m0.
+        assert!(d.coll_allreduce_ring >= 2, "ring path not taken");
+        assert_eq!(d.coll_allreduce_tree, 0, "tree path taken");
+    });
+}
+
+#[test]
+fn scan_exscan_nonpow2_sizes() {
+    // scan/exscan regressions at non-power-of-two sizes (the chain
+    // schedules only had pow2 coverage via the 4-rank test below).
+    for &n in &[3usize, 5, 7] {
+        Universe::run(Universe::with_ranks(n), |world| {
+            let me = world.rank() as i64;
+            let mut v = [me + 1, (me + 1) * 10];
+            coll::scan_t(&world, &mut v, |a, b| *a += *b).unwrap();
+            let want: i64 = (0..=me).map(|r| r + 1).sum();
+            assert_eq!(v, [want, want * 10], "scan n={n}");
+
+            let mut e = [me + 1];
+            coll::exscan_t(&world, &mut e, |a, b| *a += *b).unwrap();
+            if me > 0 {
+                let want: i64 = (0..me).map(|r| r + 1).sum();
+                assert_eq!(e[0], want, "exscan n={n}");
+            } else {
+                // Rank 0's buffer is untouched, per MPI semantics.
+                assert_eq!(e[0], 1, "exscan n={n} rank 0 buffer changed");
+            }
+        });
+    }
+}
+
+#[test]
+fn gatherv_nonpow2_sizes() {
+    // Variable blocks — including zero-count ranks — at sizes 3/5/7,
+    // gathering to the last rank (nonzero root).
+    for &n in &[3usize, 5, 7] {
+        Universe::run(Universe::with_ranks(n), |world| {
+            let me = world.rank();
+            let send: Vec<u32> = vec![me as u32; me % 3];
+            let root = n - 1;
+            if me == root {
+                let counts: Vec<usize> = (0..n).map(|r| r % 3).collect();
+                let mut out: Vec<u32> = Vec::new();
+                coll::gatherv_t(&world, &send, Some((&mut out, &counts[..])), root).unwrap();
+                let want: Vec<u32> = (0..n).flat_map(|r| vec![r as u32; r % 3]).collect();
+                assert_eq!(out, want, "gatherv n={n}");
+            } else {
+                coll::gatherv_t(&world, &send, None, root).unwrap();
+            }
+        });
+    }
+}
+
+#[test]
 fn scan_and_exscan() {
     Universe::run(Universe::with_ranks(4), |world| {
         let me = world.rank() as i64;
