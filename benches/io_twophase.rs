@@ -1,0 +1,93 @@
+//! IO — two-phase collective I/O vs independent strided I/O.
+//!
+//! The ROMIO-shaped measurement: 4 ranks share one file through
+//! interleaved strided views (rank r owns every 4th block). The
+//! independent path issues one positioned write per block per rank (the
+//! small-I/O storm); the two-phase path exchanges the blocks with
+//! `cb_nodes` aggregators that issue one large contiguous write per
+//! file domain. Sweeping the block size locates the crossover where
+//! aggregation's exchange cost pays for itself — the data behind the
+//! `mpix_io_cb_nodes` default.
+//!
+//! Each run appends to `BENCH_io.json` at the repo root (tag with
+//! `BENCH_LABEL=...`).
+//!
+//! Run: `cargo bench --offline --bench io_twophase`
+
+use mpix::coll;
+use mpix::datatype::Datatype;
+use mpix::io::File;
+use mpix::universe::Universe;
+use mpix::util::json::Json;
+use mpix::util::stats::{fmt_time, record_bench_run, unix_now};
+use std::time::Instant;
+
+const RANKS: usize = 4;
+const BLOCKS: usize = 64; // strided blocks per rank
+const SIZES: &[usize] = &[64, 256, 1024, 4096]; // block bytes
+const ITERS: usize = 20;
+
+/// Seconds per collective write over the interleaved view.
+fn bench_write(blk: usize, collective: bool) -> f64 {
+    let path = std::env::temp_dir().join(format!(
+        "mpixio_bench_{}_{blk}_{collective}",
+        std::process::id()
+    ));
+    let out = Universe::run(Universe::with_ranks(RANKS), |world| {
+        let f = File::open(&world, &path).unwrap();
+        let me = world.rank();
+        let v = Datatype::hvector(BLOCKS, blk, (RANKS * blk) as isize, &Datatype::u8());
+        let ft = Datatype::struct_type(&[((me * blk) as isize, 1, v)]);
+        f.set_view(0, &ft);
+        let data = vec![(me + 1) as u8; BLOCKS * blk];
+        coll::barrier(&world).unwrap();
+        let t0 = Instant::now();
+        for _ in 0..ITERS {
+            if collective {
+                f.write_at_all(&data).unwrap();
+            } else {
+                // Independent writes + barrier, matching the collective
+                // call's "all data visible on return" semantics.
+                f.write_view(&data).unwrap();
+                f.sync().unwrap();
+            }
+        }
+        let dt = t0.elapsed().as_secs_f64() / ITERS as f64;
+        coll::barrier(&world).unwrap();
+        dt
+    });
+    let _ = std::fs::remove_file(&path);
+    out[0]
+}
+
+fn main() {
+    // 4 rank-threads on few cores: yield quickly when blocked.
+    std::env::set_var("MPIX_SPIN", "64");
+    println!("IO — two-phase collective vs independent strided writes");
+    println!("({RANKS} ranks x {BLOCKS} interleaved blocks per rank)");
+    println!(
+        "{:>12} {:>16} {:>16}",
+        "block bytes", "independent", "two-phase"
+    );
+    let mut indep = Vec::new();
+    let mut twop = Vec::new();
+    for &blk in SIZES {
+        let i = bench_write(blk, false);
+        let t = bench_write(blk, true);
+        indep.push(i);
+        twop.push(t);
+        println!("{:>12} {:>16} {:>16}", blk, fmt_time(i), fmt_time(t));
+    }
+    record_bench_run(
+        "io",
+        "IO",
+        "seconds per collective write (4 ranks, interleaved view)",
+        Json::obj([
+            ("unix_time", Json::Num(unix_now())),
+            ("section", Json::Str("twophase_vs_independent_write".into())),
+            ("block_bytes", Json::nums(SIZES.iter().map(|&n| n as f64))),
+            ("independent", Json::nums(indep)),
+            ("two_phase", Json::nums(twop)),
+        ]),
+    );
+}

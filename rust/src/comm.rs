@@ -61,6 +61,10 @@ pub(crate) struct CommInner {
     /// Collective algorithm selection: `MPIX_COLL_*` env overrides read
     /// at creation, `mpix_coll_*` info keys via [`Comm::apply_coll_info`].
     pub coll_sel: CollSelector,
+    /// MPI-IO tunables: `MPIX_IO_*` env overrides read at creation,
+    /// `mpix_io_*` info keys via [`Comm::apply_io_info`]; files opened
+    /// on this comm inherit them ([`crate::io::File::open_with_info`]).
+    pub io_hints: crate::io::IoHints,
 }
 
 /// An MPI communicator handle (cheap to clone; clones share collective
@@ -77,18 +81,27 @@ impl Comm {
         rank: u32,
         group: Arc<Vec<u32>>,
     ) -> Comm {
-        Comm::new_proc_with_sel(fabric, ctx, rank, group, CollSelector::from_env())
+        Comm::new_proc_with_sel(
+            fabric,
+            ctx,
+            rank,
+            group,
+            CollSelector::from_env(),
+            crate::io::IoHints::from_env(),
+        )
     }
 
-    /// `new_proc` with an explicit selector: child communicators pass an
-    /// inherited copy of the parent's, so info-applied overrides survive
-    /// dup/split the way MPI info hints propagate through comm creation.
+    /// `new_proc` with explicit selector + IO hints: child communicators
+    /// pass inherited copies of the parent's, so info-applied overrides
+    /// survive dup/split the way MPI info hints propagate through comm
+    /// creation.
     pub(crate) fn new_proc_with_sel(
         fabric: Arc<Fabric>,
         ctx: u32,
         rank: u32,
         group: Arc<Vec<u32>>,
         coll_sel: CollSelector,
+        io_hints: crate::io::IoHints,
     ) -> Comm {
         let size = group.len();
         Comm {
@@ -103,6 +116,7 @@ impl Comm {
                 coll_seq: AtomicU32::new(0),
                 win_seq: AtomicU32::new(0),
                 coll_sel,
+                io_hints,
             }),
         }
     }
@@ -317,7 +331,7 @@ impl Comm {
             }
         } else {
             Metrics::bump(&fabric.metrics.eager_heap);
-            Payload::Eager(buf.into())
+            pooled_eager(fabric, me, buf)
         };
         let env = Envelope {
             hdr: self.hdr(ctx, tag, src_idx, dst_idx),
@@ -481,6 +495,7 @@ impl Comm {
             self.inner.rank,
             Arc::clone(&self.inner.group),
             CollSelector::inherited(&self.inner.coll_sel),
+            crate::io::IoHints::inherited(&self.inner.io_hints),
         )
     }
 
@@ -513,6 +528,7 @@ impl Comm {
             my_new_rank as u32,
             Arc::new(group),
             CollSelector::inherited(&self.inner.coll_sel),
+            crate::io::IoHints::inherited(&self.inner.io_hints),
         ))
     }
 
@@ -569,6 +585,21 @@ impl Comm {
     /// This communicator's collective-algorithm selector.
     pub fn coll_selector(&self) -> &CollSelector {
         &self.inner.coll_sel
+    }
+
+    /// Apply `mpix_io_*` info keys (e.g. `mpix_io_cb_nodes = "2"`) to
+    /// this communicator's MPI-IO hint set — the info-key analogue of
+    /// the `MPIX_IO_*` env overrides, mirroring [`Comm::apply_coll_info`].
+    /// Must be applied symmetrically on every rank. Files opened on this
+    /// comm afterwards inherit the hints; children (dup/split) inherit
+    /// at creation.
+    pub fn apply_io_info(&self, info: &Info) -> Result<()> {
+        self.inner.io_hints.apply_info(info)
+    }
+
+    /// This communicator's MPI-IO hint set.
+    pub fn io_hints(&self) -> &crate::io::IoHints {
+        &self.inner.io_hints
     }
 }
 
@@ -654,6 +685,23 @@ pub(crate) fn push_envelope_raw(
     }
 }
 
+/// Eager heap payload drawn from the **source endpoint's** recycling
+/// chunk pool (the receiver's drop after the copy-out returns the cell),
+/// so the steady-state eager heap path allocates nothing — same
+/// discipline as the rendezvous chunk path, counted in the same
+/// `pool_hits`/`pool_misses`.
+pub(crate) fn pooled_eager(fabric: &Arc<Fabric>, me: (u32, u16), buf: &[u8]) -> Payload {
+    let src_ep = fabric.endpoint(me.0, me.1);
+    let mut cell = with_ep(fabric, src_ep, |st| st.chunk_pool.acquire(buf.len()));
+    if cell.recycled() {
+        Metrics::bump(&fabric.metrics.pool_hits);
+    } else {
+        Metrics::bump(&fabric.metrics.pool_misses);
+    }
+    cell.copy_from(buf);
+    Payload::Eager(cell)
+}
+
 /// Eager send of `buf` with an explicit header (inline cell when small).
 pub(crate) fn push_eager_raw(
     fabric: &Arc<Fabric>,
@@ -672,7 +720,7 @@ pub(crate) fn push_eager_raw(
         }
     } else {
         Metrics::bump(&fabric.metrics.eager_heap);
-        Payload::Eager(buf.into())
+        pooled_eager(fabric, me, buf)
     };
     push_envelope_raw(fabric, me, peer, Envelope { hdr, payload })
 }

@@ -38,6 +38,126 @@ impl Datatype {
         self.walk_segments(&mut |offset, len| v.push(Iov { offset, len }));
         v
     }
+
+    /// Segments intersecting the byte window `[lo, hi)` (offsets
+    /// relative to the buffer base), clipped to the window, each paired
+    /// with the **packed-buffer offset** of its first emitted byte —
+    /// the position those bytes occupy in the type's packed
+    /// (`size()`-long) representation.
+    ///
+    /// Subtrees whose span cannot intersect the window are skipped in
+    /// O(1) each (their packed size is added arithmetically), so
+    /// flattening a view over one file domain costs O(visited nodes +
+    /// intersecting segments), not O(total segments). This is the query
+    /// the two-phase collective I/O path runs once per (rank, domain).
+    ///
+    /// Spans are bounded by `lb + max(extent, size)`; a `resized` that
+    /// shrinks the extent below the data span (never produced by the
+    /// constructors here for file views) would defeat the pruning.
+    pub fn iov_window(&self, lo: isize, hi: isize) -> Vec<(usize, Iov)> {
+        let mut out = Vec::new();
+        if lo < hi {
+            let mut packed = 0usize;
+            window(&self.0, 0, lo, hi, &mut packed, &mut out);
+        }
+        out
+    }
+}
+
+/// Clip one dense run `[start, start + len)` against `[lo, hi)`,
+/// emitting the intersection with its packed offset; always advances
+/// the packed cursor by the full run.
+fn dense_run(
+    start: isize,
+    len: usize,
+    lo: isize,
+    hi: isize,
+    packed: &mut usize,
+    out: &mut Vec<(usize, Iov)>,
+) {
+    let s = start.max(lo);
+    let e = (start + len as isize).min(hi);
+    if s < e {
+        out.push((
+            *packed + (s - start) as usize,
+            Iov {
+                offset: s,
+                len: (e - s) as usize,
+            },
+        ));
+    }
+    *packed += len;
+}
+
+/// Recursive windowed walk behind [`Datatype::iov_window`].
+fn window(
+    node: &Inner,
+    base: isize,
+    lo: isize,
+    hi: isize,
+    packed: &mut usize,
+    out: &mut Vec<(usize, Iov)>,
+) {
+    if node.size == 0 {
+        return;
+    }
+    if node.dense {
+        // dense ⇒ lb == 0: one run starting at base.
+        dense_run(base, node.size, lo, hi, packed, out);
+        return;
+    }
+    // Prune whole non-intersecting subtrees (O(1) per skip).
+    let span_lo = base + node.lb;
+    let span_hi = span_lo + node.extent.max(node.size as isize);
+    if span_hi <= lo || span_lo >= hi {
+        *packed += node.size;
+        return;
+    }
+    match &node.kind {
+        Kind::Dense => unreachable!("dense handled above"),
+        Kind::Vector {
+            count,
+            blocklen,
+            stride,
+            child,
+        } => {
+            let c = &child.0;
+            for i in 0..*count {
+                let bb = base + stride * i as isize;
+                if c.dense {
+                    dense_run(bb + c.lb, c.size * blocklen, lo, hi, packed, out);
+                } else {
+                    for b in 0..*blocklen {
+                        window(c, bb + c.extent * b as isize, lo, hi, packed, out);
+                    }
+                }
+            }
+        }
+        Kind::Hindexed { blocks, child } => {
+            let c = &child.0;
+            for &(disp, bl) in blocks {
+                if c.dense {
+                    dense_run(base + disp + c.lb, c.size * bl, lo, hi, packed, out);
+                } else {
+                    for b in 0..bl {
+                        window(c, base + disp + c.extent * b as isize, lo, hi, packed, out);
+                    }
+                }
+            }
+        }
+        Kind::Struct { fields } => {
+            for (off, n, t) in fields {
+                let c = &t.0;
+                if c.dense {
+                    dense_run(base + off + c.lb, c.size * n, lo, hi, packed, out);
+                } else {
+                    for i in 0..*n {
+                        window(c, base + off + c.extent * i as isize, lo, hi, packed, out);
+                    }
+                }
+            }
+        }
+    }
 }
 
 /// (whole segments, their byte total) within `budget`, O(depth + fanout).
@@ -367,6 +487,57 @@ mod tests {
     }
 
     use crate::datatype::testutil::random_type;
+
+    #[test]
+    fn iov_window_matches_bruteforce_property() {
+        // Property: for any type and any byte window, iov_window equals
+        // clipping the full flattened list, with packed offsets equal to
+        // the prefix sums of the preceding segments.
+        let mut rng = Rng::new(11);
+        for case in 0..60 {
+            let t = random_type(&mut rng, 3);
+            let all = t.iov_all();
+            let mut packed = Vec::with_capacity(all.len());
+            let mut acc = 0usize;
+            for s in &all {
+                packed.push(acc);
+                acc += s.len;
+            }
+            let lb = t.lb();
+            let span = (t.extent().max(t.size() as isize)).max(1) as usize;
+            for probe in 0..8 {
+                let a = lb + rng.range(0, span) as isize - 1;
+                let b = a + rng.range(0, span + 4) as isize;
+                let got = t.iov_window(a, b);
+                let want: Vec<(usize, Iov)> = all
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(i, s)| {
+                        let s0 = s.offset.max(a);
+                        let e0 = (s.offset + s.len as isize).min(b);
+                        (s0 < e0).then(|| {
+                            (
+                                packed[i] + (s0 - s.offset) as usize,
+                                Iov {
+                                    offset: s0,
+                                    len: (e0 - s0) as usize,
+                                },
+                            )
+                        })
+                    })
+                    .collect();
+                assert_eq!(got, want, "case {case} probe {probe} window [{a},{b})");
+            }
+            // A window covering everything reproduces the packed walk.
+            let full = t.iov_window(-(1 << 40), 1 << 40);
+            let want_full: Vec<(usize, Iov)> =
+                packed.iter().copied().zip(all.iter().copied()).collect();
+            assert_eq!(full, want_full, "case {case} full span");
+            // An empty or disjoint window yields nothing.
+            assert!(t.iov_window(5, 5).is_empty());
+            assert!(t.iov_window(1 << 40, (1 << 40) + 10).is_empty());
+        }
+    }
 
     #[test]
     fn paper_typeiov_example() {

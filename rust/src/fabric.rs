@@ -129,7 +129,11 @@ pub struct Header {
 /// Payload variants. `Inline` is the no-allocation fast path.
 pub enum Payload {
     Inline { len: u16, data: [u8; INLINE_MAX] },
-    Eager(Box<[u8]>),
+    /// Eager heap payload. The cell is pooled like rendezvous chunks:
+    /// the receiver's drop after the copy-out returns it to the sending
+    /// endpoint's [`crate::util::pool::LocalChunkPool`], so the
+    /// steady-state eager heap path allocates nothing either.
+    Eager(crate::util::pool::PooledBuf),
     /// Single-copy rendezvous (intra-process): receiver copies directly
     /// from `src` and completes the sender's request.
     RdvDirect {

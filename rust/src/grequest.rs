@@ -10,6 +10,7 @@
 //! used by `waitall` instead of spin-polling.
 
 use crate::comm::Comm;
+use crate::error::Result;
 use crate::fabric::Fabric;
 use crate::metrics::Metrics;
 use crate::request::{ProgressHandle, ProgressScope, ReqInner, Request, Status};
@@ -18,13 +19,17 @@ use std::sync::Arc;
 /// Poll callback: query the external task; `Some(status)` completes the
 /// request (≙ the poll_fn calling `MPI_Grequest_complete`).
 pub type PollFn = Box<dyn FnMut() -> Option<Status> + Send>;
+/// Fallible poll callback: `Some(Err(e))` fails the request — the
+/// analogue of a grequest query_fn filling the status' `MPI_ERROR`
+/// field (I/O engine tasks surface disk errors this way).
+pub type TryPollFn = Box<dyn FnMut() -> Option<Result<Status>> + Send>;
 /// Wait callback: block until the external task completes. Invoked by
 /// `waitall`/`wait` paths as the batched-wait optimization.
 pub type WaitFn = Box<dyn FnMut() + Send>;
 
 pub struct GrequestEntry {
     pub req: Arc<ReqInner>,
-    pub poll: PollFn,
+    pub poll: TryPollFn,
     pub wait: Option<WaitFn>,
 }
 
@@ -34,6 +39,19 @@ pub struct GrequestEntry {
 pub fn grequest_start(
     comm: &Comm,
     poll_fn: PollFn,
+    wait_fn: Option<WaitFn>,
+) -> Request<'static> {
+    let mut poll_fn = poll_fn;
+    grequest_start_try(comm, Box::new(move || poll_fn().map(Ok)), wait_fn)
+}
+
+/// [`grequest_start`] with a fallible poll callback: `Some(Err(e))`
+/// fails the request instead of completing it, so external tasks (disk
+/// I/O, offload launches) propagate their errors through
+/// `MPI_Wait`/`MPI_Test` rather than reporting a hollow success.
+pub fn grequest_start_try(
+    comm: &Comm,
+    poll_fn: TryPollFn,
     wait_fn: Option<WaitFn>,
 ) -> Request<'static> {
     let fabric = Arc::clone(comm.fabric());
@@ -78,8 +96,12 @@ pub fn poll_rank(fabric: &Arc<Fabric>, rank: u32) {
         }
         Metrics::bump(&fabric.metrics.grequest_polls);
         match (e.poll)() {
-            Some(status) => {
+            Some(Ok(status)) => {
                 e.req.complete(status);
+                false
+            }
+            Some(Err(err)) => {
+                e.req.fail(err);
                 false
             }
             None => true,
@@ -105,9 +127,16 @@ pub fn invoke_wait_fns(reqs: &[Request<'_>]) {
                 if let Some(w) = e.wait.as_mut() {
                     w();
                 }
-                if let Some(status) = (e.poll)() {
-                    e.req.complete(status);
-                    return false;
+                match (e.poll)() {
+                    Some(Ok(status)) => {
+                        e.req.complete(status);
+                        return false;
+                    }
+                    Some(Err(err)) => {
+                        e.req.fail(err);
+                        return false;
+                    }
+                    None => {}
                 }
             }
             true
@@ -197,6 +226,21 @@ mod tests {
             // wait_fn completed the task; poll count stays tiny (no
             // spin-poll storm).
             assert!(polls.load(Ordering::Relaxed) <= 2);
+        });
+    }
+
+    #[test]
+    fn try_poll_failure_fails_the_request() {
+        // Some(Err(..)) from a fallible poll must fail the request —
+        // the path disk errors from the I/O engine ride.
+        Universe::run(Universe::with_ranks(1), |world| {
+            let req = super::grequest_start_try(
+                &world,
+                Box::new(|| Some(Err(crate::MpiError::Runtime("task failed".into())))),
+                None,
+            );
+            let err = req.wait().unwrap_err();
+            assert!(matches!(err, crate::MpiError::Runtime(_)), "{err}");
         });
     }
 

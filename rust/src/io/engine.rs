@@ -1,0 +1,156 @@
+//! The per-file asynchronous I/O engine: a worker thread performing
+//! positioned reads/writes whose completions are observed by grequest
+//! `poll_fn`s — the "operating system manages the completion of I/O
+//! operations" actor of the paper's generalized-request discussion.
+//! Nothing here touches the communication fabric; completion flows back
+//! through [`crate::progress`] polling the done flags.
+
+use crate::error::{MpiError, Result};
+use std::os::unix::fs::FileExt;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+
+/// Write payload: user-path writes own a fresh `Vec`; aggregator writes
+/// hand over a pooled cell, which the engine thread's drop returns to
+/// the owning pool after the write.
+pub(crate) enum WriteBuf {
+    Owned(Vec<u8>),
+    Pooled(crate::util::pool::PooledBuf),
+}
+
+impl WriteBuf {
+    fn as_slice(&self) -> &[u8] {
+        match self {
+            WriteBuf::Owned(v) => v,
+            WriteBuf::Pooled(b) => b,
+        }
+    }
+}
+
+pub(crate) enum IoOp {
+    ReadAt {
+        offset: u64,
+        len: usize,
+        dest: crate::fabric::RecvPtr,
+        done: Arc<IoDone>,
+    },
+    WriteAt {
+        offset: u64,
+        data: WriteBuf,
+        done: Arc<IoDone>,
+    },
+    Exit,
+}
+
+/// Completion record of one engine operation: the engine thread fills
+/// it, grequest poll callbacks (and blocking waits) observe it.
+pub(crate) struct IoDone {
+    pub(crate) flag: AtomicBool,
+    pub(crate) bytes: AtomicUsize,
+    pub(crate) err: Mutex<Option<String>>,
+}
+
+impl IoDone {
+    pub(crate) fn new() -> Arc<IoDone> {
+        Arc::new(IoDone {
+            flag: AtomicBool::new(false),
+            bytes: AtomicUsize::new(0),
+            err: Mutex::new(None),
+        })
+    }
+
+    pub(crate) fn finish(&self, r: std::io::Result<usize>) {
+        match r {
+            Ok(n) => self.bytes.store(n, Ordering::Relaxed),
+            Err(e) => *self.err.lock().unwrap() = Some(e.to_string()),
+        }
+        self.flag.store(true, Ordering::Release);
+    }
+
+    /// Spin-wait for completion (aggregator-side synchronous use, where
+    /// the caller is not inside an `MPI_Wait` that would poll for it);
+    /// returns the transferred byte count.
+    pub(crate) fn wait(&self) -> Result<usize> {
+        let mut spins = 0u32;
+        while !self.flag.load(Ordering::Acquire) {
+            crate::request::backoff(&mut spins);
+        }
+        if let Some(e) = self.err.lock().unwrap().take() {
+            return Err(MpiError::Runtime(format!("io engine: {e}")));
+        }
+        Ok(self.bytes.load(Ordering::Relaxed))
+    }
+}
+
+/// One I/O engine (worker thread) per open file.
+pub(crate) struct IoEngine {
+    pub(crate) tx: mpsc::Sender<IoOp>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+/// `pread` until the buffer is full or EOF. Short reads are legitimate
+/// mid-file (signal interruption) and must not truncate the transfer;
+/// EOF leaves the tail untouched (callers pre-zero their buffers).
+fn read_fully(file: &std::fs::File, buf: &mut [u8], offset: u64) -> std::io::Result<usize> {
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        match file.read_at(&mut buf[filled..], offset + filled as u64) {
+            Ok(0) => break,
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(filled)
+}
+
+impl IoEngine {
+    pub(crate) fn new(file: std::fs::File) -> IoEngine {
+        let (tx, rx) = mpsc::channel::<IoOp>();
+        let worker = std::thread::spawn(move || {
+            while let Ok(op) = rx.recv() {
+                match op {
+                    IoOp::Exit => break,
+                    IoOp::ReadAt {
+                        offset,
+                        len,
+                        dest,
+                        done,
+                    } => {
+                        let mut buf = vec![0u8; len];
+                        let r = read_fully(&file, &mut buf, offset);
+                        if let Ok(n) = r {
+                            // SAFETY: dest points into the request's
+                            // still-borrowed buffer (Request<'buf>), or
+                            // into an aggregator buffer held alive until
+                            // the done flag is observed.
+                            unsafe {
+                                std::ptr::copy_nonoverlapping(buf.as_ptr(), dest.0, n);
+                            }
+                        }
+                        done.finish(r);
+                    }
+                    IoOp::WriteAt { offset, data, done } => {
+                        // write_all_at: a short pwrite must retry, not
+                        // report success with missing tail bytes.
+                        let buf = data.as_slice();
+                        done.finish(file.write_all_at(buf, offset).map(|()| buf.len()));
+                    }
+                }
+            }
+        });
+        IoEngine {
+            tx,
+            worker: Some(worker),
+        }
+    }
+}
+
+impl Drop for IoEngine {
+    fn drop(&mut self) {
+        let _ = self.tx.send(IoOp::Exit);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}

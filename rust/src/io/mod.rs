@@ -1,0 +1,504 @@
+//! ROMIO-style MPI-IO built on the paper's extensions — the consumer the
+//! paper names for generalized requests ("This extension is used by
+//! ROMIO, an MPI-IO implementation", citing Latham et al. 2007) and one
+//! of the "wider applications" the datatype iovec extension enables.
+//!
+//! * Nonblocking file operations are **asynchronous tasks completed by a
+//!   grequest `poll_fn`** (paper Fig 1b): an I/O engine thread
+//!   (`engine`) performs the positioned read/write and records a
+//!   completion event; the progress engine polls it — no user progress
+//!   thread, and one `waitall` can mix file requests with messages.
+//! * File *views* are **derived datatypes**: each rank's filetype selects
+//!   its strided slice of the shared file, and the iov engine drives the
+//!   scatter/gather between memory and file offsets.
+//! * `write_at_all`/`read_at_all` run **two-phase collective I/O**
+//!   (`twophase`): the globally accessed byte range is partitioned
+//!   into contiguous *file domains* owned by `cb_nodes` aggregator
+//!   ranks (`view`); ranks exchange `(offset, len)` pairs + packed
+//!   payload with the aggregators over the collective context, and each
+//!   aggregator issues a handful of large contiguous file operations —
+//!   with read-ahead **data sieving** for holey domains (`sieve`) —
+//!   instead of every rank spraying tiny strided ops at the file.
+//! * Tunables ride the established info-key path ([`IoHints`]):
+//!   `mpix_io_cb_nodes`, `mpix_io_cb_buffer_size`, `mpix_io_ds_threshold`
+//!   info keys with `MPIX_IO_*` env fallbacks, mirroring
+//!   [`crate::coll::select`]'s override resolution.
+
+mod engine;
+mod sieve;
+#[cfg(test)]
+mod tests;
+mod twophase;
+mod view;
+
+pub use twophase::{SplitRead, SplitWrite};
+
+use crate::comm::Comm;
+use crate::datatype::Datatype;
+use crate::error::{MpiError, Result};
+use crate::grequest::grequest_start_try;
+use crate::info::Info;
+use crate::metrics::Metrics;
+use crate::request::{Request, Status};
+use crate::util::pool::{LocalChunkPool, PooledBuf};
+use engine::{IoDone, IoEngine, IoOp, WriteBuf};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+// --------------------------------------------------------------- hints
+
+/// Default collective-buffer (window) size per aggregator.
+pub const DEFAULT_CB_BUFFER_SIZE: usize = 64 * 1024;
+/// Default data-sieving hole tolerance per window.
+pub const DEFAULT_DS_THRESHOLD: usize = 4 * 1024;
+
+const H_CB_NODES: usize = 0;
+const H_CB_BUFFER_SIZE: usize = 1;
+const H_DS_THRESHOLD: usize = 2;
+const UNSET: u64 = u64::MAX;
+
+/// (info key, env fallback) per slot, in slot order.
+const HINT_KEYS: [(&str, &str); 3] = [
+    ("mpix_io_cb_nodes", "MPIX_IO_CB_NODES"),
+    ("mpix_io_cb_buffer_size", "MPIX_IO_CB_BUFFER_SIZE"),
+    ("mpix_io_ds_threshold", "MPIX_IO_DS_THRESHOLD"),
+];
+
+/// MPI-IO tunables, resolved the way [`crate::coll::select`] resolves
+/// collective algorithms: an explicit `mpix_io_*` info key — applied to
+/// the communicator ([`crate::Comm::apply_io_info`]) or per open
+/// ([`File::open_with_info`]) — beats the `MPIX_IO_*` environment
+/// variable read at communicator creation, which beats the default.
+///
+/// * `mpix_io_cb_nodes` — number of aggregator ranks (file domains).
+///   `0` disables collective buffering entirely: collective calls fall
+///   back to the independent per-rank path (counted in
+///   `Metrics::io_indep_fallback`). Default: ⌈comm size / 2⌉.
+/// * `mpix_io_cb_buffer_size` — aggregator window bytes
+///   ([`DEFAULT_CB_BUFFER_SIZE`]).
+/// * `mpix_io_ds_threshold` — max hole bytes per window the data-sieving
+///   read-modify-write absorbs ([`DEFAULT_DS_THRESHOLD`]); `0` turns
+///   sieving off (holey windows write one op per contiguous run).
+///
+/// Like the `mpix_coll_*` keys, values must be applied symmetrically on
+/// every rank: the two-phase schedule is SPMD and all ranks must resolve
+/// the same plan.
+pub struct IoHints {
+    slots: [AtomicU64; 3],
+}
+
+impl IoHints {
+    /// All-default hints.
+    pub fn new() -> IoHints {
+        IoHints {
+            slots: std::array::from_fn(|_| AtomicU64::new(UNSET)),
+        }
+    }
+
+    /// Snapshot of `parent`'s slots (child comms and opened files
+    /// inherit, like MPI info hints through `MPI_Comm_dup`).
+    pub fn inherited(parent: &IoHints) -> IoHints {
+        let h = IoHints::new();
+        for (dst, src) in h.slots.iter().zip(parent.slots.iter()) {
+            dst.store(src.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        h
+    }
+
+    /// Read `MPIX_IO_*` overrides from the environment (top-level
+    /// communicator creation; children inherit instead). Unparsable
+    /// values are ignored — an env var cannot fail comm creation.
+    pub fn from_env() -> IoHints {
+        let h = IoHints::new();
+        for (i, (_, env_key)) in HINT_KEYS.iter().enumerate() {
+            if let Ok(v) = std::env::var(env_key) {
+                if let Ok(n) = v.trim().parse::<u64>() {
+                    if n != UNSET {
+                        h.slots[i].store(n, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+        h
+    }
+
+    /// Apply `mpix_io_*` info keys. An explicit API call, so unknown
+    /// values are errors — and transactional: every key is validated
+    /// before any slot is stored.
+    pub fn apply_info(&self, info: &Info) -> Result<()> {
+        let mut updates: [Option<u64>; 3] = [None; 3];
+        for (i, (info_key, _)) in HINT_KEYS.iter().enumerate() {
+            if let Some(v) = info.get(info_key) {
+                let n = v.trim().parse::<u64>().map_err(|_| {
+                    MpiError::InvalidArg(format!("{info_key}: not a number: {v:?}"))
+                })?;
+                if n == UNSET {
+                    return Err(MpiError::InvalidArg(format!("{info_key}: value too large")));
+                }
+                updates[i] = Some(n);
+            }
+        }
+        for (i, u) in updates.iter().enumerate() {
+            if let Some(n) = u {
+                self.slots[i].store(*n, Ordering::Relaxed);
+            }
+        }
+        Ok(())
+    }
+
+    fn get(&self, i: usize) -> Option<u64> {
+        match self.slots[i].load(Ordering::Relaxed) {
+            UNSET => None,
+            v => Some(v),
+        }
+    }
+
+    /// Aggregator count for a communicator of `comm_size` ranks; `0`
+    /// means "collective buffering disabled" (independent fallback).
+    pub fn cb_nodes(&self, comm_size: usize) -> usize {
+        match self.get(H_CB_NODES) {
+            Some(v) => (v as usize).min(comm_size),
+            None => (comm_size + 1) / 2,
+        }
+    }
+
+    /// Aggregator window size in bytes (≥ 1).
+    pub fn cb_buffer_size(&self) -> usize {
+        self.get(H_CB_BUFFER_SIZE)
+            .map(|v| (v as usize).max(1))
+            .unwrap_or(DEFAULT_CB_BUFFER_SIZE)
+    }
+
+    /// Data-sieving hole tolerance in bytes per window.
+    pub fn ds_threshold(&self) -> usize {
+        self.get(H_DS_THRESHOLD)
+            .map(|v| v as usize)
+            .unwrap_or(DEFAULT_DS_THRESHOLD)
+    }
+}
+
+impl Default for IoHints {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// ----------------------------------------------------------------- file
+
+/// File view: a displacement plus a filetype whose segments select this
+/// rank's bytes of the file (`MPI_File_set_view` with etype = byte).
+pub(crate) struct View {
+    pub(crate) disp: u64,
+    pub(crate) filetype: Datatype,
+}
+
+/// Shared file state: the two-phase workers (including the split
+/// collective's background thread) and the public handle both hold it.
+pub(crate) struct FileInner {
+    pub(crate) comm: Comm,
+    engine: IoEngine,
+    pub(crate) view: Mutex<View>,
+    pub(crate) hints: IoHints,
+    /// Aggregator exchange + sieve buffers recycle through this pool
+    /// (same [`crate::util::pool`] discipline as the rendezvous chunk
+    /// path; hits/misses land in the same counters).
+    agg_pool: Mutex<LocalChunkPool>,
+}
+
+impl FileInner {
+    pub(crate) fn metrics(&self) -> &Metrics {
+        &self.comm.fabric().metrics
+    }
+
+    /// A pooled buffer for exchange/sieve use (counted like chunk-pool
+    /// acquisitions).
+    pub(crate) fn acquire_buf(&self, cap: usize) -> PooledBuf {
+        let cell = self.agg_pool.lock().unwrap().acquire(cap);
+        let m = self.metrics();
+        if cell.recycled() {
+            Metrics::bump(&m.pool_hits);
+        } else {
+            Metrics::bump(&m.pool_misses);
+        }
+        cell
+    }
+
+    /// Submit a pooled-buffer write; the engine thread's drop recycles
+    /// the cell. Errors surface through [`IoDone::wait`].
+    pub(crate) fn engine_write_pooled(&self, offset: u64, data: PooledBuf) -> Arc<IoDone> {
+        let done = IoDone::new();
+        if self
+            .engine
+            .tx
+            .send(IoOp::WriteAt {
+                offset,
+                data: WriteBuf::Pooled(data),
+                done: Arc::clone(&done),
+            })
+            .is_err()
+        {
+            done.finish(Err(std::io::Error::new(
+                std::io::ErrorKind::Other,
+                "io engine stopped",
+            )));
+        }
+        done
+    }
+
+    /// Submit a read of `buf.len()` bytes at `offset` into `buf`. The
+    /// caller must keep `buf` alive and unread until the done flag is
+    /// observed (all callers wait immediately).
+    pub(crate) fn engine_read_into(&self, offset: u64, buf: &mut PooledBuf) -> Result<Arc<IoDone>> {
+        let len = buf.len();
+        let dest = crate::fabric::RecvPtr(buf.as_mut_ptr());
+        self.engine_read_raw(offset, dest, len)
+    }
+
+    /// Same, into `buf[at..at + len]`.
+    pub(crate) fn engine_read_into_at(
+        &self,
+        offset: u64,
+        buf: &mut PooledBuf,
+        at: usize,
+        len: usize,
+    ) -> Result<Arc<IoDone>> {
+        let dest = crate::fabric::RecvPtr(buf[at..at + len].as_mut_ptr());
+        self.engine_read_raw(offset, dest, len)
+    }
+
+    fn engine_read_raw(
+        &self,
+        offset: u64,
+        dest: crate::fabric::RecvPtr,
+        len: usize,
+    ) -> Result<Arc<IoDone>> {
+        let done = IoDone::new();
+        self.engine
+            .tx
+            .send(IoOp::ReadAt {
+                offset,
+                len,
+                dest,
+                done: Arc::clone(&done),
+            })
+            .map_err(|_| MpiError::Runtime("io engine stopped".into()))?;
+        Ok(done)
+    }
+
+    fn greq_for(&self, done: Arc<IoDone>) -> Request<'static> {
+        grequest_start_try(
+            &self.comm,
+            Box::new(move || {
+                if !done.flag.load(Ordering::Acquire) {
+                    return None;
+                }
+                // Completed: surface a disk error as a failed request,
+                // the byte count via Status otherwise.
+                if let Some(e) = done.err.lock().unwrap().take() {
+                    return Some(Err(MpiError::Runtime(format!("io engine: {e}"))));
+                }
+                Some(Ok(Status {
+                    source: 0,
+                    tag: 0,
+                    len: done.bytes.load(Ordering::Relaxed),
+                }))
+            }),
+            None,
+        )
+    }
+
+    pub(crate) fn iwrite_at(&self, offset: u64, data: &[u8]) -> Result<Request<'static>> {
+        let done = IoDone::new();
+        self.engine
+            .tx
+            .send(IoOp::WriteAt {
+                offset,
+                data: WriteBuf::Owned(data.to_vec()),
+                done: Arc::clone(&done),
+            })
+            .map_err(|_| MpiError::Runtime("io engine stopped".into()))?;
+        Ok(self.greq_for(done))
+    }
+
+    pub(crate) fn iread_at<'a>(&self, offset: u64, buf: &'a mut [u8]) -> Result<Request<'a>> {
+        let done = IoDone::new();
+        self.engine
+            .tx
+            .send(IoOp::ReadAt {
+                offset,
+                len: buf.len(),
+                dest: crate::fabric::RecvPtr(buf.as_mut_ptr()),
+                done: Arc::clone(&done),
+            })
+            .map_err(|_| MpiError::Runtime("io engine stopped".into()))?;
+        // The grequest is 'static but the data lands in `buf`; narrow the
+        // request lifetime to the buffer borrow.
+        let req = self.greq_for(done);
+        Ok(unsafe { std::mem::transmute::<Request<'static>, Request<'a>>(req) })
+    }
+
+    /// Independent strided write through the view: one engine op per
+    /// segment (the path two-phase aggregation exists to avoid; also the
+    /// `mpix_io_cb_nodes = 0` fallback).
+    pub(crate) fn independent_write(&self, data: &[u8]) -> Result<usize> {
+        let (disp, iovs, size) = {
+            let v = self.view.lock().unwrap();
+            (v.disp, v.filetype.iov_all(), v.filetype.size())
+        };
+        if data.len() != size {
+            return Err(MpiError::SizeMismatch(format!(
+                "write_view: {} bytes given, view selects {size}",
+                data.len()
+            )));
+        }
+        let mut reqs = Vec::with_capacity(iovs.len());
+        let mut cursor = 0usize;
+        for seg in &iovs {
+            let chunk = &data[cursor..cursor + seg.len];
+            cursor += seg.len;
+            reqs.push(self.iwrite_at(disp + seg.offset as u64, chunk)?);
+        }
+        let sts = crate::request::waitall(reqs)?;
+        Ok(sts.iter().map(|s| s.len).sum())
+    }
+
+    /// Independent strided read through the view.
+    pub(crate) fn independent_read(&self, out: &mut [u8]) -> Result<usize> {
+        let (disp, iovs, size) = {
+            let v = self.view.lock().unwrap();
+            (v.disp, v.filetype.iov_all(), v.filetype.size())
+        };
+        if out.len() != size {
+            return Err(MpiError::SizeMismatch(format!(
+                "read_view: {} bytes given, view selects {size}",
+                out.len()
+            )));
+        }
+        let mut reqs = Vec::with_capacity(iovs.len());
+        let mut rest: &mut [u8] = out;
+        for seg in &iovs {
+            let (chunk, tail) = rest.split_at_mut(seg.len);
+            rest = tail;
+            reqs.push(self.iread_at(disp + seg.offset as u64, chunk)?);
+        }
+        let sts = crate::request::waitall(reqs)?;
+        Ok(sts.iter().map(|s| s.len).sum())
+    }
+}
+
+/// An MPI-IO file handle (`MPI_File`).
+pub struct File {
+    inner: Arc<FileInner>,
+}
+
+impl File {
+    /// `MPI_File_open` (collective; create+read+write).
+    pub fn open(comm: &Comm, path: impl AsRef<Path>) -> Result<File> {
+        Self::open_with_info(comm, path, &Info::new())
+    }
+
+    /// `MPI_File_open` with per-open `mpix_io_*` hints (applied on top
+    /// of the communicator's inherited [`IoHints`]). Must be called
+    /// symmetrically on every rank.
+    pub fn open_with_info(comm: &Comm, path: impl AsRef<Path>, info: &Info) -> Result<File> {
+        // Rank 0 creates, the rest open after the barrier.
+        if comm.rank() == 0 {
+            std::fs::OpenOptions::new()
+                .create(true)
+                .write(true)
+                .truncate(false)
+                .open(&path)
+                .map_err(|e| MpiError::Runtime(format!("open: {e}")))?;
+        }
+        crate::coll::barrier(comm)?;
+        let f = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(&path)
+            .map_err(|e| MpiError::Runtime(format!("open: {e}")))?;
+        let hints = IoHints::inherited(comm.io_hints());
+        hints.apply_info(info)?;
+        Ok(File {
+            inner: Arc::new(FileInner {
+                comm: comm.clone(),
+                engine: IoEngine::new(f),
+                view: Mutex::new(View {
+                    disp: 0,
+                    filetype: Datatype::bytes(0),
+                }),
+                hints,
+                agg_pool: Mutex::new(LocalChunkPool::new()),
+            }),
+        })
+    }
+
+    /// `MPI_File_set_view`: displacement + filetype (etype is bytes).
+    pub fn set_view(&self, disp: u64, filetype: &Datatype) {
+        *self.inner.view.lock().unwrap() = View {
+            disp,
+            filetype: filetype.clone(),
+        };
+    }
+
+    /// This file's resolved hint set.
+    pub fn hints(&self) -> &IoHints {
+        &self.inner.hints
+    }
+
+    /// `MPI_File_iwrite_at`: nonblocking positioned write; the returned
+    /// request completes through the MPI progress engine.
+    pub fn iwrite_at(&self, offset: u64, data: &[u8]) -> Result<Request<'static>> {
+        self.inner.iwrite_at(offset, data)
+    }
+
+    /// `MPI_File_iread_at`: nonblocking positioned read into `buf`.
+    pub fn iread_at<'a>(&self, offset: u64, buf: &'a mut [u8]) -> Result<Request<'a>> {
+        self.inner.iread_at(offset, buf)
+    }
+
+    /// Independent write through the view (every rank issues its own
+    /// strided ops; data is the packed form). Returns once the local
+    /// write requests complete.
+    pub fn write_view(&self, data: &[u8]) -> Result<usize> {
+        self.inner.independent_write(data)
+    }
+
+    /// Independent read through the view.
+    pub fn read_view(&self, out: &mut [u8]) -> Result<usize> {
+        self.inner.independent_read(out)
+    }
+
+    /// `MPI_File_write_at_all`-style collective write through the view:
+    /// two-phase aggregation (see the `twophase` module docs).
+    /// Collective — every rank of the file's communicator must call it.
+    /// On return, all ranks' data is in the file.
+    pub fn write_at_all(&self, data: &[u8]) -> Result<usize> {
+        twophase::write_at_all(&self.inner, data)
+    }
+
+    /// `MPI_File_read_at_all`-style collective read through the view.
+    pub fn read_at_all(&self, out: &mut [u8]) -> Result<usize> {
+        twophase::read_at_all(&self.inner, out)
+    }
+
+    /// `MPI_File_iwrite_at_all`-style split collective: `begin` launches
+    /// the two-phase write on a background task whose completion is a
+    /// grequest `poll_fn`; [`SplitWrite::end`] completes it. Between
+    /// begin and end, no other collective may run on the file's
+    /// communicator and at most one split collective may be active per
+    /// file (the MPI split-collective rules).
+    pub fn iwrite_at_all_begin(&self, data: &[u8]) -> Result<SplitWrite> {
+        twophase::iwrite_at_all_begin(&self.inner, data)
+    }
+
+    /// Split-collective read; [`SplitRead::end`] delivers the bytes.
+    pub fn iread_at_all_begin(&self) -> Result<SplitRead> {
+        twophase::iread_at_all_begin(&self.inner)
+    }
+
+    /// Barrier over the file's communicator (`MPI_File_sync` ordering).
+    pub fn sync(&self) -> Result<()> {
+        crate::coll::barrier(&self.inner.comm)
+    }
+}

@@ -1,0 +1,365 @@
+//! MPI-IO tests: grequest-driven nonblocking ops, view round-trips, and
+//! the two-phase collective agreement suite (aggregated path vs
+//! independent path, byte-identical, with the metrics proving which
+//! path ran).
+
+use super::*;
+use crate::coll;
+use crate::universe::Universe;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("mpixio_{name}_{}", std::process::id()))
+}
+
+/// The classic ROMIO interleaved view: rank `me` of `n` owns every
+/// `n`-th `blk`-byte block, `blocks` blocks in total.
+fn interleaved_view(n: usize, me: usize, blocks: usize, blk: usize) -> Datatype {
+    let v = Datatype::hvector(blocks, blk, (n * blk) as isize, &Datatype::u8());
+    Datatype::struct_type(&[((me * blk) as isize, 1, v)])
+}
+
+#[test]
+fn iwrite_iread_roundtrip_via_grequests() {
+    let path = tmp("rw");
+    Universe::run(Universe::with_ranks(1), |world| {
+        let f = File::open(&world, &path).unwrap();
+        let w = f.iwrite_at(10, b"hello-io").unwrap();
+        // Completion flows through MPI_Wait → progress → poll_fn.
+        let st = w.wait().unwrap();
+        assert_eq!(st.len, 8);
+        let mut buf = [0u8; 8];
+        let r = f.iread_at(10, &mut buf).unwrap();
+        assert_eq!(r.wait().unwrap().len, 8);
+        assert_eq!(&buf, b"hello-io");
+    });
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn mixed_waitall_io_and_messages() {
+    // The paper's headline for grequests: one waitall over I/O tasks
+    // AND nonblocking communication.
+    let path = tmp("mixed");
+    Universe::run(Universe::with_ranks(2), |world| {
+        let f = File::open(&world, &path).unwrap();
+        if world.rank() == 0 {
+            world.send(b"msg", 1, 0).unwrap();
+        } else {
+            let io = f.iwrite_at(0, &[7u8; 64]).unwrap();
+            let mut m = [0u8; 3];
+            let rv = world.irecv(&mut m, 0, 0).unwrap();
+            let sts = crate::request::waitall(vec![io, rv]).unwrap();
+            assert_eq!(sts[0].len, 64);
+            assert_eq!(&m, b"msg");
+        }
+        f.sync().unwrap();
+    });
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn interleaved_views_collective_roundtrip() {
+    // 4 ranks share one file; rank r's filetype selects every 4th
+    // 16-byte block (the classic ROMIO strided view). Independent path.
+    let path = tmp("view");
+    const BLK: usize = 16;
+    const BLOCKS: usize = 8; // per rank
+    Universe::run(Universe::with_ranks(4), |world| {
+        let f = File::open(&world, &path).unwrap();
+        let me = world.rank();
+        let ft = interleaved_view(world.size(), me, BLOCKS, BLK);
+        f.set_view(0, &ft);
+        let data: Vec<u8> = (0..BLOCKS * BLK).map(|i| (me * 50 + i % 47) as u8).collect();
+        assert_eq!(f.write_view(&data).unwrap(), data.len());
+        f.sync().unwrap();
+        // Read back through the same view.
+        let mut back = vec![0u8; data.len()];
+        assert_eq!(f.read_view(&mut back).unwrap(), data.len());
+        assert_eq!(back, data);
+        f.sync().unwrap();
+        // Rank 0 validates the global interleaving byte-exactly.
+        if me == 0 {
+            let all = std::fs::read(&path).unwrap();
+            assert_eq!(all.len(), 4 * BLOCKS * BLK);
+            for (i, &b) in all.iter().enumerate() {
+                let block = i / BLK;
+                let owner = block % 4;
+                let local = (block / 4) * BLK + i % BLK;
+                assert_eq!(b, (owner * 50 + local % 47) as u8, "byte {i}");
+            }
+        }
+        f.sync().unwrap();
+    });
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn view_size_mismatch_errors() {
+    let path = tmp("err");
+    Universe::run(Universe::with_ranks(1), |world| {
+        let f = File::open(&world, &path).unwrap();
+        f.set_view(0, &Datatype::bytes(32));
+        assert!(f.write_view(&[0u8; 16]).is_err());
+        let mut b = [0u8; 16];
+        assert!(f.read_view(&mut b).is_err());
+        assert!(f.write_at_all(&[0u8; 16]).is_err());
+        assert!(f.read_at_all(&mut b).is_err());
+    });
+    let _ = std::fs::remove_file(&path);
+}
+
+// ------------------------------------------------- two-phase agreement
+
+#[test]
+fn twophase_agreement_interleaved_sizes_2_to_8() {
+    // The acceptance matrix: interleaved views at comm sizes 2–8 (incl.
+    // non-pow2). write_at_all + read_at_all must round-trip
+    // byte-identically with the independent write_view/read_view, while
+    // the metrics prove the aggregated path ran: collective-op counter
+    // == ranks, aggregator file ops == domains (hole-free coverage, one
+    // window), zero independent fallbacks, zero sieve RMWs.
+    const BLK: usize = 16;
+    const BLOCKS: usize = 8;
+    for n in 2..=8usize {
+        let path = tmp(&format!("agree{n}"));
+        Universe::run(Universe::with_ranks(n), |world| {
+            let f = File::open(&world, &path).unwrap();
+            let me = world.rank();
+            let ft = interleaved_view(n, me, BLOCKS, BLK);
+            f.set_view(0, &ft);
+            let data: Vec<u8> = (0..BLOCKS * BLK).map(|i| (me * 37 + i % 101) as u8).collect();
+            // Barrier-sandwiched snapshot: no rank enters write_at_all
+            // before any rank's m0, and write_at_all's trailing barrier
+            // means every rank's tallies are in before anyone returns.
+            coll::barrier(&world).unwrap();
+            let m0 = world.fabric().metrics.snapshot();
+            coll::barrier(&world).unwrap();
+            assert_eq!(f.write_at_all(&data).unwrap(), data.len());
+            let d = world.fabric().metrics.snapshot().since(&m0);
+            assert_eq!(d.io_coll_ops, n as u64, "n={n}: aggregated path must run on every rank");
+            assert_eq!(d.io_indep_fallback, 0, "n={n}: no independent fallback");
+            assert_eq!(d.io_sieve_rmw, 0, "n={n}: interleaved coverage has no holes");
+            // Hole-free + span below the window size ⇒ exactly one
+            // contiguous write per file domain, domains ≤ cb_nodes.
+            let cb_nodes = f.hints().cb_nodes(n);
+            assert!(
+                d.io_agg_file_ops >= 1 && d.io_agg_file_ops <= cb_nodes as u64,
+                "n={n}: {} aggregator ops for {cb_nodes} domains",
+                d.io_agg_file_ops
+            );
+            assert_eq!(d.io_agg_bytes, (n * BLOCKS * BLK) as u64, "n={n}");
+            // Hold every rank until all write-phase deltas are read —
+            // otherwise a fast rank's read_at_all would bump the
+            // counters under a slow rank's snapshot.
+            coll::barrier(&world).unwrap();
+            // Collective read agrees with what the collective write put
+            // in the file.
+            let mut back = vec![0u8; data.len()];
+            assert_eq!(f.read_at_all(&mut back).unwrap(), data.len());
+            assert_eq!(back, data, "n={n}: read_at_all after write_at_all");
+            // Independent read agrees with the collective write.
+            let mut back2 = vec![0u8; data.len()];
+            f.read_view(&mut back2).unwrap();
+            assert_eq!(back2, data, "n={n}: read_view after write_at_all");
+            // Independent write, collective read: byte-identical too.
+            let data2: Vec<u8> = data.iter().map(|b| b ^ 0x5A).collect();
+            f.write_view(&data2).unwrap();
+            f.sync().unwrap();
+            let mut back3 = vec![0u8; data.len()];
+            f.read_at_all(&mut back3).unwrap();
+            assert_eq!(back3, data2, "n={n}: read_at_all after write_view");
+        });
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+#[test]
+fn cb_nodes_hint_controls_domain_count() {
+    // mpix_io_cb_nodes observably switches the plan: k aggregators ⇒
+    // exactly k contiguous writes for a hole-free interleaved pattern.
+    for (nodes, expect_ops) in [("1", 1u64), ("2", 2), ("4", 4)] {
+        let path = tmp(&format!("cbn{nodes}"));
+        Universe::run(Universe::with_ranks(4), |world| {
+            let mut info = Info::new();
+            info.set("mpix_io_cb_nodes", nodes);
+            let f = File::open_with_info(&world, &path, &info).unwrap();
+            let me = world.rank();
+            let ft = interleaved_view(4, me, 4, 32);
+            f.set_view(0, &ft);
+            let data = vec![me as u8 + 1; 4 * 32];
+            coll::barrier(&world).unwrap();
+            let m0 = world.fabric().metrics.snapshot();
+            coll::barrier(&world).unwrap();
+            f.write_at_all(&data).unwrap();
+            let d = world.fabric().metrics.snapshot().since(&m0);
+            assert_eq!(d.io_agg_file_ops, expect_ops, "cb_nodes={nodes}");
+            assert_eq!(d.io_indep_fallback, 0);
+        });
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+#[test]
+fn cb_nodes_zero_falls_back_independent() {
+    // mpix_io_cb_nodes = 0 disables collective buffering: the collective
+    // entry points run the independent per-rank path and say so in the
+    // metrics.
+    let path = tmp("cbn0");
+    Universe::run(Universe::with_ranks(4), |world| {
+        let mut info = Info::new();
+        info.set("mpix_io_cb_nodes", "0");
+        let f = File::open_with_info(&world, &path, &info).unwrap();
+        let me = world.rank();
+        let ft = interleaved_view(4, me, 4, 16);
+        f.set_view(0, &ft);
+        let data = vec![me as u8 + 9; 4 * 16];
+        coll::barrier(&world).unwrap();
+        let m0 = world.fabric().metrics.snapshot();
+        coll::barrier(&world).unwrap();
+        f.write_at_all(&data).unwrap();
+        let mut back = vec![0u8; data.len()];
+        f.read_at_all(&mut back).unwrap();
+        assert_eq!(back, data);
+        let d = world.fabric().metrics.snapshot().since(&m0);
+        assert_eq!(d.io_indep_fallback, 8, "4 ranks × (write + read)");
+        assert_eq!(d.io_coll_ops, 0, "aggregated path must not run");
+        assert_eq!(d.io_agg_file_ops, 0);
+    });
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn ds_threshold_env_switches_sieve() {
+    // MPIX_IO_DS_THRESHOLD observably switches the holey-domain
+    // strategy: a big threshold sieves (read-modify-write, 2 file ops),
+    // 0 writes each contiguous run separately — and either way the
+    // bytes in the holes survive.
+    for (thresh, expect_sieve) in [("4096", true), ("0", false)] {
+        std::env::set_var("MPIX_IO_DS_THRESHOLD", thresh);
+        let path = tmp(&format!("sieve{thresh}"));
+        std::fs::write(&path, vec![0xEEu8; 64]).unwrap();
+        let counts = Universe::run(Universe::with_ranks(1), |world| {
+            let f = File::open(&world, &path).unwrap();
+            // Two 8-byte blocks with a 24-byte hole between them.
+            let ft = Datatype::hindexed(&[(0, 8), (32, 8)], &Datatype::u8());
+            f.set_view(0, &ft);
+            let m0 = world.fabric().metrics.snapshot();
+            assert_eq!(f.write_at_all(&[0xAA; 16]).unwrap(), 16);
+            let d = world.fabric().metrics.snapshot().since(&m0);
+            (d.io_sieve_rmw, d.io_coll_ops, d.io_agg_file_ops)
+        });
+        std::env::remove_var("MPIX_IO_DS_THRESHOLD");
+        let (sieve, ops, file_ops) = counts[0];
+        assert_eq!(ops, 1);
+        if expect_sieve {
+            assert!(sieve >= 1, "threshold {thresh}: sieve RMW expected");
+            assert_eq!(file_ops, 2, "one read + one write");
+        } else {
+            assert_eq!(sieve, 0, "threshold {thresh}: sieving disabled");
+            assert_eq!(file_ops, 2, "one write per run");
+        }
+        // Hole bytes preserved under both strategies.
+        let all = std::fs::read(&path).unwrap();
+        assert!(all[0..8].iter().all(|&b| b == 0xAA), "first block");
+        assert!(all[8..32].iter().all(|&b| b == 0xEE), "hole preserved");
+        assert!(all[32..40].iter().all(|&b| b == 0xAA), "second block");
+        assert!(all[40..64].iter().all(|&b| b == 0xEE), "tail untouched");
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+#[test]
+fn comm_io_info_inherited_by_files_and_children() {
+    // The comm-level hint path: apply_io_info on the comm, files opened
+    // afterwards (and dup'd comms) inherit — mirroring apply_coll_info.
+    let path = tmp("inherit");
+    Universe::run(Universe::with_ranks(2), |world| {
+        let mut info = Info::new();
+        info.set("mpix_io_cb_nodes", "0");
+        world.apply_io_info(&info).unwrap();
+        assert_eq!(world.io_hints().cb_nodes(2), 0);
+        assert_eq!(world.dup().io_hints().cb_nodes(2), 0, "dup inherits");
+        let f = File::open(&world, &path).unwrap();
+        f.set_view(0, &Datatype::bytes(8));
+        let m0 = world.fabric().metrics.snapshot();
+        f.write_at_all(&[world.rank() as u8; 8]).unwrap();
+        let d = world.fabric().metrics.snapshot().since(&m0);
+        assert!(d.io_indep_fallback >= 1, "file inherited cb_nodes=0");
+    });
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn io_info_rejects_garbage_transactionally() {
+    let h = IoHints::new();
+    let mut info = Info::new();
+    info.set("mpix_io_cb_buffer_size", "65536");
+    info.set("mpix_io_cb_nodes", "many");
+    assert!(h.apply_info(&info).is_err());
+    // Transactional: the valid key was not applied either.
+    assert_eq!(h.cb_buffer_size(), DEFAULT_CB_BUFFER_SIZE);
+    assert_eq!(h.cb_nodes(8), 4, "default ⌈n/2⌉ untouched");
+}
+
+#[test]
+fn split_collective_overlaps_p2p() {
+    // iwrite_at_all_begin/end: the two-phase schedule runs behind a
+    // grequest; independent point-to-point traffic overlaps it without
+    // tag-space collisions (the exchange rides the collective context).
+    let path = tmp("split");
+    const BLK: usize = 16;
+    Universe::run(Universe::with_ranks(3), |world| {
+        let f = File::open(&world, &path).unwrap();
+        let me = world.rank();
+        let ft = interleaved_view(3, me, 4, BLK);
+        f.set_view(0, &ft);
+        let data = vec![me as u8 + 1; 4 * BLK];
+        let w = f.iwrite_at_all_begin(&data).unwrap();
+        // Overlapped user traffic on the same comm, same-numbered tags.
+        if me == 0 {
+            world.send(b"overlap", 1, 0).unwrap();
+        } else if me == 1 {
+            let mut b = [0u8; 7];
+            world.recv(&mut b, 0, 0).unwrap();
+            assert_eq!(&b, b"overlap");
+        }
+        assert_eq!(w.end().unwrap(), data.len());
+        // Split-collective read delivers the same bytes.
+        let r = f.iread_at_all_begin().unwrap();
+        let mut back = vec![0u8; data.len()];
+        assert_eq!(r.end(&mut back).unwrap(), data.len());
+        assert_eq!(back, data);
+    });
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn twophase_partial_writers() {
+    // Ranks with empty views still participate (deterministic receive
+    // counts): only even ranks write; odd ranks pass an empty view.
+    let path = tmp("partial");
+    Universe::run(Universe::with_ranks(4), |world| {
+        let me = world.rank();
+        let f = File::open(&world, &path).unwrap();
+        let writer = me % 2 == 0;
+        let ft = if writer {
+            // Rank 0 → bytes [0, 64); rank 2 → bytes [64, 128).
+            Datatype::struct_type(&[((me / 2 * 64) as isize, 1, Datatype::bytes(64))])
+        } else {
+            Datatype::bytes(0)
+        };
+        f.set_view(0, &ft);
+        let data = if writer { vec![me as u8 + 1; 64] } else { Vec::new() };
+        f.write_at_all(&data).unwrap();
+        let mut back = vec![0u8; data.len()];
+        f.read_at_all(&mut back).unwrap();
+        assert_eq!(back, data);
+        if me == 0 {
+            let all = std::fs::read(&path).unwrap();
+            assert!(all[0..64].iter().all(|&b| b == 1));
+            assert!(all[64..128].iter().all(|&b| b == 3));
+        }
+        f.sync().unwrap();
+    });
+    let _ = std::fs::remove_file(&path);
+}

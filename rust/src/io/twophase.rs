@@ -1,0 +1,478 @@
+//! Two-phase collective I/O (ROMIO's collective buffering).
+//!
+//! **Phase 1 (exchange):** every rank flattens its view over the file
+//! domains ([`crate::datatype::Datatype::iov_window`] per domain) and
+//! ships `(file offset, length)` pairs plus packed payload to the
+//! domain's aggregator over the collective context (`coll_isend` /
+//! `coll_recv` — the same tag-isolated channel the collectives use, so
+//! user wildcard receives can never intercept the exchange). Messages
+//! are length-prefixed by an 8-byte header message; each rank sends to
+//! each aggregator exactly once per domain (even when empty), so
+//! receive counts are deterministic and per-pair FIFO keeps domains in
+//! order with a single tag.
+//!
+//! **Phase 2 (aggregate):** each aggregator assembles the collected
+//! segments into large contiguous file operations, windowed by
+//! `cb_buffer_size` with data sieving for holey windows (`super::sieve`).
+//!
+//! Deadlock shape: all sends of a phase are posted nonblocking before
+//! any rank blocks in a receive, receives are served in (domain, rank)
+//! order on both sides, and read replies depend only on requests — so
+//! the wait-for graph is acyclic. A trailing barrier makes aggregator
+//! file operations globally visible before any rank returns.
+//!
+//! The split collectives (`iwrite_at_all_begin`/`end`,
+//! `iread_at_all_begin`/`end`) run the same schedule on a background
+//! task whose completion is observed by a grequest `poll_fn` — file
+//! I/O and the exchange both complete through the shared progress
+//! engine, the "MPI Progress For All" motivation.
+
+use super::sieve::{self, AggSeg};
+use super::view::{self, FileDomains, Seg};
+use super::FileInner;
+use crate::coll::{self, CommLike};
+use crate::datatype::Datatype;
+use crate::error::{MpiError, Result};
+use crate::grequest::grequest_start;
+use crate::metrics::Metrics;
+use crate::request::{Request, Status};
+use crate::util::pool::PooledBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Snapshot of everything one collective call needs. Hints must be set
+/// symmetrically (documented contract), so every rank computes the same
+/// plan from the same allgathered range.
+struct Plan {
+    dom: FileDomains,
+    per_dom: Vec<Vec<Seg>>,
+    cb_buffer: usize,
+    ds_threshold: usize,
+    tag: i32,
+}
+
+/// Agree on the global byte range and partition it. `Ok(None)` means no
+/// rank has data (nothing to do). Consumes collective ordinals
+/// symmetrically on every rank.
+fn make_plan(fi: &FileInner, ft: &Datatype, disp: u64, cb_nodes: usize) -> Result<Option<Plan>> {
+    let comm = &fi.comm;
+    let n = CommLike::size(comm);
+    let mine = match view::local_range(ft, disp) {
+        Some((lo, hi)) => [lo, hi],
+        None => [u64::MAX, 0],
+    };
+    let mut all = vec![0u64; 2 * n];
+    coll::allgather_t(comm, &mine, &mut all)?;
+    let mut glo = u64::MAX;
+    let mut ghi = 0u64;
+    for r in 0..n {
+        if all[2 * r] != u64::MAX {
+            glo = glo.min(all[2 * r]);
+            ghi = ghi.max(all[2 * r + 1]);
+        }
+    }
+    if ghi <= glo {
+        return Ok(None);
+    }
+    let dom = FileDomains::partition(glo, ghi, cb_nodes, n);
+    let per_dom = view::split_view_by_domains(ft, disp, &dom);
+    Ok(Some(Plan {
+        dom,
+        per_dom,
+        cb_buffer: fi.hints.cb_buffer_size(),
+        ds_threshold: fi.hints.ds_threshold(),
+        tag: comm.next_coll_tag(),
+    }))
+}
+
+fn view_snapshot(fi: &FileInner) -> (u64, Datatype) {
+    let v = fi.view.lock().unwrap();
+    (v.disp, v.filetype.clone())
+}
+
+/// Receive one length-prefixed exchange message from `src` into a
+/// pooled buffer.
+fn recv_msg(fi: &FileInner, src: usize, tag: i32) -> Result<PooledBuf> {
+    let comm = &fi.comm;
+    let mut lb = [0u8; 8];
+    comm.coll_recv(&mut lb, src, tag)?;
+    let blen = u64::from_le_bytes(lb) as usize;
+    let mut b = fi.acquire_buf(blen.max(8));
+    b.resize_zeroed(blen);
+    comm.coll_recv(&mut b[..], src, tag)?;
+    Ok(b)
+}
+
+/// `MPI_File_write_at_all`: collective two-phase write through the view.
+pub(crate) fn write_at_all(fi: &Arc<FileInner>, data: &[u8]) -> Result<usize> {
+    let (disp, ft) = view_snapshot(fi);
+    if data.len() != ft.size() {
+        return Err(MpiError::SizeMismatch(format!(
+            "write_at_all: {} bytes given, view selects {}",
+            data.len(),
+            ft.size()
+        )));
+    }
+    let comm = &fi.comm;
+    let n = CommLike::size(comm);
+    let me = CommLike::rank(comm);
+    let m = fi.metrics();
+    let cb_nodes = fi.hints.cb_nodes(n);
+    if cb_nodes == 0 {
+        // Collective buffering disabled: independent strided ops, with
+        // the trailing barrier preserving the "all data visible on
+        // return" collective contract.
+        Metrics::bump(&m.io_indep_fallback);
+        let written = fi.independent_write(data)?;
+        coll::barrier(comm)?;
+        return Ok(written);
+    }
+    let Some(plan) = make_plan(fi, &ft, disp, cb_nodes)? else {
+        coll::barrier(comm)?;
+        return Ok(0);
+    };
+    Metrics::bump(&m.io_coll_ops);
+    let ndom = plan.dom.ndomains();
+    // Phase 1a: ship segments + payload to every non-self aggregator
+    // (empty messages included — deterministic receive counts).
+    let mut bodies: Vec<Vec<u8>> = Vec::with_capacity(ndom);
+    for d in 0..ndom {
+        bodies.push(if plan.dom.aggs[d] == me {
+            Vec::new()
+        } else {
+            view::encode_write_msg(&plan.per_dom[d], data)
+        });
+    }
+    let lens: Vec<[u8; 8]> = bodies.iter().map(|b| (b.len() as u64).to_le_bytes()).collect();
+    let mut sreqs = Vec::new();
+    for d in 0..ndom {
+        let dst = plan.dom.aggs[d];
+        if dst != me {
+            sreqs.push(comm.coll_isend(&lens[d], dst, plan.tag)?);
+            sreqs.push(comm.coll_isend(&bodies[d], dst, plan.tag)?);
+        }
+    }
+    // Phase 1b + 2: collect my domains and flush them.
+    for d in 0..ndom {
+        if plan.dom.aggs[d] != me {
+            continue;
+        }
+        let mut msg_bufs: Vec<Option<PooledBuf>> = Vec::with_capacity(n);
+        let mut bases: Vec<usize> = Vec::with_capacity(n);
+        let mut segs: Vec<AggSeg> = Vec::new();
+        for r in 0..n {
+            if r == me {
+                // Local contribution: segments reference `data`
+                // directly — no encode, no extra copy.
+                for s in &plan.per_dom[d] {
+                    segs.push(AggSeg {
+                        file_off: s.file_off,
+                        len: s.len,
+                        origin: r,
+                        payload_off: s.local_off,
+                    });
+                }
+                msg_bufs.push(None);
+                bases.push(0);
+                continue;
+            }
+            let buf = recv_msg(fi, r, plan.tag)?;
+            let (pairs, base) = view::decode_pairs(&buf)?;
+            let mut poff = 0usize;
+            for (off, len) in pairs {
+                if len > 0 {
+                    segs.push(AggSeg {
+                        file_off: off,
+                        len,
+                        origin: r,
+                        payload_off: poff,
+                    });
+                }
+                poff += len;
+            }
+            msg_bufs.push(Some(buf));
+            bases.push(base);
+        }
+        if !segs.is_empty() {
+            let payloads: Vec<&[u8]> = msg_bufs
+                .iter()
+                .zip(&bases)
+                .map(|(b, &base)| match b {
+                    Some(p) => &p[base..],
+                    None => data,
+                })
+                .collect();
+            sieve::write_domain(fi, &mut segs, &payloads, plan.cb_buffer, plan.ds_threshold)?;
+        }
+    }
+    for req in sreqs {
+        req.wait()?;
+    }
+    // All aggregator writes are in the file before anyone returns.
+    coll::barrier(comm)?;
+    Ok(data.len())
+}
+
+/// `MPI_File_read_at_all`: collective two-phase read through the view.
+pub(crate) fn read_at_all(fi: &Arc<FileInner>, out: &mut [u8]) -> Result<usize> {
+    let (disp, ft) = view_snapshot(fi);
+    if out.len() != ft.size() {
+        return Err(MpiError::SizeMismatch(format!(
+            "read_at_all: {} bytes given, view selects {}",
+            out.len(),
+            ft.size()
+        )));
+    }
+    let comm = &fi.comm;
+    let n = CommLike::size(comm);
+    let me = CommLike::rank(comm);
+    let m = fi.metrics();
+    let cb_nodes = fi.hints.cb_nodes(n);
+    if cb_nodes == 0 {
+        Metrics::bump(&m.io_indep_fallback);
+        let read = fi.independent_read(out)?;
+        coll::barrier(comm)?;
+        return Ok(read);
+    }
+    let Some(plan) = make_plan(fi, &ft, disp, cb_nodes)? else {
+        coll::barrier(comm)?;
+        return Ok(0);
+    };
+    Metrics::bump(&m.io_coll_ops);
+    let ndom = plan.dom.ndomains();
+    // Phase 1a: requests to every non-self aggregator.
+    let mut req_bodies: Vec<Vec<u8>> = Vec::with_capacity(ndom);
+    for d in 0..ndom {
+        req_bodies.push(if plan.dom.aggs[d] == me {
+            Vec::new()
+        } else {
+            view::encode_read_req(&plan.per_dom[d])
+        });
+    }
+    let lens: Vec<[u8; 8]> = req_bodies.iter().map(|b| (b.len() as u64).to_le_bytes()).collect();
+    let mut sreqs = Vec::new();
+    for d in 0..ndom {
+        let dst = plan.dom.aggs[d];
+        if dst != me {
+            sreqs.push(comm.coll_isend(&lens[d], dst, plan.tag)?);
+            sreqs.push(comm.coll_isend(&req_bodies[d], dst, plan.tag)?);
+        }
+    }
+    // Phase 2: serve my domains — collect requests, read windows
+    // (sieved), fill per-origin reply buffers. Self replies scatter
+    // straight into `out`.
+    let mut reply_bufs: Vec<PooledBuf> = Vec::new();
+    let mut reply_dst: Vec<usize> = Vec::new();
+    for d in 0..ndom {
+        if plan.dom.aggs[d] != me {
+            continue;
+        }
+        let mut segs: Vec<AggSeg> = Vec::new();
+        let mut replies: Vec<PooledBuf> = Vec::with_capacity(n);
+        for r in 0..n {
+            let pairs = if r == me {
+                plan.per_dom[d]
+                    .iter()
+                    .map(|s| (s.file_off, s.len))
+                    .collect::<Vec<_>>()
+            } else {
+                let buf = recv_msg(fi, r, plan.tag)?;
+                view::decode_pairs(&buf)?.0
+            };
+            let mut poff = 0usize;
+            for (off, len) in &pairs {
+                if *len > 0 {
+                    segs.push(AggSeg {
+                        file_off: *off,
+                        len: *len,
+                        origin: r,
+                        payload_off: poff,
+                    });
+                }
+                poff += len;
+            }
+            let mut rep = fi.acquire_buf(poff.max(1));
+            rep.resize_zeroed(poff);
+            replies.push(rep);
+        }
+        if !segs.is_empty() {
+            sieve::read_domain(fi, &mut segs, &mut replies, plan.cb_buffer, plan.ds_threshold)?;
+        }
+        for (r, rep) in replies.into_iter().enumerate() {
+            if rep.is_empty() {
+                continue;
+            }
+            if r == me {
+                // Scatter my own bytes now (reply order == per_dom[d]
+                // segment order by construction).
+                let mut cursor = 0usize;
+                for s in &plan.per_dom[d] {
+                    out[s.local_off..s.local_off + s.len]
+                        .copy_from_slice(&rep[cursor..cursor + s.len]);
+                    cursor += s.len;
+                }
+            } else {
+                reply_bufs.push(rep);
+                reply_dst.push(r);
+            }
+        }
+    }
+    // Phase 3a: replies out (buffers are stable now — no further pushes
+    // while requests borrow them).
+    let mut rreqs = Vec::new();
+    for (buf, &dst) in reply_bufs.iter().zip(&reply_dst) {
+        rreqs.push(comm.coll_isend(&buf[..], dst, plan.tag)?);
+    }
+    // Phase 3b: my replies in, in domain order (matching each
+    // aggregator's send order — per-pair FIFO does the rest).
+    for d in 0..ndom {
+        let agg = plan.dom.aggs[d];
+        if agg == me {
+            continue;
+        }
+        let expect: usize = plan.per_dom[d].iter().map(|s| s.len).sum();
+        if expect == 0 {
+            continue;
+        }
+        let mut rep = fi.acquire_buf(expect);
+        rep.resize_zeroed(expect);
+        comm.coll_recv(&mut rep[..], agg, plan.tag)?;
+        let mut cursor = 0usize;
+        for s in &plan.per_dom[d] {
+            out[s.local_off..s.local_off + s.len].copy_from_slice(&rep[cursor..cursor + s.len]);
+            cursor += s.len;
+        }
+    }
+    for req in sreqs {
+        req.wait()?;
+    }
+    for req in rreqs {
+        req.wait()?;
+    }
+    coll::barrier(comm)?;
+    Ok(out.len())
+}
+
+// ------------------------------------------------- split collectives
+
+struct SplitState<T> {
+    done: AtomicBool,
+    result: Mutex<Option<Result<T>>>,
+}
+
+impl<T> SplitState<T> {
+    fn new() -> Arc<SplitState<T>> {
+        Arc::new(SplitState {
+            done: AtomicBool::new(false),
+            result: Mutex::new(None),
+        })
+    }
+}
+
+fn split_greq<T: Send + 'static>(fi: &FileInner, state: &Arc<SplitState<T>>) -> Request<'static> {
+    let st = Arc::clone(state);
+    grequest_start(
+        &fi.comm,
+        Box::new(move || st.done.load(Ordering::Acquire).then(Status::empty)),
+        None,
+    )
+}
+
+fn take_result<T>(state: &SplitState<T>) -> Result<T> {
+    state.result.lock().unwrap().take().unwrap_or_else(|| {
+        Err(MpiError::Internal(
+            "split collective produced no result".into(),
+        ))
+    })
+}
+
+/// In-flight split-collective write (`MPI_File_iwrite_at_all` shape):
+/// the schedule runs on a background task; completion is observed by a
+/// grequest `poll_fn` through the progress engine. [`SplitWrite::end`]
+/// must be called (dropping without `end` still completes, like any
+/// abandoned request).
+pub struct SplitWrite {
+    req: Option<Request<'static>>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    state: Arc<SplitState<usize>>,
+}
+
+pub(crate) fn iwrite_at_all_begin(fi: &Arc<FileInner>, data: &[u8]) -> Result<SplitWrite> {
+    let state = SplitState::new();
+    let fi2 = Arc::clone(fi);
+    let data = data.to_vec();
+    let st2 = Arc::clone(&state);
+    let worker = std::thread::spawn(move || {
+        let r = write_at_all(&fi2, &data);
+        *st2.result.lock().unwrap() = Some(r);
+        st2.done.store(true, Ordering::Release);
+    });
+    let req = split_greq(fi, &state);
+    Ok(SplitWrite {
+        req: Some(req),
+        worker: Some(worker),
+        state,
+    })
+}
+
+impl SplitWrite {
+    /// `MPI_File_write_at_all_end`: wait through the progress engine,
+    /// join the worker, surface the result.
+    pub fn end(mut self) -> Result<usize> {
+        self.req.take().expect("end consumes the request").wait()?;
+        if let Some(w) = self.worker.take() {
+            w.join()
+                .map_err(|_| MpiError::Internal("split-collective worker panicked".into()))?;
+        }
+        take_result(&self.state)
+    }
+}
+
+/// In-flight split-collective read; bytes are buffered internally and
+/// delivered by [`SplitRead::end`].
+pub struct SplitRead {
+    req: Option<Request<'static>>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    state: Arc<SplitState<Vec<u8>>>,
+}
+
+pub(crate) fn iread_at_all_begin(fi: &Arc<FileInner>) -> Result<SplitRead> {
+    let state = SplitState::new();
+    let fi2 = Arc::clone(fi);
+    let st2 = Arc::clone(&state);
+    let worker = std::thread::spawn(move || {
+        let size = fi2.view.lock().unwrap().filetype.size();
+        let mut buf = vec![0u8; size];
+        let r = read_at_all(&fi2, &mut buf).map(|_| buf);
+        *st2.result.lock().unwrap() = Some(r);
+        st2.done.store(true, Ordering::Release);
+    });
+    let req = split_greq(fi, &state);
+    Ok(SplitRead {
+        req: Some(req),
+        worker: Some(worker),
+        state,
+    })
+}
+
+impl SplitRead {
+    /// `MPI_File_read_at_all_end`: deliver the bytes into `out` (must be
+    /// exactly the view's size).
+    pub fn end(mut self, out: &mut [u8]) -> Result<usize> {
+        self.req.take().expect("end consumes the request").wait()?;
+        if let Some(w) = self.worker.take() {
+            w.join()
+                .map_err(|_| MpiError::Internal("split-collective worker panicked".into()))?;
+        }
+        let data = take_result(&self.state)?;
+        if out.len() != data.len() {
+            return Err(MpiError::SizeMismatch(format!(
+                "read_at_all_end: {} bytes given, view selects {}",
+                out.len(),
+                data.len()
+            )));
+        }
+        out.copy_from_slice(&data);
+        Ok(data.len())
+    }
+}

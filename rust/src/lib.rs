@@ -25,7 +25,7 @@
 //! | Layer | Modules |
 //! |---|---|
 //! | Launcher: N ranks as threads over one fabric | [`universe`] |
-//! | API surface: communicators, requests, collectives, RMA, IO | [`comm`], [`request`], [`coll`], [`rma`], [`io`], [`datatype`], [`info`] |
+//! | API surface: communicators, requests, collectives, RMA, two-phase IO | [`comm`], [`request`], [`coll`], [`rma`], [`io`], [`datatype`], [`info`] |
 //! | Paper extensions | [`grequest`] (1), [`datatype`] (2), [`stream`] (3), [`enqueue`] + [`offload`] (4), [`threadcomm`] (5), [`progress`] (6) |
 //! | Transport: endpoints/VCIs, channels, matching | [`fabric`], [`matching`] |
 //! | Substrate: SPSC ring, chunk pool, counters | [`util::spsc`], [`util::pool`], [`metrics`] |
@@ -37,6 +37,15 @@
 //! by `MPIX_COLL_<OP>` env overrides, `mpix_coll_<op>` info keys, or a
 //! size heuristic, with per-algorithm dispatch counters in
 //! [`metrics::Metrics`].
+//!
+//! MPI-IO ([`io`]) is the ROMIO-shaped consumer of the grequest and
+//! iovec extensions: `write_at_all`/`read_at_all` run **two-phase
+//! collective I/O** — file domains owned by `mpix_io_cb_nodes`
+//! aggregators, alltoallv-style exchange over the collective context,
+//! data sieving for holey domains — with split collectives
+//! (`iwrite_at_all_begin`/`end`) completed by grequest `poll_fn`s, and
+//! `mpix_io_*` / `MPIX_IO_*` tunables resolved like the collective
+//! overrides ([`io::IoHints`]).
 //!
 //! # Hot path
 //!

@@ -2,11 +2,21 @@
 //! MPI wildcard semantics (`ANY_SOURCE`, `ANY_TAG`) extended with the
 //! paper's stream-index matching (multiplex stream comms, `ANY_STREAM`)
 //! which also carries threadcomm sub-rank addressing.
+//!
+//! Both queues are **binned by the concrete matching key**
+//! `(ctx, src, tag, dst_stream)` so the common case — a
+//! concrete receive meeting a concrete arrival — is one hash lookup
+//! instead of an O(queue-depth) scan (the two-phase I/O aggregator
+//! exchange posts deep queues of distinct-tag receives, exactly the
+//! workload the old linear scan degraded on). Wildcard receives take a
+//! fallback path that scans bin fronts / the wildcard list, and a
+//! per-engine monotonic sequence number keeps MPI's oldest-first
+//! ordering exact across the two classes.
 
 use crate::fabric::{Envelope, Payload, RecvPtr};
 use crate::request::{ReqInner, Status};
 use crate::{MpiError, ANY_SOURCE, ANY_STREAM, ANY_TAG};
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
 
 /// A posted (pending) receive.
@@ -55,10 +65,75 @@ pub enum MatchAction {
     },
 }
 
+/// Bin key: `(ctx, src, tag, dst_stream)`. `src_stream` is deliberately
+/// **not** part of the key — almost every receive in the runtime posts
+/// `ANY_STREAM` (plain `irecv`, collective receives), so keying on it
+/// would push the entire workload onto the wildcard fallback. The rare
+/// concrete `src_stream` filter (multiplex stream comms) is resolved by
+/// an in-bin scan instead.
+type MatchKey = (u32, u32, i32, i32);
+
+fn env_key(env: &Envelope) -> MatchKey {
+    (env.hdr.ctx, env.hdr.src, env.hdr.tag, env.hdr.dst_stream)
+}
+
+/// True iff `posted` maps to exactly one bin: source and tag concrete
+/// (`dst_stream` is always exact-match; `src_stream` is an in-bin
+/// filter, not a key component).
+fn is_binnable(posted: &PostedRecv) -> bool {
+    posted.src != ANY_SOURCE && posted.tag != ANY_TAG
+}
+
+fn posted_key(posted: &PostedRecv) -> MatchKey {
+    (posted.ctx, posted.src as u32, posted.tag, posted.dst_stream)
+}
+
+/// Whether a (possibly wildcard) posted pattern admits a bin key on the
+/// keyed fields. Envelopes within one bin differ only in `src_stream`,
+/// which [`stream_admits`] checks separately.
+fn key_matches(posted: &PostedRecv, k: &MatchKey) -> bool {
+    k.0 == posted.ctx
+        && (posted.src == ANY_SOURCE || posted.src == k.1 as i32)
+        && (posted.tag == ANY_TAG || posted.tag == k.2)
+        && posted.dst_stream == k.3
+}
+
+fn stream_admits(posted: &PostedRecv, env: &Envelope) -> bool {
+    posted.src_stream == ANY_STREAM || posted.src_stream == env.hdr.src_stream
+}
+
+struct SeqEnv {
+    seq: u64,
+    env: Envelope,
+}
+
+struct SeqPosted {
+    seq: u64,
+    posted: PostedRecv,
+}
+
 /// Per-endpoint (or per-threadcomm-thread) matching engine.
+///
+/// Empty bins are removed eagerly: collective traffic mints a fresh tag
+/// per operation, so keys churn and a leaky map would grow without
+/// bound.
 pub struct MatchEngine {
-    posted: VecDeque<PostedRecv>,
-    unexpected: VecDeque<Envelope>,
+    /// Source/tag-concrete posted receives, binned by key (FIFO within a
+    /// bin — and a concrete arrival can only ever match one bin; the
+    /// in-bin `src_stream` filter is checked front-to-back, which is a
+    /// no-op in the common all-`ANY_STREAM` case).
+    posted_bins: HashMap<MatchKey, VecDeque<SeqPosted>>,
+    /// Posted receives with a source or tag wildcard, in post order: the
+    /// fallback scan, compared against the bin candidate by sequence
+    /// number so oldest-posted still wins.
+    posted_wild: VecDeque<SeqPosted>,
+    posted_count: usize,
+    /// Unexpected envelopes binned by their concrete key (FIFO per bin
+    /// ≙ arrival order per key; cross-bin order via `seq`).
+    unexpected_bins: HashMap<MatchKey, VecDeque<SeqEnv>>,
+    unexpected_count: usize,
+    /// Monotonic post/arrival ordinal within this engine.
+    seq: u64,
 }
 
 impl Default for MatchEngine {
@@ -70,76 +145,147 @@ impl Default for MatchEngine {
 impl MatchEngine {
     pub fn new() -> Self {
         Self {
-            posted: VecDeque::new(),
-            unexpected: VecDeque::new(),
+            posted_bins: HashMap::new(),
+            posted_wild: VecDeque::new(),
+            posted_count: 0,
+            unexpected_bins: HashMap::new(),
+            unexpected_count: 0,
+            seq: 0,
         }
     }
 
     pub fn posted_len(&self) -> usize {
-        self.posted.len()
+        self.posted_count
     }
 
     pub fn unexpected_len(&self) -> usize {
-        self.unexpected.len()
+        self.unexpected_count
     }
 
-    /// Deliver an incoming envelope: match against posted receives (in
-    /// post order) or queue as unexpected.
+    fn next_seq(&mut self) -> u64 {
+        self.seq += 1;
+        self.seq
+    }
+
+    /// Deliver an incoming envelope: match the **oldest** posted receive
+    /// that accepts it — one bin lookup (plus the wildcard-list scan
+    /// when wildcard receives are outstanding) — or queue as unexpected.
     pub fn deliver(&mut self, env: Envelope) -> Option<MatchAction> {
-        if let Some(pos) = self.posted.iter().position(|p| p.matches(&env)) {
-            let posted = self.posted.remove(pos).unwrap();
-            Some(finish_match(posted, env))
-        } else {
-            self.unexpected.push_back(env);
-            None
-        }
-    }
-
-    /// Post a receive: first search the unexpected queue (arrival order),
-    /// otherwise append to the posted queue.
-    pub fn post(&mut self, posted: PostedRecv) -> Option<MatchAction> {
-        if let Some(pos) = self.unexpected.iter().position(|e| posted.matches(e)) {
-            let env = self.unexpected.remove(pos).unwrap();
-            Some(finish_match(posted, env))
-        } else {
-            self.posted.push_back(posted);
-            None
-        }
-    }
-
-    /// `MPI_Iprobe`: peek the unexpected queue for a matching message
-    /// without receiving it. Returns its (source, tag, len).
-    pub fn probe(&self, ctx: u32, src: i32, tag: i32, dst_stream: i32) -> Option<Status> {
-        let pat = ProbePattern {
-            ctx,
-            src,
-            tag,
-            dst_stream,
-        };
-        self.unexpected
+        let key = env_key(&env);
+        // Oldest admissible entry in the exact bin: front-to-back until
+        // the src_stream filter passes (index 0 when no multiplex
+        // filters are in play).
+        let bin = self.posted_bins.get(&key).and_then(|q| {
+            q.iter()
+                .position(|p| stream_admits(&p.posted, &env))
+                .map(|i| (i, q[i].seq))
+        });
+        // First matching wildcard is the oldest wildcard candidate
+        // (post order).
+        let wild = self
+            .posted_wild
             .iter()
-            .find(|e| pat.matches(e))
-            .map(|e| Status {
-                source: e.hdr.src as i32,
-                tag: e.hdr.tag,
-                len: e.data_len(),
-            })
+            .position(|p| p.posted.matches(&env))
+            .map(|i| (i, self.posted_wild[i].seq));
+        let use_bin = match (bin, wild) {
+            (Some((_, b)), Some((_, w))) => b < w,
+            (Some(_), None) => true,
+            (None, Some(_)) => false,
+            (None, None) => {
+                let seq = self.next_seq();
+                self.unexpected_bins
+                    .entry(key)
+                    .or_default()
+                    .push_back(SeqEnv { seq, env });
+                self.unexpected_count += 1;
+                return None;
+            }
+        };
+        let posted = if use_bin {
+            let (i, _) = bin.unwrap();
+            let q = self.posted_bins.get_mut(&key).unwrap();
+            let p = q.remove(i).unwrap();
+            if q.is_empty() {
+                self.posted_bins.remove(&key);
+            }
+            p.posted
+        } else {
+            let (i, _) = wild.unwrap();
+            self.posted_wild.remove(i).unwrap().posted
+        };
+        self.posted_count -= 1;
+        Some(finish_match(posted, env))
     }
-}
 
-struct ProbePattern {
-    ctx: u32,
-    src: i32,
-    tag: i32,
-    dst_stream: i32,
-}
+    /// Post a receive: match the **oldest** unexpected envelope it
+    /// accepts — for a source/tag-concrete pattern that is one bin
+    /// (front-to-back through the `src_stream` filter); a wildcard
+    /// pattern compares the oldest admissible entry of every admissible
+    /// bin — otherwise enqueue the receive.
+    pub fn post(&mut self, posted: PostedRecv) -> Option<MatchAction> {
+        let hit = if is_binnable(&posted) {
+            let key = posted_key(&posted);
+            self.unexpected_bins.get(&key).and_then(|q| {
+                q.iter()
+                    .position(|e| stream_admits(&posted, &e.env))
+                    .map(|i| (key, i))
+            })
+        } else {
+            // Wildcard-aware fallback: per admissible bin, the oldest
+            // admissible entry; globally, the min seq among those.
+            self.unexpected_bins
+                .iter()
+                .filter(|(k, _)| key_matches(&posted, k))
+                .filter_map(|(k, q)| {
+                    q.iter()
+                        .position(|e| stream_admits(&posted, &e.env))
+                        .map(|i| (q[i].seq, *k, i))
+                })
+                .min()
+                .map(|(_, k, i)| (k, i))
+        };
+        if let Some((key, i)) = hit {
+            let q = self.unexpected_bins.get_mut(&key).unwrap();
+            let env = q.remove(i).unwrap().env;
+            if q.is_empty() {
+                self.unexpected_bins.remove(&key);
+            }
+            self.unexpected_count -= 1;
+            return Some(finish_match(posted, env));
+        }
+        let seq = self.next_seq();
+        if is_binnable(&posted) {
+            self.posted_bins
+                .entry(posted_key(&posted))
+                .or_default()
+                .push_back(SeqPosted { seq, posted });
+        } else {
+            self.posted_wild.push_back(SeqPosted { seq, posted });
+        }
+        self.posted_count += 1;
+        None
+    }
 
-impl ProbePattern {
-    fn matches(&self, env: &Envelope) -> bool {
-        env.hdr.ctx == self.ctx
-            && (self.src == ANY_SOURCE || self.src == env.hdr.src as i32)
-            && (self.tag == ANY_TAG || self.tag == env.hdr.tag)
-            && self.dst_stream == env.hdr.dst_stream
+    /// `MPI_Iprobe`: peek the unexpected queue for the oldest matching
+    /// message without receiving it. Returns its (source, tag, len).
+    /// The probe pattern never filters on `src_stream`, so the oldest
+    /// entry of any admissible bin is its front.
+    pub fn probe(&self, ctx: u32, src: i32, tag: i32, dst_stream: i32) -> Option<Status> {
+        self.unexpected_bins
+            .iter()
+            .filter(|(k, _)| {
+                k.0 == ctx
+                    && (src == ANY_SOURCE || src == k.1 as i32)
+                    && (tag == ANY_TAG || tag == k.2)
+                    && dst_stream == k.3
+            })
+            .filter_map(|(_, q)| q.front())
+            .min_by_key(|e| e.seq)
+            .map(|e| Status {
+                source: e.env.hdr.src as i32,
+                tag: e.env.hdr.tag,
+                len: e.env.data_len(),
+            })
     }
 }
 
@@ -337,6 +483,87 @@ mod tests {
             req.take_result(),
             Err(MpiError::Truncate { .. })
         ));
+    }
+
+    #[test]
+    fn deep_queue_distinct_tags_regression() {
+        // The aggregator-exchange workload: hundreds of outstanding
+        // receives with distinct tags, arrivals in adversarial (reverse)
+        // order. Every match must pair the right tag with the right
+        // buffer — and with bins this is O(1) per event, not O(depth).
+        const N: usize = 512;
+        let mut m = MatchEngine::new();
+        let mut bufs = vec![[0u8; 8]; N];
+        let mut reqs = Vec::with_capacity(N);
+        for (i, b) in bufs.iter_mut().enumerate() {
+            let (p, r) = posted(5, 1, i as i32, b);
+            assert!(m.post(p).is_none());
+            reqs.push(r);
+        }
+        assert_eq!(m.posted_len(), N);
+        for i in (0..N).rev() {
+            let payload = [i as u8, (i >> 8) as u8];
+            assert!(m.deliver(env(5, 1, i as i32, &payload)).is_some());
+        }
+        assert_eq!(m.posted_len(), 0);
+        for (i, r) in reqs.iter().enumerate() {
+            assert!(r.is_complete(), "tag {i} not completed");
+            assert_eq!(r.status().tag, i as i32);
+            assert_eq!(bufs[i][..2], [i as u8, (i >> 8) as u8], "tag {i} data");
+        }
+        // Deep unexpected side: reverse-order arrivals, then posts.
+        for i in (0..N).rev() {
+            assert!(m.deliver(env(7, 2, i as i32, &[i as u8])).is_none());
+        }
+        assert_eq!(m.unexpected_len(), N);
+        for i in 0..N {
+            let mut b = [0u8; 4];
+            let (p, r) = posted(7, 2, i as i32, &mut b);
+            assert!(m.post(p).is_some());
+            assert!(r.is_complete());
+            assert_eq!(b[0], i as u8, "unexpected tag {i}");
+        }
+        assert_eq!(m.unexpected_len(), 0);
+    }
+
+    #[test]
+    fn wildcard_post_takes_oldest_across_bins() {
+        // Arrivals with distinct tags land in distinct bins; an ANY_TAG
+        // post must still receive the globally oldest arrival, not an
+        // arbitrary bin's.
+        let mut m = MatchEngine::new();
+        for t in [9, 3, 7] {
+            m.deliver(env(5, 1, t, &[t as u8]));
+        }
+        let mut b = [0u8; 4];
+        let (p, r) = posted(5, 1, ANY_TAG, &mut b);
+        assert!(m.post(p).is_some());
+        assert!(r.is_complete());
+        assert_eq!(r.status().tag, 9, "oldest arrival must match first");
+        // Probe also reports the oldest of what remains.
+        let st = m.probe(5, ANY_SOURCE, ANY_TAG, 0).unwrap();
+        assert_eq!(st.tag, 3);
+    }
+
+    #[test]
+    fn older_wildcard_beats_newer_concrete_posted() {
+        // MPI ordering: a matching envelope pairs with the OLDEST
+        // matching posted receive, regardless of which class (bin or
+        // wildcard list) holds it.
+        let mut m = MatchEngine::new();
+        let mut bw = [0u8; 4];
+        let (pw, rw) = posted(5, ANY_SOURCE, 1, &mut bw);
+        m.post(pw);
+        let mut bc = [0u8; 4];
+        let (pc, rc) = posted(5, 2, 1, &mut bc);
+        m.post(pc);
+        m.deliver(env(5, 2, 1, b"x"));
+        assert!(rw.is_complete(), "older wildcard must win");
+        assert!(!rc.is_complete());
+        // And the other way around: concrete posted first wins.
+        m.deliver(env(5, 2, 1, b"y"));
+        assert!(rc.is_complete());
+        assert_eq!(bc[0], b'y');
     }
 
     #[test]

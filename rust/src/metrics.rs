@@ -52,6 +52,21 @@ pub struct Metrics {
     pub coll_allgather_ring: AtomicU64,
     /// Allgather dispatches to recursive doubling.
     pub coll_allgather_recdbl: AtomicU64,
+    /// Two-phase collective I/O calls that ran the aggregated path
+    /// (per rank per `write_at_all`/`read_at_all`).
+    pub io_coll_ops: AtomicU64,
+    /// Bytes moved by aggregator file operations (two-phase phase 2).
+    pub io_agg_bytes: AtomicU64,
+    /// Aggregator file operations issued (one per contiguous domain
+    /// window in the hole-free case — the small-I/O-storm elimination
+    /// the two-phase path exists for).
+    pub io_agg_file_ops: AtomicU64,
+    /// Data-sieving read-modify-writes (holey write domains within the
+    /// `mpix_io_ds_threshold`).
+    pub io_sieve_rmw: AtomicU64,
+    /// Collective I/O calls that fell back to the independent per-rank
+    /// path (`mpix_io_cb_nodes = 0`).
+    pub io_indep_fallback: AtomicU64,
 }
 
 impl Metrics {
@@ -90,6 +105,11 @@ impl Metrics {
             coll_reduce_scatter_pairwise: self.coll_reduce_scatter_pairwise.load(Relaxed),
             coll_allgather_ring: self.coll_allgather_ring.load(Relaxed),
             coll_allgather_recdbl: self.coll_allgather_recdbl.load(Relaxed),
+            io_coll_ops: self.io_coll_ops.load(Relaxed),
+            io_agg_bytes: self.io_agg_bytes.load(Relaxed),
+            io_agg_file_ops: self.io_agg_file_ops.load(Relaxed),
+            io_sieve_rmw: self.io_sieve_rmw.load(Relaxed),
+            io_indep_fallback: self.io_indep_fallback.load(Relaxed),
         }
     }
 }
@@ -125,6 +145,14 @@ pub struct MetricsSnapshot {
     pub coll_reduce_scatter_pairwise: u64,
     pub coll_allgather_ring: u64,
     pub coll_allgather_recdbl: u64,
+    /// Two-phase collective I/O tallies (see `io::twophase`): aggregated
+    /// calls, aggregator bytes/file-ops, sieve RMWs, and independent
+    /// fallbacks — how tests prove the aggregated path actually ran.
+    pub io_coll_ops: u64,
+    pub io_agg_bytes: u64,
+    pub io_agg_file_ops: u64,
+    pub io_sieve_rmw: u64,
+    pub io_indep_fallback: u64,
 }
 
 impl MetricsSnapshot {
@@ -156,6 +184,11 @@ impl MetricsSnapshot {
                 - earlier.coll_reduce_scatter_pairwise,
             coll_allgather_ring: self.coll_allgather_ring - earlier.coll_allgather_ring,
             coll_allgather_recdbl: self.coll_allgather_recdbl - earlier.coll_allgather_recdbl,
+            io_coll_ops: self.io_coll_ops - earlier.io_coll_ops,
+            io_agg_bytes: self.io_agg_bytes - earlier.io_agg_bytes,
+            io_agg_file_ops: self.io_agg_file_ops - earlier.io_agg_file_ops,
+            io_sieve_rmw: self.io_sieve_rmw - earlier.io_sieve_rmw,
+            io_indep_fallback: self.io_indep_fallback - earlier.io_indep_fallback,
         }
     }
 }

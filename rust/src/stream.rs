@@ -130,6 +130,7 @@ pub fn stream_comm_create(comm: &Comm, stream: Option<&Stream>) -> Result<Comm> 
             coll_seq: AtomicU32::new(0),
             win_seq: AtomicU32::new(0),
             coll_sel: crate::coll::CollSelector::inherited(&comm.inner.coll_sel),
+            io_hints: crate::io::IoHints::inherited(&comm.inner.io_hints),
         }),
     })
 }
@@ -181,6 +182,7 @@ pub fn stream_comm_create_multiplex(comm: &Comm, streams: &[Stream]) -> Result<C
             coll_seq: AtomicU32::new(0),
             win_seq: AtomicU32::new(0),
             coll_sel: crate::coll::CollSelector::inherited(&comm.inner.coll_sel),
+            io_hints: crate::io::IoHints::inherited(&comm.inner.io_hints),
         }),
     })
 }

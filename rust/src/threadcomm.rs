@@ -285,14 +285,17 @@ impl ThreadComm {
                 deliver_local(sh, t, env, sh.parent.fabric());
                 Ok(())
             } else if buf.len() <= TC_EAGER_MAX {
-                // Mid-size eager: heap cell, still no rendezvous
+                // Mid-size eager: pooled heap cell (recycled through the
+                // tc route endpoint's chunk pool), still no rendezvous
                 // handshake and no sender request.
-                Metrics::bump(&sh.parent.fabric().metrics.eager_heap);
+                let fabric = sh.parent.fabric();
+                Metrics::bump(&fabric.metrics.eager_heap);
+                let me = (sh.parent.world_rank(sh.parent.rank()), tc_vci(fabric, ctx));
                 let env = Envelope {
                     hdr: self.hdr(ctx, tag, t),
-                    payload: Payload::Eager(buf.into()),
+                    payload: crate::comm::pooled_eager(fabric, me, buf),
                 };
-                deliver_local(sh, t, env, sh.parent.fabric());
+                deliver_local(sh, t, env, fabric);
                 Ok(())
             } else {
                 // Single-copy: receiver copies straight from our buffer;

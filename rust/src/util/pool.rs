@@ -1,9 +1,12 @@
-//! Recycling buffer pool for rendezvous chunk cells.
+//! Recycling buffer pool for message cells: rendezvous chunks, eager
+//! heap payloads, and the two-phase I/O aggregator's exchange buffers.
 //!
 //! `progress::pump_sends` used to allocate one `Box<[u8]>` per pipelined
 //! chunk and the receiver freed it after the copy-out — one heap
 //! round-trip per chunk, on the hottest large-message path in the
-//! runtime. This module replaces that with a per-endpoint pool:
+//! runtime. This module replaces that with a per-endpoint pool (the
+//! eager heap path `Payload::Eager` and `io::twophase` draw from the
+//! same pools):
 //!
 //! * the **sender** owns a [`LocalChunkPool`] inside its `EpState` and
 //!   [`LocalChunkPool::acquire`]s cells under the endpoint exclusion,
@@ -200,12 +203,27 @@ impl PooledBuf {
         data.clear();
         data.extend_from_slice(src);
     }
+
+    /// Resize the cell to `len` zeroed bytes (mutable-assembly use: the
+    /// two-phase I/O aggregator builds its collective buffer in place).
+    /// Reallocates only while the cell's capacity is still growing.
+    pub fn resize_zeroed(&mut self, len: usize) {
+        let data = &mut self.cell.as_mut().expect("cell present until drop").data;
+        data.clear();
+        data.resize(len, 0);
+    }
 }
 
 impl Deref for PooledBuf {
     type Target = [u8];
     fn deref(&self) -> &[u8] {
         &self.cell.as_ref().expect("cell present until drop").data
+    }
+}
+
+impl std::ops::DerefMut for PooledBuf {
+    fn deref_mut(&mut self) -> &mut [u8] {
+        &mut self.cell.as_mut().expect("cell present until drop").data
     }
 }
 
@@ -270,6 +288,23 @@ mod tests {
             assert!(pool.acquire(16).recycled());
         }
         assert_eq!(pool.shared().allocated(), 4);
+    }
+
+    #[test]
+    fn resize_zeroed_and_mutable_access() {
+        let mut pool = LocalChunkPool::new();
+        let mut a = pool.acquire(8);
+        a.copy_from(&[0xFFu8; 8]);
+        a.resize_zeroed(16);
+        assert_eq!(&a[..], &[0u8; 16]);
+        a[3] = 7;
+        a[15] = 9;
+        assert_eq!((a[3], a[15]), (7, 9));
+        drop(a);
+        // Recycled cell starts from the resize, not stale contents.
+        let mut b = pool.acquire(8);
+        b.resize_zeroed(4);
+        assert_eq!(&b[..], &[0u8; 4]);
     }
 
     #[test]

@@ -339,6 +339,57 @@ fn mutual_rendezvous_flood_tiny_rings() {
 }
 
 #[test]
+fn eager_heap_flood_recycles_pool() {
+    // Satellite of the pooled-eager change: heap eager payloads
+    // (INLINE_MAX < len ≤ eager_max) draw cells from the sender
+    // endpoint's chunk pool and the receiver's drop recycles them, so a
+    // tiny-ring flood allocates only ~ring-bound cells instead of one
+    // Box per message.
+    let cfg = FabricConfig {
+        nranks: 2,
+        channel_cap: 8,
+        ..Default::default()
+    };
+    Universe::run(cfg, |world| {
+        const N: usize = 2000;
+        const LEN: usize = 1024; // > INLINE_MAX (192), ≤ eager_max
+        if world.rank() == 0 {
+            let mut msg = vec![0u8; LEN];
+            for i in 0..N {
+                msg.fill(i as u8);
+                world.send(&msg, 1, 0).unwrap();
+            }
+            let mut ack = [0u8; 1];
+            world.recv(&mut ack, 1, 1).unwrap();
+        } else {
+            let mut buf = vec![0u8; LEN];
+            for i in 0..N {
+                world.recv(&mut buf, 0, 0).unwrap();
+                assert!(buf.iter().all(|&b| b == i as u8), "msg {i} corrupted");
+            }
+            world.send(&[1], 0, 1).unwrap();
+        }
+        coll::barrier(&world).unwrap();
+        let m = world.fabric().metrics.snapshot();
+        assert!(m.eager_heap >= N as u64, "eager heap path not taken");
+        let total = m.pool_hits + m.pool_misses;
+        assert!(total >= N as u64);
+        // Misses are bounded by the peak number of cells in flight: ring
+        // occupancy plus whatever a racing drain parks in the unexpected
+        // queue. Typically ≲20; the assertion admits scheduler luck on
+        // an oversubscribed box while a genuine recycling regression
+        // (one allocation per message ⇒ ~2000 misses) still fails.
+        let hit_rate = m.pool_hits as f64 / total as f64;
+        assert!(
+            hit_rate >= 0.95 || m.pool_misses <= 600,
+            "eager pool recycling broke: hit rate {hit_rate:.4} ({} hits / {} misses)",
+            m.pool_hits,
+            m.pool_misses
+        );
+    });
+}
+
+#[test]
 fn stream_lock_free_metrics() {
     // The stream path must not take locks per message (the paper's core
     // claim); compare lock deltas for the same traffic on both paths.
@@ -714,6 +765,62 @@ fn threadcomm_coll_info_forces_ring() {
         assert!(d.coll_allreduce_ring >= 2, "ring path not taken");
         assert_eq!(d.coll_allreduce_tree, 0, "tree path taken");
     });
+}
+
+#[test]
+fn threadcomm_stream_io_composition() {
+    // ROADMAP open item: threadcomm × streams composition. A stream
+    // comm derived alongside an active threadcomm runs a two-phase
+    // collective file write/read on each process's thread 0 (the
+    // stream's serial context) while all threadcomm ranks hammer
+    // allreduces — three tag spaces (the stream comm's collective
+    // context, the threadcomm context, and the I/O exchange) interleave
+    // without collisions or cross-matching.
+    let path = std::env::temp_dir().join(format!("mpixio_tcstream_{}", std::process::id()));
+    const BLK: usize = 16;
+    const BLOCKS: usize = 4;
+    Universe::run(Universe::with_ranks(2), |world| {
+        let s = Stream::create(&world, &Info::new()).unwrap();
+        let sc = stream_comm_create(&world, Some(&s)).unwrap();
+        let tc = Threadcomm::init(&world, 2).unwrap();
+        let me = sc.rank();
+        let v = Datatype::hvector(BLOCKS, BLK, (sc.size() * BLK) as isize, &Datatype::u8());
+        let ft = Datatype::struct_type(&[((me * BLK) as isize, 1, v)]);
+        let (sc, path, ft) = (&sc, &path, &ft);
+        std::thread::scope(|scope| {
+            for t in 0..2 {
+                let tc = &tc;
+                scope.spawn(move || {
+                    let h = tc.start();
+                    if t == 0 {
+                        // Thread 0 owns the stream's serial context:
+                        // collective I/O over the stream comm.
+                        let f = mpix::io::File::open(sc, path).unwrap();
+                        f.set_view(0, ft);
+                        let data = vec![me as u8 + 1; BLOCKS * BLK];
+                        assert_eq!(f.write_at_all(&data).unwrap(), data.len());
+                        let mut back = vec![0u8; data.len()];
+                        assert_eq!(f.read_at_all(&mut back).unwrap(), data.len());
+                        assert_eq!(back, data);
+                    }
+                    // Every thread rank allreduces concurrently with the
+                    // I/O collective.
+                    for round in 0..20u64 {
+                        let mut v = [h.rank() as u64 + round];
+                        coll::allreduce_t(&h, &mut v, |a, b| *a += *b).unwrap();
+                        assert_eq!(v[0], 6 + 4 * round, "round {round}");
+                    }
+                    h.finish();
+                });
+            }
+        });
+        // The aggregated path ran on the stream comm.
+        let m = world.fabric().metrics.snapshot();
+        assert!(m.io_coll_ops >= 2, "two-phase path did not run");
+        assert_eq!(m.io_indep_fallback, 0);
+        coll::barrier(&world).unwrap();
+    });
+    let _ = std::fs::remove_file(&path);
 }
 
 #[test]
