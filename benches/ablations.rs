@@ -33,7 +33,7 @@ fn vci_pool(n_shared: usize) -> f64 {
         max_streams: 2,
         ..Default::default()
     };
-    let rates = Universe::run(cfg, |world| {
+    let rates = Universe::builder().with_config(cfg).run(|world| {
         let comms: Vec<mpix::Comm> = (0..threads).map(|_| world.dup()).collect();
         let peer = 1 - world.rank();
         mpix::coll::barrier(&world).unwrap();
@@ -64,7 +64,7 @@ fn vci_pool(n_shared: usize) -> f64 {
 /// A5: per-op latency of one reduce_scatter schedule over 4 ranks.
 fn reduce_scatter_algo(blk: usize, pairwise: bool) -> f64 {
     const ITERS: usize = 200;
-    let out = Universe::run(Universe::with_ranks(4), |world| {
+    let out = Universe::builder().ranks(4).run(|world| {
         let send = vec![world.rank() as f64; 4 * blk];
         let mut recv = vec![0f64; blk];
         coll::barrier(&world).unwrap();
@@ -86,7 +86,7 @@ fn reduce_scatter_algo(blk: usize, pairwise: bool) -> f64 {
 /// A6: per-op latency of one bcast schedule over 4 ranks.
 fn bcast_algo(bytes: usize, chain: bool) -> f64 {
     const ITERS: usize = 200;
-    let out = Universe::run(Universe::with_ranks(4), |world| {
+    let out = Universe::builder().ranks(4).run(|world| {
         let mut buf = vec![world.rank() as u8; bytes];
         coll::barrier(&world).unwrap();
         let t0 = Instant::now();
@@ -106,7 +106,7 @@ fn bcast_algo(bytes: usize, chain: bool) -> f64 {
 fn bandwidth(cfg: FabricConfig, size: usize) -> f64 {
     const W: usize = 8;
     const R: usize = 12;
-    let out = Universe::run(cfg, |world| {
+    let out = Universe::builder().with_config(cfg).run(|world| {
         let buf = vec![1u8; size];
         let mut rbuf = vec![0u8; size];
         mpix::coll::barrier(&world).unwrap();
@@ -237,7 +237,7 @@ fn main() {
 /// Subprocess entry for A4 (the spin budget latches once per process, so
 /// the sweep re-executes this binary with MPIX_SPIN set).
 fn pingpong_inner() -> String {
-    let lat = Universe::run(Universe::with_ranks(2), |world| {
+    let lat = Universe::builder().ranks(2).run(|world| {
         let b = [1u8; 8];
         let mut r = [0u8; 8];
         mpix::coll::barrier(&world).unwrap();

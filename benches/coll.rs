@@ -27,7 +27,7 @@ const SIZES: &[usize] = &[1, 8, 64, 512, 4096]; // f64 elements
 const ITERS: usize = 300;
 
 fn proc_allreduce(nelem: usize) -> f64 {
-    let out = Universe::run(Universe::with_ranks(4), |world| {
+    let out = Universe::builder().ranks(4).run(|world| {
         let mut v = vec![world.rank() as f64; nelem];
         coll::barrier(&world).unwrap();
         let t0 = Instant::now();
@@ -40,7 +40,7 @@ fn proc_allreduce(nelem: usize) -> f64 {
 }
 
 fn tc_allreduce(nprocs: usize, nthreads: usize, nelem: usize) -> f64 {
-    let out = Universe::run(Universe::with_ranks(nprocs), |world| {
+    let out = Universe::builder().ranks(nprocs).run(|world| {
         let tc = Threadcomm::init(&world, nthreads).unwrap();
         let t = std::sync::Mutex::new(0f64);
         std::thread::scope(|s| {
@@ -70,7 +70,7 @@ fn tc_allreduce(nprocs: usize, nthreads: usize, nelem: usize) -> f64 {
 /// One explicit allreduce schedule over 4 proc ranks (bypasses the
 /// selector so both sides of the crossover are measured at every size).
 fn algo_allreduce(nelem: usize, ring: bool) -> f64 {
-    let out = Universe::run(Universe::with_ranks(4), |world| {
+    let out = Universe::builder().ranks(4).run(|world| {
         let mut v = vec![world.rank() as f64; nelem];
         coll::barrier(&world).unwrap();
         let t0 = Instant::now();
@@ -89,7 +89,7 @@ fn algo_allreduce(nelem: usize, ring: bool) -> f64 {
 /// One explicit allgather schedule over 4 proc ranks (power of two, so
 /// recursive doubling runs as itself rather than falling back).
 fn algo_allgather(nelem: usize, recdbl: bool) -> f64 {
-    let out = Universe::run(Universe::with_ranks(4), |world| {
+    let out = Universe::builder().ranks(4).run(|world| {
         let send = vec![world.rank() as f64; nelem];
         let mut recv = vec![0f64; 4 * nelem];
         coll::barrier(&world).unwrap();

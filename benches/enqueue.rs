@@ -31,7 +31,7 @@ fn offload_comm(world: &mpix::Comm, off: &OffloadStream) -> mpix::Comm {
 
 /// (host issue time, end-to-end time) for a DEPTH-deep pipeline.
 fn run(enqueued: bool) -> (f64, f64) {
-    let out = Universe::run(Universe::with_ranks(2), |world| {
+    let out = Universe::builder().ranks(2).run(|world| {
         let off = OffloadStream::new(None);
         let comm = offload_comm(&world, &off);
         let d_a = DevBuf::alloc(1);

@@ -50,7 +50,7 @@ fn run(cfg: Config, threads: usize) -> f64 {
         },
         ..Default::default()
     };
-    let rates = Universe::run(fcfg, |world| {
+    let rates = Universe::builder().with_config(fcfg).run(|world| {
         // Communicator per thread pair, created collectively *before* the
         // parallel region (identical order on both ranks).
         let comms: Vec<mpix::Comm> = (0..threads)

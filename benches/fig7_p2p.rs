@@ -98,7 +98,7 @@ impl PingPong for ThreadComm {
 }
 
 fn proc_measure(f: impl Fn(&mpix::Comm) -> f64 + Sync) -> f64 {
-    let out = Universe::run(Universe::with_ranks(2), |world| {
+    let out = Universe::builder().ranks(2).run(|world| {
         mpix::coll::barrier(&world).unwrap();
         let v = f(&world);
         mpix::coll::barrier(&world).unwrap();
@@ -108,7 +108,7 @@ fn proc_measure(f: impl Fn(&mpix::Comm) -> f64 + Sync) -> f64 {
 }
 
 fn tc_measure(f: impl Fn(&ThreadComm) -> f64 + Sync) -> f64 {
-    let out = Universe::run(Universe::with_ranks(1), |world| {
+    let out = Universe::builder().ranks(1).run(|world| {
         let tc = Threadcomm::init(&world, 2).unwrap();
         std::thread::scope(|s| {
             let spawn_rank = || {

@@ -22,7 +22,7 @@ const TASK_MS: u64 = 20;
 
 /// Extension path: poll_fn driven by the progress engine inside MPI_Wait.
 fn ext_poll_fn() -> (f64, u64) {
-    let out = Universe::run(Universe::with_ranks(1), |world| {
+    let out = Universe::builder().ranks(1).run(|world| {
         let before = world.fabric().metrics.snapshot();
         let flags: Vec<Arc<AtomicBool>> =
             (0..K).map(|_| Arc::new(AtomicBool::new(false))).collect();
@@ -58,7 +58,7 @@ fn ext_poll_fn() -> (f64, u64) {
 /// Standard-API pattern (paper Fig 1a): the app must run its own progress
 /// thread that polls the tasks and calls MPI_Grequest_complete.
 fn standard_user_thread(poll_interval: Duration) -> f64 {
-    let out = Universe::run(Universe::with_ranks(1), |world| {
+    let out = Universe::builder().ranks(1).run(|world| {
         let flags: Vec<Arc<AtomicBool>> =
             (0..K).map(|_| Arc::new(AtomicBool::new(false))).collect();
         let fs = flags.clone();

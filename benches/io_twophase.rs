@@ -33,7 +33,7 @@ fn bench_write(blk: usize, collective: bool) -> f64 {
         "mpixio_bench_{}_{blk}_{collective}",
         std::process::id()
     ));
-    let out = Universe::run(Universe::with_ranks(RANKS), |world| {
+    let out = Universe::builder().ranks(RANKS).run(|world| {
         let f = File::open(&world, &path).unwrap();
         let me = world.rank();
         let v = Datatype::hvector(BLOCKS, blk, (RANKS * blk) as isize, &Datatype::u8());

@@ -16,7 +16,7 @@ const N_GETS: usize = 512;
 const BUSY: Duration = Duration::from_millis(500);
 
 fn run(with_progress: bool) -> (f64, u64) {
-    let out = Universe::run(Universe::with_ranks(2), |world| {
+    let out = Universe::builder().ranks(2).run(|world| {
         let me = world.my_world_rank();
         let init: Vec<u8> = (0..N_GETS as i32).flat_map(|i| i.to_le_bytes()).collect();
         let win = Window::create(&world, init.len(), Some(&init)).unwrap();

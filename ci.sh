@@ -17,6 +17,7 @@
 #   ./ci.sh doc        # cargo doc -D warnings (doc rot fails the build)
 #   ./ci.sh test       # tier-1 build+test, then BENCH_*.json validation
 #   ./ci.sh bench      # benches compile (no run)
+#   ./ci.sh smoke      # multi-process shm launcher + netmod test matrix
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -52,6 +53,13 @@ stage_bench() {
     cargo bench --no-run
 }
 
+stage_smoke() {
+    echo "==> multi-process smoke: shm launcher, 4 forked ranks"
+    cargo run --release --example shm_launcher -- 4
+    echo "==> netmod matrix: integration suite under MPIX_NETMOD=shm"
+    MPIX_NETMOD=shm cargo test -q --test integration
+}
+
 stage="${1:-all}"
 case "$stage" in
     fmt) stage_fmt ;;
@@ -59,6 +67,7 @@ case "$stage" in
     doc) stage_doc ;;
     test) stage_test ;;
     bench) stage_bench ;;
+    smoke) stage_smoke ;;
     quick) stage_quick ;;
     all)
         stage_fmt
@@ -66,9 +75,10 @@ case "$stage" in
         stage_doc
         stage_test
         stage_bench
+        stage_smoke
         ;;
     *)
-        echo "usage: $0 [fmt|clippy|doc|test|bench|quick|all]" >&2
+        echo "usage: $0 [fmt|clippy|doc|test|bench|smoke|quick|all]" >&2
         exit 2
         ;;
 esac

@@ -18,7 +18,7 @@ const X_VAL: f32 = 1.0;
 const Y_VAL: f32 = 2.0;
 
 fn main() {
-    Universe::run(Universe::with_ranks(2), |world| {
+    Universe::builder().ranks(2).run(|world| {
         // cudaStreamCreate(&stream);
         let off = OffloadStream::new(None);
 

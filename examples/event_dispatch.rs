@@ -24,7 +24,7 @@ const TAG: i32 = 0;
 
 fn main() {
     let nranks = 3;
-    Universe::run(Universe::with_ranks(nranks), |world| {
+    Universe::builder().ranks(nranks).run(|world| {
         // Dispatcher attaches one stream; every worker rank attaches
         // WORKERS_PER_RANK streams — a single multiplex comm covers all.
         let n_local = if world.rank() == 0 { 1 } else { WORKERS_PER_RANK };

@@ -8,7 +8,7 @@ use mpix::universe::Universe;
 use std::time::Instant;
 
 fn main() {
-    let out = Universe::run(Universe::with_ranks(1), |world| {
+    let out = Universe::builder().ranks(1).run(|world| {
         let n = 100_000;
         let b = [0u8; 8];
         let mut r = [0u8; 8];
@@ -21,7 +21,7 @@ fn main() {
     });
     println!("self send+recv : {:.0} ns", out[0] * 1e9);
 
-    let out = Universe::run(Universe::with_ranks(2), |world| {
+    let out = Universe::builder().ranks(2).run(|world| {
         let n = 100_000usize;
         mpix::coll::barrier(&world).unwrap();
         let t0 = Instant::now();
@@ -43,7 +43,7 @@ fn main() {
     println!("pingpong half-rt: {:.0} ns", out[0] * 1e9);
 
     // Window message rate (fig4 T=1 inner loop).
-    let rates = Universe::run(Universe::with_ranks(2), |world| {
+    let rates = Universe::builder().ranks(2).run(|world| {
         let peer = 1 - world.rank();
         mpix::coll::barrier(&world).unwrap();
         let t0 = Instant::now();
@@ -71,7 +71,7 @@ fn main() {
     // pingpong of 1 MiB messages (16 chunks each at the default 64 KiB).
     const N: usize = 1 << 20;
     const ROUNDS: usize = 200;
-    let stats = Universe::run(Universe::with_ranks(2), |world| {
+    let stats = Universe::builder().ranks(2).run(|world| {
         let data = vec![7u8; N];
         let mut buf = vec![0u8; N];
         mpix::coll::barrier(&world).unwrap();
@@ -113,7 +113,7 @@ fn main() {
     // counts; the per-algorithm counters make the switch observable.
     // Double barrier around m0: every rank snapshots before any rank
     // dispatches, so the deltas are exact (4 + 4).
-    let deltas = Universe::run(Universe::with_ranks(4), |world| {
+    let deltas = Universe::builder().ranks(4).run(|world| {
         mpix::coll::barrier(&world).unwrap();
         let m0 = world.fabric().metrics.snapshot();
         mpix::coll::barrier(&world).unwrap();

@@ -15,7 +15,7 @@ const MAX_DATA_SIZE: usize = 1024;
 const BUSY: Duration = Duration::from_secs(2);
 
 fn run(with_progress_thread: bool) -> f64 {
-    let times = Universe::run(Universe::with_ranks(2), |world| {
+    let times = Universe::builder().ranks(2).run(|world| {
         let me = world.my_world_rank();
         let origin_rank = 0usize;
         let target_rank = 1usize;

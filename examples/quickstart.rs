@@ -8,7 +8,7 @@ use mpix::datatype::Datatype;
 use mpix::universe::Universe;
 
 fn main() {
-    let results = Universe::run(Universe::with_ranks(4), |world| {
+    let results = Universe::builder().ranks(4).run(|world| {
         let me = world.rank();
         let n = world.size();
 

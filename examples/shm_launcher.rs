@@ -1,0 +1,105 @@
+//! mpirun-style multi-process launcher over the shm netmod.
+//!
+//! The parent creates one shared-memory segment, forks N real child
+//! processes (fork happens *before* any fabric or thread exists), and
+//! each child attaches to the segment as exactly one rank:
+//!
+//! ```text
+//! parent:  ShmSegment::create ──fork×N──▶ waitpid, unlink
+//! child r: Universe::builder().shm_path(..).shm_attach(true).run_rank(r, f)
+//! ```
+//!
+//! The workload crosses every protocol regime across *real* process
+//! boundaries — an inline token ring, an allreduce, and a rendezvous
+//! transfer several times larger than a ring — which is exactly what the
+//! in-process test suite cannot prove.
+//!
+//! Usage: `cargo run --release --example shm_launcher -- [nranks]`
+
+#[cfg(unix)]
+fn main() {
+    use mpix::coll;
+    use mpix::netmod::shm::{fork_ranks, unique_segment_path, ShmSegment};
+    use mpix::netmod::NetmodSel;
+    use mpix::universe::Universe;
+
+    const N_SHARED: usize = 4;
+    const MAX_STREAMS: usize = 2;
+    const RING_BYTES: usize = 256 * 1024;
+    const BIG: usize = 1 << 20; // 1 MiB ≫ ring: forces chunked rendezvous
+
+    let ranks: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+    assert!(ranks >= 2, "need at least 2 ranks");
+
+    // Parent materializes the segment before forking so no child races
+    // another's create; geometry must match the children's config below.
+    let path = unique_segment_path();
+    let seg = ShmSegment::create(&path, ranks, N_SHARED + MAX_STREAMS, RING_BYTES)
+        .expect("create shm segment");
+
+    let codes = fork_ranks(ranks, |rank| {
+        Universe::builder()
+            .ranks(ranks)
+            .shared_endpoints(N_SHARED)
+            .max_streams(MAX_STREAMS)
+            .netmod(NetmodSel::Shm)
+            .shm_path(&path)
+            .shm_attach(true)
+            .run_rank(rank, |world| {
+                let me = world.rank();
+                let n = world.size();
+
+                // 1. Inline token ring: 0 → 1 → … → n-1 → 0, +1 per hop.
+                if me == 0 {
+                    world.send(&1u64.to_le_bytes(), 1, 1).unwrap();
+                    let mut buf = [0u8; 8];
+                    world.recv(&mut buf, (n - 1) as i32, 1).unwrap();
+                    let token = u64::from_le_bytes(buf);
+                    assert_eq!(token, n as u64, "token ring dropped a hop");
+                } else {
+                    let mut buf = [0u8; 8];
+                    world.recv(&mut buf, (me - 1) as i32, 1).unwrap();
+                    let token = u64::from_le_bytes(buf) + 1;
+                    world.send(&token.to_le_bytes(), (me + 1) % n, 1).unwrap();
+                }
+
+                // 2. Allreduce across processes.
+                let mut v = [me as u64 + 1];
+                coll::allreduce_t(&world, &mut v, |a, b| *a += *b).unwrap();
+                assert_eq!(v[0], (n * (n + 1) / 2) as u64);
+
+                // 3. Chunked rendezvous, 1 MiB through 256 KiB rings.
+                if me == 0 {
+                    let msg: Vec<u8> = (0..BIG).map(|i| (i % 251) as u8).collect();
+                    world.send(&msg, n - 1, 2).unwrap();
+                } else if me == n - 1 {
+                    let mut buf = vec![0u8; BIG];
+                    let st = world.recv(&mut buf, 0, 2).unwrap();
+                    assert_eq!(st.len, BIG);
+                    assert!(
+                        buf.iter().enumerate().all(|(i, &b)| b == (i % 251) as u8),
+                        "rendezvous payload corrupted"
+                    );
+                }
+
+                coll::barrier(&world).unwrap();
+                println!("rank {me}/{n} (pid {}) OK", std::process::id());
+                0
+            })
+    });
+    drop(seg); // parent owns the file: unlink it
+
+    assert!(
+        codes.iter().all(|&c| c == 0),
+        "rank exit codes: {codes:?}"
+    );
+    println!("shm_launcher: {ranks} process-ranks completed {codes:?}");
+}
+
+#[cfg(not(unix))]
+fn main() {
+    eprintln!("shm_launcher requires a unix platform (fork + mmap)");
+}

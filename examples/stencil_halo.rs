@@ -38,7 +38,7 @@ fn idx(r: usize, c: usize) -> usize {
 
 fn main() {
     let t_total = Instant::now();
-    let results = Universe::run(Universe::with_ranks(PR * PR), |world| {
+    let results = Universe::builder().ranks(PR * PR).run(|world| {
         let me = world.rank();
         let (pr, pc) = (me / PR, me % PR);
 

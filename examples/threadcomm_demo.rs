@@ -11,7 +11,7 @@ use mpix::universe::Universe;
 const NT: usize = 4;
 
 fn main() {
-    Universe::run(Universe::with_ranks(2), |world| {
+    Universe::builder().ranks(2).run(|world| {
         // MPIX_Threadcomm_init(MPI_COMM_WORLD, NT, &threadcomm);
         let tc = Threadcomm::init(&world, NT).unwrap();
 

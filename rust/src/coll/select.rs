@@ -24,7 +24,7 @@
 
 use crate::error::{MpiError, Result};
 use crate::info::Info;
-use std::sync::atomic::{AtomicU8, Ordering::Relaxed};
+use crate::util::hints::{HintKey, HintRegistry};
 
 /// Payload bytes at which auto allreduce switches from binomial tree
 /// (latency-bound) to ring reduce_scatter+allgather (bandwidth-bound).
@@ -165,23 +165,75 @@ impl CollAlgo {
     }
 }
 
-/// Per-communicator algorithm overrides. One slot per [`CollOp`];
-/// `Auto` (the default) defers to the heuristic. Lock-free: collectives
-/// read the slots on every dispatch.
+/// The `MPIX_COLL_*` key table — one [`HintKey`] per [`CollOp`], indexed
+/// by [`CollOp::idx`]. Each key's parse function validates the algorithm
+/// *against that op* ([`CollOp::accepts`]), so an inapplicable override
+/// (`mpix_coll_bcast = "pairwise"`) is rejected at parse time — in the
+/// env path it is silently dropped, in the info path it is a
+/// transactional error, both courtesy of [`HintRegistry`].
+pub static COLL_KEYS: [HintKey; 4] = [
+    HintKey {
+        info: "mpix_coll_allreduce",
+        env: "MPIX_COLL_ALLREDUCE",
+        parse: parse_allreduce,
+    },
+    HintKey {
+        info: "mpix_coll_bcast",
+        env: "MPIX_COLL_BCAST",
+        parse: parse_bcast,
+    },
+    HintKey {
+        info: "mpix_coll_reduce_scatter",
+        env: "MPIX_COLL_REDUCE_SCATTER",
+        parse: parse_reduce_scatter,
+    },
+    HintKey {
+        info: "mpix_coll_allgather",
+        env: "MPIX_COLL_ALLGATHER",
+        parse: parse_allgather,
+    },
+];
+
+fn parse_algo_for(op: CollOp, s: &str) -> Option<u64> {
+    CollAlgo::parse(s)
+        .filter(|&a| op.accepts(a))
+        .map(|a| a.code() as u64)
+}
+
+fn parse_allreduce(s: &str) -> Option<u64> {
+    parse_algo_for(CollOp::Allreduce, s)
+}
+
+fn parse_bcast(s: &str) -> Option<u64> {
+    parse_algo_for(CollOp::Bcast, s)
+}
+
+fn parse_reduce_scatter(s: &str) -> Option<u64> {
+    parse_algo_for(CollOp::ReduceScatter, s)
+}
+
+fn parse_allgather(s: &str) -> Option<u64> {
+    parse_algo_for(CollOp::Allgather, s)
+}
+
+/// Per-communicator algorithm overrides — a thin typed view over the
+/// unified hint registry ([`crate::util::hints`]): one slot per
+/// [`CollOp`]; an unset slot (or an explicit `Auto`) defers to the
+/// heuristic. Lock-free: collectives read the slots on every dispatch.
 ///
 /// Overrides must be applied symmetrically on every rank (like any MPI
 /// info key that changes a collective's schedule): the algorithms are
 /// SPMD and all ranks must run the same one. The env-var path satisfies
 /// this by construction; `apply_coll_info` is the caller's obligation.
 pub struct CollSelector {
-    slots: [AtomicU8; 4],
+    hints: HintRegistry<4>,
 }
 
 impl CollSelector {
     /// All-auto selector.
     pub fn new() -> CollSelector {
         CollSelector {
-            slots: std::array::from_fn(|_| AtomicU8::new(0)),
+            hints: HintRegistry::new(&COLL_KEYS),
         }
     }
 
@@ -189,11 +241,9 @@ impl CollSelector {
     /// stream comms, threadcomms) inherit the parent's overrides, the
     /// way MPI info hints propagate through `MPI_Comm_dup`.
     pub fn inherited(parent: &CollSelector) -> CollSelector {
-        let sel = CollSelector::new();
-        for (dst, src) in sel.slots.iter().zip(parent.slots.iter()) {
-            dst.store(src.load(Relaxed), Relaxed);
+        CollSelector {
+            hints: HintRegistry::inherited(&parent.hints),
         }
-        sel
     }
 
     /// Read `MPIX_COLL_<OP>` overrides from the environment (done once
@@ -201,52 +251,33 @@ impl CollSelector {
     /// Unknown or inapplicable values are ignored — an env var cannot
     /// fail comm creation.
     pub fn from_env() -> CollSelector {
-        let sel = CollSelector::new();
-        for op in CollOp::ALL {
-            if let Ok(v) = std::env::var(op.env_key()) {
-                if let Some(algo) = CollAlgo::parse(&v) {
-                    if op.accepts(algo) {
-                        sel.slots[op.idx()].store(algo.code(), Relaxed);
-                    }
-                }
-            }
+        CollSelector {
+            hints: HintRegistry::from_env(&COLL_KEYS),
         }
-        sel
     }
 
     /// Force `op` onto `algo` (`Auto` restores the heuristic).
     pub fn force(&self, op: CollOp, algo: CollAlgo) -> Result<()> {
         check(op, algo)?;
-        self.slots[op.idx()].store(algo.code(), Relaxed);
+        self.hints.set(op.idx(), algo.code() as u64);
         Ok(())
     }
 
     /// Apply `mpix_coll_<op>` info keys. Unlike the env path this is an
     /// explicit API call, so unknown values are errors — and the apply
-    /// is transactional: every key is validated before any slot is
-    /// stored, so an `Err` leaves the selector untouched.
+    /// is transactional ([`HintRegistry::apply_info`]): every key is
+    /// validated before any slot is stored, so an `Err` leaves the
+    /// selector untouched.
     pub fn apply_info(&self, info: &Info) -> Result<()> {
-        let mut updates: [Option<CollAlgo>; 4] = [None; 4];
-        for op in CollOp::ALL {
-            if let Some(v) = info.get(op.info_key()) {
-                let algo = CollAlgo::parse(v).ok_or_else(|| {
-                    MpiError::InvalidArg(format!("unknown {} algorithm {v:?}", op.info_key()))
-                })?;
-                check(op, algo)?;
-                updates[op.idx()] = Some(algo);
-            }
-        }
-        for op in CollOp::ALL {
-            if let Some(algo) = updates[op.idx()] {
-                self.slots[op.idx()].store(algo.code(), Relaxed);
-            }
-        }
-        Ok(())
+        self.hints.apply_info(info)
     }
 
     /// The forced algorithm for `op`, or `Auto`.
     pub fn forced(&self, op: CollOp) -> CollAlgo {
-        CollAlgo::from_code(self.slots[op.idx()].load(Relaxed))
+        self.hints
+            .get(op.idx())
+            .map(|v| CollAlgo::from_code(v as u8))
+            .unwrap_or(CollAlgo::Auto)
     }
 
     /// Resolve the algorithm for one call: the forced override if any,

@@ -7,7 +7,7 @@ use crate::universe::Universe;
 fn barrier_all_ranks() {
     use std::sync::atomic::{AtomicUsize, Ordering};
     let before = AtomicUsize::new(0);
-    Universe::run(Universe::with_ranks(4), |world| {
+    Universe::builder().ranks(4).run(|world| {
         before.fetch_add(1, Ordering::SeqCst);
         barrier(&world).unwrap();
         // After the barrier, every rank must have arrived.
@@ -26,7 +26,7 @@ fn barrier_nonpow2_sizes() {
     for &n in &[3usize, 5, 7] {
         let arrived = AtomicUsize::new(0);
         let departed = AtomicUsize::new(0);
-        Universe::run(Universe::with_ranks(n), |world| {
+        Universe::builder().ranks(n).run(|world| {
             for round in 0..3 {
                 arrived.fetch_add(1, Ordering::SeqCst);
                 barrier(&world).unwrap();
@@ -47,7 +47,7 @@ fn barrier_nonpow2_sizes() {
 
 #[test]
 fn bcast_from_each_root() {
-    Universe::run(Universe::with_ranks(4), |world| {
+    Universe::builder().ranks(4).run(|world| {
         for root in 0..4 {
             let mut v = if world.rank() == root {
                 [root as u64 * 11 + 3; 8]
@@ -62,7 +62,7 @@ fn bcast_from_each_root() {
 
 #[test]
 fn allreduce_sum() {
-    Universe::run(Universe::with_ranks(4), |world| {
+    Universe::builder().ranks(4).run(|world| {
         let mut v = vec![world.rank() as f64 + 1.0; 16];
         allreduce_t(&world, &mut v, |a, b| *a += *b).unwrap();
         // 1+2+3+4 = 10
@@ -72,7 +72,7 @@ fn allreduce_sum() {
 
 #[test]
 fn allreduce_max_nonpow2() {
-    Universe::run(Universe::with_ranks(3), |world| {
+    Universe::builder().ranks(3).run(|world| {
         let mut v = [world.rank() as i64 * 7];
         allreduce_t(&world, &mut v, |a, b| *a = (*a).max(*b)).unwrap();
         assert_eq!(v[0], 14);
@@ -81,7 +81,7 @@ fn allreduce_max_nonpow2() {
 
 #[test]
 fn allgather_ring() {
-    Universe::run(Universe::with_ranks(4), |world| {
+    Universe::builder().ranks(4).run(|world| {
         let send = [world.rank() as u32, world.rank() as u32 * 100];
         let mut recv = [0u32; 8];
         allgather_t(&world, &send, &mut recv).unwrap();
@@ -91,7 +91,7 @@ fn allgather_ring() {
 
 #[test]
 fn gather_scatter_roundtrip() {
-    Universe::run(Universe::with_ranks(4), |world| {
+    Universe::builder().ranks(4).run(|world| {
         let send = [world.rank() as i32; 3];
         if world.rank() == 2 {
             let mut all = [0i32; 12];
@@ -111,7 +111,7 @@ fn gather_scatter_roundtrip() {
 
 #[test]
 fn alltoall_pairwise() {
-    Universe::run(Universe::with_ranks(4), |world| {
+    Universe::builder().ranks(4).run(|world| {
         let me = world.rank() as u32;
         // send[j] = me * 10 + j
         let send: Vec<u32> = (0..4).map(|j| me * 10 + j).collect();
@@ -126,7 +126,7 @@ fn alltoall_pairwise() {
 #[test]
 fn concurrent_collectives_on_dup_comms() {
     // Collectives on different comms (dup'd contexts) must not cross.
-    Universe::run(Universe::with_ranks(3), |world| {
+    Universe::builder().ranks(3).run(|world| {
         let a = world.dup();
         let b = world.dup();
         let mut va = [world.rank() as u64];
@@ -217,7 +217,7 @@ fn info_apply_is_transactional() {
 fn forced_path_is_observable_in_metrics() {
     // The selector's choice must be visible in the per-algorithm
     // dispatch counters, not just in the answer.
-    Universe::run(Universe::with_ranks(4), |world| {
+    Universe::builder().ranks(4).run(|world| {
         // Metrics are fabric-global, so each rank's window (m0..final
         // snapshot) is fenced with barriers: its own dispatch is always
         // inside the window, other ranks' may race in — assert ≥ 1 for
@@ -253,7 +253,7 @@ fn children_inherit_forced_algo() {
     // info hints through MPI_Comm_dup — a non-commutative user who
     // forced `tree` must not silently get the ring schedule back on a
     // dup'd or split comm.
-    Universe::run(Universe::with_ranks(2), |world| {
+    Universe::builder().ranks(2).run(|world| {
         let mut info = crate::info::Info::new();
         info.set("mpix_coll_allreduce", "ring");
         world.apply_coll_info(&info).unwrap();
@@ -277,7 +277,7 @@ fn children_inherit_forced_algo() {
 fn allreduce_algorithms_agree() {
     for n in 2..=8usize {
         for &count in &[1usize, 5, 13] {
-            Universe::run(Universe::with_ranks(n), |world| {
+            Universe::builder().ranks(n).run(|world| {
                 let me = world.rank() as u64;
                 let init: Vec<u64> = (0..count as u64).map(|i| me * 1000 + i + 1).collect();
                 let want: Vec<u64> = (0..count as u64)
@@ -299,7 +299,7 @@ fn allreduce_algorithms_agree() {
 #[test]
 fn bcast_algorithms_agree() {
     for n in 2..=8usize {
-        Universe::run(Universe::with_ranks(n), |world| {
+        Universe::builder().ranks(n).run(|world| {
             for root in [0, n - 1] {
                 for &len in &[3usize, 20_000] {
                     let fill = |i: usize| ((i * 7 + root * 13 + len) % 251) as u8;
@@ -327,7 +327,7 @@ fn bcast_algorithms_agree() {
 #[test]
 fn allgather_algorithms_agree() {
     for n in 2..=8usize {
-        Universe::run(Universe::with_ranks(n), |world| {
+        Universe::builder().ranks(n).run(|world| {
             let me = world.rank() as u32;
             let send = [me * 10 + 1, me * 10 + 2, me * 10 + 3];
             let want: Vec<u32> = (0..n as u32)
@@ -348,7 +348,7 @@ fn allgather_algorithms_agree() {
 fn reduce_scatter_algorithms_agree() {
     const BLK: usize = 3;
     for n in 2..=8usize {
-        Universe::run(Universe::with_ranks(n), |world| {
+        Universe::builder().ranks(n).run(|world| {
             let me = world.rank() as u64;
             let send: Vec<u64> = (0..n * BLK)
                 .map(|i| me * 100 + (i / BLK) as u64 * 10 + (i % BLK) as u64)
@@ -371,7 +371,7 @@ fn reduce_scatter_algorithms_agree() {
 /// regression for `reduce_scatter_block_t`).
 #[test]
 fn reduce_scatter_size_mismatch_is_error() {
-    Universe::run(Universe::with_ranks(2), |world| {
+    Universe::builder().ranks(2).run(|world| {
         let send = [1u64; 3]; // want 2 * recv.len() = 4
         let mut recv = [0u64; 2];
         let err = reduce_scatter_block_t(&world, &send, &mut recv, |a, b| *a += *b).unwrap_err();

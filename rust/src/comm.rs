@@ -278,8 +278,8 @@ impl Comm {
         Metrics::bump(&fabric.metrics.rdv);
         Metrics::bump(&fabric.metrics.requests_alloc);
         let req = ReqInner::new();
-        let token = fabric.next_token();
         let me = (self.world_rank(self.rank()), self.my_vci(src_idx));
+        let token = fabric.next_token(me.0);
         let peer = (self.world_rank(dst), self.dst_vci(dst, dst_idx));
         let env = Envelope {
             hdr: self.hdr(ctx, tag, src_idx, dst_idx),
@@ -367,7 +367,7 @@ impl Comm {
                 if fabric.cfg.injection_ns > 0 {
                     crate::util::spin_ns(fabric.cfg.injection_ns);
                 }
-                match ch.ring.push(env.take().unwrap()) {
+                match ch.push(&fabric.metrics, env.take().unwrap()) {
                     Ok(()) => false,
                     Err(back) => {
                         env = Some(back);
@@ -669,7 +669,7 @@ pub(crate) fn push_envelope_raw(
             if fabric.cfg.injection_ns > 0 {
                 crate::util::spin_ns(fabric.cfg.injection_ns);
             }
-            match ch.ring.push(env.take().unwrap()) {
+            match ch.push(&fabric.metrics, env.take().unwrap()) {
                 Ok(()) => false,
                 Err(back) => {
                     env = Some(back);
@@ -685,12 +685,16 @@ pub(crate) fn push_envelope_raw(
     }
 }
 
-/// Eager heap payload drawn from the **source endpoint's** recycling
+/// Copy `buf` into a cell drawn from the **source endpoint's** recycling
 /// chunk pool (the receiver's drop after the copy-out returns the cell),
-/// so the steady-state eager heap path allocates nothing — same
-/// discipline as the rendezvous chunk path, counted in the same
-/// `pool_hits`/`pool_misses`.
-pub(crate) fn pooled_eager(fabric: &Arc<Fabric>, me: (u32, u16), buf: &[u8]) -> Payload {
+/// so steady-state staging allocates nothing — same discipline as the
+/// rendezvous chunk path, counted in the same `pool_hits`/`pool_misses`.
+/// Shared by the eager heap path and the RMA staging paths.
+pub(crate) fn pooled_copy(
+    fabric: &Arc<Fabric>,
+    me: (u32, u16),
+    buf: &[u8],
+) -> crate::util::pool::PooledBuf {
     let src_ep = fabric.endpoint(me.0, me.1);
     let mut cell = with_ep(fabric, src_ep, |st| st.chunk_pool.acquire(buf.len()));
     if cell.recycled() {
@@ -699,7 +703,12 @@ pub(crate) fn pooled_eager(fabric: &Arc<Fabric>, me: (u32, u16), buf: &[u8]) -> 
         Metrics::bump(&fabric.metrics.pool_misses);
     }
     cell.copy_from(buf);
-    Payload::Eager(cell)
+    cell
+}
+
+/// Eager heap payload via [`pooled_copy`].
+pub(crate) fn pooled_eager(fabric: &Arc<Fabric>, me: (u32, u16), buf: &[u8]) -> Payload {
+    Payload::Eager(pooled_copy(fabric, me, buf))
 }
 
 /// Eager send of `buf` with an explicit header (inline cell when small).
@@ -743,7 +752,7 @@ pub(crate) fn isend_raw<'a>(
     Metrics::bump(&fabric.metrics.rdv);
     Metrics::bump(&fabric.metrics.requests_alloc);
     let req = ReqInner::new();
-    let token = fabric.next_token();
+    let token = fabric.next_token(me.0);
     let env = Envelope {
         hdr,
         payload: Payload::Rts {

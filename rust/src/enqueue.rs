@@ -146,7 +146,7 @@ mod tests {
 
     #[test]
     fn enqueue_requires_offload_stream() {
-        Universe::run(Universe::with_ranks(1), |world| {
+        Universe::builder().ranks(1).run(|world| {
             let b = DevBuf::alloc(4);
             assert!(matches!(
                 send_enqueue(&world, &b, 0, 0),
@@ -157,7 +157,7 @@ mod tests {
 
     #[test]
     fn send_recv_enqueue_roundtrip() {
-        Universe::run(Universe::with_ranks(2), |world| {
+        Universe::builder().ranks(2).run(|world| {
             let off = OffloadStream::new(None);
             let comm = offload_comm(&world, &off);
             let n = 256;
@@ -178,7 +178,7 @@ mod tests {
 
     #[test]
     fn isend_wait_enqueue_order() {
-        Universe::run(Universe::with_ranks(2), |world| {
+        Universe::builder().ranks(2).run(|world| {
             let off = OffloadStream::new(None);
             let comm = offload_comm(&world, &off);
             if world.rank() == 0 {

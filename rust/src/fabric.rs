@@ -21,11 +21,15 @@
 
 use crate::error::{MpiError, Result};
 use crate::metrics::Metrics;
+use crate::netmod::{ActiveNetmod, InprocNetmod, Netmod, NetmodSel, TcpNetmod};
 use std::collections::{HashMap, VecDeque};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-use crate::util::spsc::SpscRing;
+// The channel types moved into the netmod layer (`crate::netmod`); the
+// re-export keeps the fabric the one-stop import for transport plumbing.
+pub use crate::netmod::{Channel, Port};
 
 /// Payload bytes carried inline in an envelope (the pre-allocated message
 /// cell of MPICH's shm transport; no heap allocation on this path).
@@ -68,6 +72,20 @@ pub struct FabricConfig {
     /// inside the critical section otherwise — hardware serialization is
     /// what Fig 4 measures.
     pub injection_ns: u64,
+    /// Transport backing the fabric's channels (see [`crate::netmod`]).
+    /// `Default` resolves `MPIX_NETMOD` through the hint registry.
+    pub netmod: NetmodSel,
+    /// Shm segment file. `None` + [`NetmodSel::Shm`] creates a private
+    /// unlinked segment (thread-mode ranks); `Some` names a segment to
+    /// create (launcher parent / rank 0) or attach (`shm_attach`).
+    pub shm_path: Option<PathBuf>,
+    /// Attach to an existing segment at `shm_path` instead of creating
+    /// it (launcher children).
+    pub shm_attach: bool,
+    /// Bytes per shm ring (one ring per (src rank, dst rank, dst vci);
+    /// sparse until touched). `eager_max`/`chunk_size` are clamped so a
+    /// record always fits half a ring.
+    pub shm_ring_bytes: usize,
 }
 
 impl Default for FabricConfig {
@@ -81,6 +99,10 @@ impl Default for FabricConfig {
             chunk_size: 64 * 1024,
             channel_cap: 256,
             injection_ns: 0,
+            netmod: NetmodSel::from_env(),
+            shm_path: None,
+            shm_attach: false,
+            shm_ring_bytes: 256 * 1024,
         }
     }
 }
@@ -244,15 +266,6 @@ impl<T> HybridLock<T> {
     pub unsafe fn with_unchecked<R>(&self, f: impl FnOnce(&mut T) -> R) -> R {
         f(&mut *self.data.get())
     }
-}
-
-// ------------------------------------------------------------- channels
-
-/// A lazily-created SPSC channel from one endpoint to another.
-pub struct Channel {
-    pub ring: SpscRing<Envelope>,
-    /// Source (rank, vci) — receivers use it for diagnostics only.
-    pub src: (u32, u16),
 }
 
 // ------------------------------------------------------------ endpoints
@@ -462,6 +475,9 @@ impl RankState {
 /// The shared fabric: all endpoints of all ranks plus global services.
 pub struct Fabric {
     pub cfg: FabricConfig,
+    /// The transport (see [`crate::netmod`]): an enum so per-poll
+    /// dispatch is one match and the pump loop monomorphizes.
+    pub netmod: ActiveNetmod,
     /// eps[rank][vci].
     pub eps: Vec<Vec<Endpoint>>,
     pub ranks: Vec<RankState>,
@@ -476,7 +492,34 @@ pub struct Fabric {
 }
 
 impl Fabric {
+    /// Infallible constructor (the common path: inproc never fails and
+    /// transport setup errors are unrecoverable at init anyway).
     pub fn new(cfg: FabricConfig) -> Arc<Fabric> {
+        Self::try_new(cfg).expect("fabric construction failed")
+    }
+
+    /// Build the fabric, constructing the configured transport. Shm/tcp
+    /// setup can fail (segment I/O, socket binds); shm may also clamp
+    /// `eager_max`/`chunk_size` to its ring capacity.
+    pub fn try_new(mut cfg: FabricConfig) -> Result<Arc<Fabric>> {
+        let netmod = match cfg.netmod {
+            NetmodSel::Inproc => ActiveNetmod::Inproc(InprocNetmod),
+            #[cfg(unix)]
+            NetmodSel::Shm => ActiveNetmod::Shm(
+                crate::netmod::ShmNetmod::new(&mut cfg)
+                    .map_err(|e| MpiError::Runtime(format!("shm netmod: {e}")))?,
+            ),
+            #[cfg(not(unix))]
+            NetmodSel::Shm => {
+                return Err(MpiError::Runtime(
+                    "shm netmod requires a unix platform".into(),
+                ))
+            }
+            NetmodSel::Tcp => ActiveNetmod::Tcp(
+                TcpNetmod::new(cfg.nranks, cfg.n_shared + cfg.max_streams)
+                    .map_err(|e| MpiError::Runtime(format!("tcp netmod: {e}")))?,
+            ),
+        };
         let nvcis = cfg.n_shared + cfg.max_streams;
         let eps = (0..cfg.nranks)
             .map(|r| {
@@ -503,8 +546,9 @@ impl Fabric {
         let ranks = (0..cfg.nranks)
             .map(|_| RankState::new(cfg.n_shared, cfg.max_streams))
             .collect();
-        Arc::new(Fabric {
+        Ok(Arc::new(Fabric {
             cfg,
+            netmod,
             eps,
             ranks,
             metrics: Metrics::default(),
@@ -513,11 +557,15 @@ impl Fabric {
             next_ctx: AtomicU32::new(CTX_WORLD + 1),
             win_registry: Mutex::new(HashMap::new()),
             next_win: AtomicU32::new(1),
-        })
+        }))
     }
 
-    pub fn next_token(&self) -> u64 {
-        self.token_counter.fetch_add(1, Ordering::Relaxed)
+    /// Fresh rendezvous/RMA token, unique fabric-wide. Salted with the
+    /// allocating rank so tokens stay unique even when ranks are separate
+    /// processes over a shared segment (each process has its own
+    /// `token_counter`, but rank ids are globally agreed).
+    pub fn next_token(&self, rank: u32) -> u64 {
+        ((rank as u64 + 1) << 40) | self.token_counter.fetch_add(1, Ordering::Relaxed)
     }
 
     /// Agree on a child context id for a collective creation call: the
@@ -589,14 +637,27 @@ impl Fabric {
         if let Some(ch) = st.tx_cache.get(&dst) {
             return Arc::clone(ch);
         }
-        let ch = Arc::new(Channel {
-            ring: SpscRing::with_capacity(self.cfg.channel_cap),
-            src,
-        });
-        let ep = self.endpoint(dst.0, dst.1);
-        ep.inboxes.register(src.0, Arc::clone(&ch));
+        let ch = match &self.netmod {
+            ActiveNetmod::Inproc(nm) => nm.connect(self, src, dst),
+            #[cfg(unix)]
+            ActiveNetmod::Shm(nm) => nm.connect(self, src, dst),
+            ActiveNetmod::Tcp(nm) => nm.connect(self, src, dst),
+        };
+        Metrics::bump(&self.metrics.netmod_connects);
         st.tx_cache.insert(dst, Arc::clone(&ch));
         ch
+    }
+
+    /// Drain transport-buffered tx bytes for `rank` (bounded), called
+    /// once per rank after its main function returns — the teardown half
+    /// of the netmod contract ([`Netmod::flush`]).
+    pub fn flush_netmod(&self, rank: u32) {
+        match &self.netmod {
+            ActiveNetmod::Inproc(nm) => nm.flush(self, rank),
+            #[cfg(unix)]
+            ActiveNetmod::Shm(nm) => nm.flush(self, rank),
+            ActiveNetmod::Tcp(nm) => nm.flush(self, rank),
+        }
     }
 
     /// Receiver side: refresh the endpoint's inbox snapshot if new
@@ -670,8 +731,11 @@ mod tests {
 
     #[test]
     fn channel_registry_and_cache() {
+        // White-box inbox-registry assertions: pin the inproc netmod
+        // (shm/tcp receive through their own rx paths, not the registry).
         let f = Fabric::new(FabricConfig {
             nranks: 2,
+            netmod: NetmodSel::Inproc,
             ..Default::default()
         });
         let src_ep = f.endpoint(0, 0);
@@ -695,6 +759,7 @@ mod tests {
     fn sharded_registry_refresh_is_incremental() {
         let f = Fabric::new(FabricConfig {
             nranks: 3,
+            netmod: NetmodSel::Inproc,
             ..Default::default()
         });
         let dst = f.endpoint(2, 0);

@@ -153,7 +153,7 @@ mod tests {
 
     #[test]
     fn poll_fn_completes_via_progress() {
-        Universe::run(Universe::with_ranks(1), |world| {
+        Universe::builder().ranks(1).run(|world| {
             let flag = Arc::new(AtomicBool::new(false));
             let f2 = Arc::clone(&flag);
             let req = grequest_start(
@@ -184,7 +184,7 @@ mod tests {
     fn external_thread_task_like_cuda_event() {
         // The paper's grequest.cu shape: a background "offload" completes
         // an event; poll_fn queries it.
-        Universe::run(Universe::with_ranks(1), |world| {
+        Universe::builder().ranks(1).run(|world| {
             let done = Arc::new(AtomicBool::new(false));
             let d2 = Arc::clone(&done);
             let t = std::thread::spawn(move || {
@@ -205,7 +205,7 @@ mod tests {
 
     #[test]
     fn wait_fn_is_used_by_waitall() {
-        Universe::run(Universe::with_ranks(1), |world| {
+        Universe::builder().ranks(1).run(|world| {
             let polls = Arc::new(AtomicUsize::new(0));
             let done = Arc::new(AtomicBool::new(false));
             let (p2, d2) = (Arc::clone(&polls), Arc::clone(&done));
@@ -233,7 +233,7 @@ mod tests {
     fn try_poll_failure_fails_the_request() {
         // Some(Err(..)) from a fallible poll must fail the request —
         // the path disk errors from the I/O engine ride.
-        Universe::run(Universe::with_ranks(1), |world| {
+        Universe::builder().ranks(1).run(|world| {
             let req = super::grequest_start_try(
                 &world,
                 Box::new(|| Some(Err(crate::MpiError::Runtime("task failed".into())))),
@@ -248,7 +248,7 @@ mod tests {
     fn mixed_waitall_with_p2p() {
         // One MPI_Waitall synchronizing a receive AND an async task — the
         // paper's headline use case for generalized requests.
-        Universe::run(Universe::with_ranks(2), |world| {
+        Universe::builder().ranks(2).run(|world| {
             if world.rank() == 0 {
                 world.send(b"data", 1, 0).unwrap();
             } else {

@@ -40,10 +40,11 @@ use crate::grequest::grequest_start_try;
 use crate::info::Info;
 use crate::metrics::Metrics;
 use crate::request::{Request, Status};
+use crate::util::hints::{parse_u64, HintKey, HintRegistry};
 use crate::util::pool::{LocalChunkPool, PooledBuf};
 use engine::{IoDone, IoEngine, IoOp, WriteBuf};
 use std::path::Path;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
 
 // --------------------------------------------------------------- hints
@@ -56,13 +57,25 @@ pub const DEFAULT_DS_THRESHOLD: usize = 4 * 1024;
 const H_CB_NODES: usize = 0;
 const H_CB_BUFFER_SIZE: usize = 1;
 const H_DS_THRESHOLD: usize = 2;
-const UNSET: u64 = u64::MAX;
 
-/// (info key, env fallback) per slot, in slot order.
-const HINT_KEYS: [(&str, &str); 3] = [
-    ("mpix_io_cb_nodes", "MPIX_IO_CB_NODES"),
-    ("mpix_io_cb_buffer_size", "MPIX_IO_CB_BUFFER_SIZE"),
-    ("mpix_io_ds_threshold", "MPIX_IO_DS_THRESHOLD"),
+/// The `mpix_io_*` key table, in slot order. All three are plain
+/// numeric hints, so they share [`parse_u64`].
+pub static IO_KEYS: [HintKey; 3] = [
+    HintKey {
+        info: "mpix_io_cb_nodes",
+        env: "MPIX_IO_CB_NODES",
+        parse: parse_u64,
+    },
+    HintKey {
+        info: "mpix_io_cb_buffer_size",
+        env: "MPIX_IO_CB_BUFFER_SIZE",
+        parse: parse_u64,
+    },
+    HintKey {
+        info: "mpix_io_ds_threshold",
+        env: "MPIX_IO_DS_THRESHOLD",
+        parse: parse_u64,
+    },
 ];
 
 /// MPI-IO tunables, resolved the way [`crate::coll::select`] resolves
@@ -85,73 +98,45 @@ const HINT_KEYS: [(&str, &str); 3] = [
 /// every rank: the two-phase schedule is SPMD and all ranks must resolve
 /// the same plan.
 pub struct IoHints {
-    slots: [AtomicU64; 3],
+    hints: HintRegistry<3>,
 }
 
 impl IoHints {
     /// All-default hints.
     pub fn new() -> IoHints {
         IoHints {
-            slots: std::array::from_fn(|_| AtomicU64::new(UNSET)),
+            hints: HintRegistry::new(&IO_KEYS),
         }
     }
 
     /// Snapshot of `parent`'s slots (child comms and opened files
     /// inherit, like MPI info hints through `MPI_Comm_dup`).
     pub fn inherited(parent: &IoHints) -> IoHints {
-        let h = IoHints::new();
-        for (dst, src) in h.slots.iter().zip(parent.slots.iter()) {
-            dst.store(src.load(Ordering::Relaxed), Ordering::Relaxed);
+        IoHints {
+            hints: HintRegistry::inherited(&parent.hints),
         }
-        h
     }
 
     /// Read `MPIX_IO_*` overrides from the environment (top-level
     /// communicator creation; children inherit instead). Unparsable
     /// values are ignored — an env var cannot fail comm creation.
     pub fn from_env() -> IoHints {
-        let h = IoHints::new();
-        for (i, (_, env_key)) in HINT_KEYS.iter().enumerate() {
-            if let Ok(v) = std::env::var(env_key) {
-                if let Ok(n) = v.trim().parse::<u64>() {
-                    if n != UNSET {
-                        h.slots[i].store(n, Ordering::Relaxed);
-                    }
-                }
-            }
+        IoHints {
+            hints: HintRegistry::from_env(&IO_KEYS),
         }
-        h
     }
 
     /// Apply `mpix_io_*` info keys. An explicit API call, so unknown
-    /// values are errors — and transactional: every key is validated
-    /// before any slot is stored.
+    /// values are errors — and transactional
+    /// ([`HintRegistry::apply_info`]): every key is validated before any
+    /// slot is stored. A value of `u64::MAX` (the unset sentinel) is
+    /// rejected at parse time.
     pub fn apply_info(&self, info: &Info) -> Result<()> {
-        let mut updates: [Option<u64>; 3] = [None; 3];
-        for (i, (info_key, _)) in HINT_KEYS.iter().enumerate() {
-            if let Some(v) = info.get(info_key) {
-                let n = v.trim().parse::<u64>().map_err(|_| {
-                    MpiError::InvalidArg(format!("{info_key}: not a number: {v:?}"))
-                })?;
-                if n == UNSET {
-                    return Err(MpiError::InvalidArg(format!("{info_key}: value too large")));
-                }
-                updates[i] = Some(n);
-            }
-        }
-        for (i, u) in updates.iter().enumerate() {
-            if let Some(n) = u {
-                self.slots[i].store(*n, Ordering::Relaxed);
-            }
-        }
-        Ok(())
+        self.hints.apply_info(info)
     }
 
     fn get(&self, i: usize) -> Option<u64> {
-        match self.slots[i].load(Ordering::Relaxed) {
-            UNSET => None,
-            v => Some(v),
-        }
+        self.hints.get(i)
     }
 
     /// Aggregator count for a communicator of `comm_size` ranks; `0`

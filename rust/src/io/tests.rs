@@ -21,7 +21,7 @@ fn interleaved_view(n: usize, me: usize, blocks: usize, blk: usize) -> Datatype 
 #[test]
 fn iwrite_iread_roundtrip_via_grequests() {
     let path = tmp("rw");
-    Universe::run(Universe::with_ranks(1), |world| {
+    Universe::builder().ranks(1).run(|world| {
         let f = File::open(&world, &path).unwrap();
         let w = f.iwrite_at(10, b"hello-io").unwrap();
         // Completion flows through MPI_Wait → progress → poll_fn.
@@ -40,7 +40,7 @@ fn mixed_waitall_io_and_messages() {
     // The paper's headline for grequests: one waitall over I/O tasks
     // AND nonblocking communication.
     let path = tmp("mixed");
-    Universe::run(Universe::with_ranks(2), |world| {
+    Universe::builder().ranks(2).run(|world| {
         let f = File::open(&world, &path).unwrap();
         if world.rank() == 0 {
             world.send(b"msg", 1, 0).unwrap();
@@ -64,7 +64,7 @@ fn interleaved_views_collective_roundtrip() {
     let path = tmp("view");
     const BLK: usize = 16;
     const BLOCKS: usize = 8; // per rank
-    Universe::run(Universe::with_ranks(4), |world| {
+    Universe::builder().ranks(4).run(|world| {
         let f = File::open(&world, &path).unwrap();
         let me = world.rank();
         let ft = interleaved_view(world.size(), me, BLOCKS, BLK);
@@ -96,7 +96,7 @@ fn interleaved_views_collective_roundtrip() {
 #[test]
 fn view_size_mismatch_errors() {
     let path = tmp("err");
-    Universe::run(Universe::with_ranks(1), |world| {
+    Universe::builder().ranks(1).run(|world| {
         let f = File::open(&world, &path).unwrap();
         f.set_view(0, &Datatype::bytes(32));
         assert!(f.write_view(&[0u8; 16]).is_err());
@@ -122,7 +122,7 @@ fn twophase_agreement_interleaved_sizes_2_to_8() {
     const BLOCKS: usize = 8;
     for n in 2..=8usize {
         let path = tmp(&format!("agree{n}"));
-        Universe::run(Universe::with_ranks(n), |world| {
+        Universe::builder().ranks(n).run(|world| {
             let f = File::open(&world, &path).unwrap();
             let me = world.rank();
             let ft = interleaved_view(n, me, BLOCKS, BLK);
@@ -179,7 +179,7 @@ fn cb_nodes_hint_controls_domain_count() {
     // exactly k contiguous writes for a hole-free interleaved pattern.
     for (nodes, expect_ops) in [("1", 1u64), ("2", 2), ("4", 4)] {
         let path = tmp(&format!("cbn{nodes}"));
-        Universe::run(Universe::with_ranks(4), |world| {
+        Universe::builder().ranks(4).run(|world| {
             let mut info = Info::new();
             info.set("mpix_io_cb_nodes", nodes);
             let f = File::open_with_info(&world, &path, &info).unwrap();
@@ -205,7 +205,7 @@ fn cb_nodes_zero_falls_back_independent() {
     // entry points run the independent per-rank path and say so in the
     // metrics.
     let path = tmp("cbn0");
-    Universe::run(Universe::with_ranks(4), |world| {
+    Universe::builder().ranks(4).run(|world| {
         let mut info = Info::new();
         info.set("mpix_io_cb_nodes", "0");
         let f = File::open_with_info(&world, &path, &info).unwrap();
@@ -238,7 +238,7 @@ fn ds_threshold_env_switches_sieve() {
         std::env::set_var("MPIX_IO_DS_THRESHOLD", thresh);
         let path = tmp(&format!("sieve{thresh}"));
         std::fs::write(&path, vec![0xEEu8; 64]).unwrap();
-        let counts = Universe::run(Universe::with_ranks(1), |world| {
+        let counts = Universe::builder().ranks(1).run(|world| {
             let f = File::open(&world, &path).unwrap();
             // Two 8-byte blocks with a 24-byte hole between them.
             let ft = Datatype::hindexed(&[(0, 8), (32, 8)], &Datatype::u8());
@@ -273,7 +273,7 @@ fn comm_io_info_inherited_by_files_and_children() {
     // The comm-level hint path: apply_io_info on the comm, files opened
     // afterwards (and dup'd comms) inherit — mirroring apply_coll_info.
     let path = tmp("inherit");
-    Universe::run(Universe::with_ranks(2), |world| {
+    Universe::builder().ranks(2).run(|world| {
         let mut info = Info::new();
         info.set("mpix_io_cb_nodes", "0");
         world.apply_io_info(&info).unwrap();
@@ -308,7 +308,7 @@ fn split_collective_overlaps_p2p() {
     // tag-space collisions (the exchange rides the collective context).
     let path = tmp("split");
     const BLK: usize = 16;
-    Universe::run(Universe::with_ranks(3), |world| {
+    Universe::builder().ranks(3).run(|world| {
         let f = File::open(&world, &path).unwrap();
         let me = world.rank();
         let ft = interleaved_view(3, me, 4, BLK);
@@ -338,7 +338,7 @@ fn twophase_partial_writers() {
     // Ranks with empty views still participate (deterministic receive
     // counts): only even ranks write; odd ranks pass an empty view.
     let path = tmp("partial");
-    Universe::run(Universe::with_ranks(4), |world| {
+    Universe::builder().ranks(4).run(|world| {
         let me = world.rank();
         let f = File::open(&world, &path).unwrap();
         let writer = me % 2 == 0;

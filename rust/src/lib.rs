@@ -28,7 +28,8 @@
 //! | API surface: communicators, requests, collectives, RMA, two-phase IO | [`comm`], [`request`], [`coll`], [`rma`], [`io`], [`datatype`], [`info`] |
 //! | Paper extensions | [`grequest`] (1), [`datatype`] (2), [`stream`] (3), [`enqueue`] + [`offload`] (4), [`threadcomm`] (5), [`progress`] (6) |
 //! | Transport: endpoints/VCIs, channels, matching | [`fabric`], [`matching`] |
-//! | Substrate: SPSC ring, chunk pool, counters | [`util::spsc`], [`util::pool`], [`metrics`] |
+//! | Netmods: pluggable transports (inproc / shm / tcp) | [`netmod`] |
+//! | Substrate: SPSC ring, chunk pool, hint registry, counters | [`util::spsc`], [`util::pool`], [`util::hints`], [`metrics`] |
 //! | Kernel runtime: PJRT client for AOT artifacts | [`runtime`] |
 //!
 //! Collectives are *selectable schedules* ([`coll::select`]): each
@@ -46,6 +47,17 @@
 //! (`iwrite_at_all_begin`/`end`) completed by grequest `poll_fn`s, and
 //! `mpix_io_*` / `MPIX_IO_*` tunables resolved like the collective
 //! overrides ([`io::IoHints`]).
+//!
+//! Transports are pluggable ([`netmod`]): the fabric talks to the wire
+//! through the [`netmod::Netmod`] trait (MPICH's ch4 netmod seam), with
+//! three implementations — the original in-process SPSC rings
+//! (`inproc`), memory-mapped shared-memory rings across real processes
+//! (`shm`, see `examples/shm_launcher.rs`), and lazily-connected
+//! loopback TCP (`tcp`) — selected by `MPIX_NETMOD` or
+//! [`universe::UniverseBuilder::netmod`]. All `MPIX_*` tunables resolve
+//! through one engine, the unified hint registry ([`util::hints`]):
+//! env read once at creation, transactional info-key overrides,
+//! snapshot inheritance through dup/split/stream communicators.
 //!
 //! # Hot path
 //!
@@ -73,6 +85,7 @@ pub mod info;
 pub mod io;
 pub mod matching;
 pub mod metrics;
+pub mod netmod;
 pub mod offload;
 pub mod progress;
 pub mod request;
@@ -87,6 +100,7 @@ pub use comm::Comm;
 pub use error::{MpiError, Result};
 pub use fabric::{FabricConfig, LockMode};
 pub use info::Info;
+pub use netmod::NetmodSel;
 pub use request::{waitall, waitany, Request, Status};
 pub use stream::{stream_comm_create, stream_comm_create_multiplex, Stream};
 pub use threadcomm::{ThreadComm, Threadcomm};

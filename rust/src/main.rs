@@ -93,7 +93,7 @@ fn kernels() {
 fn pingpong(args: &[String]) {
     let size = flag(args, "--size", 8);
     let iters = flag(args, "--iters", 10_000);
-    let lat = Universe::run(Universe::with_ranks(2), |world| {
+    let lat = Universe::builder().ranks(2).run(|world| {
         let buf = vec![1u8; size];
         let mut rbuf = vec![0u8; size];
         mpix::coll::barrier(&world).unwrap();
@@ -130,7 +130,7 @@ fn msgrate(args: &[String]) {
         ..Default::default()
     };
     let use_stream = config == "stream";
-    let rates = Universe::run(fcfg, |world| {
+    let rates = Universe::builder().with_config(fcfg).run(|world| {
         let comms: Vec<mpix::Comm> = (0..threads)
             .map(|_| {
                 if use_stream {

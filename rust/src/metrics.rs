@@ -67,6 +67,16 @@ pub struct Metrics {
     /// Collective I/O calls that fell back to the independent per-rank
     /// path (`mpix_io_cb_nodes = 0`).
     pub io_indep_fallback: AtomicU64,
+    /// Netmod channels established (one per (src endpoint, dst endpoint)
+    /// pair actually used — the tcp lazy-connect test gates on this
+    /// being O(active peers), not O(world)).
+    pub netmod_connects: AtomicU64,
+    /// Bytes serialized onto an out-of-process transport (shm rings,
+    /// tcp frames). The inproc netmod moves envelopes by value and
+    /// never counts here.
+    pub netmod_bytes_tx: AtomicU64,
+    /// Bytes deserialized off an out-of-process transport.
+    pub netmod_bytes_rx: AtomicU64,
 }
 
 impl Metrics {
@@ -110,6 +120,9 @@ impl Metrics {
             io_agg_file_ops: self.io_agg_file_ops.load(Relaxed),
             io_sieve_rmw: self.io_sieve_rmw.load(Relaxed),
             io_indep_fallback: self.io_indep_fallback.load(Relaxed),
+            netmod_connects: self.netmod_connects.load(Relaxed),
+            netmod_bytes_tx: self.netmod_bytes_tx.load(Relaxed),
+            netmod_bytes_rx: self.netmod_bytes_rx.load(Relaxed),
         }
     }
 }
@@ -153,6 +166,11 @@ pub struct MetricsSnapshot {
     pub io_agg_file_ops: u64,
     pub io_sieve_rmw: u64,
     pub io_indep_fallback: u64,
+    /// Netmod tallies (see `crate::netmod`): channels established and
+    /// wire bytes moved by serializing transports.
+    pub netmod_connects: u64,
+    pub netmod_bytes_tx: u64,
+    pub netmod_bytes_rx: u64,
 }
 
 impl MetricsSnapshot {
@@ -189,6 +207,9 @@ impl MetricsSnapshot {
             io_agg_file_ops: self.io_agg_file_ops - earlier.io_agg_file_ops,
             io_sieve_rmw: self.io_sieve_rmw - earlier.io_sieve_rmw,
             io_indep_fallback: self.io_indep_fallback - earlier.io_indep_fallback,
+            netmod_connects: self.netmod_connects - earlier.netmod_connects,
+            netmod_bytes_tx: self.netmod_bytes_tx - earlier.netmod_bytes_tx,
+            netmod_bytes_rx: self.netmod_bytes_rx - earlier.netmod_bytes_rx,
         }
     }
 }

@@ -1,0 +1,101 @@
+//! The `inproc` netmod: the runtime's original transport, re-homed
+//! behind the [`Netmod`] trait.
+//!
+//! Ranks are threads over one shared fabric; a channel is an in-process
+//! [`SpscRing`] of [`Envelope`]s moved **by value** — no serialization,
+//! no wire format, no extra copy. Receivers discover channels through
+//! the endpoint's sharded inbox registry ([`crate::fabric::InboxRegistry`]):
+//! `begin_rx` is exactly the old incremental snapshot refresh, and
+//! `maybe_active` is the old has-registrations idle fast path. The only
+//! change from the pre-netmod fabric is *where* this code lives; the
+//! pump loop compiles to the same operations (see `netmod::tests` for
+//! the counter-identity evidence).
+
+use super::{Channel, Netmod, Port};
+use crate::fabric::{Endpoint, Envelope, EpState, Fabric};
+use crate::util::spsc::SpscRing;
+use std::sync::Arc;
+
+pub struct InprocNetmod;
+
+/// Receive cursor: position in the inbox-bucket snapshot plus the
+/// channel currently being drained (cached `Arc` so repeated pops pay no
+/// re-indexing — the same shape as the old nested drain loop).
+#[derive(Default)]
+pub struct InprocCursor {
+    bucket: usize,
+    chan: usize,
+    current: Option<Arc<Channel>>,
+}
+
+impl Netmod for InprocNetmod {
+    const NAME: &'static str = "inproc";
+    type RxCursor = InprocCursor;
+
+    fn connect(&self, fabric: &Fabric, src: (u32, u16), dst: (u32, u16)) -> Arc<Channel> {
+        let ch = Arc::new(Channel {
+            src,
+            port: Port::Inproc(SpscRing::with_capacity(fabric.cfg.channel_cap)),
+        });
+        // Publish into the destination endpoint's inbox registry; its
+        // next refresh snapshots the new channel.
+        fabric
+            .endpoint(dst.0, dst.1)
+            .inboxes
+            .register(src.0, Arc::clone(&ch));
+        ch
+    }
+
+    fn maybe_active(&self, _fabric: &Fabric, ep: &Endpoint, _rank: u32, _vci: u16) -> bool {
+        // Idle-endpoint fast path: nothing was ever registered to
+        // deliver here, so there is nothing to drain or pump (pending
+        // rendezvous work always has an inbound channel: CTS/chunks/FIN
+        // arrive through one).
+        ep.inboxes.has_registrations()
+    }
+
+    fn begin_rx(&self, fabric: &Fabric, ep: &Endpoint, st: &mut EpState, _rank: u32, _vci: u16) {
+        fabric.refresh_inboxes(ep, st);
+    }
+
+    fn rx_pop(
+        &self,
+        _fabric: &Fabric,
+        st: &mut EpState,
+        cur: &mut InprocCursor,
+        _rank: u32,
+        _vci: u16,
+    ) -> Option<Envelope> {
+        loop {
+            if let Some(ch) = &cur.current {
+                if let Some(env) = ch.pop() {
+                    return Some(env);
+                }
+                // Channel drained for this pass; move on.
+                cur.current = None;
+                cur.chan += 1;
+            }
+            loop {
+                let Some(bucket) = st.inbox_cache.get(cur.bucket) else {
+                    return None;
+                };
+                if let Some(ch) = bucket.chans.get(cur.chan) {
+                    cur.current = Some(Arc::clone(ch));
+                    break;
+                }
+                cur.bucket += 1;
+                cur.chan = 0;
+            }
+        }
+    }
+
+    fn max_payload(&self) -> Option<usize> {
+        None
+    }
+
+    fn flush(&self, _fabric: &Fabric, _rank: u32) {
+        // Envelopes live in process memory until popped; peers (threads
+        // over the same fabric) can always drain them. Nothing buffered
+        // transport-side.
+    }
+}

@@ -1,0 +1,283 @@
+//! The netmod layer: pluggable transports under one fabric API.
+//!
+//! MPICH's ch4 device talks to the network through a *netmod* (tcp, ofi,
+//! ucx) compiled in behind a fixed function table; everything above the
+//! netmod — matching, rendezvous, RMA, collectives — is transport-blind.
+//! This module is that seam for this runtime (ROADMAP: the step that
+//! turns thread-"ranks" into a deployable system):
+//!
+//! * [`Netmod`] is the transport contract: channel establishment, rx
+//!   doorbells, a per-endpoint progress hook, and a teardown/flush
+//!   contract (see ARCHITECTURE.md §10 for the full table).
+//! * [`Channel`] is the sender-side handle the upper layers push into;
+//!   its [`Port`] says which transport backs it.
+//! * Three netmods ship:
+//!   - [`inproc`]: the original in-process SPSC rings, re-homed. Zero
+//!     hot-path change — envelopes still move by value through
+//!     [`crate::util::spsc::SpscRing`] with no serialization.
+//!   - [`shm`] (unix): memory-mapped rings + futex-free doorbells across
+//!     real processes, with a fork-N-ranks launcher helper.
+//!   - [`tcp`]: length-prefixed envelope frames over loopback sockets
+//!     with **lazy** connection establishment — per-peer memory is
+//!     O(active peers), not O(world).
+//!
+//! ## Dispatch discipline (no `dyn` in the pump loop)
+//!
+//! The progress engine never calls through a vtable. The fabric stores
+//! an [`ActiveNetmod`] enum; `progress::poll_endpoint` matches it **once
+//! per poll** and enters `poll_endpoint_on::<N: Netmod>`, which the
+//! compiler monomorphizes per transport — every `Netmod` method call
+//! inside the pump loop is static and inlinable, exactly like ch4's
+//! compile-time netmod binding (`MPIDI_NM_*` direct calls). [`Port`] is
+//! data-level dispatch on the sender side: one predictable branch per
+//! push, no indirect call.
+//!
+//! Selection: `FabricConfig::default()` resolves `MPIX_NETMOD`
+//! (`inproc` | `shm` | `tcp`) through the unified hint registry
+//! ([`crate::util::hints`]); `UniverseBuilder::netmod` overrides it
+//! programmatically.
+
+pub mod inproc;
+#[cfg(unix)]
+pub mod shm;
+pub mod tcp;
+#[cfg(test)]
+mod tests;
+pub mod wire;
+
+use crate::fabric::{Endpoint, Envelope, EpState, Fabric};
+use crate::metrics::Metrics;
+use crate::util::hints::{HintKey, HintRegistry};
+use crate::util::spsc::SpscRing;
+use std::sync::Arc;
+
+pub use inproc::InprocNetmod;
+#[cfg(unix)]
+pub use shm::ShmNetmod;
+pub use tcp::TcpNetmod;
+
+// ----------------------------------------------------------- selection
+
+/// Which transport a fabric runs on. Resolved from `MPIX_NETMOD` /
+/// `mpix_netmod` via the hint registry, or set programmatically through
+/// `UniverseBuilder::netmod`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum NetmodSel {
+    /// In-process SPSC rings (ranks are threads). The default.
+    #[default]
+    Inproc,
+    /// Memory-mapped shared-memory rings (ranks may be processes).
+    Shm,
+    /// Loopback TCP with lazy connection establishment.
+    Tcp,
+}
+
+/// `MPIX_NETMOD` hint key (one slot; the encoded value is
+/// [`NetmodSel::code`]).
+pub static NETMOD_KEYS: [HintKey; 1] = [HintKey {
+    info: "mpix_netmod",
+    env: "MPIX_NETMOD",
+    parse: parse_netmod_hint,
+}];
+
+fn parse_netmod_hint(s: &str) -> Option<u64> {
+    NetmodSel::parse(s).map(|m| m.code() as u64)
+}
+
+impl NetmodSel {
+    pub fn parse(s: &str) -> Option<NetmodSel> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "inproc" => Some(NetmodSel::Inproc),
+            "shm" => Some(NetmodSel::Shm),
+            "tcp" => Some(NetmodSel::Tcp),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            NetmodSel::Inproc => "inproc",
+            NetmodSel::Shm => "shm",
+            NetmodSel::Tcp => "tcp",
+        }
+    }
+
+    fn code(self) -> u8 {
+        match self {
+            NetmodSel::Inproc => 0,
+            NetmodSel::Shm => 1,
+            NetmodSel::Tcp => 2,
+        }
+    }
+
+    fn from_code(c: u8) -> NetmodSel {
+        match c {
+            1 => NetmodSel::Shm,
+            2 => NetmodSel::Tcp,
+            _ => NetmodSel::Inproc,
+        }
+    }
+
+    /// Resolve from the environment (read once; invalid values fall back
+    /// to `Inproc`). Called by `FabricConfig::default()`.
+    pub fn from_env() -> NetmodSel {
+        HintRegistry::from_env(&NETMOD_KEYS)
+            .get(0)
+            .map(|c| NetmodSel::from_code(c as u8))
+            .unwrap_or_default()
+    }
+}
+
+// ------------------------------------------------------------- channel
+
+/// Transport backing of one [`Channel`].
+pub enum Port {
+    /// In-process ring: envelopes move by value, never serialized.
+    Inproc(SpscRing<Envelope>),
+    /// Shared-memory ring: envelopes serialize through [`wire`].
+    #[cfg(unix)]
+    Shm(shm::ShmPort),
+    /// TCP connection: length-prefixed [`wire`] frames.
+    Tcp(tcp::TcpPort),
+}
+
+/// A lazily-established channel from one endpoint to another — the
+/// sender-side handle cached in `EpState::tx_cache`. Which transport
+/// backs it is a per-fabric constant, so the `Port` branch below is
+/// perfectly predicted on the hot path.
+pub struct Channel {
+    /// Source (rank, vci) — receivers use it for diagnostics only.
+    pub src: (u32, u16),
+    pub(crate) port: Port,
+}
+
+impl Channel {
+    /// Producer side. `Err(env)` hands the envelope back on transport
+    /// backpressure (full ring / unflushed tcp backlog), same contract as
+    /// the original SPSC push. Serializing transports count
+    /// `netmod_bytes_tx`.
+    #[inline]
+    pub fn push(&self, metrics: &Metrics, env: Envelope) -> std::result::Result<(), Envelope> {
+        match &self.port {
+            Port::Inproc(ring) => ring.push(env),
+            #[cfg(unix)]
+            Port::Shm(p) => p.push(metrics, env),
+            Port::Tcp(p) => p.push(metrics, env),
+        }
+    }
+
+    /// Producer-side backpressure probe (exact for inproc — this
+    /// endpoint is the ring's only producer; conservative for shm/tcp).
+    /// Lets the rendezvous pump skip the chunk copy when a push could
+    /// not succeed.
+    #[inline]
+    pub fn is_full(&self) -> bool {
+        match &self.port {
+            Port::Inproc(ring) => ring.is_full(),
+            #[cfg(unix)]
+            Port::Shm(p) => p.is_full(),
+            Port::Tcp(p) => p.is_full(),
+        }
+    }
+
+    /// Consumer side, **inproc only**: shm/tcp receive through the
+    /// netmod's own rx path ([`Netmod::rx_pop`]), not through the
+    /// sender-side handle.
+    #[inline]
+    pub fn pop(&self) -> Option<Envelope> {
+        match &self.port {
+            Port::Inproc(ring) => ring.pop(),
+            #[cfg(unix)]
+            Port::Shm(_) => None,
+            Port::Tcp(_) => None,
+        }
+    }
+}
+
+// ----------------------------------------------------------- the trait
+
+/// The transport contract. All methods are called with exclusion held on
+/// the endpoint named by (`rank`, `vci`) wherever an `&mut EpState` is
+/// passed; methods without it must be safe under concurrent polls of
+/// *different* endpoints (netmod-internal locking, never endpoint
+/// locks — that ordering is what keeps the layer deadlock-free).
+///
+/// Establishment/teardown state machine (per channel):
+///
+/// ```text
+/// absent --connect()--> established --fabric drop / flush()--> drained
+/// ```
+///
+/// `connect` is called exactly once per (src endpoint, dst endpoint)
+/// pair — `Fabric::channel` caches the handle and counts
+/// `netmod_connects` — which is what makes tcp's establishment lazy:
+/// no call, no socket.
+pub trait Netmod: Send + Sync + Sized + 'static {
+    /// Transport name (diagnostics; matches [`NetmodSel::name`]).
+    const NAME: &'static str;
+
+    /// Per-poll receive cursor. Built fresh (`Default`) for each
+    /// `poll_endpoint` pass; lets [`Netmod::rx_pop`] resume iteration
+    /// across sources without rescanning.
+    type RxCursor: Default;
+
+    /// Establish the channel `src` → `dst` (both are (rank, vci)).
+    /// Called under the *source* endpoint's exclusion, at most once per
+    /// pair.
+    fn connect(&self, fabric: &Fabric, src: (u32, u16), dst: (u32, u16)) -> Arc<Channel>;
+
+    /// Rx doorbell: may this endpoint have inbound traffic or pending tx
+    /// work? `false` lets the poll skip taking the endpoint exclusion
+    /// entirely (the idle-endpoint fast path). Must never return a false
+    /// negative after traffic was produced for this endpoint.
+    fn maybe_active(&self, fabric: &Fabric, ep: &Endpoint, rank: u32, vci: u16) -> bool;
+
+    /// Per-endpoint progress hook, called once at the top of each poll
+    /// (and before a backpressure stash drain): refresh inbox snapshots,
+    /// ack doorbells, accept/drain sockets — whatever the transport
+    /// needs before [`Netmod::rx_pop`] can see everything that arrived.
+    fn begin_rx(&self, fabric: &Fabric, ep: &Endpoint, st: &mut EpState, rank: u32, vci: u16);
+
+    /// Pop the next inbound envelope for (`rank`, `vci`), or `None` when
+    /// drained. Must preserve per-source FIFO order.
+    fn rx_pop(
+        &self,
+        fabric: &Fabric,
+        st: &mut EpState,
+        cur: &mut Self::RxCursor,
+        rank: u32,
+        vci: u16,
+    ) -> Option<Envelope>;
+
+    /// Largest single envelope payload the transport can carry
+    /// (`None` = unbounded). `Fabric::try_new` clamps `eager_max` /
+    /// `chunk_size` to fit.
+    fn max_payload(&self) -> Option<usize>;
+
+    /// Teardown/flush contract: drain any transport-buffered tx bytes
+    /// for `rank` (bounded — gives up if a peer is gone). Called by the
+    /// launcher/universe after the rank's main function returns; rings
+    /// readable by live peers (inproc, shm) need no flushing.
+    fn flush(&self, fabric: &Fabric, rank: u32);
+}
+
+/// The fabric's chosen transport. An enum, not a `Box<dyn Netmod>`, so
+/// the per-poll dispatch is one match and everything below it
+/// monomorphizes (see the module docs).
+pub enum ActiveNetmod {
+    Inproc(InprocNetmod),
+    #[cfg(unix)]
+    Shm(ShmNetmod),
+    Tcp(TcpNetmod),
+}
+
+impl ActiveNetmod {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ActiveNetmod::Inproc(_) => InprocNetmod::NAME,
+            #[cfg(unix)]
+            ActiveNetmod::Shm(_) => ShmNetmod::NAME,
+            ActiveNetmod::Tcp(_) => TcpNetmod::NAME,
+        }
+    }
+}

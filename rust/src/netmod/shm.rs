@@ -1,0 +1,610 @@
+//! The `shm` netmod: memory-mapped rings + futex-free doorbells across
+//! real processes.
+//!
+//! One file-backed segment holds every channel of the fabric. Ranks may
+//! be threads of one process (`UniverseBuilder::run` with
+//! `MPIX_NETMOD=shm`) or real forked processes (`UniverseBuilder::run_rank`
+//! + the `shm_launcher` example): the layout is identical, only who maps
+//! it differs.
+//!
+//! ## Segment layout (page-aligned sections, all offsets little-endian)
+//!
+//! ```text
+//! [header page]   magic, nranks, nvcis, ring_bytes
+//! [doorbells]     nranks × nvcis  AtomicU64, indexed by (dst rank, dst vci)
+//! [ring headers]  nranks² × nvcis × 128 B   {head: AtomicU64, tail: AtomicU64}
+//! [ring data]     one ring_bytes byte ring per header, sparse until touched
+//! ```
+//!
+//! A ring is keyed by (src rank, dst rank, dst vci): all source VCIs of
+//! one rank share the ring to a given destination endpoint, serialized
+//! by a **process-local** producer lock (every producer of a ring lives
+//! in the source rank's process, so the lock never needs to live in
+//! shared memory). The consumer is the destination endpoint alone,
+//! under its own exclusion — SPSC at the ring level, like the inproc
+//! transport. Records are `[u32 len][wire bytes]` with byte-exact wrap.
+//!
+//! ## Futex-free doorbells
+//!
+//! Producers bump the destination endpoint's doorbell counter
+//! (`fetch_add`, release) after publishing the ring head; a consumer's
+//! `maybe_active` is one acquire load compared against its process-local
+//! `last_seen` — no syscalls, no futex words, pure userspace polling.
+//! The release/acquire pairing guarantees a consumer that observes the
+//! bump also observes the record behind it; a record published after
+//! the consumer's read re-bumps, so no arrival is ever missed.
+//!
+//! ## Ordering argument (no missed record)
+//!
+//! ```text
+//! producer: ring bytes → head.store(Release) → doorbell.fetch_add(Release)
+//! consumer: doorbell.load(Acquire) [maybe_active]
+//!           → last_seen = doorbell [begin_rx] → head.load(Acquire) [rx_pop]
+//! ```
+
+use super::{wire, Channel, Netmod, Port};
+use crate::fabric::{Endpoint, Envelope, EpState, Fabric, FabricConfig};
+use crate::metrics::Metrics;
+use std::fs::{File, OpenOptions};
+use std::io::{self, Read, Seek, SeekFrom};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+// ----------------------------------------------------------------- ffi
+// Zero-dependency policy: raw libc symbols, unix-only.
+
+mod ffi {
+    use std::ffi::c_void;
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> i32;
+        pub fn fork() -> i32;
+        pub fn waitpid(pid: i32, status: *mut i32, options: i32) -> i32;
+        pub fn _exit(code: i32) -> !;
+    }
+    pub const PROT_READ: i32 = 1;
+    pub const PROT_WRITE: i32 = 2;
+    pub const MAP_SHARED: i32 = 1;
+}
+
+const PAGE: usize = 4096;
+const MAGIC: u64 = 0x4d50_4958_5348_4d31; // "MPIXSHM1"
+/// Per-ring header stride: head and tail on separate cache lines.
+const RING_HDR: usize = 128;
+/// Wire-format overhead bound per record (kind + header + variant
+/// scalars + length prefixes); the payload clamp subtracts it.
+const REC_OVERHEAD: usize = 96;
+
+fn align_up(v: usize, a: usize) -> usize {
+    v.div_ceil(a) * a
+}
+
+// ------------------------------------------------------------- segment
+
+/// One process's mapping of the shared segment, plus the process-local
+/// producer state. Creating ranks own the file (unlink on drop);
+/// attaching ranks just unmap.
+pub struct ShmSegment {
+    base: *mut u8,
+    map_len: usize,
+    /// `Some` = this process created the file and unlinks it on drop.
+    owned_path: Option<PathBuf>,
+    nranks: usize,
+    nvcis: usize,
+    ring_bytes: usize,
+    off_db: usize,
+    off_rh: usize,
+    off_data: usize,
+}
+
+// SAFETY: the raw mapping is shared by design; all cross-thread and
+// cross-process access goes through the atomics and the release/acquire
+// protocol documented in the module header.
+unsafe impl Send for ShmSegment {}
+unsafe impl Sync for ShmSegment {}
+
+impl ShmSegment {
+    fn offsets(nranks: usize, nvcis: usize, ring_bytes: usize) -> (usize, usize, usize, usize) {
+        let off_db = PAGE;
+        let off_rh = align_up(off_db + nranks * nvcis * 8, PAGE);
+        let nrings = nranks * nranks * nvcis;
+        let off_data = align_up(off_rh + nrings * RING_HDR, PAGE);
+        let total = off_data + nrings * ring_bytes;
+        (off_db, off_rh, off_data, total)
+    }
+
+    fn map(file: &File, len: usize) -> io::Result<*mut u8> {
+        use std::os::unix::io::AsRawFd;
+        let p = unsafe {
+            ffi::mmap(
+                std::ptr::null_mut(),
+                len,
+                ffi::PROT_READ | ffi::PROT_WRITE,
+                ffi::MAP_SHARED,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if p as isize == -1 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(p as *mut u8)
+    }
+
+    /// Create (truncate) the segment file and map it. `set_len` leaves
+    /// the data section sparse — rings cost physical pages only once
+    /// traffic touches them.
+    pub fn create(path: &Path, nranks: usize, nvcis: usize, ring_bytes: usize) -> io::Result<ShmSegment> {
+        let (off_db, off_rh, off_data, total) = Self::offsets(nranks, nvcis, ring_bytes);
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(path)?;
+        file.set_len(total as u64)?;
+        let base = Self::map(&file, total)?;
+        // Header words; everything else starts life zero (fresh file).
+        for (i, v) in [MAGIC, nranks as u64, nvcis as u64, ring_bytes as u64]
+            .into_iter()
+            .enumerate()
+        {
+            unsafe { std::ptr::write(base.cast::<u64>().add(i), v) };
+        }
+        Ok(ShmSegment {
+            base,
+            map_len: total,
+            owned_path: Some(path.to_path_buf()),
+            nranks,
+            nvcis,
+            ring_bytes,
+            off_db,
+            off_rh,
+            off_data,
+        })
+    }
+
+    /// Map an existing segment (child processes). Geometry comes from
+    /// the header and must match what the caller's config expects.
+    pub fn attach(path: &Path) -> io::Result<ShmSegment> {
+        let mut file = OpenOptions::new().read(true).write(true).open(path)?;
+        let mut hdr = [0u8; 32];
+        file.seek(SeekFrom::Start(0))?;
+        file.read_exact(&mut hdr)?;
+        let word = |i: usize| u64::from_le_bytes(hdr[i * 8..i * 8 + 8].try_into().unwrap());
+        if word(0) != MAGIC {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                "shm segment: bad magic",
+            ));
+        }
+        let (nranks, nvcis, ring_bytes) = (word(1) as usize, word(2) as usize, word(3) as usize);
+        let (off_db, off_rh, off_data, total) = Self::offsets(nranks, nvcis, ring_bytes);
+        if file.metadata()?.len() != total as u64 {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                "shm segment: size does not match header geometry",
+            ));
+        }
+        let base = Self::map(&file, total)?;
+        Ok(ShmSegment {
+            base,
+            map_len: total,
+            owned_path: None,
+            nranks,
+            nvcis,
+            ring_bytes,
+            off_db,
+            off_rh,
+            off_data,
+        })
+    }
+
+    pub fn nranks(&self) -> usize {
+        self.nranks
+    }
+    pub fn nvcis(&self) -> usize {
+        self.nvcis
+    }
+    pub fn ring_bytes(&self) -> usize {
+        self.ring_bytes
+    }
+
+    /// Forget the unlink responsibility (private in-process segments
+    /// unlink eagerly instead — see [`ShmNetmod::new`]).
+    fn disown_path(&mut self) -> Option<PathBuf> {
+        self.owned_path.take()
+    }
+
+    #[inline]
+    fn ring_index(&self, src_rank: u32, dst_rank: u32, dst_vci: u16) -> usize {
+        (src_rank as usize * self.nranks + dst_rank as usize) * self.nvcis + dst_vci as usize
+    }
+
+    #[inline]
+    fn db_index(&self, dst_rank: u32, dst_vci: u16) -> usize {
+        dst_rank as usize * self.nvcis + dst_vci as usize
+    }
+
+    #[inline]
+    fn doorbell(&self, db: usize) -> &AtomicU64 {
+        debug_assert!(db < self.nranks * self.nvcis);
+        // SAFETY: in-bounds, 8-aligned, lives for the mapping's lifetime.
+        unsafe { &*self.base.add(self.off_db + db * 8).cast::<AtomicU64>() }
+    }
+
+    #[inline]
+    fn head(&self, ring: usize) -> &AtomicU64 {
+        // SAFETY: as above; heads sit at stride offset 0.
+        unsafe { &*self.base.add(self.off_rh + ring * RING_HDR).cast::<AtomicU64>() }
+    }
+
+    #[inline]
+    fn tail(&self, ring: usize) -> &AtomicU64 {
+        // SAFETY: as above; tails sit 64 B in (own cache line).
+        unsafe { &*self.base.add(self.off_rh + ring * RING_HDR + 64).cast::<AtomicU64>() }
+    }
+
+    /// Wrapping write of `src` at monotonic byte offset `at`.
+    fn copy_in(&self, ring: usize, at: u64, src: &[u8]) {
+        let data = unsafe { self.base.add(self.off_data + ring * self.ring_bytes) };
+        let pos = (at % self.ring_bytes as u64) as usize;
+        let first = src.len().min(self.ring_bytes - pos);
+        // SAFETY: `free >= len` was checked under the producer lock, so
+        // these bytes are unoccupied; wrap split keeps both copies
+        // in-bounds.
+        unsafe {
+            std::ptr::copy_nonoverlapping(src.as_ptr(), data.add(pos), first);
+            if first < src.len() {
+                std::ptr::copy_nonoverlapping(src.as_ptr().add(first), data, src.len() - first);
+            }
+        }
+    }
+
+    /// Wrapping read into `dst` from monotonic byte offset `at`.
+    fn copy_out(&self, ring: usize, at: u64, dst: &mut [u8]) {
+        let data = unsafe { self.base.add(self.off_data + ring * self.ring_bytes) };
+        let pos = (at % self.ring_bytes as u64) as usize;
+        let first = dst.len().min(self.ring_bytes - pos);
+        // SAFETY: the record was published (head release / acquire), so
+        // these bytes are initialized and stable until we advance tail.
+        unsafe {
+            std::ptr::copy_nonoverlapping(data.add(pos), dst.as_mut_ptr(), first);
+            if first < dst.len() {
+                std::ptr::copy_nonoverlapping(data, dst.as_mut_ptr().add(first), dst.len() - first);
+            }
+        }
+    }
+}
+
+impl Drop for ShmSegment {
+    fn drop(&mut self) {
+        unsafe { ffi::munmap(self.base.cast(), self.map_len) };
+        if let Some(p) = &self.owned_path {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+/// `WireRead` over a published ring record (wrap-aware).
+struct RingReader<'a> {
+    seg: &'a ShmSegment,
+    ring: usize,
+    pos: u64,
+}
+
+impl wire::WireRead for RingReader<'_> {
+    fn read(&mut self, dst: &mut [u8]) {
+        self.seg.copy_out(self.ring, self.pos, dst);
+        self.pos += dst.len() as u64;
+    }
+}
+
+// -------------------------------------------------------------- netmod
+
+/// Shared process-local state behind both the netmod and its ports.
+struct ShmState {
+    seg: ShmSegment,
+    /// Per-ring producer lock + encode scratch. Process-local on
+    /// purpose: every producer of ring (src, dst, vci) lives in rank
+    /// `src`'s process.
+    tx: Vec<Mutex<Vec<u8>>>,
+    /// Consumer-side doorbell shadow, per (rank, vci).
+    last_seen: Vec<AtomicU64>,
+    /// Set once an endpoint ever connected outward: it may have pending
+    /// rendezvous pumps, so its polls can no longer early-out on a
+    /// silent doorbell.
+    tx_active: Vec<AtomicBool>,
+}
+
+pub struct ShmNetmod {
+    state: Arc<ShmState>,
+    max_payload: usize,
+}
+
+/// Producer handle: one ring + one doorbell, resolved at connect time.
+pub struct ShmPort {
+    state: Arc<ShmState>,
+    ring: usize,
+    db: usize,
+}
+
+/// Receive cursor: the source rank whose ring is being drained.
+#[derive(Default)]
+pub struct ShmCursor {
+    src: usize,
+}
+
+impl ShmNetmod {
+    /// Build the transport and clamp `cfg.eager_max` / `cfg.chunk_size`
+    /// to what a ring can carry (so protocol crossovers shift only when
+    /// rings are configured smaller than the eager threshold).
+    pub fn new(cfg: &mut FabricConfig) -> io::Result<ShmNetmod> {
+        let nvcis = cfg.n_shared + cfg.max_streams;
+        let ring_bytes = cfg.shm_ring_bytes.max(4 * PAGE);
+        let seg = if cfg.shm_attach {
+            let path = cfg.shm_path.as_ref().ok_or_else(|| {
+                io::Error::new(io::ErrorKind::InvalidInput, "shm attach requires shm_path")
+            })?;
+            let seg = ShmSegment::attach(path)?;
+            if seg.nranks() != cfg.nranks || seg.nvcis() != nvcis {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!(
+                        "shm segment geometry ({} ranks × {} vcis) does not match config ({} × {})",
+                        seg.nranks(),
+                        seg.nvcis(),
+                        cfg.nranks,
+                        nvcis
+                    ),
+                ));
+            }
+            seg
+        } else if let Some(path) = &cfg.shm_path {
+            ShmSegment::create(path, cfg.nranks, nvcis, ring_bytes)?
+        } else {
+            // Private in-process segment: create under a unique temp
+            // name and unlink immediately — the mapping stays alive,
+            // nothing leaks even on SIGKILL.
+            let path = unique_segment_path();
+            let mut seg = ShmSegment::create(&path, cfg.nranks, nvcis, ring_bytes)?;
+            if let Some(p) = seg.disown_path() {
+                let _ = std::fs::remove_file(p);
+            }
+            seg
+        };
+        let ring_bytes = seg.ring_bytes();
+        let max_payload = ring_bytes / 2 - REC_OVERHEAD;
+        cfg.eager_max = cfg.eager_max.min(max_payload);
+        cfg.chunk_size = cfg.chunk_size.min(max_payload);
+        let nrings = seg.nranks() * seg.nranks() * seg.nvcis();
+        let neps = seg.nranks() * seg.nvcis();
+        Ok(ShmNetmod {
+            state: Arc::new(ShmState {
+                seg,
+                tx: (0..nrings).map(|_| Mutex::new(Vec::new())).collect(),
+                last_seen: (0..neps).map(|_| AtomicU64::new(0)).collect(),
+                tx_active: (0..neps).map(|_| AtomicBool::new(false)).collect(),
+            }),
+            max_payload,
+        })
+    }
+}
+
+impl ShmPort {
+    pub fn push(&self, metrics: &Metrics, env: Envelope) -> std::result::Result<(), Envelope> {
+        let s = &self.state;
+        let rec = wire::encoded_len(&env);
+        let need = 4 + rec;
+        assert!(
+            need <= s.seg.ring_bytes() / 2,
+            "shm netmod: {rec}-byte envelope exceeds ring capacity {} — raise shm_ring_bytes",
+            s.seg.ring_bytes()
+        );
+        let mut scratch = s.tx[self.ring].lock().unwrap();
+        let head = s.seg.head(self.ring);
+        let h = head.load(Ordering::Relaxed);
+        let t = s.seg.tail(self.ring).load(Ordering::Acquire);
+        let free = s.seg.ring_bytes() - (h - t) as usize;
+        if free < need {
+            return Err(env);
+        }
+        scratch.clear();
+        wire::encode(env, &mut scratch);
+        debug_assert_eq!(scratch.len(), rec);
+        s.seg.copy_in(self.ring, h, &(rec as u32).to_le_bytes());
+        s.seg.copy_in(self.ring, h + 4, &scratch);
+        head.store(h + need as u64, Ordering::Release);
+        drop(scratch);
+        s.seg.doorbell(self.db).fetch_add(1, Ordering::Release);
+        Metrics::add(&metrics.netmod_bytes_tx, need as u64);
+        Ok(())
+    }
+
+    /// Conservative fullness probe: report full below half-a-ring free,
+    /// which guarantees a subsequent max-size record still fits when the
+    /// probe says "not full". Racy reads only over-report fullness.
+    pub fn is_full(&self) -> bool {
+        let s = &self.state;
+        let h = s.seg.head(self.ring).load(Ordering::Relaxed);
+        let t = s.seg.tail(self.ring).load(Ordering::Acquire);
+        s.seg.ring_bytes() - (h - t) as usize < s.seg.ring_bytes() / 2
+    }
+}
+
+impl Netmod for ShmNetmod {
+    const NAME: &'static str = "shm";
+    type RxCursor = ShmCursor;
+
+    fn connect(&self, _fabric: &Fabric, src: (u32, u16), dst: (u32, u16)) -> Arc<Channel> {
+        let s = &self.state;
+        s.tx_active[s.seg.db_index(src.0, src.1)].store(true, Ordering::Relaxed);
+        Arc::new(Channel {
+            src,
+            port: Port::Shm(ShmPort {
+                state: Arc::clone(s),
+                ring: s.seg.ring_index(src.0, dst.0, dst.1),
+                db: s.seg.db_index(dst.0, dst.1),
+            }),
+        })
+    }
+
+    fn maybe_active(&self, _fabric: &Fabric, _ep: &Endpoint, rank: u32, vci: u16) -> bool {
+        let s = &self.state;
+        let i = s.seg.db_index(rank, vci);
+        s.seg.doorbell(i).load(Ordering::Acquire) != s.last_seen[i].load(Ordering::Relaxed)
+            || s.tx_active[i].load(Ordering::Relaxed)
+    }
+
+    fn begin_rx(&self, _fabric: &Fabric, _ep: &Endpoint, _st: &mut EpState, rank: u32, vci: u16) {
+        let s = &self.state;
+        let i = s.seg.db_index(rank, vci);
+        // Ack the doorbell *before* popping: anything published after
+        // this load re-bumps and re-arms `maybe_active`.
+        let db = s.seg.doorbell(i).load(Ordering::Acquire);
+        s.last_seen[i].store(db, Ordering::Relaxed);
+    }
+
+    fn rx_pop(
+        &self,
+        fabric: &Fabric,
+        st: &mut EpState,
+        cur: &mut ShmCursor,
+        rank: u32,
+        vci: u16,
+    ) -> Option<Envelope> {
+        let s = &self.state;
+        while cur.src < s.seg.nranks() {
+            let ring = s.seg.ring_index(cur.src as u32, rank, vci);
+            let tail = s.seg.tail(ring);
+            let t = tail.load(Ordering::Relaxed);
+            if t != s.seg.head(ring).load(Ordering::Acquire) {
+                let mut lenb = [0u8; 4];
+                s.seg.copy_out(ring, t, &mut lenb);
+                let rec = u32::from_le_bytes(lenb) as usize;
+                let mut r = RingReader {
+                    seg: &s.seg,
+                    ring,
+                    pos: t + 4,
+                };
+                let env = wire::decode(&mut r, &mut st.chunk_pool);
+                debug_assert_eq!(r.pos, t + 4 + rec as u64);
+                tail.store(t + 4 + rec as u64, Ordering::Release);
+                Metrics::add(&fabric.metrics.netmod_bytes_rx, (4 + rec) as u64);
+                return Some(env);
+            }
+            // This source drained for now; move to the next.
+            cur.src += 1;
+        }
+        None
+    }
+
+    fn max_payload(&self) -> Option<usize> {
+        Some(self.max_payload)
+    }
+
+    fn flush(&self, _fabric: &Fabric, _rank: u32) {
+        // Published records live in the shared mapping; peers can drain
+        // them even after this process exits. Nothing buffered locally.
+    }
+}
+
+// ---------------------------------------------------------- launching
+
+static SEG_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// A unique segment path under the system temp directory (which on
+/// Linux is commonly tmpfs — actual shared *memory*; any shared
+/// filesystem works correctness-wise).
+pub fn unique_segment_path() -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "mpix-shm-{}-{}",
+        std::process::id(),
+        SEG_COUNTER.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+/// Fork `n` child processes, run `f(rank)` in each, and collect their
+/// exit codes in rank order (a panicking child exits 101, mirroring a
+/// panicking Rust process). The `mpirun`-style launcher primitive: call
+/// it **before** spawning any threads — fork only duplicates the calling
+/// thread.
+pub fn fork_ranks(n: usize, f: impl Fn(u32) -> i32) -> Vec<i32> {
+    let mut pids = Vec::with_capacity(n);
+    for rank in 0..n {
+        // SAFETY: single-threaded parent (documented contract); the
+        // child calls `_exit` without returning into the parent's stack.
+        let pid = unsafe { ffi::fork() };
+        assert!(pid >= 0, "fork failed: {}", io::Error::last_os_error());
+        if pid == 0 {
+            let code = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(rank as u32)))
+                .unwrap_or(101);
+            unsafe { ffi::_exit(code) };
+        }
+        pids.push(pid);
+    }
+    pids.into_iter()
+        .map(|pid| {
+            let mut status = 0i32;
+            let r = unsafe { ffi::waitpid(pid, &mut status, 0) };
+            assert_eq!(r, pid, "waitpid failed: {}", io::Error::last_os_error());
+            if status & 0x7f == 0 {
+                (status >> 8) & 0xff // WEXITSTATUS
+            } else {
+                128 + (status & 0x7f) // killed by signal
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn segment_create_attach_roundtrip() {
+        let path = unique_segment_path();
+        let seg = ShmSegment::create(&path, 2, 4, 4 * PAGE).unwrap();
+        let att = ShmSegment::attach(&path).unwrap();
+        assert_eq!(
+            (att.nranks(), att.nvcis(), att.ring_bytes()),
+            (2, 4, 4 * PAGE)
+        );
+        // Cross-mapping visibility through the doorbell atomics.
+        seg.doorbell(3).fetch_add(7, Ordering::Release);
+        assert_eq!(att.doorbell(3).load(Ordering::Acquire), 7);
+        drop(att);
+        drop(seg); // owner unlinks
+        assert!(!path.exists());
+    }
+
+    #[test]
+    fn ring_copy_wraps_byte_exact() {
+        let path = unique_segment_path();
+        let seg = ShmSegment::create(&path, 1, 1, 4 * PAGE).unwrap();
+        let ring_bytes = seg.ring_bytes() as u64;
+        // Write a record straddling the wrap boundary.
+        let at = ring_bytes - 5;
+        let src: Vec<u8> = (0..32u8).collect();
+        seg.copy_in(0, at, &src);
+        let mut back = vec![0u8; 32];
+        seg.copy_out(0, at, &mut back);
+        assert_eq!(back, src);
+    }
+
+    #[test]
+    fn attach_rejects_garbage() {
+        let path = unique_segment_path();
+        std::fs::write(&path, vec![0u8; 64]).unwrap();
+        assert!(ShmSegment::attach(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+}

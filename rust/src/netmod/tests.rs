@@ -1,0 +1,229 @@
+//! Transport-identity tests: the same workload over different netmods
+//! must produce the same application results *and* the same protocol
+//! decisions.
+//!
+//! The counters compared are the deterministic protocol tallies —
+//! eager/rendezvous splits, chunk counts, total matched messages,
+//! channels established. Timing-dependent counters (polls, lock
+//! acquisitions, pool hit/miss splits, expected-vs-unexpected split)
+//! legitimately differ between transports and runs, so they are not
+//! part of the identity.
+
+use crate::coll;
+use crate::comm::Comm;
+use crate::metrics::MetricsSnapshot;
+use crate::netmod::NetmodSel;
+use crate::universe::Universe;
+use crate::util::pod::bytes_of;
+
+const RANKS: usize = 4;
+
+/// P2p sizes straddling the three protocol regimes with default config:
+/// inline (≤ 192), eager heap (≤ 64 KiB), rendezvous (above). The shm
+/// netmod's default 256 KiB rings clamp `eager_max` to 128 KiB − 96,
+/// which is *above* the 64 KiB default, so thresholds — and therefore
+/// every protocol counter — are identical across transports.
+const P2P_SIZES: [usize; 4] = [64, 4 * 1024, 64 * 1024, 200 * 1024];
+
+fn fill(buf: &mut [u8], seed: u8) {
+    for (i, b) in buf.iter_mut().enumerate() {
+        *b = (i as u8).wrapping_mul(31).wrapping_add(seed);
+    }
+}
+
+fn checksum(buf: &[u8]) -> u64 {
+    buf.iter()
+        .fold(0xcbf29ce484222325u64, |h, &b| {
+            (h ^ b as u64).wrapping_mul(0x100000001b3)
+        })
+}
+
+/// The workload each rank runs: a p2p ring exchange per size class plus
+/// one of each selector-dispatched collective. Returns a digest of
+/// everything received so results can be compared across transports.
+fn workload(world: Comm) -> Vec<u64> {
+    let me = world.rank();
+    let n = world.size();
+    let mut digest = Vec::new();
+
+    // Ring exchange: isend before recv so the rendezvous size cannot
+    // deadlock on mutual blocking sends.
+    for (k, &sz) in P2P_SIZES.iter().enumerate() {
+        let to = (me + 1) % n;
+        let from = ((me + n - 1) % n) as i32;
+        let tag = 100 + k as i32;
+        let mut msg = vec![0u8; sz];
+        fill(&mut msg, me as u8);
+        let mut buf = vec![0u8; sz];
+        let req = world.isend(&msg, to, tag).unwrap();
+        let st = world.recv(&mut buf, from, tag).unwrap();
+        req.wait().unwrap();
+        assert_eq!(st.len, sz);
+        let mut want = vec![0u8; sz];
+        fill(&mut want, from as u8);
+        assert_eq!(buf, want, "ring payload corrupted at size {sz}");
+        digest.push(checksum(&buf));
+    }
+
+    // Collectives (both selector arms of each get exercised by size).
+    let mut v = [me as u64 + 1, 1000 + me as u64];
+    coll::allreduce_t(&world, &mut v, |a, b| *a += *b).unwrap();
+    digest.extend_from_slice(&v);
+
+    let mut big = vec![0u64; 8192];
+    if me == 0 {
+        for (i, x) in big.iter_mut().enumerate() {
+            *x = i as u64 * 3 + 7;
+        }
+    }
+    coll::bcast_t(&world, &mut big, 0).unwrap();
+    digest.push(checksum(bytes_of(&big)));
+
+    let mut gathered = vec![0u32; n];
+    coll::allgather_t(&world, &[me as u32 * 7 + 1], &mut gathered).unwrap();
+    digest.extend(gathered.iter().map(|&x| x as u64));
+
+    let send: Vec<u64> = (0..n).map(|i| (me * n + i) as u64).collect();
+    let mut rs = [0u64; 1];
+    coll::reduce_scatter_block_t(&world, &send, &mut rs, |a, b| *a += *b).unwrap();
+    digest.push(rs[0]);
+
+    coll::barrier(&world).unwrap();
+    digest
+}
+
+/// Run the workload on a fresh fabric backed by `sel`; return per-rank
+/// digests and the metrics delta.
+fn run_under(sel: NetmodSel) -> (Vec<Vec<u64>>, MetricsSnapshot) {
+    let fabric = Universe::builder().ranks(RANKS).netmod(sel).fabric();
+    let before = fabric.metrics.snapshot();
+    let out = Universe::run_on(&fabric, &workload);
+    let delta = fabric.metrics.snapshot().since(&before);
+    (out, delta)
+}
+
+/// The deterministic protocol tallies that must be transport-invariant.
+fn identity(d: &MetricsSnapshot) -> [u64; 6] {
+    [
+        d.eager_inline,
+        d.eager_heap,
+        d.rdv,
+        d.rdv_chunks,
+        // Every message is matched exactly once; which side of the
+        // expected/unexpected split it lands on is timing, the sum is not.
+        d.expected_hits + d.unexpected_hits,
+        d.netmod_connects,
+    ]
+}
+
+#[test]
+fn inproc_and_shm_agree_on_results_and_protocol() {
+    let (res_inproc, d_inproc) = run_under(NetmodSel::Inproc);
+    #[cfg(unix)]
+    {
+        let (res_shm, d_shm) = run_under(NetmodSel::Shm);
+        assert_eq!(res_inproc, res_shm, "application results diverge");
+        assert_eq!(
+            identity(&d_inproc),
+            identity(&d_shm),
+            "protocol counters diverge between inproc and shm\n inproc: {d_inproc:?}\n shm: {d_shm:?}"
+        );
+        // Serialization is real on shm (wire bytes flowed both ways, and
+        // everything pushed was drained) and absent on inproc.
+        assert!(d_shm.netmod_bytes_tx > 0);
+        assert_eq!(d_shm.netmod_bytes_tx, d_shm.netmod_bytes_rx);
+    }
+    assert_eq!(d_inproc.netmod_bytes_tx, 0);
+    assert_eq!(d_inproc.netmod_bytes_rx, 0);
+    assert!(d_inproc.rdv > 0, "workload must cross the rendezvous threshold");
+    assert!(d_inproc.eager_inline > 0 && d_inproc.eager_heap > 0);
+}
+
+#[test]
+fn tcp_runs_the_same_workload() {
+    let (res_tcp, d_tcp) = run_under(NetmodSel::Tcp);
+    let (res_inproc, _) = run_under(NetmodSel::Inproc);
+    assert_eq!(res_inproc, res_tcp, "application results diverge on tcp");
+    assert!(d_tcp.netmod_bytes_tx > 0);
+    assert_eq!(d_tcp.netmod_bytes_tx, d_tcp.netmod_bytes_rx);
+}
+
+#[test]
+fn tcp_connects_lazily() {
+    // 6 ranks, but only ranks 0 and 1 ever talk: a lazy transport
+    // establishes exactly the two active directed channels, not the
+    // 6×5 = 30 a full mesh would eagerly build.
+    let fabric = Universe::builder().ranks(6).netmod(NetmodSel::Tcp).fabric();
+    let before = fabric.metrics.snapshot();
+    Universe::run_on(&fabric, &|world| match world.rank() {
+        0 => {
+            world.send(b"ping", 1, 1).unwrap();
+            let mut buf = [0u8; 4];
+            world.recv(&mut buf, 1, 2).unwrap();
+            assert_eq!(&buf, b"pong");
+        }
+        1 => {
+            let mut buf = [0u8; 4];
+            world.recv(&mut buf, 0, 1).unwrap();
+            assert_eq!(&buf, b"ping");
+            world.send(b"pong", 0, 2).unwrap();
+        }
+        _ => {}
+    });
+    let d = fabric.metrics.snapshot().since(&before);
+    assert_eq!(
+        d.netmod_connects, 2,
+        "tcp establishment must be lazy: O(active peers), not O(world)"
+    );
+}
+
+#[cfg(unix)]
+mod shm_unit {
+    use crate::netmod::NetmodSel;
+    use crate::universe::Universe;
+
+    /// Rendezvous payloads larger than the default ring still flow: the
+    /// netmod clamps chunk_size so every chunk record fits half a ring.
+    #[test]
+    fn shm_rendezvous_exceeding_ring_size() {
+        Universe::builder()
+            .ranks(2)
+            .netmod(NetmodSel::Shm)
+            .run(|world| {
+                const N: usize = 1 << 20; // 1 MiB ≫ 256 KiB ring
+                if world.rank() == 0 {
+                    let msg: Vec<u8> = (0..N).map(|i| (i / 3) as u8).collect();
+                    world.send(&msg, 1, 9).unwrap();
+                } else {
+                    let mut buf = vec![0u8; N];
+                    let st = world.recv(&mut buf, 0, 9).unwrap();
+                    assert_eq!(st.len, N);
+                    assert!(buf.iter().enumerate().all(|(i, &b)| b == (i / 3) as u8));
+                }
+            });
+    }
+
+    /// Unexpected messages (send before any recv is posted) survive the
+    /// serialize/deserialize round trip.
+    #[test]
+    fn shm_unexpected_path() {
+        Universe::builder()
+            .ranks(2)
+            .netmod(NetmodSel::Shm)
+            .run(|world| {
+                if world.rank() == 0 {
+                    world.send(b"early", 1, 5).unwrap();
+                    world.send(b"later", 1, 6).unwrap();
+                } else {
+                    // Recv in reverse send order: the first sits
+                    // unexpected while tag 6 is matched.
+                    let mut b6 = [0u8; 8];
+                    let st6 = world.recv(&mut b6, 0, 6).unwrap();
+                    assert_eq!(&b6[..st6.len], b"later");
+                    let mut b5 = [0u8; 8];
+                    let st5 = world.recv(&mut b5, 0, 5).unwrap();
+                    assert_eq!(&b5[..st5.len], b"early");
+                }
+            });
+    }
+}

@@ -1,0 +1,793 @@
+//! Envelope wire codec shared by the serializing netmods (shm, tcp).
+//!
+//! The inproc netmod moves [`Envelope`]s by value and never touches this
+//! module; shm and tcp flatten them into length-prefixed records. The
+//! format is a private fabric detail, not a stable protocol: one `kind`
+//! byte, the fixed 20-byte matching header, then variant fields in
+//! little-endian with `u64` length prefixes on byte payloads.
+//!
+//! Two asymmetries worth knowing:
+//!
+//! * **`RdvDirect` is same-process only.** Single-copy rendezvous hands
+//!   the receiver a raw source pointer; that is meaningless across a
+//!   process boundary. The runtime never routes `RdvDirect` through a
+//!   netmod ring (threadcomm delivery is direct in-memory), but the
+//!   codec still round-trips it defensively — pointer words plus a PID
+//!   stamp the decoder verifies, so a future misroute fails loudly
+//!   instead of corrupting memory.
+//! * **RMA reply cookies.** `RecvPtr` destinations inside [`RmaMsg`] are
+//!   encoded as opaque `u64` cookies. The *target* never dereferences
+//!   them — it echoes them back in the reply, and only the origin (the
+//!   process that minted the pointer) turns the cookie back into a
+//!   pointer. This mirrors how real RMA implementations carry origin
+//!   completion handles.
+//!
+//! Decoded byte payloads land in pooled cells drawn from the *receiving*
+//! endpoint's [`LocalChunkPool`] (the decoder runs under that endpoint's
+//! exclusion), so the rx path recycles buffers exactly like the inproc
+//! eager/chunk paths. These acquisitions intentionally do not count
+//! toward `pool_hits`/`pool_misses`, which track sender-side staging.
+
+use crate::fabric::{Envelope, Header, Payload, RecvPtr, SendPtr, INLINE_MAX};
+use crate::rma::{AccOp, RmaMsg};
+use crate::util::pool::{LocalChunkPool, PooledBuf};
+use std::sync::Arc;
+
+// ------------------------------------------------------------ readers
+
+/// Byte source for [`decode`]. Implementations panic on underflow: a
+/// short record means ring/socket corruption, which is a fabric bug,
+/// not a recoverable condition.
+pub trait WireRead {
+    fn read(&mut self, dst: &mut [u8]);
+}
+
+/// Reader over a contiguous record (tcp frames, tests).
+pub struct SliceReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> SliceReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed (decode must drain records exactly).
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+impl WireRead for SliceReader<'_> {
+    fn read(&mut self, dst: &mut [u8]) {
+        let end = self.pos + dst.len();
+        assert!(end <= self.buf.len(), "wire record underflow");
+        dst.copy_from_slice(&self.buf[self.pos..end]);
+        self.pos = end;
+    }
+}
+
+macro_rules! read_le {
+    ($name:ident, $ty:ty) => {
+        fn $name(r: &mut impl WireRead) -> $ty {
+            let mut b = [0u8; std::mem::size_of::<$ty>()];
+            r.read(&mut b);
+            <$ty>::from_le_bytes(b)
+        }
+    };
+}
+
+read_le!(read_u8, u8);
+read_le!(read_u16, u16);
+read_le!(read_u32, u32);
+read_le!(read_u64, u64);
+read_le!(read_i32, i32);
+
+fn read_usize(r: &mut impl WireRead) -> usize {
+    read_u64(r) as usize
+}
+
+fn read_pooled(r: &mut impl WireRead, pool: &mut LocalChunkPool, len: usize) -> PooledBuf {
+    let mut b = pool.acquire(len);
+    b.resize_zeroed(len);
+    r.read(&mut b[..]);
+    b
+}
+
+// ------------------------------------------------------------ writers
+
+fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_i32(out: &mut Vec<u8>, v: i32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
+    put_u64(out, b.len() as u64);
+    out.extend_from_slice(b);
+}
+
+// ------------------------------------------------------------- layout
+
+const K_INLINE: u8 = 1;
+const K_EAGER: u8 = 2;
+const K_RDV_DIRECT: u8 = 3;
+const K_RTS: u8 = 4;
+const K_CTS: u8 = 5;
+const K_CHUNK: u8 = 6;
+const K_FIN: u8 = 7;
+const K_RMA: u8 = 8;
+
+const R_LOCK_REQ: u8 = 1;
+const R_LOCK_GRANT: u8 = 2;
+const R_UNLOCK: u8 = 3;
+const R_UNLOCK_ACK: u8 = 4;
+const R_PUT: u8 = 5;
+const R_GET: u8 = 6;
+const R_GET_RESP: u8 = 7;
+const R_ACC: u8 = 8;
+const R_OP_ACK: u8 = 9;
+const R_FETCH_OP: u8 = 10;
+const R_CAS: u8 = 11;
+const R_FETCH_RESP: u8 = 12;
+
+const HDR_BYTES: usize = 20;
+
+fn accop_code(op: AccOp) -> u8 {
+    match op {
+        AccOp::Replace => 0,
+        AccOp::SumF64 => 1,
+        AccOp::SumI64 => 2,
+        AccOp::MaxF64 => 3,
+        AccOp::MinF64 => 4,
+    }
+}
+
+fn accop_from(code: u8) -> AccOp {
+    match code {
+        0 => AccOp::Replace,
+        1 => AccOp::SumF64,
+        2 => AccOp::SumI64,
+        3 => AccOp::MaxF64,
+        4 => AccOp::MinF64,
+        _ => unreachable!("corrupt AccOp code {code}"),
+    }
+}
+
+/// Exact serialized size of `env` — computed *before* [`encode`] so a
+/// transport can reject for backpressure without consuming the envelope.
+pub fn encoded_len(env: &Envelope) -> usize {
+    let var = match &env.payload {
+        Payload::Inline { len, .. } => 2 + *len as usize,
+        Payload::Eager(b) => 8 + b.len(),
+        Payload::RdvDirect { .. } => 8 + 8 + 8 + 4,
+        Payload::Rts { .. } => 8 + 8 + 4 + 2,
+        Payload::Cts { .. } => 8 + 4 + 2,
+        Payload::Chunk { data, .. } => 8 + 4 + 1 + 8 + data.len(),
+        Payload::Fin { .. } => 8,
+        Payload::Rma(m) => {
+            1 + match m {
+                RmaMsg::LockReq { .. } => 4 + 1 + 4 + 2,
+                RmaMsg::LockGrant { .. } => 4,
+                RmaMsg::Unlock { .. } => 4 + 4 + 2,
+                RmaMsg::UnlockAck { .. } => 4,
+                RmaMsg::Put { data, .. } => 4 + 8 + (8 + data.len()) + 4 + 2,
+                RmaMsg::Get { .. } => 4 + 8 + 8 + 8 + 4 + 2,
+                RmaMsg::GetResp { data, .. } => 4 + 8 + (8 + data.len()),
+                RmaMsg::Acc { data, .. } => 4 + 8 + (8 + data.len()) + 1 + 4 + 2,
+                RmaMsg::OpAck { .. } => 4,
+                RmaMsg::FetchOp { data, .. } => 4 + 8 + (8 + data.len()) + 1 + 8 + 4 + 2,
+                RmaMsg::Cas { .. } => 4 + 8 + 8 + 8 + 8 + 4 + 2,
+                RmaMsg::FetchResp { old, .. } => 4 + 8 + (8 + old.len()),
+            }
+        }
+    };
+    1 + HDR_BYTES + var
+}
+
+/// Serialize `env` onto `out`, consuming it. Pooled payload cells are
+/// dropped here — i.e. returned to the sending endpoint's pool as soon
+/// as the bytes are on the wire, which is the earliest legal recycle
+/// point. Appends exactly [`encoded_len`] bytes.
+pub fn encode(env: Envelope, out: &mut Vec<u8>) {
+    let h = env.hdr;
+    let kind = match &env.payload {
+        Payload::Inline { .. } => K_INLINE,
+        Payload::Eager(_) => K_EAGER,
+        Payload::RdvDirect { .. } => K_RDV_DIRECT,
+        Payload::Rts { .. } => K_RTS,
+        Payload::Cts { .. } => K_CTS,
+        Payload::Chunk { .. } => K_CHUNK,
+        Payload::Fin { .. } => K_FIN,
+        Payload::Rma(_) => K_RMA,
+    };
+    put_u8(out, kind);
+    put_u32(out, h.ctx);
+    put_u32(out, h.src);
+    put_i32(out, h.tag);
+    put_i32(out, h.src_stream);
+    put_i32(out, h.dst_stream);
+    match env.payload {
+        Payload::Inline { len, data } => {
+            put_u16(out, len);
+            out.extend_from_slice(&data[..len as usize]);
+        }
+        Payload::Eager(b) => put_bytes(out, &b),
+        Payload::RdvDirect {
+            src,
+            len,
+            sender_req,
+        } => {
+            // Same-process pointer passing: the Arc crosses the wire as
+            // a raw pointer word, ownership transferred exactly once.
+            // The PID stamp lets the decoder reject a cross-process
+            // misroute before touching either pointer.
+            put_u64(out, src.0 as u64);
+            put_u64(out, len as u64);
+            put_u64(out, Arc::into_raw(sender_req) as u64);
+            put_u32(out, std::process::id());
+        }
+        Payload::Rts {
+            token,
+            len,
+            reply_rank,
+            reply_vci,
+        } => {
+            put_u64(out, token);
+            put_u64(out, len as u64);
+            put_u32(out, reply_rank);
+            put_u16(out, reply_vci);
+        }
+        Payload::Cts {
+            token,
+            dest_rank,
+            dest_vci,
+        } => {
+            put_u64(out, token);
+            put_u32(out, dest_rank);
+            put_u16(out, dest_vci);
+        }
+        Payload::Chunk {
+            token,
+            seq,
+            last,
+            data,
+        } => {
+            put_u64(out, token);
+            put_u32(out, seq);
+            put_u8(out, last as u8);
+            put_bytes(out, &data);
+        }
+        Payload::Fin { token } => put_u64(out, token),
+        Payload::Rma(m) => encode_rma(m, out),
+    }
+}
+
+fn encode_rma(m: RmaMsg, out: &mut Vec<u8>) {
+    match m {
+        RmaMsg::LockReq {
+            win,
+            exclusive,
+            origin,
+            origin_vci,
+        } => {
+            put_u8(out, R_LOCK_REQ);
+            put_u32(out, win);
+            put_u8(out, exclusive as u8);
+            put_u32(out, origin);
+            put_u16(out, origin_vci);
+        }
+        RmaMsg::LockGrant { win } => {
+            put_u8(out, R_LOCK_GRANT);
+            put_u32(out, win);
+        }
+        RmaMsg::Unlock {
+            win,
+            origin,
+            origin_vci,
+        } => {
+            put_u8(out, R_UNLOCK);
+            put_u32(out, win);
+            put_u32(out, origin);
+            put_u16(out, origin_vci);
+        }
+        RmaMsg::UnlockAck { win } => {
+            put_u8(out, R_UNLOCK_ACK);
+            put_u32(out, win);
+        }
+        RmaMsg::Put {
+            win,
+            offset,
+            data,
+            origin,
+            origin_vci,
+        } => {
+            put_u8(out, R_PUT);
+            put_u32(out, win);
+            put_u64(out, offset as u64);
+            put_bytes(out, &data);
+            put_u32(out, origin);
+            put_u16(out, origin_vci);
+        }
+        RmaMsg::Get {
+            win,
+            offset,
+            len,
+            dest,
+            origin,
+            origin_vci,
+        } => {
+            put_u8(out, R_GET);
+            put_u32(out, win);
+            put_u64(out, offset as u64);
+            put_u64(out, len as u64);
+            put_u64(out, dest.0 as u64);
+            put_u32(out, origin);
+            put_u16(out, origin_vci);
+        }
+        RmaMsg::GetResp { win, dest, data } => {
+            put_u8(out, R_GET_RESP);
+            put_u32(out, win);
+            put_u64(out, dest.0 as u64);
+            put_bytes(out, &data);
+        }
+        RmaMsg::Acc {
+            win,
+            offset,
+            data,
+            op,
+            origin,
+            origin_vci,
+        } => {
+            put_u8(out, R_ACC);
+            put_u32(out, win);
+            put_u64(out, offset as u64);
+            put_bytes(out, &data);
+            put_u8(out, accop_code(op));
+            put_u32(out, origin);
+            put_u16(out, origin_vci);
+        }
+        RmaMsg::OpAck { win } => {
+            put_u8(out, R_OP_ACK);
+            put_u32(out, win);
+        }
+        RmaMsg::FetchOp {
+            win,
+            offset,
+            data,
+            op,
+            dest,
+            origin,
+            origin_vci,
+        } => {
+            put_u8(out, R_FETCH_OP);
+            put_u32(out, win);
+            put_u64(out, offset as u64);
+            put_bytes(out, &data);
+            put_u8(out, accop_code(op));
+            put_u64(out, dest.0 as u64);
+            put_u32(out, origin);
+            put_u16(out, origin_vci);
+        }
+        RmaMsg::Cas {
+            win,
+            offset,
+            compare,
+            swap,
+            dest,
+            origin,
+            origin_vci,
+        } => {
+            put_u8(out, R_CAS);
+            put_u32(out, win);
+            put_u64(out, offset as u64);
+            out.extend_from_slice(&compare);
+            out.extend_from_slice(&swap);
+            put_u64(out, dest.0 as u64);
+            put_u32(out, origin);
+            put_u16(out, origin_vci);
+        }
+        RmaMsg::FetchResp { win, dest, old } => {
+            put_u8(out, R_FETCH_RESP);
+            put_u32(out, win);
+            put_u64(out, dest.0 as u64);
+            put_bytes(out, &old);
+        }
+    }
+}
+
+/// Deserialize one record. `pool` is the receiving endpoint's chunk
+/// pool; every byte payload lands in a pooled cell.
+pub fn decode(r: &mut impl WireRead, pool: &mut LocalChunkPool) -> Envelope {
+    let kind = read_u8(r);
+    let hdr = Header {
+        ctx: read_u32(r),
+        src: read_u32(r),
+        tag: read_i32(r),
+        src_stream: read_i32(r),
+        dst_stream: read_i32(r),
+    };
+    let payload = match kind {
+        K_INLINE => {
+            let len = read_u16(r);
+            let mut data = [0u8; INLINE_MAX];
+            r.read(&mut data[..len as usize]);
+            Payload::Inline { len, data }
+        }
+        K_EAGER => {
+            let len = read_usize(r);
+            Payload::Eager(read_pooled(r, pool, len))
+        }
+        K_RDV_DIRECT => {
+            let src = read_u64(r) as *const u8;
+            let len = read_usize(r);
+            let req = read_u64(r) as *const crate::request::ReqInner;
+            let pid = read_u32(r);
+            assert_eq!(
+                pid,
+                std::process::id(),
+                "RdvDirect crossed a process boundary — fabric routing bug"
+            );
+            // SAFETY: pointer words written by `encode` in this same
+            // process (PID verified); the Arc's ownership crosses the
+            // wire exactly once.
+            let sender_req = unsafe { Arc::from_raw(req) };
+            Payload::RdvDirect {
+                src: SendPtr(src),
+                len,
+                sender_req,
+            }
+        }
+        K_RTS => Payload::Rts {
+            token: read_u64(r),
+            len: read_usize(r),
+            reply_rank: read_u32(r),
+            reply_vci: read_u16(r),
+        },
+        K_CTS => Payload::Cts {
+            token: read_u64(r),
+            dest_rank: read_u32(r),
+            dest_vci: read_u16(r),
+        },
+        K_CHUNK => {
+            let token = read_u64(r);
+            let seq = read_u32(r);
+            let last = read_u8(r) != 0;
+            let len = read_usize(r);
+            Payload::Chunk {
+                token,
+                seq,
+                last,
+                data: read_pooled(r, pool, len),
+            }
+        }
+        K_FIN => Payload::Fin {
+            token: read_u64(r),
+        },
+        K_RMA => Payload::Rma(decode_rma(r, pool)),
+        _ => unreachable!("corrupt envelope kind {kind}"),
+    };
+    Envelope { hdr, payload }
+}
+
+fn decode_rma(r: &mut impl WireRead, pool: &mut LocalChunkPool) -> RmaMsg {
+    let sub = read_u8(r);
+    match sub {
+        R_LOCK_REQ => RmaMsg::LockReq {
+            win: read_u32(r),
+            exclusive: read_u8(r) != 0,
+            origin: read_u32(r),
+            origin_vci: read_u16(r),
+        },
+        R_LOCK_GRANT => RmaMsg::LockGrant { win: read_u32(r) },
+        R_UNLOCK => RmaMsg::Unlock {
+            win: read_u32(r),
+            origin: read_u32(r),
+            origin_vci: read_u16(r),
+        },
+        R_UNLOCK_ACK => RmaMsg::UnlockAck { win: read_u32(r) },
+        R_PUT => {
+            let win = read_u32(r);
+            let offset = read_usize(r);
+            let len = read_usize(r);
+            let data = read_pooled(r, pool, len);
+            RmaMsg::Put {
+                win,
+                offset,
+                data,
+                origin: read_u32(r),
+                origin_vci: read_u16(r),
+            }
+        }
+        R_GET => RmaMsg::Get {
+            win: read_u32(r),
+            offset: read_usize(r),
+            len: read_usize(r),
+            dest: RecvPtr(read_u64(r) as *mut u8),
+            origin: read_u32(r),
+            origin_vci: read_u16(r),
+        },
+        R_GET_RESP => {
+            let win = read_u32(r);
+            let dest = RecvPtr(read_u64(r) as *mut u8);
+            let len = read_usize(r);
+            RmaMsg::GetResp {
+                win,
+                dest,
+                data: read_pooled(r, pool, len),
+            }
+        }
+        R_ACC => {
+            let win = read_u32(r);
+            let offset = read_usize(r);
+            let len = read_usize(r);
+            let data = read_pooled(r, pool, len);
+            RmaMsg::Acc {
+                win,
+                offset,
+                data,
+                op: accop_from(read_u8(r)),
+                origin: read_u32(r),
+                origin_vci: read_u16(r),
+            }
+        }
+        R_OP_ACK => RmaMsg::OpAck { win: read_u32(r) },
+        R_FETCH_OP => {
+            let win = read_u32(r);
+            let offset = read_usize(r);
+            let len = read_usize(r);
+            let data = read_pooled(r, pool, len);
+            RmaMsg::FetchOp {
+                win,
+                offset,
+                data,
+                op: accop_from(read_u8(r)),
+                dest: RecvPtr(read_u64(r) as *mut u8),
+                origin: read_u32(r),
+                origin_vci: read_u16(r),
+            }
+        }
+        R_CAS => {
+            let win = read_u32(r);
+            let offset = read_usize(r);
+            let mut compare = [0u8; 8];
+            r.read(&mut compare);
+            let mut swap = [0u8; 8];
+            r.read(&mut swap);
+            RmaMsg::Cas {
+                win,
+                offset,
+                compare,
+                swap,
+                dest: RecvPtr(read_u64(r) as *mut u8),
+                origin: read_u32(r),
+                origin_vci: read_u16(r),
+            }
+        }
+        R_FETCH_RESP => {
+            let win = read_u32(r);
+            let dest = RecvPtr(read_u64(r) as *mut u8);
+            let len = read_usize(r);
+            RmaMsg::FetchResp {
+                win,
+                dest,
+                old: read_pooled(r, pool, len),
+            }
+        }
+        _ => unreachable!("corrupt RmaMsg sub-kind {sub}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hdr() -> Header {
+        Header {
+            ctx: 7,
+            src: 3,
+            tag: -5,
+            src_stream: 1,
+            dst_stream: 2,
+        }
+    }
+
+    fn roundtrip(env: Envelope) -> Envelope {
+        let want = encoded_len(&env);
+        let mut out = Vec::new();
+        encode(env, &mut out);
+        assert_eq!(out.len(), want, "encoded_len must be exact");
+        let mut pool = LocalChunkPool::new();
+        let mut r = SliceReader::new(&out);
+        let back = decode(&mut r, &mut pool);
+        assert_eq!(r.remaining(), 0, "decode must drain the record");
+        back
+    }
+
+    #[test]
+    fn inline_roundtrip() {
+        let mut data = [0u8; INLINE_MAX];
+        data[..5].copy_from_slice(b"hello");
+        let back = roundtrip(Envelope {
+            hdr: hdr(),
+            payload: Payload::Inline { len: 5, data },
+        });
+        assert_eq!(back.hdr.ctx, 7);
+        assert_eq!(back.hdr.tag, -5);
+        match back.payload {
+            Payload::Inline { len, data } => {
+                assert_eq!(len, 5);
+                assert_eq!(&data[..5], b"hello");
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+    }
+
+    #[test]
+    fn eager_roundtrip_lands_in_rx_pool() {
+        let mut pool = LocalChunkPool::new();
+        let mut cell = pool.acquire(1024);
+        cell.copy_from(&[0xAB; 1000]);
+        let back = roundtrip(Envelope {
+            hdr: hdr(),
+            payload: Payload::Eager(cell),
+        });
+        match back.payload {
+            Payload::Eager(b) => assert_eq!(&b[..], &[0xAB; 1000][..]),
+            other => panic!("wrong variant {other:?}"),
+        }
+    }
+
+    #[test]
+    fn ctrl_variants_roundtrip() {
+        for env in [
+            Envelope {
+                hdr: hdr(),
+                payload: Payload::Rts {
+                    token: 99,
+                    len: 1 << 20,
+                    reply_rank: 2,
+                    reply_vci: 4,
+                },
+            },
+            Envelope {
+                hdr: hdr(),
+                payload: Payload::Cts {
+                    token: 99,
+                    dest_rank: 1,
+                    dest_vci: 3,
+                },
+            },
+            Envelope {
+                hdr: hdr(),
+                payload: Payload::Fin { token: 42 },
+            },
+        ] {
+            let desc = format!("{:?}", env.payload);
+            let back = roundtrip(env);
+            assert_eq!(format!("{:?}", back.payload), desc);
+        }
+    }
+
+    #[test]
+    fn chunk_roundtrip() {
+        let mut pool = LocalChunkPool::new();
+        let mut cell = pool.acquire(64);
+        cell.copy_from(&[7u8; 64]);
+        let back = roundtrip(Envelope {
+            hdr: hdr(),
+            payload: Payload::Chunk {
+                token: 5,
+                seq: 9,
+                last: true,
+                data: cell,
+            },
+        });
+        match back.payload {
+            Payload::Chunk {
+                token,
+                seq,
+                last,
+                data,
+            } => {
+                assert_eq!((token, seq, last), (5, 9, true));
+                assert_eq!(&data[..], &[7u8; 64][..]);
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rdv_direct_roundtrips_in_process() {
+        let buf = [1u8, 2, 3, 4];
+        let req = Arc::new(crate::request::ReqInner::new());
+        let back = roundtrip(Envelope {
+            hdr: hdr(),
+            payload: Payload::RdvDirect {
+                src: SendPtr(buf.as_ptr()),
+                len: 4,
+                sender_req: Arc::clone(&req),
+            },
+        });
+        match back.payload {
+            Payload::RdvDirect {
+                src,
+                len,
+                sender_req,
+            } => {
+                assert_eq!(src.0, buf.as_ptr());
+                assert_eq!(len, 4);
+                assert!(Arc::ptr_eq(&sender_req, &req));
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rma_put_and_cas_roundtrip() {
+        let mut pool = LocalChunkPool::new();
+        let mut data = pool.acquire(16);
+        data.copy_from(&[9u8; 16]);
+        let back = roundtrip(Envelope {
+            hdr: hdr(),
+            payload: Payload::Rma(RmaMsg::Put {
+                win: 3,
+                offset: 40,
+                data,
+                origin: 1,
+                origin_vci: 2,
+            }),
+        });
+        match back.payload {
+            Payload::Rma(RmaMsg::Put {
+                win,
+                offset,
+                data,
+                origin,
+                origin_vci,
+            }) => {
+                assert_eq!((win, offset, origin, origin_vci), (3, 40, 1, 2));
+                assert_eq!(&data[..], &[9u8; 16][..]);
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+
+        let cookie = 0xDEAD_BEEF_0000_1234u64 as *mut u8;
+        let back = roundtrip(Envelope {
+            hdr: hdr(),
+            payload: Payload::Rma(RmaMsg::Cas {
+                win: 1,
+                offset: 8,
+                compare: [1; 8],
+                swap: [2; 8],
+                dest: RecvPtr(cookie),
+                origin: 0,
+                origin_vci: 0,
+            }),
+        });
+        match back.payload {
+            Payload::Rma(RmaMsg::Cas {
+                compare,
+                swap,
+                dest,
+                ..
+            }) => {
+                assert_eq!(compare, [1; 8]);
+                assert_eq!(swap, [2; 8]);
+                // Cookie survives the echo byte-exact.
+                assert_eq!(dest.0, cookie);
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+    }
+}

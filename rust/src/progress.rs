@@ -17,6 +17,7 @@ use crate::fabric::{
 };
 use crate::matching::MatchAction;
 use crate::metrics::Metrics;
+use crate::netmod::{ActiveNetmod, Netmod};
 use crate::request::{ProgressScope, ReqInner, Status};
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::{Arc, Mutex};
@@ -110,47 +111,50 @@ pub fn with_ep<R>(
 
 /// Drain one endpoint: deliver matched/unexpected messages, handle
 /// control traffic, pump pending rendezvous sends.
+///
+/// One match on [`ActiveNetmod`] per poll; everything below it runs in
+/// [`poll_endpoint_on`], monomorphized per transport — the pump loop
+/// itself contains no dynamic dispatch (ch4's compile-time netmod
+/// binding, as an enum + generic function).
 pub fn poll_endpoint(fabric: &Arc<Fabric>, rank: u32, vci: u16) {
+    match &fabric.netmod {
+        ActiveNetmod::Inproc(nm) => poll_endpoint_on(nm, fabric, rank, vci),
+        #[cfg(unix)]
+        ActiveNetmod::Shm(nm) => poll_endpoint_on(nm, fabric, rank, vci),
+        ActiveNetmod::Tcp(nm) => poll_endpoint_on(nm, fabric, rank, vci),
+    }
+}
+
+/// The transport-generic poll body. For inproc this compiles to exactly
+/// the pre-netmod drain loop (registry refresh + nested bucket/channel
+/// pops, via the inlined [`Netmod`] impl).
+fn poll_endpoint_on<N: Netmod>(nm: &N, fabric: &Arc<Fabric>, rank: u32, vci: u16) {
     let ep = fabric.endpoint(rank, vci);
-    // Idle-endpoint fast path: nothing was ever registered to deliver
-    // here, so there is nothing to drain or pump (pending rendezvous work
-    // always has an inbound channel: CTS/chunks/FIN arrive through one).
-    if !ep.inboxes.has_registrations() {
+    // Idle-endpoint fast path: the transport vouches there is neither
+    // inbound traffic nor pending tx work, so skip the exclusion
+    // entirely (pending rendezvous work always keeps an endpoint
+    // active: CTS/chunks/FIN arrive inbound).
+    if !nm.maybe_active(fabric, ep, rank, vci) {
         return;
     }
     // Threadcomm envelopes are forwarded *outside* the endpoint exclusion:
     // their rendezvous follow-ups re-enter this endpoint.
     let mut tc_deferred: Vec<Envelope> = Vec::new();
     with_ep(fabric, ep, |st| {
-        fabric.refresh_inboxes(ep, st);
-        // Envelopes a backpressured send_ctrl stashed come first — they
-        // arrived before anything still sitting in the rings. Dispatching
-        // may stash more (send_ctrl under pressure); pop_front sees those
-        // too, in order.
-        while let Some(env) = st.rx_backlog.pop_front() {
-            deliver_or_defer(fabric, rank, vci, st, env, &mut tc_deferred);
-        }
-        let n_buckets = st.inbox_cache.len();
-        for b in 0..n_buckets {
-            let n_chans = st.inbox_cache[b].chans.len();
-            for i in 0..n_chans {
-                let ch = Arc::clone(&st.inbox_cache[b].chans[i]);
-                loop {
-                    // A dispatch below may have stashed arrivals
-                    // (send_ctrl under backpressure); those are older
-                    // than anything still in the rings, so keep the
-                    // backlog ahead of new pops or per-channel FIFO
-                    // breaks.
-                    while let Some(env) = st.rx_backlog.pop_front() {
-                        deliver_or_defer(fabric, rank, vci, st, env, &mut tc_deferred);
-                    }
-                    match ch.ring.pop() {
-                        Some(env) => {
-                            deliver_or_defer(fabric, rank, vci, st, env, &mut tc_deferred)
-                        }
-                        None => break,
-                    }
-                }
+        nm.begin_rx(fabric, ep, st, rank, vci);
+        let mut cur = N::RxCursor::default();
+        loop {
+            // Envelopes a backpressured send_ctrl stashed come first —
+            // they arrived before anything still sitting in the
+            // transport. Dispatching may stash more (send_ctrl under
+            // pressure); keeping the backlog ahead of new pops preserves
+            // per-channel FIFO.
+            while let Some(env) = st.rx_backlog.pop_front() {
+                deliver_or_defer(fabric, rank, vci, st, env, &mut tc_deferred);
+            }
+            match nm.rx_pop(fabric, st, &mut cur, rank, vci) {
+                Some(env) => deliver_or_defer(fabric, rank, vci, st, env, &mut tc_deferred),
+                None => break,
             }
         }
         pump_sends(fabric, st);
@@ -315,12 +319,12 @@ fn pump_sends(fabric: &Arc<Fabric>, st: &mut EpState) {
     for (&token, x) in pending_sends.iter_mut() {
         let Some(ch) = x.ch.as_ref() else { continue };
         while x.cursor < x.len {
-            // Probe before acquiring: a full ring would bounce the push
-            // anyway, and the probe saves the (up to chunk-sized) copy a
-            // busy-polling suspended transfer would otherwise redo every
-            // pass. Exact for us — this endpoint is the ring's only
-            // producer.
-            if ch.ring.is_full() {
+            // Probe before acquiring: a full channel would bounce the
+            // push anyway, and the probe saves the (up to chunk-sized)
+            // copy a busy-polling suspended transfer would otherwise redo
+            // every pass. Exact for inproc (this endpoint is the ring's
+            // only producer); conservative for shm/tcp.
+            if ch.is_full() {
                 break; // backpressure: resume next poll
             }
             let n = chunk.min(x.len - x.cursor);
@@ -341,7 +345,7 @@ fn pump_sends(fabric: &Arc<Fabric>, st: &mut EpState) {
                     data: cell,
                 },
             };
-            match ch.ring.push(env) {
+            match ch.push(&fabric.metrics, env) {
                 Ok(()) => {
                     Metrics::bump(&fabric.metrics.rdv_chunks);
                     x.cursor += n;
@@ -392,7 +396,7 @@ pub fn send_ctrl(
     };
     let mut spins = 0u32;
     loop {
-        match ch.ring.push(env) {
+        match ch.push(&fabric.metrics, env) {
             Ok(()) => return,
             Err(back) => {
                 env = back;
@@ -403,37 +407,37 @@ pub fn send_ctrl(
     }
 }
 
-/// Pop inbound envelopes from (rank, vci)'s rings into the endpoint's
-/// `rx_backlog` WITHOUT dispatching — freeing ring slots so a blocked
-/// peer can make progress. Caller holds the endpoint exclusion.
+/// Pop inbound envelopes from (rank, vci)'s transport into the endpoint's
+/// `rx_backlog` WITHOUT dispatching — freeing channel capacity so a
+/// blocked peer can make progress. Caller holds the endpoint exclusion.
 ///
 /// Pops are capped at one ring's worth per call: that is enough to
-/// unblock a peer stuck mid-push, while keeping the rings' chunk
+/// unblock a peer stuck mid-push, while keeping the channels' chunk
 /// backpressure meaningful — an uncapped drain would let a peer's
 /// `pump_sends` copy an entire rendezvous transfer into `rx_backlog`
 /// during one stall. Accumulation across retries stays bounded by the
 /// peers' in-flight send bytes.
 fn stash_inbound(fabric: &Arc<Fabric>, rank: u32, vci: u16, st: &mut EpState) {
+    match &fabric.netmod {
+        ActiveNetmod::Inproc(nm) => stash_on(nm, fabric, rank, vci, st),
+        #[cfg(unix)]
+        ActiveNetmod::Shm(nm) => stash_on(nm, fabric, rank, vci, st),
+        ActiveNetmod::Tcp(nm) => stash_on(nm, fabric, rank, vci, st),
+    }
+}
+
+fn stash_on<N: Netmod>(nm: &N, fabric: &Arc<Fabric>, rank: u32, vci: u16, st: &mut EpState) {
     let ep = fabric.endpoint(rank, vci);
-    fabric.refresh_inboxes(ep, st);
+    nm.begin_rx(fabric, ep, st, rank, vci);
     let mut quota = fabric.cfg.channel_cap.max(1);
-    let n_buckets = st.inbox_cache.len();
-    for b in 0..n_buckets {
-        let n_chans = st.inbox_cache[b].chans.len();
-        for i in 0..n_chans {
-            if quota == 0 {
-                return;
+    let mut cur = N::RxCursor::default();
+    while quota > 0 {
+        match nm.rx_pop(fabric, st, &mut cur, rank, vci) {
+            Some(env) => {
+                st.rx_backlog.push_back(env);
+                quota -= 1;
             }
-            let ch = Arc::clone(&st.inbox_cache[b].chans[i]);
-            while quota > 0 {
-                match ch.ring.pop() {
-                    Some(env) => {
-                        st.rx_backlog.push_back(env);
-                        quota -= 1;
-                    }
-                    None => break,
-                }
-            }
+            None => break,
         }
     }
 }
@@ -543,11 +547,14 @@ mod tests {
             nranks: 2,
             channel_cap: 2, // SpscRing rounds to exactly 2
             chunk_size: 16,
+            // White-box ring/pool assertions below: pin the inproc
+            // netmod (capacity semantics are transport-specific).
+            netmod: crate::netmod::NetmodSel::Inproc,
             ..Default::default()
         });
         let src: Vec<u8> = (0..80u8).collect(); // 5 chunks of 16
         let req = ReqInner::new();
-        let token = f.next_token();
+        let token = f.next_token(0);
         let src_ep = f.endpoint(0, 0);
         let ch = src_ep.state.with_locked(&f.metrics, |st| {
             // Install the transfer the way the CTS arm does: channel
@@ -573,7 +580,7 @@ mod tests {
         // Drain like a receiver: seq order, correct bytes, cells
         // recycled by the drop.
         let pop_chunk = |expect_seq: u32, expect_last: bool| {
-            let env = ch.ring.pop().expect("chunk in ring");
+            let env = ch.pop().expect("chunk in ring");
             match env.payload {
                 Payload::Chunk { seq, last, data, .. } => {
                     assert_eq!(seq, expect_seq);

@@ -13,6 +13,7 @@ use crate::error::Result;
 use crate::fabric::{Envelope, EpState, Fabric, Header, Payload, RecvPtr, CTX_CTRL};
 use crate::metrics::Metrics;
 use crate::progress;
+use crate::util::pool::PooledBuf;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -29,6 +30,12 @@ pub enum AccOp {
 }
 
 /// RMA wire messages (carried on `CTX_CTRL`).
+///
+/// Staged byte payloads are [`PooledBuf`]s drawn from the issuing
+/// endpoint's recycling chunk pool — the same no-allocation discipline
+/// as the eager-heap and rendezvous-chunk paths. (They used to be
+/// `Box<[u8]>`, which heap-allocated on every put/get/accumulate and
+/// bypassed `util::pool` entirely.)
 pub enum RmaMsg {
     LockReq {
         win: u32,
@@ -50,7 +57,7 @@ pub enum RmaMsg {
     Put {
         win: u32,
         offset: usize,
-        data: Box<[u8]>,
+        data: PooledBuf,
         origin: u32,
         origin_vci: u16,
     },
@@ -65,12 +72,12 @@ pub enum RmaMsg {
     GetResp {
         win: u32,
         dest: RecvPtr,
-        data: Box<[u8]>,
+        data: PooledBuf,
     },
     Acc {
         win: u32,
         offset: usize,
-        data: Box<[u8]>,
+        data: PooledBuf,
         op: AccOp,
         origin: u32,
         origin_vci: u16,
@@ -84,7 +91,7 @@ pub enum RmaMsg {
     FetchOp {
         win: u32,
         offset: usize,
-        data: Box<[u8]>,
+        data: PooledBuf,
         op: AccOp,
         dest: RecvPtr,
         origin: u32,
@@ -104,7 +111,7 @@ pub enum RmaMsg {
     FetchResp {
         win: u32,
         dest: RecvPtr,
-        old: Box<[u8]>,
+        old: PooledBuf,
     },
 }
 
@@ -287,16 +294,19 @@ impl Window {
         Ok(())
     }
 
-    /// `MPI_Put` (nonblocking; completes at unlock/flush).
+    /// `MPI_Put` (nonblocking; completes at unlock/flush). The staging
+    /// copy is drawn from this endpoint's chunk pool — repeated puts in
+    /// an epoch recycle the same cells instead of heap-allocating.
     pub fn put(&self, data: &[u8], target: usize, offset: usize) -> Result<()> {
         let me = self.me();
+        let staged = crate::comm::pooled_copy(self.comm.fabric(), me, data);
         self.origin.pending_ops.fetch_add(1, Ordering::AcqRel);
         self.send_rma(
             target,
             RmaMsg::Put {
                 win: self.id,
                 offset,
-                data: data.into(),
+                data: staged,
                 origin: me.0,
                 origin_vci: me.1,
             },
@@ -327,13 +337,14 @@ impl Window {
     /// `MPI_Accumulate` on f64/i64 elements.
     pub fn accumulate(&self, data: &[u8], target: usize, offset: usize, op: AccOp) -> Result<()> {
         let me = self.me();
+        let staged = crate::comm::pooled_copy(self.comm.fabric(), me, data);
         self.origin.pending_ops.fetch_add(1, Ordering::AcqRel);
         self.send_rma(
             target,
             RmaMsg::Acc {
                 win: self.id,
                 offset,
-                data: data.into(),
+                data: staged,
                 op,
                 origin: me.0,
                 origin_vci: me.1,
@@ -353,13 +364,14 @@ impl Window {
         op: AccOp,
     ) -> Result<()> {
         let me = self.me();
+        let staged = crate::comm::pooled_copy(self.comm.fabric(), me, data);
         self.origin.pending_ops.fetch_add(1, Ordering::AcqRel);
         self.send_rma(
             target,
             RmaMsg::FetchOp {
                 win: self.id,
                 offset,
-                data: data.into(),
+                data: staged,
                 op,
                 dest: RecvPtr(old.as_mut_ptr()),
                 origin: me.0,
@@ -445,6 +457,32 @@ impl Drop for Window {
             .remove(&self.id);
         unregister_origin(fabric, me, self.id);
     }
+}
+
+/// Target-side staging copy from the servicing endpoint's chunk pool
+/// (held under its exclusion — the pool's single-consumer guarantee).
+/// Reply payloads recycle through the pool exactly like origin ones.
+fn stage(fabric: &Arc<Fabric>, st: &mut EpState, src: &[u8]) -> PooledBuf {
+    let mut cell = st.chunk_pool.acquire(src.len());
+    if cell.recycled() {
+        Metrics::bump(&fabric.metrics.pool_hits);
+    } else {
+        Metrics::bump(&fabric.metrics.pool_misses);
+    }
+    cell.copy_from(src);
+    cell
+}
+
+/// Zero-filled staging cell (missing-window replies).
+fn stage_zeroed(fabric: &Arc<Fabric>, st: &mut EpState, len: usize) -> PooledBuf {
+    let mut cell = st.chunk_pool.acquire(len);
+    if cell.recycled() {
+        Metrics::bump(&fabric.metrics.pool_hits);
+    } else {
+        Metrics::bump(&fabric.metrics.pool_misses);
+    }
+    cell.resize_zeroed(len);
+    cell
 }
 
 /// Progress-engine hook: service an RMA message arriving at (rank, vci).
@@ -558,11 +596,11 @@ pub fn handle(
             origin,
             origin_vci,
         } => {
-            let data: Box<[u8]> = if let Some(w) = win_of(win) {
+            let data: PooledBuf = if let Some(w) = win_of(win) {
                 let mem = w.mem.lock().unwrap();
-                mem[offset..offset + len].into()
+                stage(fabric, st, &mem[offset..offset + len])
             } else {
-                vec![0u8; len].into()
+                stage_zeroed(fabric, st, len)
             };
             reply(
                 st,
@@ -594,13 +632,13 @@ pub fn handle(
             origin,
             origin_vci,
         } => {
-            let old: Box<[u8]> = if let Some(w) = win_of(win) {
+            let old: PooledBuf = if let Some(w) = win_of(win) {
                 let mut mem = w.mem.lock().unwrap();
-                let prior: Box<[u8]> = mem[offset..offset + data.len()].into();
+                let prior = stage(fabric, st, &mem[offset..offset + data.len()]);
                 apply_acc(&mut mem[offset..offset + data.len()], &data, op);
                 prior
             } else {
-                vec![0u8; data.len()].into()
+                stage_zeroed(fabric, st, data.len())
             };
             reply(st, origin, origin_vci, RmaMsg::FetchResp { win, dest, old });
         }
@@ -613,15 +651,15 @@ pub fn handle(
             origin,
             origin_vci,
         } => {
-            let old: Box<[u8]> = if let Some(w) = win_of(win) {
+            let old: PooledBuf = if let Some(w) = win_of(win) {
                 let mut mem = w.mem.lock().unwrap();
                 let prior: [u8; 8] = mem[offset..offset + 8].try_into().unwrap();
                 if prior == compare {
                     mem[offset..offset + 8].copy_from_slice(&swap);
                 }
-                Box::new(prior)
+                stage(fabric, st, &prior)
             } else {
-                Box::new([0u8; 8])
+                stage_zeroed(fabric, st, 8)
             };
             reply(st, origin, origin_vci, RmaMsg::FetchResp { win, dest, old });
         }
@@ -695,7 +733,7 @@ mod tests {
 
     #[test]
     fn put_get_roundtrip() {
-        Universe::run(Universe::with_ranks(2), |world| {
+        Universe::builder().ranks(2).run(|world| {
             let init: Vec<u8> = (0..64u8).collect();
             let win = Window::create(&world, 64, Some(&init)).unwrap();
             if world.rank() == 0 {
@@ -722,7 +760,7 @@ mod tests {
 
     #[test]
     fn accumulate_sum_f64() {
-        Universe::run(Universe::with_ranks(3), |world| {
+        Universe::builder().ranks(3).run(|world| {
             let init = 1.0f64.to_le_bytes();
             let win = Window::create(&world, 8, Some(&init)).unwrap();
             if world.rank() != 0 {
@@ -745,7 +783,7 @@ mod tests {
 
     #[test]
     fn exclusive_lock_serializes() {
-        Universe::run(Universe::with_ranks(3), |world| {
+        Universe::builder().ranks(3).run(|world| {
             let win = Window::create(&world, 16, None).unwrap();
             if world.rank() != 0 {
                 win.lock(0, true).unwrap();
@@ -769,7 +807,7 @@ mod tests {
 
     #[test]
     fn fence_epochs() {
-        Universe::run(Universe::with_ranks(2), |world| {
+        Universe::builder().ranks(2).run(|world| {
             let win = Window::create(&world, 8, None).unwrap();
             win.fence().unwrap();
             if world.rank() == 0 {

@@ -194,7 +194,7 @@ mod tests {
 
     #[test]
     fn stream_create_and_free_recycles_vci() {
-        Universe::run(Universe::with_ranks(1), |world| {
+        Universe::builder().ranks(1).run(|world| {
             let s1 = Stream::create(&world, &Info::new()).unwrap();
             let v1 = s1.vci();
             drop(s1);
@@ -205,7 +205,7 @@ mod tests {
 
     #[test]
     fn stream_comm_basic_send_recv() {
-        Universe::run(Universe::with_ranks(2), |world| {
+        Universe::builder().ranks(2).run(|world| {
             let s = Stream::create(&world, &Info::new()).unwrap();
             let sc = stream_comm_create(&world, Some(&s)).unwrap();
             if world.rank() == 0 {
@@ -220,7 +220,7 @@ mod tests {
 
     #[test]
     fn stream_comm_with_null_stream_falls_back() {
-        Universe::run(Universe::with_ranks(2), |world| {
+        Universe::builder().ranks(2).run(|world| {
             // Rank 0 attaches a stream; rank 1 passes STREAM_NULL.
             let s = if world.rank() == 0 {
                 Some(Stream::create(&world, &Info::new()).unwrap())
@@ -244,7 +244,7 @@ mod tests {
 
     #[test]
     fn get_stream_returns_attached() {
-        Universe::run(Universe::with_ranks(1), |world| {
+        Universe::builder().ranks(1).run(|world| {
             let s = Stream::create(&world, &Info::new()).unwrap();
             let sc = stream_comm_create(&world, Some(&s)).unwrap();
             assert_eq!(sc.stream_count(), 1);
@@ -260,7 +260,7 @@ mod tests {
             max_streams: 1,
             ..Default::default()
         };
-        Universe::run(cfg, |world| {
+        Universe::builder().with_config(cfg).run(|world| {
             let _s1 = Stream::create(&world, &Info::new()).unwrap();
             assert!(matches!(
                 Stream::create(&world, &Info::new()),
@@ -271,7 +271,7 @@ mod tests {
 
     #[test]
     fn multiplex_streams_and_any_stream_recv() {
-        Universe::run(Universe::with_ranks(2), |world| {
+        Universe::builder().ranks(2).run(|world| {
             let s0 = Stream::create(&world, &Info::new()).unwrap();
             let s1 = Stream::create(&world, &Info::new()).unwrap();
             let mc = stream_comm_create_multiplex(&world, &[s0, s1]).unwrap();

@@ -582,7 +582,7 @@ mod tests {
     where
         F: Fn(&ThreadComm) + Sync,
     {
-        Universe::run(Universe::with_ranks(nprocs), |world| {
+        Universe::builder().ranks(nprocs).run(|world| {
             let tc = Threadcomm::init(&world, nt).unwrap();
             std::thread::scope(|s| {
                 for _ in 0..nt {
@@ -711,7 +711,7 @@ mod tests {
 
     #[test]
     fn inactive_use_is_error() {
-        Universe::run(Universe::with_ranks(1), |world| {
+        Universe::builder().ranks(1).run(|world| {
             let tc = Threadcomm::init(&world, 1).unwrap();
             let h = tc.start();
             h.finish();
@@ -729,7 +729,7 @@ mod tests {
     #[test]
     fn restartable_across_parallel_regions() {
         // The paper: "it can be activated and deactivated multiple times".
-        Universe::run(Universe::with_ranks(1), |world| {
+        Universe::builder().ranks(1).run(|world| {
             let tc = Threadcomm::init(&world, 2).unwrap();
             for round in 0..3 {
                 std::thread::scope(|s| {
@@ -755,7 +755,7 @@ mod tests {
     #[test]
     fn asymmetric_thread_counts() {
         // Different processes may specify different numbers of threads.
-        Universe::run(Universe::with_ranks(2), |world| {
+        Universe::builder().ranks(2).run(|world| {
             let nt = if world.rank() == 0 { 1 } else { 3 };
             let tc = Threadcomm::init(&world, nt).unwrap();
             std::thread::scope(|s| {

@@ -6,16 +6,44 @@
 //! through fabric channels — see DESIGN.md §Hardware-Adaptation). This is
 //! what lets one binary host the whole "cluster" while preserving the
 //! copy/protocol behavior the paper measures.
+//!
+//! With the netmod layer the same launcher also fronts *real* processes:
+//! [`UniverseBuilder::run_rank`] runs a single rank in the current
+//! process over a shared-memory segment (see `examples/shm_launcher.rs`
+//! for the fork-N-ranks pattern).
+//!
+//! ## Configuring a universe
+//!
+//! [`Universe::builder`] is the front door:
+//!
+//! ```
+//! use mpix::universe::Universe;
+//!
+//! let out = Universe::builder().ranks(4).run(|world| world.rank());
+//! assert_eq!(out, vec![0, 1, 2, 3]);
+//! ```
 
 use crate::comm::Comm;
-use crate::fabric::{Fabric, FabricConfig, CTX_WORLD};
+use crate::fabric::{Fabric, FabricConfig, LockMode, CTX_WORLD};
+use crate::netmod::NetmodSel;
+use std::path::PathBuf;
 use std::sync::Arc;
 
 pub struct Universe;
 
 impl Universe {
+    /// Start describing a universe. Every knob has the same default as
+    /// [`FabricConfig::default`] (1 rank, per-VCI locks, netmod from
+    /// `MPIX_NETMOD`).
+    pub fn builder() -> UniverseBuilder {
+        UniverseBuilder {
+            cfg: FabricConfig::default(),
+        }
+    }
+
     /// Launch `cfg.nranks` ranks, run `f(world)` on each, join, and
     /// return each rank's result ordered by rank.
+    #[deprecated(since = "0.7.0", note = "use Universe::builder()…run(f)")]
     pub fn run<T, F>(cfg: FabricConfig, f: F) -> Vec<T>
     where
         T: Send,
@@ -41,8 +69,10 @@ impl Universe {
                 let group = Arc::clone(&group);
                 let f = &f;
                 handles.push(s.spawn(move || {
-                    let world = Comm::new_proc(fabric, CTX_WORLD, rank as u32, group);
-                    f(world)
+                    let world = Comm::new_proc(Arc::clone(&fabric), CTX_WORLD, rank as u32, group);
+                    let out = f(world);
+                    fabric.flush_netmod(rank as u32);
+                    out
                 }));
             }
             handles
@@ -53,11 +83,136 @@ impl Universe {
     }
 
     /// Convenience: default config with `n` ranks.
+    #[deprecated(since = "0.7.0", note = "use Universe::builder().ranks(n)")]
     pub fn with_ranks(n: usize) -> FabricConfig {
         FabricConfig {
             nranks: n,
             ..Default::default()
         }
+    }
+}
+
+/// Fluent configuration for a [`Universe`]. Construct with
+/// [`Universe::builder`]; finish with [`run`](UniverseBuilder::run)
+/// (threads, all ranks in-process), [`run_rank`](UniverseBuilder::run_rank)
+/// (this process is exactly one rank — the multi-process launcher path),
+/// or [`fabric`](UniverseBuilder::fabric) (just build the fabric; benches
+/// reuse it across samples via [`Universe::run_on`]).
+#[derive(Clone, Debug)]
+pub struct UniverseBuilder {
+    cfg: FabricConfig,
+}
+
+impl UniverseBuilder {
+    /// Number of ranks in the world communicator.
+    pub fn ranks(mut self, n: usize) -> Self {
+        self.cfg.nranks = n;
+        self
+    }
+
+    /// Locking regime for shared endpoints (Fig 4's knob).
+    pub fn lock_mode(mut self, mode: LockMode) -> Self {
+        self.cfg.lock_mode = mode;
+        self
+    }
+
+    /// Shared (implicitly-hashed) endpoints per rank.
+    pub fn shared_endpoints(mut self, n: usize) -> Self {
+        self.cfg.n_shared = n;
+        self
+    }
+
+    /// Maximum stream-owned endpoints per rank.
+    pub fn max_streams(mut self, n: usize) -> Self {
+        self.cfg.max_streams = n;
+        self
+    }
+
+    /// Transport selection, overriding `MPIX_NETMOD`.
+    pub fn netmod(mut self, sel: NetmodSel) -> Self {
+        self.cfg.netmod = sel;
+        self
+    }
+
+    /// Eager/rendezvous protocol switchover in bytes.
+    pub fn eager_max(mut self, bytes: usize) -> Self {
+        self.cfg.eager_max = bytes;
+        self
+    }
+
+    /// Rendezvous chunk size in bytes.
+    pub fn chunk_size(mut self, bytes: usize) -> Self {
+        self.cfg.chunk_size = bytes;
+        self
+    }
+
+    /// Channel capacity in envelopes.
+    pub fn channel_cap(mut self, envelopes: usize) -> Self {
+        self.cfg.channel_cap = envelopes;
+        self
+    }
+
+    /// Simulated NIC injection overhead in nanoseconds (0 = off).
+    pub fn injection_ns(mut self, ns: u64) -> Self {
+        self.cfg.injection_ns = ns;
+        self
+    }
+
+    /// Name the shm segment file (shm netmod only). The process that
+    /// creates the universe first creates the segment; pair with
+    /// [`shm_attach`](Self::shm_attach) in launcher children.
+    pub fn shm_path(mut self, path: impl Into<PathBuf>) -> Self {
+        self.cfg.shm_path = Some(path.into());
+        self
+    }
+
+    /// Attach to an existing segment at `shm_path` instead of creating it
+    /// (launcher children).
+    pub fn shm_attach(mut self, attach: bool) -> Self {
+        self.cfg.shm_attach = attach;
+        self
+    }
+
+    /// Replace the whole config (escape hatch for tests/benches that
+    /// already hold a [`FabricConfig`]).
+    pub fn with_config(mut self, cfg: FabricConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Build the fabric without launching ranks.
+    pub fn fabric(self) -> Arc<Fabric> {
+        Fabric::new(self.cfg)
+    }
+
+    /// Launch all ranks as threads over one fabric; returns each rank's
+    /// result ordered by rank.
+    pub fn run<T, F>(self, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(Comm) -> T + Sync,
+    {
+        let fabric = Fabric::new(self.cfg);
+        Universe::run_on(&fabric, &f)
+    }
+
+    /// Run exactly one rank in *this* process — the multi-process path.
+    /// Builds a fabric (typically attached to a shared segment via
+    /// [`shm_path`](Self::shm_path)), runs `f(world)` for `rank`, flushes
+    /// the transport, and returns `f`'s result. Peer ranks live in other
+    /// processes that call `run_rank` with the same segment.
+    pub fn run_rank<T, F>(self, rank: u32, f: F) -> T
+    where
+        F: FnOnce(Comm) -> T,
+    {
+        let n = self.cfg.nranks;
+        assert!((rank as usize) < n, "rank {rank} out of range for {n} ranks");
+        let fabric = Fabric::new(self.cfg);
+        let group = Arc::new((0..n as u32).collect::<Vec<_>>());
+        let world = Comm::new_proc(Arc::clone(&fabric), CTX_WORLD, rank, group);
+        let out = f(world);
+        fabric.flush_netmod(rank);
+        out
     }
 }
 
@@ -67,7 +222,7 @@ mod tests {
 
     #[test]
     fn ranks_see_world() {
-        let out = Universe::run(Universe::with_ranks(4), |world| {
+        let out = Universe::builder().ranks(4).run(|world| {
             (world.rank(), world.size())
         });
         assert_eq!(out, vec![(0, 4), (1, 4), (2, 4), (3, 4)]);
@@ -75,7 +230,7 @@ mod tests {
 
     #[test]
     fn simple_send_recv() {
-        Universe::run(Universe::with_ranks(2), |world| {
+        Universe::builder().ranks(2).run(|world| {
             if world.rank() == 0 {
                 world.send(b"ping", 1, 7).unwrap();
             } else {
@@ -87,5 +242,14 @@ mod tests {
                 assert_eq!(st.tag, 7);
             }
         });
+    }
+
+    // The deprecated constructors stay as thin wrappers; this pins their
+    // behavior until they are removed.
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_constructors_still_work() {
+        let out = Universe::run(Universe::with_ranks(2), |world| world.size());
+        assert_eq!(out, vec![2, 2]);
     }
 }

@@ -1,0 +1,215 @@
+//! Unified hint registry: one resolution engine for every `MPIX_*`
+//! tunable.
+//!
+//! Three subsystems accept the same three-layer override scheme —
+//! collective algorithm selection (`MPIX_COLL_*`, `mpix_coll_*`), the
+//! I/O hints (`MPIX_IO_*`, `mpix_io_*`), and the netmod selector
+//! (`MPIX_NETMOD`, `mpix_netmod`). Before this module each hand-rolled
+//! the identical logic: read the environment once at creation, accept
+//! `Info` overrides transactionally, snapshot-inherit through
+//! dup/split/stream communicators. [`HintRegistry`] is that logic,
+//! extracted once:
+//!
+//! 1. **Env fallback** — [`HintRegistry::from_env`] reads each key's
+//!    environment variable exactly once, at creation time (world comm /
+//!    fabric construction). Invalid values are ignored, matching MPI's
+//!    "unrecognized hints are dropped" posture for out-of-band inputs.
+//! 2. **Info overrides** — [`HintRegistry::apply_info`] validates *all*
+//!    present keys first and applies them only if every one parses:
+//!    a garbage value must not half-apply a multi-key info object.
+//! 3. **Inheritance** — [`HintRegistry::inherited`] snapshots the parent
+//!    at child-comm creation. The child is a copy, not a live alias:
+//!    later overrides on the parent do not leak into the child.
+//!
+//! Values are stored as `u64` slots (atomics, so a `&Comm` shared across
+//! threads can apply hints without a lock); each key carries a `parse`
+//! function that both validates and encodes, which is where typed keys
+//! (algorithm enums, byte sizes, netmod names) plug in.
+
+use crate::error::{MpiError, Result};
+use crate::info::Info;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Slot value meaning "no override set": defaults apply.
+pub const HINT_UNSET: u64 = u64::MAX;
+
+/// One typed hint key: its `Info` name, its environment fallback, and
+/// the parse-and-encode function. `parse` returns `None` for values the
+/// key does not accept; it must never return [`HINT_UNSET`].
+pub struct HintKey {
+    /// Info-object key, e.g. `"mpix_coll_allreduce"`.
+    pub info: &'static str,
+    /// Environment fallback, e.g. `"MPIX_COLL_ALLREDUCE"`.
+    pub env: &'static str,
+    /// Validate + encode a textual value into a slot value.
+    pub parse: fn(&str) -> Option<u64>,
+}
+
+/// A fixed set of `N` hint slots over a static key table. See the
+/// module docs for the resolution order.
+pub struct HintRegistry<const N: usize> {
+    keys: &'static [HintKey; N],
+    slots: [AtomicU64; N],
+}
+
+impl<const N: usize> HintRegistry<N> {
+    /// All slots unset; no environment consulted (unit tests, children
+    /// built via [`HintRegistry::inherited`]).
+    pub fn new(keys: &'static [HintKey; N]) -> Self {
+        Self {
+            keys,
+            slots: std::array::from_fn(|_| AtomicU64::new(HINT_UNSET)),
+        }
+    }
+
+    /// Read each key's environment variable once. Unset, unparsable, or
+    /// rejected values leave the slot unset.
+    pub fn from_env(keys: &'static [HintKey; N]) -> Self {
+        let reg = Self::new(keys);
+        for (i, key) in keys.iter().enumerate() {
+            if let Some(v) = std::env::var(key.env).ok().and_then(|s| (key.parse)(&s)) {
+                reg.slots[i].store(v, Ordering::Relaxed);
+            }
+        }
+        reg
+    }
+
+    /// Snapshot the parent's slots (child-comm creation). No env re-read:
+    /// the environment was consumed exactly once, at the root.
+    pub fn inherited(parent: &Self) -> Self {
+        Self {
+            keys: parent.keys,
+            slots: std::array::from_fn(|i| {
+                AtomicU64::new(parent.slots[i].load(Ordering::Relaxed))
+            }),
+        }
+    }
+
+    /// Apply every recognized key in `info`, transactionally: all values
+    /// are validated before any slot is written, so a bad value leaves
+    /// the registry untouched.
+    pub fn apply_info(&self, info: &Info) -> Result<()> {
+        let mut staged: [Option<u64>; N] = [None; N];
+        for (i, key) in self.keys.iter().enumerate() {
+            if let Some(raw) = info.get(key.info) {
+                match (key.parse)(raw) {
+                    Some(v) => staged[i] = Some(v),
+                    None => {
+                        return Err(MpiError::InvalidArg(format!(
+                            "hint {}: unsupported value {raw:?}",
+                            key.info
+                        )))
+                    }
+                }
+            }
+        }
+        for (i, v) in staged.iter().enumerate() {
+            if let Some(v) = v {
+                self.slots[i].store(*v, Ordering::Relaxed);
+            }
+        }
+        Ok(())
+    }
+
+    /// Current value of slot `i`, `None` when unset.
+    pub fn get(&self, i: usize) -> Option<u64> {
+        match self.slots[i].load(Ordering::Relaxed) {
+            HINT_UNSET => None,
+            v => Some(v),
+        }
+    }
+
+    /// Force slot `i` to an already-encoded value (programmatic setters
+    /// like `CollSelector::force`; the caller validates).
+    pub fn set(&self, i: usize, v: u64) {
+        debug_assert_ne!(v, HINT_UNSET);
+        self.slots[i].store(v, Ordering::Relaxed);
+    }
+
+    /// The key table (diagnostics, doc tables).
+    pub fn keys(&self) -> &'static [HintKey; N] {
+        self.keys
+    }
+}
+
+/// Plain non-negative integer parse, the common numeric-hint case.
+/// Rejects [`HINT_UNSET`] itself so the sentinel stays unambiguous.
+pub fn parse_u64(s: &str) -> Option<u64> {
+    s.trim().parse::<u64>().ok().filter(|&v| v != HINT_UNSET)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    static KEYS: [HintKey; 2] = [
+        HintKey {
+            info: "mpix_test_alpha",
+            env: "MPIX_TEST_ALPHA_UNSET_IN_CI",
+            parse: parse_u64,
+        },
+        HintKey {
+            info: "mpix_test_beta",
+            env: "MPIX_TEST_BETA_UNSET_IN_CI",
+            parse: parse_u64,
+        },
+    ];
+
+    #[test]
+    fn unset_then_set_then_get() {
+        let r = HintRegistry::new(&KEYS);
+        assert_eq!(r.get(0), None);
+        r.set(0, 42);
+        assert_eq!(r.get(0), Some(42));
+        assert_eq!(r.get(1), None);
+    }
+
+    #[test]
+    fn apply_info_is_transactional() {
+        let r = HintRegistry::new(&KEYS);
+        let mut info = Info::new();
+        info.set("mpix_test_alpha", "7");
+        info.set("mpix_test_beta", "not-a-number");
+        assert!(r.apply_info(&info).is_err());
+        assert_eq!(r.get(0), None, "valid key must not half-apply");
+        let mut ok = Info::new();
+        ok.set("mpix_test_beta", "9");
+        r.apply_info(&ok).unwrap();
+        assert_eq!((r.get(0), r.get(1)), (None, Some(9)));
+    }
+
+    #[test]
+    fn unknown_info_keys_are_ignored() {
+        let r = HintRegistry::new(&KEYS);
+        let mut info = Info::new();
+        info.set("mpix_unrelated", "whatever");
+        r.apply_info(&info).unwrap();
+        assert_eq!(r.get(0), None);
+    }
+
+    #[test]
+    fn inherited_is_a_snapshot_not_an_alias() {
+        let parent = HintRegistry::new(&KEYS);
+        parent.set(0, 5);
+        let child = HintRegistry::inherited(&parent);
+        assert_eq!(child.get(0), Some(5));
+        parent.set(0, 6);
+        assert_eq!(child.get(0), Some(5), "later parent writes stay out");
+    }
+
+    #[test]
+    fn env_fallback_reads_once() {
+        static ENV_KEYS: [HintKey; 1] = [HintKey {
+            info: "mpix_test_env",
+            env: "MPIX_TEST_ENV_HINT",
+            parse: parse_u64,
+        }];
+        std::env::set_var("MPIX_TEST_ENV_HINT", "123");
+        let r = HintRegistry::from_env(&ENV_KEYS);
+        std::env::remove_var("MPIX_TEST_ENV_HINT");
+        assert_eq!(r.get(0), Some(123));
+        // A registry built after removal sees nothing: read-once.
+        let r2 = HintRegistry::from_env(&ENV_KEYS);
+        assert_eq!(r2.get(0), None);
+    }
+}

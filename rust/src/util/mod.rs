@@ -3,6 +3,7 @@
 //! tests.
 
 pub mod cache_padded;
+pub mod hints;
 pub mod json;
 pub mod pod;
 pub mod pool;

@@ -24,7 +24,7 @@ fn rendezvous_sizes_roundtrip() {
     let sizes = [
         1usize, 191, 192, 193, 4096, 65535, 65536, 65537, 200_000, 1 << 20,
     ];
-    Universe::run(Universe::with_ranks(2), |world| {
+    Universe::builder().ranks(2).run(|world| {
         for (i, &n) in sizes.iter().enumerate() {
             let tag = i as i32;
             if world.rank() == 0 {
@@ -47,7 +47,7 @@ fn rendezvous_sizes_roundtrip() {
 
 #[test]
 fn ordering_preserved_under_load() {
-    Universe::run(Universe::with_ranks(2), |world| {
+    Universe::builder().ranks(2).run(|world| {
         const N: usize = 2000;
         if world.rank() == 0 {
             for i in 0..N as u64 {
@@ -66,7 +66,7 @@ fn ordering_preserved_under_load() {
 #[test]
 fn contexts_are_isolated() {
     // Same tag/peer on two dup'd comms must not cross.
-    Universe::run(Universe::with_ranks(2), |world| {
+    Universe::builder().ranks(2).run(|world| {
         let a = world.dup();
         let b = world.dup();
         if world.rank() == 0 {
@@ -84,7 +84,7 @@ fn contexts_are_isolated() {
 
 #[test]
 fn wildcard_and_specific_interleave() {
-    Universe::run(Universe::with_ranks(3), |world| {
+    Universe::builder().ranks(3).run(|world| {
         if world.rank() == 0 {
             // One wildcard + one specific posted; sends from both peers.
             let mut w = [0u8; 4];
@@ -112,7 +112,7 @@ fn random_pattern_property() {
         nranks: 4,
         ..Default::default()
     };
-    Universe::run(cfg, |world| {
+    Universe::builder().with_config(cfg).run(|world| {
         let me = world.rank();
         let n = world.size();
         let mut rng = Rng::new(0xFEED + me as u64);
@@ -151,7 +151,7 @@ fn random_pattern_property() {
 
 #[test]
 fn truncation_error_reported() {
-    Universe::run(Universe::with_ranks(2), |world| {
+    Universe::builder().ranks(2).run(|world| {
         if world.rank() == 0 {
             world.send(&[0u8; 100], 1, 0).unwrap();
             world.send(&[7u8; 4], 1, 1).unwrap();
@@ -169,7 +169,7 @@ fn truncation_error_reported() {
 
 #[test]
 fn rank_out_of_range_errors() {
-    Universe::run(Universe::with_ranks(2), |world| {
+    Universe::builder().ranks(2).run(|world| {
         assert!(matches!(
             world.send(b"x", 5, 0),
             Err(MpiError::RankOutOfRange { rank: 5, .. })
@@ -181,7 +181,7 @@ fn rank_out_of_range_errors() {
 
 #[test]
 fn comm_split_subgroups() {
-    Universe::run(Universe::with_ranks(4), |world| {
+    Universe::builder().ranks(4).run(|world| {
         let color = (world.rank() % 2) as u32;
         let sub = world.split(color, world.rank() as i32).unwrap();
         assert_eq!(sub.size(), 2);
@@ -199,7 +199,7 @@ fn comm_split_subgroups() {
 fn halo_pack_send_unpack() {
     // The stencil driver's column exchange in miniature: pack a strided
     // column, send, unpack into the peer's halo column.
-    Universe::run(Universe::with_ranks(2), |world| {
+    Universe::builder().ranks(2).run(|world| {
         const N: usize = 10;
         let col = |c: usize| {
             let v = Datatype::vector(N - 2, 1, N as isize, &Datatype::f32());
@@ -233,7 +233,7 @@ fn halo_pack_send_unpack() {
 
 #[test]
 fn stream_comm_isolated_from_world() {
-    Universe::run(Universe::with_ranks(2), |world| {
+    Universe::builder().ranks(2).run(|world| {
         let s = Stream::create(&world, &Info::new()).unwrap();
         let sc = stream_comm_create(&world, Some(&s)).unwrap();
         if world.rank() == 0 {
@@ -255,7 +255,7 @@ fn any_stream_wildcard_multiplex_recv() {
     // any-stream receive". Two source streams on rank 0 both send to
     // rank 1's stream 0; one ANY_STREAM receive loop serves both, then a
     // specific source_stream_index still filters.
-    Universe::run(Universe::with_ranks(2), |world| {
+    Universe::builder().ranks(2).run(|world| {
         let s0 = Stream::create(&world, &Info::new()).unwrap();
         let s1 = Stream::create(&world, &Info::new()).unwrap();
         let mc = mpix::stream::stream_comm_create_multiplex(&world, &[s0, s1]).unwrap();
@@ -301,7 +301,7 @@ fn mutual_rendezvous_flood_tiny_rings() {
         chunk_size: 64,
         ..Default::default()
     };
-    Universe::run(cfg, |world| {
+    Universe::builder().with_config(cfg).run(|world| {
         let peer = 1 - world.rank();
         let n = 16 * 1024; // 256 chunks per message at chunk_size 64
         let data = vec![world.rank() as u8 + 1; n];
@@ -350,7 +350,7 @@ fn eager_heap_flood_recycles_pool() {
         channel_cap: 8,
         ..Default::default()
     };
-    Universe::run(cfg, |world| {
+    Universe::builder().with_config(cfg).run(|world| {
         const N: usize = 2000;
         const LEN: usize = 1024; // > INLINE_MAX (192), ≤ eager_max
         if world.rank() == 0 {
@@ -393,7 +393,7 @@ fn eager_heap_flood_recycles_pool() {
 fn stream_lock_free_metrics() {
     // The stream path must not take locks per message (the paper's core
     // claim); compare lock deltas for the same traffic on both paths.
-    Universe::run(Universe::with_ranks(2), |world| {
+    Universe::builder().ranks(2).run(|world| {
         let s = Stream::create(&world, &Info::new()).unwrap();
         let sc = stream_comm_create(&world, Some(&s)).unwrap();
         coll::barrier(&world).unwrap();
@@ -444,7 +444,7 @@ fn stream_lock_free_metrics() {
 fn grequest_wraps_offload_event() {
     // The paper's grequest.cu: wrap an offload completion event in a
     // generalized request and MPI_Wait it.
-    Universe::run(Universe::with_ranks(1), |world| {
+    Universe::builder().ranks(1).run(|world| {
         let off = OffloadStream::new(None);
         let buf = DevBuf::alloc(1024);
         off.memcpy_h2d(&vec![5.0; 1024], &buf);
@@ -467,7 +467,7 @@ fn enqueue_full_pipeline_two_ranks() {
         eprintln!("skipping: artifacts not built");
         return;
     }
-    Universe::run(Universe::with_ranks(2), |world| {
+    Universe::builder().ranks(2).run(|world| {
         let off = OffloadStream::new(None);
         let mut info = Info::new();
         info.set("type", "offload_stream");
@@ -500,7 +500,7 @@ fn enqueue_full_pipeline_two_ranks() {
 #[test]
 fn threadcomm_mixed_with_proc_collectives() {
     // Proc-level allreduce inside and outside a threadcomm region.
-    Universe::run(Universe::with_ranks(2), |world| {
+    Universe::builder().ranks(2).run(|world| {
         let tc = Threadcomm::init(&world, 2).unwrap();
         std::thread::scope(|s| {
             for _ in 0..2 {
@@ -522,7 +522,7 @@ fn threadcomm_mixed_with_proc_collectives() {
 
 #[test]
 fn threadcomm_alltoall_threads() {
-    Universe::run(Universe::with_ranks(2), |world| {
+    Universe::builder().ranks(2).run(|world| {
         let tc = Threadcomm::init(&world, 2).unwrap();
         std::thread::scope(|s| {
             for _ in 0..2 {
@@ -552,7 +552,7 @@ fn rma_counter_mutual_exclusion_property() {
         nranks: 4,
         ..Default::default()
     };
-    Universe::run(cfg, |world| {
+    Universe::builder().with_config(cfg).run(|world| {
         let win = mpix::rma::Window::create(&world, 8, None).unwrap();
         const INCS: usize = 25;
         if world.rank() != 0 {
@@ -578,7 +578,7 @@ fn rma_counter_mutual_exclusion_property() {
 
 #[test]
 fn rma_accumulate_under_shared_lock() {
-    Universe::run(Universe::with_ranks(3), |world| {
+    Universe::builder().ranks(3).run(|world| {
         let win = mpix::rma::Window::create(&world, 16, None).unwrap();
         if world.rank() != 0 {
             win.lock(0, false).unwrap();
@@ -607,7 +607,7 @@ fn rma_accumulate_under_shared_lock() {
 
 #[test]
 fn progress_thread_spin_up_down() {
-    Universe::run(Universe::with_ranks(1), |world| {
+    Universe::builder().ranks(1).run(|world| {
         let ctl = std::sync::Arc::clone(&world.fabric().ranks[0].progress_ctl);
         mpix::progress::start_progress_thread(world.fabric(), 0, None);
         assert_eq!(ctl.state(), mpix::progress::PROGRESS_BUSY);
@@ -622,7 +622,7 @@ fn progress_thread_spin_up_down() {
 
 #[test]
 fn stream_progress_api() {
-    Universe::run(Universe::with_ranks(1), |world| {
+    Universe::builder().ranks(1).run(|world| {
         let s = Stream::create(&world, &Info::new()).unwrap();
         // Explicit MPIX_Stream_progress on an idle stream is a no-op.
         s.progress();
@@ -634,7 +634,7 @@ fn stream_progress_api() {
 
 #[test]
 fn probe_then_recv() {
-    Universe::run(Universe::with_ranks(2), |world| {
+    Universe::builder().ranks(2).run(|world| {
         if world.rank() == 0 {
             world.send(&[9u8; 40], 1, 11).unwrap();
         } else {
@@ -653,7 +653,7 @@ fn probe_then_recv() {
 
 #[test]
 fn iprobe_nonblocking_semantics() {
-    Universe::run(Universe::with_ranks(2), |world| {
+    Universe::builder().ranks(2).run(|world| {
         if world.rank() == 1 {
             assert!(world.iprobe(0, 0).unwrap().is_none());
             world.send(b"go", 0, 1).unwrap(); // tell peer to send
@@ -677,7 +677,7 @@ fn iprobe_nonblocking_semantics() {
 
 #[test]
 fn persistent_requests_restart() {
-    Universe::run(Universe::with_ranks(2), |world| {
+    Universe::builder().ranks(2).run(|world| {
         const ROUNDS: usize = 20;
         if world.rank() == 0 {
             let data = [0xABu8; 96];
@@ -713,7 +713,7 @@ fn env_override_switches_allreduce_algorithm() {
     // other tests cannot perturb them.
     for (val, want_ring) in [("ring", true), ("tree", false)] {
         std::env::set_var("MPIX_COLL_ALLREDUCE", val);
-        let counts = Universe::run(Universe::with_ranks(3), |world| {
+        let counts = Universe::builder().ranks(3).run(|world| {
             coll::barrier(&world).unwrap();
             let m0 = world.fabric().metrics.snapshot();
             let mut v = [world.rank() as u64 + 1; 4];
@@ -741,7 +741,7 @@ fn env_override_switches_allreduce_algorithm() {
 fn threadcomm_coll_info_forces_ring() {
     // The info-key override applies to thread-rank collectives too: the
     // same CollSelector plumbing serves proc comms and threadcomms.
-    Universe::run(Universe::with_ranks(2), |world| {
+    Universe::builder().ranks(2).run(|world| {
         let tc = Threadcomm::init(&world, 2).unwrap();
         let mut info = Info::new();
         info.set("mpix_coll_allreduce", "ring");
@@ -779,7 +779,7 @@ fn threadcomm_stream_io_composition() {
     let path = std::env::temp_dir().join(format!("mpixio_tcstream_{}", std::process::id()));
     const BLK: usize = 16;
     const BLOCKS: usize = 4;
-    Universe::run(Universe::with_ranks(2), |world| {
+    Universe::builder().ranks(2).run(|world| {
         let s = Stream::create(&world, &Info::new()).unwrap();
         let sc = stream_comm_create(&world, Some(&s)).unwrap();
         let tc = Threadcomm::init(&world, 2).unwrap();
@@ -828,7 +828,7 @@ fn scan_exscan_nonpow2_sizes() {
     // scan/exscan regressions at non-power-of-two sizes (the chain
     // schedules only had pow2 coverage via the 4-rank test below).
     for &n in &[3usize, 5, 7] {
-        Universe::run(Universe::with_ranks(n), |world| {
+        Universe::builder().ranks(n).run(|world| {
             let me = world.rank() as i64;
             let mut v = [me + 1, (me + 1) * 10];
             coll::scan_t(&world, &mut v, |a, b| *a += *b).unwrap();
@@ -853,7 +853,7 @@ fn gatherv_nonpow2_sizes() {
     // Variable blocks — including zero-count ranks — at sizes 3/5/7,
     // gathering to the last rank (nonzero root).
     for &n in &[3usize, 5, 7] {
-        Universe::run(Universe::with_ranks(n), |world| {
+        Universe::builder().ranks(n).run(|world| {
             let me = world.rank();
             let send: Vec<u32> = vec![me as u32; me % 3];
             let root = n - 1;
@@ -872,7 +872,7 @@ fn gatherv_nonpow2_sizes() {
 
 #[test]
 fn scan_and_exscan() {
-    Universe::run(Universe::with_ranks(4), |world| {
+    Universe::builder().ranks(4).run(|world| {
         let me = world.rank() as i64;
         let mut v = [me + 1, (me + 1) * 10];
         coll::scan_t(&world, &mut v, |a, b| *a += *b).unwrap();
@@ -890,7 +890,7 @@ fn scan_and_exscan() {
 
 #[test]
 fn reduce_scatter_block() {
-    Universe::run(Universe::with_ranks(4), |world| {
+    Universe::builder().ranks(4).run(|world| {
         let me = world.rank() as u64;
         // send[j*2..j*2+2] destined for rank j, value me+j.
         let send: Vec<u64> = (0..4).flat_map(|j| [me + j, me + j]).collect();
@@ -905,7 +905,7 @@ fn reduce_scatter_block() {
 
 #[test]
 fn gatherv_variable_blocks() {
-    Universe::run(Universe::with_ranks(3), |world| {
+    Universe::builder().ranks(3).run(|world| {
         let me = world.rank();
         let send: Vec<u32> = vec![me as u32; me + 1]; // rank r sends r+1 elems
         if me == 0 {
@@ -927,7 +927,7 @@ fn rma_fetch_and_op_ticket_lock() {
         nranks: 4,
         ..Default::default()
     };
-    Universe::run(cfg, |world| {
+    Universe::builder().with_config(cfg).run(|world| {
         let win = mpix::rma::Window::create(&world, 8, None).unwrap();
         let mut tickets = Vec::new();
         if world.rank() != 0 {
@@ -967,7 +967,7 @@ fn rma_compare_and_swap_elects_one() {
         nranks: 4,
         ..Default::default()
     };
-    Universe::run(cfg, |world| {
+    Universe::builder().with_config(cfg).run(|world| {
         let win = mpix::rma::Window::create(&world, 8, None).unwrap();
         let mut won = 0u64;
         if world.rank() != 0 {
@@ -993,7 +993,7 @@ fn per_stream_progress_thread() {
     // MPIX_Start_progress_thread(stream): a progress thread bound to one
     // stream's endpoint completes traffic for that stream while the
     // owner thread is busy elsewhere.
-    Universe::run(Universe::with_ranks(2), |world| {
+    Universe::builder().ranks(2).run(|world| {
         let s = Stream::create(&world, &Info::new()).unwrap();
         let sc = stream_comm_create(&world, Some(&s)).unwrap();
         let me = world.my_world_rank();
@@ -1031,7 +1031,7 @@ fn per_stream_progress_thread() {
 fn enqueue_mpi_error_surfaces_at_sync() {
     // An MPI error inside an enqueued op (truncated receive) must surface
     // at stream synchronize, not crash the executor.
-    Universe::run(Universe::with_ranks(2), |world| {
+    Universe::builder().ranks(2).run(|world| {
         let off = OffloadStream::new(None);
         let mut info = Info::new();
         info.set("type", "offload_stream");

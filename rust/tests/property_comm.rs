@@ -17,7 +17,7 @@ use mpix::util::prng::Rng;
 fn prop_payload_integrity_bidirectional() {
     for case in 0..8 {
         let seed = 0xA11CE + case * 7919;
-        Universe::run(Universe::with_ranks(2), |world| {
+        Universe::builder().ranks(2).run(|world| {
             let mut rng = Rng::new(seed);
             for round in 0..6 {
                 let n = rng.range(1, 300_000);
@@ -50,7 +50,7 @@ fn prop_collectives_match_oracle() {
             nranks,
             ..Default::default()
         };
-        Universe::run(cfg, |world| {
+        Universe::builder().with_config(cfg).run(|world| {
             let mut mine: Vec<i64> = (0..nelem)
                 .map(|i| {
                     let mut r = Rng::new(seed ^ (world.rank() as u64) << 8 ^ i as u64);
@@ -88,7 +88,7 @@ fn prop_collectives_match_oracle() {
 fn prop_datatype_exchange_roundtrip() {
     for case in 0..10u64 {
         let seed = 0xDA7A + case * 65_537;
-        Universe::run(Universe::with_ranks(2), |world| {
+        Universe::builder().ranks(2).run(|world| {
             // Both ranks construct the SAME datatype from the seed.
             let mut rng = Rng::new(seed);
             let t = random_safe_type(&mut rng, 3);
@@ -149,7 +149,7 @@ fn prop_threadcomm_rank_bijection() {
             ..Default::default()
         };
         let seen = std::sync::Mutex::new(Vec::<usize>::new());
-        Universe::run(cfg, |world| {
+        Universe::builder().with_config(cfg).run(|world| {
             let tc = Threadcomm::init(&world, nthreads).unwrap();
             std::thread::scope(|s| {
                 for _ in 0..nthreads {
@@ -189,7 +189,7 @@ fn prop_threadcomm_rank_bijection() {
 /// complete then pending), and waitall equals individual waits.
 #[test]
 fn prop_request_state_monotone() {
-    Universe::run(Universe::with_ranks(2), |world| {
+    Universe::builder().ranks(2).run(|world| {
         for round in 0..50 {
             if world.rank() == 0 {
                 let data = vec![round as u8; 300_000]; // rendezvous path
