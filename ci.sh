@@ -18,6 +18,7 @@
 #   ./ci.sh test       # tier-1 build+test, then BENCH_*.json validation
 #   ./ci.sh bench      # benches compile (no run)
 #   ./ci.sh smoke      # multi-process shm launcher + netmod test matrix
+#   ./ci.sh lint       # pallas-lint: concurrency-contract analyzer + its tests
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -60,6 +61,14 @@ stage_smoke() {
     MPIX_NETMOD=shm cargo test -q --test integration
 }
 
+stage_lint() {
+    echo "==> pallas-lint: lock order, atomics protocol, unsafe hygiene,"
+    echo "    hot-path allocations, counter drift (zero findings required)"
+    cargo run --release -p pallas-lint -- .
+    echo "==> pallas-lint self-tests (fixture corpus + whole-tree gate)"
+    cargo test -q -p pallas-lint
+}
+
 stage="${1:-all}"
 case "$stage" in
     fmt) stage_fmt ;;
@@ -68,6 +77,7 @@ case "$stage" in
     test) stage_test ;;
     bench) stage_bench ;;
     smoke) stage_smoke ;;
+    lint) stage_lint ;;
     quick) stage_quick ;;
     all)
         stage_fmt
@@ -76,9 +86,10 @@ case "$stage" in
         stage_test
         stage_bench
         stage_smoke
+        stage_lint
         ;;
     *)
-        echo "usage: $0 [fmt|clippy|doc|test|bench|smoke|quick|all]" >&2
+        echo "usage: $0 [fmt|clippy|doc|test|bench|smoke|lint|quick|all]" >&2
         exit 2
         ;;
 esac

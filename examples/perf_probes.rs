@@ -129,4 +129,29 @@ fn main() {
         "coll dispatch  : allreduce tree={} ring={} (64 B -> tree, 32 KiB -> ring)",
         d.coll_allreduce_tree, d.coll_allreduce_ring
     );
+
+    // Full counter table over a mixed workload (pt2pt + collective +
+    // rendezvous), via `MetricsSnapshot::named_fields` — every Metrics
+    // counter is reported here, exhaustively (pallas-lint PL505 keeps the
+    // name table complete; the destructuring in named_fields keeps it
+    // compiling). Zero rows are expected for subsystems the workload
+    // doesn't touch (I/O, RMA, offload).
+    let totals = Universe::builder().ranks(2).run(|world| {
+        let peer = 1 - world.rank();
+        let big = vec![3u8; 1 << 20];
+        let mut rbuf = vec![0u8; 1 << 20];
+        if world.rank() == 0 {
+            world.send(&big, peer, 1).unwrap();
+        } else {
+            world.recv(&mut rbuf, peer as i32, 1).unwrap();
+        }
+        let mut x = [world.rank() as f64; 4];
+        mpix::coll::allreduce_t(&world, &mut x, |a, b| *a += *b).unwrap();
+        mpix::coll::barrier(&world).unwrap();
+        world.fabric().snapshot()
+    });
+    println!("counter totals (rank 0, mixed workload):");
+    for (name, value) in totals[0].named_fields() {
+        println!("  {name:<28} {value}");
+    }
 }

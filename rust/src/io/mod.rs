@@ -320,6 +320,9 @@ impl FileInner {
         // The grequest is 'static but the data lands in `buf`; narrow the
         // request lifetime to the buffer borrow.
         let req = self.greq_for(done);
+        // SAFETY: `Request<'x>` is covariant storage only — the lifetime is
+        // a phantom brand; shrinking 'static to 'a can only make the borrow
+        // checker stricter, and the engine writes into `buf` before `done`.
         Ok(unsafe { std::mem::transmute::<Request<'static>, Request<'a>>(req) })
     }
 

@@ -322,6 +322,8 @@ fn finish_match(posted: PostedRecv, env: Envelope) -> MatchAction {
             MatchAction::Done
         }
         Payload::Eager(data) => {
+            // SAFETY: `data.len() <= cap` (truncation rejected above) and
+            // posted.buf points into a live buffer of at least `cap` bytes.
             unsafe {
                 std::ptr::copy_nonoverlapping(data.as_ptr(), posted.buf.0, data.len());
             }
@@ -334,6 +336,9 @@ fn finish_match(posted: PostedRecv, env: Envelope) -> MatchAction {
             sender_req,
         } => {
             // Single-copy: straight from the sender's buffer.
+            // SAFETY: `src` stays valid until `sender_req` completes (the
+            // sender blocks on it), `len <= cap` was checked above, and the
+            // two buffers belong to different requests so cannot overlap.
             unsafe {
                 std::ptr::copy_nonoverlapping(src.0, posted.buf.0, len);
             }
@@ -355,12 +360,19 @@ fn finish_match(posted: PostedRecv, env: Envelope) -> MatchAction {
             status,
         },
         other => {
-            posted.req.fail(MpiError::Internal(format!(
-                "control payload {other:?} reached the matching engine"
-            )));
+            posted.req.fail(unexpected_payload(&other));
             MatchAction::Done
         }
     }
+}
+
+/// Outlined error construction so `finish_match` stays allocation-free:
+/// this arm is reachable only on a runtime bug (a control payload routed
+/// into the matching engine), so the `format!` lives in a cold function.
+#[cold]
+#[inline(never)]
+fn unexpected_payload(p: &Payload) -> MpiError {
+    MpiError::Internal(format!("control payload {p:?} reached the matching engine"))
 }
 
 #[cfg(test)]

@@ -80,14 +80,17 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    // lint: atomic(counter)
     pub fn bump(counter: &AtomicU64) {
         counter.fetch_add(1, Relaxed);
     }
 
+    // lint: atomic(counter)
     pub fn add(counter: &AtomicU64, n: u64) {
         counter.fetch_add(n, Relaxed);
     }
 
+    // lint: atomic(counter)
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
             eager_inline: self.eager_inline.load(Relaxed),
@@ -174,6 +177,82 @@ pub struct MetricsSnapshot {
 }
 
 impl MetricsSnapshot {
+    /// Every counter as a `(name, value)` row, in declaration order.
+    ///
+    /// Exhaustive by construction: the destructuring below stops compiling
+    /// when a field is added but not listed, and pallas-lint (PL505)
+    /// cross-checks the name table against the `Metrics` struct — together
+    /// they keep reporting tools (`perf_probes`) from silently dropping
+    /// counters.
+    pub fn named_fields(&self) -> [(&'static str, u64); 31] {
+        let MetricsSnapshot {
+            eager_inline,
+            eager_heap,
+            rdv,
+            rdv_chunks,
+            pool_hits,
+            pool_misses,
+            inbox_refresh_skips,
+            lock_acquisitions,
+            expected_hits,
+            unexpected_hits,
+            progress_polls,
+            grequest_polls,
+            rma_serviced,
+            offload_ops,
+            requests_alloc,
+            coll_allreduce_tree,
+            coll_allreduce_ring,
+            coll_bcast_binomial,
+            coll_bcast_chain,
+            coll_reduce_scatter_linear,
+            coll_reduce_scatter_pairwise,
+            coll_allgather_ring,
+            coll_allgather_recdbl,
+            io_coll_ops,
+            io_agg_bytes,
+            io_agg_file_ops,
+            io_sieve_rmw,
+            io_indep_fallback,
+            netmod_connects,
+            netmod_bytes_tx,
+            netmod_bytes_rx,
+        } = *self;
+        [
+            ("eager_inline", eager_inline),
+            ("eager_heap", eager_heap),
+            ("rdv", rdv),
+            ("rdv_chunks", rdv_chunks),
+            ("pool_hits", pool_hits),
+            ("pool_misses", pool_misses),
+            ("inbox_refresh_skips", inbox_refresh_skips),
+            ("lock_acquisitions", lock_acquisitions),
+            ("expected_hits", expected_hits),
+            ("unexpected_hits", unexpected_hits),
+            ("progress_polls", progress_polls),
+            ("grequest_polls", grequest_polls),
+            ("rma_serviced", rma_serviced),
+            ("offload_ops", offload_ops),
+            ("requests_alloc", requests_alloc),
+            ("coll_allreduce_tree", coll_allreduce_tree),
+            ("coll_allreduce_ring", coll_allreduce_ring),
+            ("coll_bcast_binomial", coll_bcast_binomial),
+            ("coll_bcast_chain", coll_bcast_chain),
+            ("coll_reduce_scatter_linear", coll_reduce_scatter_linear),
+            ("coll_reduce_scatter_pairwise", coll_reduce_scatter_pairwise),
+            ("coll_allgather_ring", coll_allgather_ring),
+            ("coll_allgather_recdbl", coll_allgather_recdbl),
+            ("io_coll_ops", io_coll_ops),
+            ("io_agg_bytes", io_agg_bytes),
+            ("io_agg_file_ops", io_agg_file_ops),
+            ("io_sieve_rmw", io_sieve_rmw),
+            ("io_indep_fallback", io_indep_fallback),
+            ("netmod_connects", netmod_connects),
+            ("netmod_bytes_tx", netmod_bytes_tx),
+            ("netmod_bytes_rx", netmod_bytes_rx),
+        ]
+    }
+
     /// Difference since an earlier snapshot.
     pub fn since(&self, earlier: &MetricsSnapshot) -> MetricsSnapshot {
         MetricsSnapshot {
@@ -230,5 +309,24 @@ mod tests {
         assert_eq!(d.eager_inline, 2);
         assert_eq!(d.rdv, 1);
         assert_eq!(d.eager_heap, 0);
+    }
+
+    #[test]
+    fn named_fields_cover_every_counter() {
+        let m = Metrics::default();
+        Metrics::add(&m.netmod_bytes_rx, 9);
+        let s = m.snapshot();
+        let rows = s.named_fields();
+        // One row per snapshot field, values matching the struct.
+        assert_eq!(rows.len(), 31);
+        assert_eq!(
+            rows.iter().find(|(n, _)| *n == "netmod_bytes_rx"),
+            Some(&("netmod_bytes_rx", 9))
+        );
+        // Names are unique (a duplicated row would mask a dropped one).
+        let mut names: Vec<_> = rows.iter().map(|(n, _)| *n).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 31);
     }
 }

@@ -66,16 +66,16 @@ impl ReqInner {
         unsafe {
             *self.status.get() = status;
         }
-        self.state.store(COMPLETE, Ordering::Release);
+        self.state.store(COMPLETE, Ordering::Release); // lint: atomic(completion)
     }
 
     pub fn fail(&self, e: MpiError) {
         *self.err.lock().unwrap() = Some(e);
-        self.state.store(FAILED, Ordering::Release);
+        self.state.store(FAILED, Ordering::Release); // lint: atomic(completion)
     }
 
     pub fn is_complete(&self) -> bool {
-        self.state.load(Ordering::Acquire) != PENDING
+        self.state.load(Ordering::Acquire) != PENDING // lint: atomic(completion)
     }
 
     /// Status after completion (undefined before — callers check first).
@@ -86,7 +86,7 @@ impl ReqInner {
     }
 
     pub fn take_result(&self) -> Result<Status> {
-        match self.state.load(Ordering::Acquire) {
+        match self.state.load(Ordering::Acquire) { // lint: atomic(completion)
             COMPLETE => Ok(self.status()),
             FAILED => Err(self
                 .err
@@ -248,7 +248,7 @@ pub fn backoff(spins: &mut u32) {
 pub fn spin_budget() -> u32 {
     use std::sync::atomic::{AtomicU32, Ordering};
     static BUDGET: AtomicU32 = AtomicU32::new(0);
-    let v = BUDGET.load(Ordering::Relaxed);
+    let v = BUDGET.load(Ordering::Relaxed); // lint: atomic(counter)
     if v != 0 {
         return v;
     }
@@ -256,7 +256,7 @@ pub fn spin_budget() -> u32 {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(4096);
-    BUDGET.store(v, Ordering::Relaxed);
+    BUDGET.store(v, Ordering::Relaxed); // lint: atomic(counter)
     v
 }
 

@@ -13,6 +13,9 @@
 /// valid value.
 pub unsafe trait Pod: Copy + Send + Sync + 'static {}
 
+// SAFETY: fixed-width primitives have no padding bytes and accept every
+// bit pattern (floats included: any 32/64-bit pattern is a valid, if
+// possibly NaN, value). `usize` is a primitive integer on every target.
 unsafe impl Pod for u8 {}
 unsafe impl Pod for i8 {}
 unsafe impl Pod for u16 {}

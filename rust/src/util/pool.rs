@@ -68,10 +68,11 @@ impl ChunkPool {
     /// Total cells ever allocated by this pool (diagnostics: bounded and
     /// small under steady-state traffic — that is the point).
     pub fn allocated(&self) -> u64 {
-        self.allocated.load(Ordering::Relaxed)
+        self.allocated.load(Ordering::Relaxed) // lint: atomic(counter)
     }
 
     /// Return a cell to the pool (any thread; lock-free push).
+    // lint: atomic(pool_stack)
     fn give_back(&self, cell: Box<ChunkCell>) {
         let p = Box::into_raw(cell);
         let mut head = self.returns.load(Ordering::Relaxed);
@@ -90,6 +91,7 @@ impl ChunkPool {
     }
 
     /// Take the entire return chain (single consumer; one atomic swap).
+    // lint: atomic(pool_stack)
     fn drain_into(&self, cache: &mut Vec<Box<ChunkCell>>) {
         let mut p = self.returns.swap(ptr::null_mut(), Ordering::Acquire);
         while !p.is_null() {
@@ -113,7 +115,7 @@ impl Drop for ChunkPool {
             // SAFETY: exclusive access (`&mut self`); nodes come from
             // `Box::into_raw`.
             let cell = unsafe { Box::from_raw(p) };
-            p = cell.next.load(Ordering::Relaxed);
+            p = cell.next.load(Ordering::Relaxed); // lint: atomic(pool_stack)
             drop(cell);
         }
     }
@@ -160,7 +162,7 @@ impl LocalChunkPool {
                 }
             }
             None => {
-                self.shared.allocated.fetch_add(1, Ordering::Relaxed);
+                self.shared.allocated.fetch_add(1, Ordering::Relaxed); // lint: atomic(counter)
                 PooledBuf {
                     cell: Some(Box::new(ChunkCell {
                         data: Vec::with_capacity(cap),

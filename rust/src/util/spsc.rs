@@ -51,6 +51,7 @@ impl<T> SpscRing<T> {
     }
 
     /// Producer side: returns `Err(v)` when the ring is full.
+    // lint: atomic(ring_cursor)
     pub fn push(&self, v: T) -> std::result::Result<(), T> {
         let head = self.head.load(Ordering::Relaxed);
         let tail = self.tail.load(Ordering::Acquire);
@@ -67,6 +68,7 @@ impl<T> SpscRing<T> {
     }
 
     /// Consumer side: returns `None` when the ring is empty.
+    // lint: atomic(ring_cursor)
     pub fn pop(&self) -> Option<T> {
         let tail = self.tail.load(Ordering::Relaxed);
         let head = self.head.load(Ordering::Acquire);
@@ -80,6 +82,7 @@ impl<T> SpscRing<T> {
         Some(v)
     }
 
+    // lint: atomic(ring_cursor)
     pub fn is_empty(&self) -> bool {
         self.tail.load(Ordering::Relaxed) == self.head.load(Ordering::Acquire)
     }
@@ -88,12 +91,14 @@ impl<T> SpscRing<T> {
     /// (`head` is ours; a stale `tail` can only *over*-report fullness,
     /// never hand out a slot that is not free). Lets the rendezvous pump
     /// skip the chunk copy entirely when a push could not succeed.
+    // lint: atomic(ring_cursor)
     pub fn is_full(&self) -> bool {
         let head = self.head.load(Ordering::Relaxed);
         let tail = self.tail.load(Ordering::Acquire);
         head.wrapping_sub(tail) == self.capacity()
     }
 
+    // lint: atomic(ring_cursor)
     pub fn len(&self) -> usize {
         let head = self.head.load(Ordering::Acquire);
         let tail = self.tail.load(Ordering::Acquire);

@@ -1,0 +1,23 @@
+// Fixture: seeded PL201/PL202/PL203 violations.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+pub struct S {
+    pub doorbell: AtomicU32,
+    pub head: AtomicU64,
+}
+
+impl S {
+    pub fn relaxed_doorbell(&self) {
+        // The doorbell role requires Release on rmw: PL201.
+        self.doorbell.fetch_add(1, Ordering::Relaxed); // lint: atomic(doorbell)
+    }
+
+    pub fn untagged(&self) -> u64 {
+        self.head.load(Ordering::Acquire) // no tag anywhere: PL202
+    }
+
+    pub fn unknown_role(&self) {
+        self.head.store(0, Ordering::Release); // lint: atomic(mystery)
+    }
+}

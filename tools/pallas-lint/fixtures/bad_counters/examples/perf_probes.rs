@@ -1,0 +1,6 @@
+// Fixture probes file that prints counters by hand instead of consuming
+// the snapshot's name/value table — the drift PL505 exists to catch.
+
+fn main() {
+    println!("sends: hand-written report, no table");
+}

@@ -1,0 +1,48 @@
+// Fixture: seeded PL501–PL505 violations (mini metrics tree).
+//
+// - `orphan` is never bumped (PL501), missing from MetricsSnapshot,
+//   snapshot(), and since() (PL502 ×3), and has no named_fields row
+//   (PL505).
+// - `ghost` is a snapshot field with no counter and no snapshot_only
+//   declaration (PL503).
+// - The fixture manifest declares the pair "sends/recvs" but `recvs`
+//   does not exist (PL504).
+// - The fixture probes file never calls named_fields (PL505).
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+pub struct Metrics {
+    pub sends: AtomicU64,
+    pub orphan: AtomicU64,
+}
+
+pub struct MetricsSnapshot {
+    pub sends: u64,
+    pub ghost: u64,
+}
+
+impl Metrics {
+    pub fn bump_sends(&self) {
+        self.sends.fetch_add(1, Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            sends: self.sends.load(Relaxed),
+            ghost: 0,
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    pub fn since(&self, base: &MetricsSnapshot) -> MetricsSnapshot {
+        MetricsSnapshot {
+            sends: self.sends - base.sends,
+            ghost: self.ghost - base.ghost,
+        }
+    }
+
+    pub fn named_fields(&self) -> [(&'static str, u64); 1] {
+        [("sends", self.sends)]
+    }
+}

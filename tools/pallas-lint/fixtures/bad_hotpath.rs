@@ -1,0 +1,16 @@
+// Fixture: seeded PL401 violation — `Ring::push` is listed as hot-path
+// in the fixture manifest but allocates a fresh Vec per call.
+
+pub struct Ring;
+
+impl Ring {
+    pub fn push(&self, data: &[u8]) -> Vec<u8> {
+        let mut staged = Vec::new();
+        staged.extend_from_slice(data);
+        staged
+    }
+
+    pub fn pop(&self, out: &mut [u8]) -> usize {
+        out.len() // allocation-free: no finding
+    }
+}

@@ -1,0 +1,29 @@
+// Fixture: seeded PL101 violations. Not compiled — parsed by the
+// analyzer's self-tests against the fixture manifest.
+
+pub fn inversion(reg: &Registry, svc: &Service) {
+    let w = svc.windows.lock().unwrap(); // rank 90 (service)
+    let g = reg.global.lock().unwrap(); // rank 10 under rank 90: PL101
+    drop((w, g));
+}
+
+pub fn two_leaves(a: &Service, b: &Service) {
+    let x = a.windows.lock().unwrap(); // rank 90
+    let y = b.handle.lock().unwrap(); // second rank-90 leaf at once: PL101
+    drop((x, y));
+}
+
+pub fn correct_order(reg: &Registry, svc: &Service) {
+    let g = reg.global.lock().unwrap(); // rank 10 first…
+    let w = svc.windows.lock().unwrap(); // …then rank 90: fine
+    drop((g, w));
+}
+
+pub fn sequential_is_fine(a: &Service, b: &Service) {
+    {
+        let x = a.windows.lock().unwrap();
+        drop(x);
+    }
+    let y = b.handle.lock().unwrap(); // first guard already dropped: fine
+    drop(y);
+}

@@ -1,0 +1,14 @@
+// Fixture: seeded PL301 violation.
+
+pub fn bare(p: *mut u8) {
+    unsafe {
+        *p = 0;
+    }
+}
+
+pub fn justified(p: *mut u8) {
+    // SAFETY: fixture — the caller passes a valid, exclusive pointer.
+    unsafe {
+        *p = 1;
+    }
+}

@@ -1,0 +1,38 @@
+// Fixture: fully conforming code — the self-tests assert zero findings
+// over this file with every checker enabled.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+pub struct Door {
+    pub bell: AtomicU32,
+}
+
+impl Door {
+    pub fn ring(&self) {
+        self.bell.fetch_add(1, Ordering::Release); // lint: atomic(doorbell)
+    }
+
+    pub fn observe(&self) -> u32 {
+        self.bell.load(Ordering::Acquire) // lint: atomic(doorbell)
+    }
+
+    pub fn pump(&self, buf: &mut [u8]) {
+        // Listed as hot-path in the fixture manifest; stays allocation-free.
+        for b in buf.iter_mut() {
+            *b = b.wrapping_add(1);
+        }
+    }
+}
+
+pub fn ordered(reg: &Registry, svc: &Service) {
+    let g = reg.global.lock().unwrap();
+    let w = svc.windows.lock().unwrap();
+    drop((g, w));
+}
+
+pub fn write_zero(p: *mut u8) {
+    // SAFETY: fixture — the caller passes a valid, exclusive pointer.
+    unsafe {
+        *p = 0;
+    }
+}

@@ -1,0 +1,237 @@
+//! PL201/PL202/PL203: the atomics protocol.
+//!
+//! Within the manifest's scope files, every atomic operation that names
+//! a memory ordering must be tagged with its protocol role —
+//! `// lint: atomic(<role>)` trailing the op, on the comment line above
+//! it, or above the enclosing `fn` (covering every op in that body).
+//! Multi-role lines use `atomic(a|b)`: each op must satisfy at least one
+//! listed role. The role's allowed orderings come from the manifest;
+//! anything outside the set is PL201 (e.g. a Relaxed doorbell bump), an
+//! untagged op is PL202, an unknown role is PL203.
+
+use crate::manifest::Manifest;
+use crate::source::{find_word, SourceFile};
+use crate::Diagnostic;
+
+/// Atomic-op tokens and their kind. `compare_exchange*` is matched
+/// before the plain ops so its failure ordering is not double-counted.
+const OPS: &[(&str, Kind)] = &[
+    ("compare_exchange_weak(", Kind::Cas),
+    ("compare_exchange(", Kind::Cas),
+    ("fetch_add(", Kind::Rmw),
+    ("fetch_sub(", Kind::Rmw),
+    ("fetch_or(", Kind::Rmw),
+    ("fetch_and(", Kind::Rmw),
+    (".swap(", Kind::Rmw),
+    (".load(", Kind::Load),
+    (".store(", Kind::Store),
+];
+
+const ORDERINGS: &[&str] = &["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
+
+#[derive(Copy, Clone, PartialEq)]
+enum Kind {
+    Load,
+    Store,
+    Rmw,
+    Cas,
+}
+
+pub fn check(file: &SourceFile, m: &Manifest, diags: &mut Vec<Diagnostic>) {
+    let fn_of = file.enclosing_fn();
+    for i in 0..file.code.len() {
+        for &(tok, kind) in OPS {
+            let mut from = 0;
+            while let Some(p) = file.code[i][from..].find(tok) {
+                let p = from + p;
+                from = p + tok.len();
+                let (span, end_line) = call_span(file, i, p + tok.len());
+                let orderings = all_orderings(&span);
+                if orderings.is_empty() {
+                    // Not an atomic op (`.load(` / `.store(` on some other
+                    // type, or an ordering passed through a variable —
+                    // which this tree does not do).
+                    continue;
+                }
+                match find_tag(file, &fn_of, i, end_line) {
+                    None => diags.push(Diagnostic {
+                        code: "PL202",
+                        path: file.path.clone(),
+                        line: i + 1,
+                        msg: format!(
+                            "atomic op with explicit ordering has no `// lint: atomic(<role>)` tag: {}",
+                            file.raw[i].trim()
+                        ),
+                    }),
+                    Some(tag) => {
+                        let roles: Vec<&str> = tag.split('|').collect();
+                        if let Some(bad) = roles.iter().find(|r| m.role(r).is_none()) {
+                            diags.push(Diagnostic {
+                                code: "PL203",
+                                path: file.path.clone(),
+                                line: i + 1,
+                                msg: format!("unknown atomic role `{bad}` (not in manifest)"),
+                            });
+                            continue;
+                        }
+                        check_orderings(file, m, &roles, kind, &orderings, i, diags);
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn check_orderings(
+    file: &SourceFile,
+    m: &Manifest,
+    roles: &[&str],
+    kind: Kind,
+    orderings: &[String],
+    line: usize,
+    diags: &mut Vec<Diagnostic>,
+) {
+    let tagname = roles.join("|");
+    if kind == Kind::Cas {
+        let succ = orderings.first().cloned().unwrap_or_default();
+        let fail = orderings.get(1).cloned().unwrap_or_else(|| succ.clone());
+        let pair = format!("{succ}/{fail}");
+        let ok = roles
+            .iter()
+            .any(|r| m.role(r).map(|x| x.cas.contains(&pair)).unwrap_or(false));
+        if !ok {
+            diags.push(Diagnostic {
+                code: "PL201",
+                path: file.path.clone(),
+                line: line + 1,
+                msg: format!("role `{tagname}`: cas orderings {pair} not in allowed set"),
+            });
+        }
+        return;
+    }
+    for o in orderings {
+        let ok = roles.iter().any(|r| {
+            m.role(r)
+                .map(|x| match kind {
+                    Kind::Load => x.load.contains(o),
+                    Kind::Store => x.store.contains(o),
+                    Kind::Rmw => x.rmw.contains(o),
+                    Kind::Cas => false,
+                })
+                .unwrap_or(false)
+        });
+        if !ok {
+            let kname = match kind {
+                Kind::Load => "load",
+                Kind::Store => "store",
+                Kind::Rmw => "rmw",
+                Kind::Cas => "cas",
+            };
+            diags.push(Diagnostic {
+                code: "PL201",
+                path: file.path.clone(),
+                line: line + 1,
+                msg: format!("role `{tagname}`: {kname} with Ordering::{o} not in allowed set"),
+            });
+        }
+    }
+}
+
+/// All ordering names in the span, in order, duplicates kept.
+fn all_orderings(span: &str) -> Vec<String> {
+    let mut found: Vec<(usize, String)> = Vec::new();
+    for &o in ORDERINGS {
+        let mut from = 0;
+        while let Some(p) = find_word(span, o, from) {
+            found.push((p, o.to_string()));
+            from = p + o.len();
+        }
+    }
+    found.sort_by_key(|(p, _)| *p);
+    found.into_iter().map(|(_, o)| o).collect()
+}
+
+/// Text of the call's argument list starting at `col` (just past the
+/// opening paren), spanning lines until the matching close. Returns the
+/// collected text and the line the call ends on.
+fn call_span(file: &SourceFile, line: usize, col: usize) -> (String, usize) {
+    let mut bal = 1i32;
+    let mut out = String::new();
+    let mut l = line;
+    let mut c = col;
+    while l < file.code.len() {
+        for ch in file.code[l].chars().skip(if l == line { c } else { 0 }) {
+            match ch {
+                '(' => bal += 1,
+                ')' => {
+                    bal -= 1;
+                    if bal == 0 {
+                        return (out, l);
+                    }
+                }
+                _ => {}
+            }
+            out.push(ch);
+        }
+        out.push(' ');
+        l += 1;
+        c = 0;
+    }
+    (out, file.code.len().saturating_sub(1))
+}
+
+/// Role tag for an op spanning lines `i..=j`: trailing comment on any
+/// span line, else contiguous comment lines directly above, else a tag
+/// above the enclosing fn's signature.
+fn find_tag(file: &SourceFile, fn_of: &[Option<usize>], i: usize, j: usize) -> Option<String> {
+    for k in i..=j.min(file.comments.len() - 1) {
+        if let Some(t) = extract_tag(&file.comments[k]) {
+            return Some(t);
+        }
+    }
+    let mut k = i;
+    while k > 0 {
+        k -= 1;
+        let code_empty = file.code[k].trim().is_empty();
+        let has_comment = !file.comments[k].trim().is_empty();
+        if code_empty && has_comment {
+            if let Some(t) = extract_tag(&file.comments[k]) {
+                return Some(t);
+            }
+            continue;
+        }
+        break;
+    }
+    if let Some(fl) = fn_of[i] {
+        let mut k = fl;
+        while k > 0 {
+            k -= 1;
+            let code_trim = file.code[k].trim();
+            let comment_only = code_trim.is_empty() && !file.comments[k].trim().is_empty();
+            if comment_only || code_trim.starts_with("#[") {
+                if let Some(t) = extract_tag(&file.comments[k]) {
+                    return Some(t);
+                }
+                continue;
+            }
+            break;
+        }
+    }
+    None
+}
+
+/// Pull `<roles>` out of `// lint: atomic(<roles>)`.
+fn extract_tag(comment: &str) -> Option<String> {
+    let p = comment.find("lint: atomic(")?;
+    let rest = &comment[p + "lint: atomic(".len()..];
+    let close = rest.find(')')?;
+    let tag = &rest[..close];
+    if tag.is_empty()
+        || !tag
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '|')
+    {
+        return None;
+    }
+    Some(tag.to_string())
+}

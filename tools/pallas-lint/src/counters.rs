@@ -1,0 +1,231 @@
+//! PL501–PL505: Metrics counter drift.
+//!
+//! The Metrics struct is the runtime's observability contract; a counter
+//! that exists but is never bumped, or bumped but never surfaced, is a
+//! silent lie to every test and perf probe built on it. Checked:
+//!
+//! - PL501: every `AtomicU64` field of `Metrics` is bumped somewhere
+//!   under the scan root (`fetch_add`/`fetch_sub`/`Metrics::bump`/`add`).
+//! - PL502: every counter appears in `MetricsSnapshot`, in `snapshot()`,
+//!   and in `since()`.
+//! - PL503: every snapshot field has a Metrics counter, unless declared
+//!   `snapshot_only` in the manifest (e.g. the per-endpoint
+//!   `inbox_refresh_skips` that `Fabric::snapshot` fills in).
+//! - PL504: declared tx/rx pairs both exist (symmetry is declared in
+//!   the manifest, not assumed from names).
+//! - PL505: every counter has a row in the `named_fields` table and the
+//!   perf probes consume that table — reporting cannot silently drop a
+//!   counter.
+
+use crate::manifest::Manifest;
+use crate::source::{find_word, SourceFile};
+use crate::Diagnostic;
+
+pub fn check(
+    metrics: &SourceFile,
+    probes_text: Option<&str>,
+    scan_files: &[SourceFile],
+    m: &Manifest,
+    diags: &mut Vec<Diagnostic>,
+) {
+    let fields = struct_fields(metrics, "pub struct Metrics", "AtomicU64");
+    let snap_fields = struct_fields(metrics, "pub struct MetricsSnapshot", "u64");
+    let snapshot_body = fn_body(metrics, "fn snapshot(");
+    let since_body = fn_body(metrics, "fn since(");
+    let raw_text = metrics.raw.join("\n");
+
+    let mut diag = |code: &'static str, line: usize, msg: String| {
+        diags.push(Diagnostic {
+            code,
+            path: metrics.path.clone(),
+            line,
+            msg,
+        });
+    };
+
+    for (name, line) in &fields {
+        if !is_bumped(name, scan_files) {
+            diag(
+                "PL501",
+                *line,
+                format!("counter `{name}` is never bumped anywhere under the scan root"),
+            );
+        }
+        if !snap_fields.iter().any(|(n, _)| n == name) {
+            diag(
+                "PL502",
+                *line,
+                format!("counter `{name}` missing from MetricsSnapshot"),
+            );
+        }
+        if !body_mentions(&snapshot_body, name) {
+            diag(
+                "PL502",
+                *line,
+                format!("counter `{name}` not loaded in snapshot()"),
+            );
+        }
+        if !body_mentions(&since_body, name) {
+            diag(
+                "PL502",
+                *line,
+                format!("counter `{name}` not diffed in since()"),
+            );
+        }
+        if !raw_text.contains(&format!("(\"{name}\"")) {
+            diag(
+                "PL505",
+                *line,
+                format!("counter `{name}` has no row in the named_fields table"),
+            );
+        }
+    }
+    for (name, line) in &snap_fields {
+        if !fields.iter().any(|(n, _)| n == name)
+            && !m.counters.snapshot_only.iter().any(|s| s == name)
+        {
+            diag(
+                "PL503",
+                *line,
+                format!(
+                    "snapshot field `{name}` has no Metrics counter and is not declared snapshot_only"
+                ),
+            );
+        }
+    }
+    for s in &m.counters.snapshot_only {
+        if !raw_text.contains(&format!("(\"{s}\"")) {
+            diag(
+                "PL505",
+                1,
+                format!("snapshot-only field `{s}` has no row in the named_fields table"),
+            );
+        }
+    }
+    for pair in &m.counters.pairs {
+        let Some((a, b)) = pair.split_once('/') else {
+            diag("PL504", 1, format!("malformed pair `{pair}` (want \"a/b\")"));
+            continue;
+        };
+        for name in [a, b] {
+            if !fields.iter().any(|(n, _)| n == name) {
+                diag(
+                    "PL504",
+                    1,
+                    format!("declared pair `{pair}`: counter `{name}` does not exist in Metrics"),
+                );
+            }
+        }
+    }
+    match probes_text {
+        Some(t) if t.contains("named_fields") => {}
+        Some(_) => diags.push(Diagnostic {
+            code: "PL505",
+            path: m.counters.probes_file.clone(),
+            line: 1,
+            msg: "perf probes do not consume MetricsSnapshot::named_fields — \
+                  counters can silently vanish from reporting"
+                .into(),
+        }),
+        None => diags.push(Diagnostic {
+            code: "PL505",
+            path: m.counters.probes_file.clone(),
+            line: 1,
+            msg: "probes file missing (manifest [counters] probes_file)".into(),
+        }),
+    }
+}
+
+/// `(field, 1-based line)` for `pub <name>: <ty>` rows of the struct.
+fn struct_fields(file: &SourceFile, header: &str, ty: &str) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    let Some(start) = file.code.iter().position(|c| c.contains(header)) else {
+        return out;
+    };
+    let depths = file.depths();
+    let body_depth = depths[start + 1];
+    for i in start + 1..file.code.len() {
+        if depths[i] < body_depth {
+            break;
+        }
+        let t = file.code[i].trim();
+        if let Some(rest) = t.strip_prefix("pub ") {
+            if let Some((name, rty)) = rest.split_once(':') {
+                let rty = rty.trim().trim_end_matches(',');
+                if rty == ty {
+                    out.push((name.trim().to_string(), i + 1));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Code lines of the body of the first fn whose signature contains `sig`.
+fn fn_body(file: &SourceFile, sig: &str) -> Vec<String> {
+    let Some(start) = file.code.iter().position(|c| c.contains(sig)) else {
+        return Vec::new();
+    };
+    let mut bal = 0i32;
+    let mut seen = false;
+    let mut out = Vec::new();
+    for line in &file.code[start..] {
+        for ch in line.chars() {
+            match ch {
+                '{' => {
+                    bal += 1;
+                    seen = true;
+                }
+                '}' => bal -= 1,
+                _ => {}
+            }
+        }
+        out.push(line.clone());
+        if seen && bal <= 0 {
+            break;
+        }
+    }
+    out
+}
+
+/// `name:` appears in the body (a struct-literal row naming the field).
+fn body_mentions(body: &[String], name: &str) -> bool {
+    body.iter().any(|l| {
+        let mut from = 0;
+        while let Some(p) = find_word(l, name, from) {
+            let rest = l[p + name.len()..].trim_start();
+            if rest.starts_with(':') {
+                return true;
+            }
+            from = p + name.len();
+        }
+        false
+    })
+}
+
+/// Some line in some file bumps this counter: the name with a `.` or `&`
+/// sigil before it, on a line that also performs an add.
+fn is_bumped(name: &str, files: &[SourceFile]) -> bool {
+    for f in files {
+        for l in &f.code {
+            let adds = l.contains("fetch_add")
+                || l.contains("fetch_sub")
+                || l.contains("bump(")
+                || l.contains("add(");
+            if !adds {
+                continue;
+            }
+            let mut from = 0;
+            while let Some(p) = find_word(l, name, from) {
+                if p > 0 {
+                    let b = l.as_bytes()[p - 1];
+                    if b == b'.' || b == b'&' {
+                        return true;
+                    }
+                }
+                from = p + name.len();
+            }
+        }
+    }
+    false
+}

@@ -1,0 +1,148 @@
+//! PL401/PL402: allocation ban in manifest-listed hot-path functions.
+//!
+//! Mechanizes the pooling guarantees: the per-message path (endpoint
+//! poll, channel push/pop, matching delivery, pool get/put) must not
+//! construct owned buffers. Banned tokens are matched on literal-free
+//! code within the function's brace extent; an entry may `allow` a
+//! token with a manifest-side `why` (policy stays in the manifest — the
+//! source carries no suppression comments). `Arc::clone(&x)` is fine by
+//! construction: only the method form `.clone()` is banned.
+//!
+//! PL402 flags manifest entries whose function no longer exists, so the
+//! list cannot rot into a no-op.
+
+use crate::manifest::{HotpathFn, Manifest};
+use crate::source::{find_word, SourceFile};
+use crate::Diagnostic;
+
+/// (token, base name used in `allow`).
+const BANNED: &[(&str, &str)] = &[
+    ("Box::new(", "Box::new"),
+    ("Vec::new(", "Vec::new"),
+    ("vec![", "vec!"),
+    (".to_vec(", "to_vec"),
+    (".to_owned(", "to_owned"),
+    ("String::new(", "String::new"),
+    ("format!(", "format!"),
+    (".clone()", "clone"),
+];
+
+pub fn check(files: &[SourceFile], m: &Manifest, diags: &mut Vec<Diagnostic>) {
+    for entry in &m.hotpath {
+        let Some(file) = files.iter().find(|f| f.path == entry.file) else {
+            diags.push(Diagnostic {
+                code: "PL402",
+                path: entry.file.clone(),
+                line: 1,
+                msg: format!(
+                    "hot-path manifest entry `{}`: file not found under the scanned tree",
+                    entry.name
+                ),
+            });
+            continue;
+        };
+        let Some((start, end)) = fn_extent(file, &entry.name) else {
+            diags.push(Diagnostic {
+                code: "PL402",
+                path: entry.file.clone(),
+                line: 1,
+                msg: format!(
+                    "hot-path manifest entry `{}` not found in {} — update the manifest",
+                    entry.name, entry.file
+                ),
+            });
+            continue;
+        };
+        scan_body(file, entry, start, end, diags);
+    }
+}
+
+fn scan_body(
+    file: &SourceFile,
+    entry: &HotpathFn,
+    start: usize,
+    end: usize,
+    diags: &mut Vec<Diagnostic>,
+) {
+    for i in start..=end.min(file.code.len() - 1) {
+        for &(tok, base) in BANNED {
+            if file.code[i].contains(tok) && !entry.allow.iter().any(|a| a == base) {
+                diags.push(Diagnostic {
+                    code: "PL401",
+                    path: file.path.clone(),
+                    line: i + 1,
+                    msg: format!(
+                        "`{base}` in hot-path fn `{}` (allocation-free contract): {}",
+                        entry.name,
+                        file.raw[i].trim()
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Locate `name` (or `Type::name`) and return its body's line extent.
+fn fn_extent(file: &SourceFile, name: &str) -> Option<(usize, usize)> {
+    let (ty, fname) = match name.split_once("::") {
+        Some((t, f)) => (Some(t), f),
+        None => (None, name),
+    };
+    let depths = file.depths();
+    // (line-start depth, header line) of each currently-open `impl`.
+    let mut impls: Vec<(i32, usize)> = Vec::new();
+    let mut start = None;
+    for (i, code) in file.code.iter().enumerate() {
+        let d0 = depths[i];
+        while let Some(&(pd, pl)) = impls.last() {
+            if i > pl && d0 <= pd {
+                impls.pop();
+            } else {
+                break;
+            }
+        }
+        let trimmed = code.trim_start();
+        if trimmed.starts_with("impl ") || trimmed.starts_with("impl<") {
+            impls.push((d0, i));
+        }
+        let Some(p) = find_word(code, fname, 0) else {
+            continue;
+        };
+        // Must be a declaration: preceded by the `fn` keyword.
+        let before = code[..p].trim_end();
+        if !(before == "fn" || before.ends_with(" fn")) {
+            continue;
+        }
+        if let Some(t) = ty {
+            let ok = impls
+                .last()
+                .map(|&(_, pl)| find_word(&file.code[pl], t, 0).is_some())
+                .unwrap_or(false);
+            if !ok {
+                continue;
+            }
+        }
+        start = Some(i);
+        break;
+    }
+    let start = start?;
+    // Extent: from the signature to the close of its first opened brace.
+    let mut bal = 0i32;
+    let mut seen_open = false;
+    for i in start..file.code.len() {
+        for ch in file.code[i].chars() {
+            match ch {
+                '{' => {
+                    bal += 1;
+                    seen_open = true;
+                }
+                '}' => bal -= 1,
+                _ => {}
+            }
+        }
+        if seen_open && bal <= 0 {
+            return Some((start, i));
+        }
+    }
+    Some((start, file.code.len() - 1))
+}

@@ -1,0 +1,105 @@
+//! pallas-lint: in-tree static analyzer enforcing rust_pallas's
+//! concurrency contracts. Zero external dependencies — a hand-rolled
+//! line lexer ([`source`]) feeds five checkers, each keyed to a
+//! documented invariant of the runtime:
+//!
+//! | code  | family     | contract                                              |
+//! |-------|------------|-------------------------------------------------------|
+//! | PL101 | locks      | manifest lock hierarchy, intra-procedural guard scopes |
+//! | PL2xx | atomics    | named atomics carry a role; orderings match the role   |
+//! | PL301 | unsafe     | every `unsafe` site carries a `// SAFETY:` argument    |
+//! | PL4xx | hot path   | manifest-listed fns stay allocation-free               |
+//! | PL5xx | counters   | Metrics counters are bumped, surfaced, and symmetric   |
+//!
+//! The contracts live in `tools/pallas-lint/lock_order.toml`; the
+//! analyzer is the executable form of ARCHITECTURE.md §11.
+
+pub mod atomics;
+pub mod counters;
+pub mod hotpath;
+pub mod locks;
+pub mod manifest;
+pub mod source;
+pub mod unsafety;
+
+use manifest::Manifest;
+use source::SourceFile;
+use std::path::{Path, PathBuf};
+
+/// One finding. `path` is repo-relative; `line` is 1-based.
+#[derive(Debug)]
+pub struct Diagnostic {
+    pub code: &'static str,
+    pub path: String,
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.code, self.msg)
+    }
+}
+
+/// Run every checker over the tree rooted at `root` (the repo root) and
+/// return all findings, sorted by path then line.
+pub fn run(root: &Path, m: &Manifest) -> Result<Vec<Diagnostic>, String> {
+    let scan_root = root.join(&m.counters.scan);
+    let mut paths = Vec::new();
+    collect_rs(&scan_root, &mut paths)?;
+    paths.sort();
+
+    let mut files = Vec::new();
+    for p in &paths {
+        let text = std::fs::read_to_string(p)
+            .map_err(|e| format!("read {}: {e}", p.display()))?;
+        let rel = p
+            .strip_prefix(root)
+            .unwrap_or(p)
+            .to_string_lossy()
+            .replace('\\', "/");
+        files.push(SourceFile::parse(rel, &text));
+    }
+
+    let mut diags = Vec::new();
+    for f in &files {
+        locks::check(f, m, &mut diags);
+        unsafety::check(f, &mut diags);
+        if m.atomics_scope.iter().any(|s| s == &f.path) {
+            atomics::check(f, m, &mut diags);
+        }
+    }
+    hotpath::check(&files, m, &mut diags);
+
+    let metrics = files
+        .iter()
+        .find(|f| f.path == m.counters.metrics_file)
+        .ok_or_else(|| format!("metrics file `{}` not under scan root", m.counters.metrics_file))?;
+    let probes_text = std::fs::read_to_string(root.join(&m.counters.probes_file)).ok();
+    counters::check(metrics, probes_text.as_deref(), &files, m, &mut diags);
+
+    diags.sort_by(|a, b| (&a.path, a.line, a.code).cmp(&(&b.path, b.line, b.code)));
+    Ok(diags)
+}
+
+/// Convenience for tests: load the manifest at its canonical location
+/// under `root` and run.
+pub fn run_with_default_manifest(root: &Path) -> Result<Vec<Diagnostic>, String> {
+    let m = Manifest::load(&root.join("tools/pallas-lint/lock_order.toml"))?;
+    run(root, &m)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries =
+        std::fs::read_dir(dir).map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+        let p = entry.path();
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(p);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,97 @@
+//! PL101: lock-order violations against the manifest hierarchy.
+//!
+//! Intra-procedural guard-scope tracking over stripped code lines:
+//!
+//! - `let g = X.lock()...` binds a guard that lives until the enclosing
+//!   brace block closes (tracked via line-start depth).
+//! - A bare `X.lock().unwrap().op()` temporary lives for that statement
+//!   (approximated as that line).
+//! - Closure-style acquisitions (`with_ep(..)`, `.with_locked(..)`,
+//!   `.with_unchecked(..)`) hold until depth returns to the call line's
+//!   depth — i.e. for the closure body.
+//!
+//! Any acquisition while a guard of equal or lower rank is held is a
+//! diagnostic: equal ranks catch two leaves held at once, which the
+//! hierarchy forbids just as much as an outright inversion.
+
+use crate::manifest::Manifest;
+use crate::source::SourceFile;
+use crate::Diagnostic;
+
+enum GuardKind {
+    /// Named guard: expires when line-start depth drops below `depth`.
+    Block,
+    /// Closure body: expires when depth returns to <= `depth` after line.
+    Closure,
+    /// Statement temporary: expires after its line.
+    Line,
+}
+
+struct Held {
+    class: usize,
+    kind: GuardKind,
+    depth: i32,
+    line: usize,
+}
+
+pub fn check(file: &SourceFile, m: &Manifest, diags: &mut Vec<Diagnostic>) {
+    let depths = file.depths();
+    let mut held: Vec<Held> = Vec::new();
+    for (i, code) in file.code.iter().enumerate() {
+        let d0 = depths[i];
+        held.retain(|h| match h.kind {
+            GuardKind::Block => d0 >= h.depth,
+            GuardKind::Closure => !(i > h.line && d0 <= h.depth),
+            GuardKind::Line => i <= h.line,
+        });
+        let Some((class, pattern)) = classify(code, m) else {
+            continue;
+        };
+        for h in &held {
+            if m.locks[class].rank <= m.locks[h.class].rank {
+                diags.push(Diagnostic {
+                    code: "PL101",
+                    path: file.path.clone(),
+                    line: i + 1,
+                    msg: format!(
+                        "acquires `{}` (rank {}) while holding `{}` (rank {}, line {}) — \
+                         violates the manifest lock order",
+                        m.locks[class].name,
+                        m.locks[class].rank,
+                        m.locks[h.class].name,
+                        m.locks[h.class].rank,
+                        h.line + 1
+                    ),
+                });
+            }
+        }
+        let is_closure = pattern.contains("with");
+        let trimmed = code.trim_start();
+        let is_let_guard = trimmed.starts_with("let ") && code.contains(".lock(");
+        let kind = if is_closure {
+            GuardKind::Closure
+        } else if is_let_guard {
+            GuardKind::Block
+        } else {
+            GuardKind::Line
+        };
+        held.push(Held {
+            class,
+            kind,
+            depth: d0,
+            line: i,
+        });
+    }
+}
+
+/// First manifest lock class whose pattern occurs in this code line.
+fn classify<'m>(code: &str, m: &'m Manifest) -> Option<(usize, &'m str)> {
+    for (idx, l) in m.locks.iter().enumerate() {
+        for p in &l.patterns {
+            if code.contains(p.as_str()) {
+                return Some((idx, p.as_str()));
+            }
+        }
+    }
+    None
+}

@@ -1,0 +1,66 @@
+//! CLI entry point. Usage:
+//!
+//! ```text
+//! pallas-lint [ROOT] [--manifest PATH]
+//! ```
+//!
+//! `ROOT` defaults to `.` and must be the repo root (the manifest's
+//! paths are repo-relative). Exit status 1 when any finding is emitted,
+//! 2 on configuration errors — CI treats both as failure.
+
+use pallas_lint::manifest::Manifest;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(".");
+    let mut manifest_path: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--manifest" => match args.next() {
+                Some(p) => manifest_path = Some(PathBuf::from(p)),
+                None => {
+                    eprintln!("pallas-lint: --manifest needs a path");
+                    return ExitCode::from(2);
+                }
+            },
+            "-h" | "--help" => {
+                eprintln!("usage: pallas-lint [ROOT] [--manifest PATH]");
+                return ExitCode::SUCCESS;
+            }
+            other => root = PathBuf::from(other),
+        }
+    }
+    let manifest_path =
+        manifest_path.unwrap_or_else(|| root.join("tools/pallas-lint/lock_order.toml"));
+
+    let m = match Manifest::load(&manifest_path) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("pallas-lint: manifest error: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let diags = match pallas_lint::run(&root, &m) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("pallas-lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    if diags.is_empty() {
+        println!(
+            "pallas-lint: clean ({} lock classes, {} roles, {} hot-path fns checked)",
+            m.locks.len(),
+            m.roles.len(),
+            m.hotpath.len()
+        );
+        return ExitCode::SUCCESS;
+    }
+    for d in &diags {
+        println!("{d}");
+    }
+    eprintln!("pallas-lint: {} finding(s)", diags.len());
+    ExitCode::FAILURE
+}

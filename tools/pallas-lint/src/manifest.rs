@@ -1,0 +1,365 @@
+//! Parser for `lock_order.toml` — the TOML subset the manifest uses.
+//!
+//! Supported grammar: `[section]` and `[[array-of-tables]]` headers,
+//! `key = value` lines where value is a quoted string, an integer, or an
+//! array of quoted strings (single- or multi-line), `#` comments. That
+//! is the whole format; anything else is a hard error so manifest typos
+//! fail the lint run instead of silently relaxing a rule.
+
+use std::path::Path;
+
+/// One lock class from the §3/§10 hierarchy.
+#[derive(Debug, Clone)]
+pub struct LockClass {
+    pub name: String,
+    /// Acquisition order: lower = outer. Nested rank <= held rank is PL101.
+    pub rank: u32,
+    /// Code substrings that mean "this line acquires the lock".
+    pub patterns: Vec<String>,
+}
+
+/// Allowed orderings for one atomic role.
+#[derive(Debug, Clone, Default)]
+pub struct Role {
+    pub name: String,
+    pub load: Vec<String>,
+    pub store: Vec<String>,
+    pub rmw: Vec<String>,
+    /// Allowed (success, failure) pairs, encoded "Succ/Fail".
+    pub cas: Vec<String>,
+}
+
+/// One hot-path function entry.
+#[derive(Debug, Clone, Default)]
+pub struct HotpathFn {
+    /// Repo-relative file.
+    pub file: String,
+    /// `name` or `Type::name`.
+    pub name: String,
+    /// Banned-token base names this entry may still use (needs `why`).
+    pub allow: Vec<String>,
+    pub why: String,
+}
+
+/// The `[counters]` section.
+#[derive(Debug, Clone, Default)]
+pub struct Counters {
+    pub metrics_file: String,
+    pub probes_file: String,
+    /// Directory scanned for counter-bump sites.
+    pub scan: String,
+    /// Snapshot fields with no Metrics counter by design.
+    pub snapshot_only: Vec<String>,
+    /// Symmetric counter pairs, encoded "tx/rx".
+    pub pairs: Vec<String>,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub locks: Vec<LockClass>,
+    /// Repo-relative files under the atomics protocol.
+    pub atomics_scope: Vec<String>,
+    pub roles: Vec<Role>,
+    pub hotpath: Vec<HotpathFn>,
+    pub counters: Counters,
+}
+
+impl Manifest {
+    pub fn role(&self, name: &str) -> Option<&Role> {
+        self.roles.iter().find(|r| r.name == name)
+    }
+
+    pub fn load(path: &Path) -> Result<Manifest, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        Manifest::parse(&text).map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest, String> {
+        let mut m = Manifest::default();
+        let mut section = String::new();
+        let mut lines = text.lines().enumerate();
+        while let Some((ln, line)) = lines.next() {
+            let line = strip_toml_comment(line);
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(h) = line.strip_prefix("[[").and_then(|s| s.strip_suffix("]]")) {
+                section = h.to_string();
+                match h {
+                    "lock" => m.locks.push(LockClass {
+                        name: String::new(),
+                        rank: 0,
+                        patterns: Vec::new(),
+                    }),
+                    "role" => m.roles.push(Role::default()),
+                    "hotpath" => m.hotpath.push(HotpathFn::default()),
+                    _ => return Err(format!("line {}: unknown table [[{h}]]", ln + 1)),
+                }
+                continue;
+            }
+            if let Some(h) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = h.to_string();
+                if h != "atomics" && h != "counters" {
+                    return Err(format!("line {}: unknown section [{h}]", ln + 1));
+                }
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| format!("line {}: expected key = value", ln + 1))?;
+            let key = line[..eq].trim().to_string();
+            let mut val = line[eq + 1..].trim().to_string();
+            // Multi-line array: keep consuming until brackets balance.
+            if val.starts_with('[') {
+                while bracket_balance(&val) > 0 {
+                    let (_, next) = lines
+                        .next()
+                        .ok_or_else(|| format!("line {}: unterminated array", ln + 1))?;
+                    val.push(' ');
+                    val.push_str(strip_toml_comment(next).trim());
+                }
+            }
+            let v = Value::parse(&val).map_err(|e| format!("line {}: {e}", ln + 1))?;
+            m.assign(&section, &key, v)
+                .map_err(|e| format!("line {}: {e}", ln + 1))?;
+        }
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn assign(&mut self, section: &str, key: &str, v: Value) -> Result<(), String> {
+        match section {
+            "lock" => {
+                let l = self.locks.last_mut().ok_or("no open [[lock]]")?;
+                match key {
+                    "name" => l.name = v.string()?,
+                    "rank" => l.rank = v.int()?,
+                    "patterns" => l.patterns = v.array()?,
+                    _ => return Err(format!("unknown key `{key}` in [[lock]]")),
+                }
+            }
+            "atomics" => match key {
+                "scope" => self.atomics_scope = v.array()?,
+                _ => return Err(format!("unknown key `{key}` in [atomics]")),
+            },
+            "role" => {
+                let r = self.roles.last_mut().ok_or("no open [[role]]")?;
+                match key {
+                    "name" => r.name = v.string()?,
+                    "load" => r.load = v.array()?,
+                    "store" => r.store = v.array()?,
+                    "rmw" => r.rmw = v.array()?,
+                    "cas" => r.cas = v.array()?,
+                    _ => return Err(format!("unknown key `{key}` in [[role]]")),
+                }
+            }
+            "hotpath" => {
+                let h = self.hotpath.last_mut().ok_or("no open [[hotpath]]")?;
+                match key {
+                    "file" => h.file = v.string()?,
+                    "name" => h.name = v.string()?,
+                    "allow" => h.allow = v.array()?,
+                    "why" => h.why = v.string()?,
+                    _ => return Err(format!("unknown key `{key}` in [[hotpath]]")),
+                }
+            }
+            "counters" => match key {
+                "metrics_file" => self.counters.metrics_file = v.string()?,
+                "probes_file" => self.counters.probes_file = v.string()?,
+                "scan" => self.counters.scan = v.string()?,
+                "snapshot_only" => self.counters.snapshot_only = v.array()?,
+                "pairs" => self.counters.pairs = v.array()?,
+                _ => return Err(format!("unknown key `{key}` in [counters]")),
+            },
+            _ => return Err(format!("key `{key}` outside any section")),
+        }
+        Ok(())
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        for l in &self.locks {
+            if l.name.is_empty() || l.rank == 0 || l.patterns.is_empty() {
+                return Err(format!("[[lock]] `{}` incomplete", l.name));
+            }
+        }
+        for r in &self.roles {
+            if r.name.is_empty() {
+                return Err("[[role]] without a name".into());
+            }
+        }
+        for h in &self.hotpath {
+            if h.file.is_empty() || h.name.is_empty() {
+                return Err(format!("[[hotpath]] `{}` incomplete", h.name));
+            }
+            if !h.allow.is_empty() && h.why.is_empty() {
+                return Err(format!(
+                    "[[hotpath]] `{}` has allow = [...] but no why — allowances must be justified",
+                    h.name
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+enum Value {
+    Str(String),
+    Int(u32),
+    Arr(Vec<String>),
+}
+
+impl Value {
+    fn parse(s: &str) -> Result<Value, String> {
+        let s = s.trim();
+        if let Some(inner) = s.strip_prefix('"') {
+            let inner = inner
+                .strip_suffix('"')
+                .ok_or_else(|| format!("unterminated string: {s}"))?;
+            return Ok(Value::Str(inner.to_string()));
+        }
+        if s.starts_with('[') {
+            let inner = s
+                .strip_prefix('[')
+                .and_then(|x| x.strip_suffix(']'))
+                .ok_or_else(|| format!("malformed array: {s}"))?;
+            let mut items = Vec::new();
+            for part in inner.split(',') {
+                let part = part.trim();
+                if part.is_empty() {
+                    continue; // trailing comma
+                }
+                let item = part
+                    .strip_prefix('"')
+                    .and_then(|x| x.strip_suffix('"'))
+                    .ok_or_else(|| format!("array items must be quoted strings: {part}"))?;
+                items.push(item.to_string());
+            }
+            return Ok(Value::Arr(items));
+        }
+        s.parse::<u32>()
+            .map(Value::Int)
+            .map_err(|_| format!("expected string, integer, or array: {s}"))
+    }
+
+    fn string(self) -> Result<String, String> {
+        match self {
+            Value::Str(s) => Ok(s),
+            _ => Err("expected a string".into()),
+        }
+    }
+
+    fn int(self) -> Result<u32, String> {
+        match self {
+            Value::Int(i) => Ok(i),
+            _ => Err("expected an integer".into()),
+        }
+    }
+
+    fn array(self) -> Result<Vec<String>, String> {
+        match self {
+            Value::Arr(a) => Ok(a),
+            _ => Err("expected an array".into()),
+        }
+    }
+}
+
+/// Strip a `#` comment, respecting quoted strings.
+fn strip_toml_comment(line: &str) -> &str {
+    let bytes = line.as_bytes();
+    let mut in_str = false;
+    for (i, &b) in bytes.iter().enumerate() {
+        match b {
+            b'"' => in_str = !in_str,
+            b'#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn bracket_balance(s: &str) -> i32 {
+    let mut bal = 0;
+    let mut in_str = false;
+    for b in s.bytes() {
+        match b {
+            b'"' => in_str = !in_str,
+            b'[' if !in_str => bal += 1,
+            b']' if !in_str => bal -= 1,
+            _ => {}
+        }
+    }
+    bal
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# comment
+[[lock]]
+name = "outer"
+rank = 10
+patterns = [".global.lock("]
+
+[[lock]]
+name = "leaf"
+rank = 90
+patterns = [
+    ".a.lock(",  # trailing comment
+    ".b.lock(",
+]
+
+[atomics]
+scope = ["src/x.rs"]
+
+[[role]]
+name = "doorbell"
+load = ["Acquire"]
+store = []
+rmw = ["Release"]
+cas = []
+
+[[hotpath]]
+file = "src/x.rs"
+name = "T::push"
+allow = ["Vec::new"]
+why = "cold init"
+
+[counters]
+metrics_file = "src/metrics.rs"
+probes_file = "examples/p.rs"
+scan = "src"
+snapshot_only = ["only_snap"]
+pairs = ["tx/rx"]
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.locks.len(), 2);
+        assert_eq!(m.locks[0].rank, 10);
+        assert_eq!(m.locks[1].patterns.len(), 2);
+        assert_eq!(m.atomics_scope, vec!["src/x.rs"]);
+        let r = m.role("doorbell").unwrap();
+        assert_eq!(r.load, vec!["Acquire"]);
+        assert!(r.store.is_empty());
+        assert_eq!(m.hotpath[0].name, "T::push");
+        assert_eq!(m.hotpath[0].allow, vec!["Vec::new"]);
+        assert_eq!(m.counters.pairs, vec!["tx/rx"]);
+    }
+
+    #[test]
+    fn rejects_unjustified_allow() {
+        let bad = "[[hotpath]]\nfile = \"a.rs\"\nname = \"f\"\nallow = [\"Vec::new\"]\n";
+        assert!(Manifest::parse(bad).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_key() {
+        let bad = "[counters]\nmetrics_file = \"m.rs\"\nsupress = [\"x\"]\n";
+        assert!(Manifest::parse(bad).is_err());
+    }
+}

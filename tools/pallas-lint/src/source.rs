@@ -1,0 +1,284 @@
+//! Line-level lexing: split each source line into code and comment,
+//! with string/char literals blanked out of the code half.
+//!
+//! This is the whole parsing strategy of pallas-lint. A real parser
+//! (`syn`) would violate the workspace's zero-dependency rule and buy
+//! little: every contract the analyzer enforces is expressible over
+//! pattern matches on literal-free code lines plus brace depth. The cost
+//! is that the checkers see lines, not items — documented per rule where
+//! it matters.
+
+/// One parsed source file.
+pub struct SourceFile {
+    /// Display path (as given by the caller, usually repo-relative).
+    pub path: String,
+    /// Original lines, for diagnostics.
+    pub raw: Vec<String>,
+    /// Code with comments removed and string/char literals blanked.
+    pub code: Vec<String>,
+    /// The comment text of each line (`//...` or the in-line part of a
+    /// block comment); empty when the line has none.
+    pub comments: Vec<String>,
+}
+
+impl SourceFile {
+    pub fn parse(path: String, text: &str) -> SourceFile {
+        let mut raw = Vec::new();
+        let mut code = Vec::new();
+        let mut comments = Vec::new();
+        let mut in_block = false;
+        for line in text.split('\n') {
+            let (c, com) = strip_line(line, &mut in_block);
+            raw.push(line.to_string());
+            code.push(c);
+            comments.push(com);
+        }
+        SourceFile {
+            path,
+            raw,
+            code,
+            comments,
+        }
+    }
+
+    /// Brace depth at the start of each line (index `len()` = end of file).
+    pub fn depths(&self) -> Vec<i32> {
+        let mut out = Vec::with_capacity(self.code.len() + 1);
+        let mut depth = 0i32;
+        for c in &self.code {
+            out.push(depth);
+            for ch in c.chars() {
+                match ch {
+                    '{' => depth += 1,
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+        }
+        out.push(depth);
+        out
+    }
+
+    /// For each line, the line number of the `fn` whose body encloses it
+    /// (None at module scope). Brace-tracked, so nested fns resolve to
+    /// the innermost one.
+    pub fn enclosing_fn(&self) -> Vec<Option<usize>> {
+        let mut stack: Vec<Option<usize>> = Vec::new();
+        let mut pending_fn: Option<usize> = None;
+        let mut out = Vec::with_capacity(self.code.len());
+        for (i, c) in self.code.iter().enumerate() {
+            if is_fn_decl(c) {
+                pending_fn = Some(i);
+            }
+            for ch in c.chars() {
+                match ch {
+                    '{' => {
+                        stack.push(pending_fn.take());
+                    }
+                    '}' => {
+                        stack.pop();
+                    }
+                    _ => {}
+                }
+            }
+            let mut enc = None;
+            for s in &stack {
+                if s.is_some() {
+                    enc = *s;
+                }
+            }
+            if enc.is_none() {
+                enc = pending_fn;
+            }
+            out.push(enc);
+        }
+        out
+    }
+}
+
+/// Does this code line declare a function (`fn name`)?
+fn is_fn_decl(code: &str) -> bool {
+    let mut rest = code;
+    while let Some(p) = rest.find("fn ") {
+        let before_ok = p == 0 || {
+            let b = rest.as_bytes()[p - 1];
+            !(b.is_ascii_alphanumeric() || b == b'_')
+        };
+        if before_ok {
+            let after = &rest[p + 3..];
+            if after
+                .trim_start()
+                .chars()
+                .next()
+                .map(|ch| ch.is_ascii_alphabetic() || ch == '_')
+                .unwrap_or(false)
+            {
+                return true;
+            }
+        }
+        rest = &rest[p + 3..];
+    }
+    false
+}
+
+/// Whether `word` occurs in `code` with identifier boundaries.
+pub fn contains_word(code: &str, word: &str) -> bool {
+    find_word(code, word, 0).is_some()
+}
+
+/// Find `word` in `code` at or after `from`, with identifier boundaries.
+pub fn find_word(code: &str, word: &str, from: usize) -> Option<usize> {
+    let bytes = code.as_bytes();
+    let mut start = from;
+    while let Some(p) = code[start..].find(word) {
+        let p = start + p;
+        let before_ok = p == 0 || {
+            let b = bytes[p - 1];
+            !(b.is_ascii_alphanumeric() || b == b'_')
+        };
+        let end = p + word.len();
+        let after_ok = end >= bytes.len() || {
+            let b = bytes[end];
+            !(b.is_ascii_alphanumeric() || b == b'_')
+        };
+        if before_ok && after_ok {
+            return Some(p);
+        }
+        start = p + 1;
+    }
+    None
+}
+
+/// Split one line into (code, comment), blanking string/char literals in
+/// the code half. `in_block` carries `/* ... */` state across lines.
+fn strip_line(line: &str, in_block: &mut bool) -> (String, String) {
+    let cs: Vec<char> = line.chars().collect();
+    let n = cs.len();
+    let mut out = String::new();
+    let mut comment = String::new();
+    let mut i = 0;
+    while i < n {
+        if *in_block {
+            // Look for the closing */ from here.
+            let mut close = None;
+            let mut j = i;
+            while j + 1 < n {
+                if cs[j] == '*' && cs[j + 1] == '/' {
+                    close = Some(j);
+                    break;
+                }
+                j += 1;
+            }
+            match close {
+                Some(j) => {
+                    i = j + 2;
+                    *in_block = false;
+                }
+                None => return (out, comment),
+            }
+            continue;
+        }
+        let c = cs[i];
+        if c == '/' && i + 1 < n && cs[i + 1] == '/' {
+            comment = cs[i..].iter().collect();
+            break;
+        }
+        if c == '/' && i + 1 < n && cs[i + 1] == '*' {
+            *in_block = true;
+            i += 2;
+            continue;
+        }
+        if c == '"' {
+            // String literal; honor escapes. (Raw strings r"..." lex the
+            // same way here because they contain no escapes we'd mangle;
+            // r#"..."# with embedded quotes is not used in this tree.)
+            i += 1;
+            while i < n {
+                if cs[i] == '\\' {
+                    i += 2;
+                    continue;
+                }
+                if cs[i] == '"' {
+                    break;
+                }
+                i += 1;
+            }
+            i += 1;
+            out.push_str("\"\"");
+            continue;
+        }
+        if c == '\'' {
+            // Char literal ('x', '\n') vs lifetime ('a). A closing quote
+            // within two chars means literal; otherwise keep as code.
+            if i + 2 < n && cs[i + 1] == '\\' && i + 3 < n && cs[i + 3] == '\'' {
+                out.push_str("' '");
+                i += 4;
+                continue;
+            }
+            if i + 2 < n && cs[i + 1] != '\\' && cs[i + 2] == '\'' {
+                out.push_str("' '");
+                i += 3;
+                continue;
+            }
+            out.push(c);
+            i += 1;
+            continue;
+        }
+        out.push(c);
+        i += 1;
+    }
+    (out, comment)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_line_comment() {
+        let f = SourceFile::parse("t.rs".into(), "let x = 1; // SAFETY: fine");
+        assert_eq!(f.code[0], "let x = 1; ");
+        assert!(f.comments[0].contains("SAFETY:"));
+    }
+
+    #[test]
+    fn blanks_strings_and_chars() {
+        let f = SourceFile::parse("t.rs".into(), "let s = \"unsafe // lie\"; let c = '\\n';");
+        assert!(!f.code[0].contains("unsafe"));
+        assert!(!f.code[0].contains("lie"));
+        assert_eq!(f.comments[0], "");
+    }
+
+    #[test]
+    fn keeps_lifetimes() {
+        let f = SourceFile::parse("t.rs".into(), "fn f<'a>(x: &'a u8) {}");
+        assert!(f.code[0].contains("'a"));
+    }
+
+    #[test]
+    fn block_comment_spans_lines() {
+        let f = SourceFile::parse("t.rs".into(), "a /* x\nstill comment\n*/ b");
+        assert_eq!(f.code[0], "a ");
+        assert_eq!(f.code[1], "");
+        assert_eq!(f.code[2].trim(), "b");
+    }
+
+    #[test]
+    fn depth_and_enclosing_fn() {
+        let src = "fn outer() {\n    let a = 1;\n}\nstatic X: u8 = 0;\n";
+        let f = SourceFile::parse("t.rs".into(), src);
+        let d = f.depths();
+        assert_eq!(&d[..4], &[0, 1, 0, 0]);
+        let e = f.enclosing_fn();
+        assert_eq!(e[1], Some(0));
+        assert_eq!(e[3], None);
+    }
+
+    #[test]
+    fn word_boundaries() {
+        assert!(contains_word("unsafe {", "unsafe"));
+        assert!(!contains_word("unsafe_fn()", "unsafe"));
+        assert!(contains_word("Ordering::Relaxed", "Relaxed"));
+        assert!(!contains_word("rdv_chunks", "rdv"));
+    }
+}

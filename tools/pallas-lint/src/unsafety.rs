@@ -1,0 +1,122 @@
+//! PL301: every `unsafe` site needs a `// SAFETY:` justification.
+//!
+//! Accepted forms, mirroring the tree's existing idiom:
+//!
+//! - trailing `// SAFETY: ...` on the `unsafe` line itself;
+//! - a comment block directly above, possibly covering a contiguous run
+//!   of `unsafe impl` lines and `#[...]` attributes (one justification
+//!   for a family of impls, as in `util/spsc.rs`);
+//! - for `unsafe fn` / `unsafe trait` declarations, a `# Safety` section
+//!   in the doc comment above (the caller-facing contract rustdoc
+//!   expects) counts as the justification.
+
+use crate::source::{contains_word, SourceFile};
+use crate::Diagnostic;
+
+pub fn check(file: &SourceFile, diags: &mut Vec<Diagnostic>) {
+    for i in 0..file.code.len() {
+        let code = &file.code[i];
+        if !contains_word(code, "unsafe") {
+            continue;
+        }
+        if justified(file, i) {
+            continue;
+        }
+        diags.push(Diagnostic {
+            code: "PL301",
+            path: file.path.clone(),
+            line: i + 1,
+            msg: format!(
+                "`unsafe` without a `// SAFETY:` justification: {}",
+                file.raw[i].trim()
+            ),
+        });
+    }
+}
+
+fn justified(file: &SourceFile, i: usize) -> bool {
+    if file.comments[i].contains("SAFETY:") {
+        return true;
+    }
+    let code = &file.code[i];
+    let is_decl = code.contains("unsafe fn") || code.contains("unsafe trait");
+    // Walk contiguous comment / attribute / `unsafe impl` lines upward.
+    let mut k = i;
+    while k > 0 {
+        k -= 1;
+        let ck = file.code[k].trim();
+        let has_comment = !file.comments[k].trim().is_empty();
+        if ck.is_empty() && has_comment {
+            if file.comments[k].contains("SAFETY:") {
+                return true;
+            }
+            if is_decl && file.comments[k].contains("# Safety") {
+                return true;
+            }
+            continue;
+        }
+        if ck.is_empty() || ck.starts_with("#[") || ck.starts_with("unsafe impl") {
+            continue;
+        }
+        break;
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diags_for(src: &str) -> Vec<Diagnostic> {
+        let f = SourceFile::parse("t.rs".into(), src);
+        let mut d = Vec::new();
+        check(&f, &mut d);
+        d
+    }
+
+    #[test]
+    fn flags_bare_unsafe_block() {
+        let d = diags_for("fn f(p: *mut u8) {\n    unsafe { *p = 0 };\n}\n");
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].code, "PL301");
+        assert_eq!(d[0].line, 2);
+    }
+
+    #[test]
+    fn accepts_trailing_and_preceding() {
+        let src = "\
+// SAFETY: exclusive access.
+unsafe { a() };
+unsafe { b() }; // SAFETY: ditto.
+";
+        assert!(diags_for(src).is_empty());
+    }
+
+    #[test]
+    fn one_comment_covers_impl_family() {
+        let src = "\
+// SAFETY: protocol documented in the module header.
+unsafe impl Send for X {}
+unsafe impl Sync for X {}
+";
+        assert!(diags_for(src).is_empty());
+    }
+
+    #[test]
+    fn doc_safety_section_covers_unsafe_fn() {
+        let src = "\
+/// Does a thing.
+///
+/// # Safety
+/// Caller must hold exclusion.
+pub unsafe fn with_unchecked() {}
+";
+        assert!(diags_for(src).is_empty());
+    }
+
+    #[test]
+    fn word_unsafe_in_string_or_comment_ignored() {
+        let src = "let s = \"unsafe\"; // mentions unsafe\n";
+        assert!(diags_for(src).is_empty());
+    }
+}

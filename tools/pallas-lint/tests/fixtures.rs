@@ -1,0 +1,155 @@
+//! Self-tests over the seeded fixture corpus: every rule family must
+//! fire with the right code on its bad fixture, and the clean fixture
+//! must produce zero findings with every checker enabled.
+
+use pallas_lint::manifest::Manifest;
+use pallas_lint::source::SourceFile;
+use pallas_lint::{atomics, counters, hotpath, locks, unsafety, Diagnostic};
+use std::path::Path;
+
+/// Manifest matching the fixture corpus (exercises the TOML parser on
+/// every section kind along the way).
+const FIXTURE_MANIFEST: &str = r#"
+[[lock]]
+name = "rank_global"
+rank = 10
+patterns = [".global.lock("]
+
+[[lock]]
+name = "service"
+rank = 90
+patterns = [".windows.lock(", ".handle.lock("]
+
+[atomics]
+scope = ["bad_atomics.rs", "clean.rs"]
+
+[[role]]
+name = "doorbell"
+load = ["Acquire"]
+store = []
+rmw = ["Release"]
+cas = []
+
+[[hotpath]]
+file = "bad_hotpath.rs"
+name = "Ring::push"
+
+[[hotpath]]
+file = "bad_hotpath.rs"
+name = "Ring::vanished"
+
+[[hotpath]]
+file = "clean.rs"
+name = "Door::pump"
+
+[counters]
+metrics_file = "src/metrics.rs"
+probes_file = "examples/perf_probes.rs"
+scan = "src"
+snapshot_only = []
+pairs = ["sends/recvs"]
+"#;
+
+fn manifest() -> Manifest {
+    Manifest::parse(FIXTURE_MANIFEST).expect("fixture manifest parses")
+}
+
+fn fixture(rel: &str) -> SourceFile {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures").join(rel);
+    let text = std::fs::read_to_string(&p).unwrap_or_else(|e| panic!("{}: {e}", p.display()));
+    SourceFile::parse(rel.to_string(), &text)
+}
+
+fn codes(diags: &[Diagnostic]) -> Vec<&'static str> {
+    diags.iter().map(|d| d.code).collect()
+}
+
+#[test]
+fn lock_order_fires() {
+    let f = fixture("bad_lock_order.rs");
+    let mut d = Vec::new();
+    locks::check(&f, &manifest(), &mut d);
+    assert_eq!(codes(&d), vec!["PL101", "PL101"], "{d:?}");
+    // The inversion and the equal-rank double leaf — and nothing from
+    // the two correctly ordered functions below them.
+    assert_eq!(d[0].line, 6);
+    assert_eq!(d[1].line, 12);
+}
+
+#[test]
+fn atomics_fire_with_right_codes() {
+    let f = fixture("bad_atomics.rs");
+    let mut d = Vec::new();
+    atomics::check(&f, &manifest(), &mut d);
+    d.sort_by_key(|x| x.line);
+    assert_eq!(codes(&d), vec!["PL201", "PL202", "PL203"], "{d:?}");
+    assert!(d[0].msg.contains("Relaxed"), "{}", d[0].msg);
+    assert!(d[2].msg.contains("mystery"), "{}", d[2].msg);
+}
+
+#[test]
+fn unsafe_fires_once() {
+    let f = fixture("bad_unsafe.rs");
+    let mut d = Vec::new();
+    unsafety::check(&f, &mut d);
+    assert_eq!(codes(&d), vec!["PL301"], "{d:?}");
+    assert_eq!(d[0].line, 4, "justified() must not be flagged: {d:?}");
+}
+
+#[test]
+fn hotpath_fires_and_flags_stale_entry() {
+    let files = vec![fixture("bad_hotpath.rs"), fixture("clean.rs")];
+    let mut d = Vec::new();
+    hotpath::check(&files, &manifest(), &mut d);
+    d.sort_by_key(|x| x.code);
+    assert_eq!(codes(&d), vec!["PL401", "PL402"], "{d:?}");
+    assert!(d[0].msg.contains("Vec::new"), "{}", d[0].msg);
+    assert!(d[1].msg.contains("vanished"), "{}", d[1].msg);
+}
+
+#[test]
+fn counters_fire_across_all_five_codes() {
+    let metrics = fixture("bad_counters/src/metrics.rs");
+    let probes = std::fs::read_to_string(
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures/bad_counters/examples/perf_probes.rs"),
+    )
+    .unwrap();
+    let scan = vec![fixture("bad_counters/src/metrics.rs")];
+    let mut d = Vec::new();
+    counters::check(&metrics, Some(&probes), &scan, &manifest(), &mut d);
+    let mut got = codes(&d);
+    got.sort();
+    assert_eq!(
+        got,
+        vec!["PL501", "PL502", "PL502", "PL502", "PL503", "PL504", "PL505", "PL505"],
+        "{d:?}"
+    );
+    assert!(d.iter().any(|x| x.code == "PL501" && x.msg.contains("orphan")));
+    assert!(d.iter().any(|x| x.code == "PL503" && x.msg.contains("ghost")));
+    assert!(d.iter().any(|x| x.code == "PL504" && x.msg.contains("recvs")));
+}
+
+#[test]
+fn clean_fixture_is_clean_under_every_checker() {
+    let m = manifest();
+    let f = fixture("clean.rs");
+    let mut d = Vec::new();
+    locks::check(&f, &m, &mut d);
+    unsafety::check(&f, &mut d);
+    atomics::check(&f, &m, &mut d);
+    let files = vec![fixture("clean.rs")];
+    let mut hp = m.clone();
+    hp.hotpath.retain(|h| h.file == "clean.rs");
+    hotpath::check(&files, &hp, &mut d);
+    assert!(d.is_empty(), "clean fixture produced findings: {d:?}");
+}
+
+#[test]
+fn real_manifest_parses_and_is_nontrivial() {
+    let m = Manifest::load(&Path::new(env!("CARGO_MANIFEST_DIR")).join("lock_order.toml"))
+        .expect("repo manifest parses");
+    assert_eq!(m.locks.len(), 5);
+    assert_eq!(m.roles.len(), 9);
+    assert!(m.hotpath.len() >= 15, "hotpath list shrank: {}", m.hotpath.len());
+    assert!(m.atomics_scope.iter().any(|s| s == "rust/src/util/spsc.rs"));
+}

@@ -1,0 +1,18 @@
+//! The gate itself: the whole rust_pallas tree must be at zero findings
+//! with zero suppressions. A failure here is a real contract violation
+//! (or a manifest that needs a justified update) — fix the code or the
+//! manifest, never this test.
+
+use std::path::Path;
+
+#[test]
+fn whole_tree_is_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../..");
+    let diags = pallas_lint::run_with_default_manifest(&root).expect("analyzer runs");
+    if !diags.is_empty() {
+        for d in &diags {
+            eprintln!("{d}");
+        }
+        panic!("{} finding(s) on the tree — see stderr", diags.len());
+    }
+}
