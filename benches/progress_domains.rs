@@ -1,0 +1,134 @@
+//! Progress-domain sweep (§12): message rate when completion is driven
+//! entirely by per-domain progress engines, domains ∈ {1, 2, 4, 8}.
+//!
+//! Setup: 2 ranks, 8 shared VCIs each, 4 communicating thread pairs on
+//! dup'd communicators (contexts implicitly hashed across the VCIs).
+//! Application threads post windows of `Irecv`/`Isend` and then *spin
+//! without polling* (`test_no_progress`), so every completion must come
+//! from one of the rank's domain engines — started one thread per
+//! domain with the per-domain `MPIX_Start_progress_thread` variant.
+//!
+//! With 1 domain a single engine drains all 9 slots; with 8, eight
+//! engines own ~1 VCI each and steal across the partition when idle.
+//! The sweep exposes the contention/parallelism trade the partition is
+//! for, plus the steal and contended-claim tallies at each point.
+//! Absolute rates are testbed-scaled (2 cores — domain counts beyond
+//! the core count oversubscribe; see EXPERIMENTS.md).
+//!
+//! Run: `cargo bench --offline --bench progress_domains`
+//!
+//! Each run is appended to `BENCH_domains.json` at the repo root (see
+//! README §Benches for the format).
+
+use mpix::progress::{start_domain_progress_thread, stop_domain_progress_thread};
+use mpix::universe::Universe;
+use mpix::util::json::Json;
+use mpix::util::stats::{fmt_rate, record_bench_run, unix_now};
+use std::time::Instant;
+
+const MSG: usize = 8;
+const WINDOW: usize = 32;
+const ROUNDS: usize = 30;
+const PAIRS: usize = 4;
+const N_SHARED: usize = 8;
+
+/// Total messages/second across all thread pairs, plus the steal and
+/// contended-claim counts the run produced.
+fn run(domains: usize) -> (f64, u64, u64) {
+    let fabric = Universe::builder()
+        .ranks(2)
+        .shared_endpoints(N_SHARED)
+        .progress_domains(domains)
+        .fabric();
+    let before = fabric.metrics.snapshot();
+    let rates = Universe::run_on(&fabric, &|world| {
+        let comms: Vec<mpix::Comm> = (0..PAIRS).map(|_| world.dup()).collect();
+        let me = world.my_world_rank();
+        let peer = 1 - world.rank();
+        for d in 0..domains as u32 {
+            start_domain_progress_thread(world.fabric(), me, d);
+        }
+        mpix::coll::barrier(&world).unwrap();
+
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for comm in &comms {
+                s.spawn(move || {
+                    let sendbuf = [0u8; MSG];
+                    let mut recvbufs = vec![[0u8; MSG]; WINDOW];
+                    for _ in 0..ROUNDS {
+                        let mut reqs = Vec::with_capacity(2 * WINDOW);
+                        for rb in recvbufs.iter_mut() {
+                            reqs.push(comm.irecv(rb, peer as i32, 0).unwrap());
+                        }
+                        for _ in 0..WINDOW {
+                            reqs.push(comm.isend(&sendbuf, peer, 0).unwrap());
+                        }
+                        // Completion comes from the domain engines only:
+                        // check without driving progress, then reap.
+                        for req in &reqs {
+                            while !req.test_no_progress() {
+                                std::hint::spin_loop();
+                            }
+                        }
+                        for req in reqs {
+                            req.wait().unwrap();
+                        }
+                    }
+                });
+            }
+        });
+        let dt = t0.elapsed().as_secs_f64();
+        mpix::coll::barrier(&world).unwrap();
+        for d in 0..domains as u32 {
+            stop_domain_progress_thread(world.fabric(), me, d);
+        }
+        (PAIRS * WINDOW * ROUNDS) as f64 / dt
+    });
+    let d = fabric.metrics.snapshot().since(&before);
+    (rates.iter().sum::<f64>(), d.progress_steals, d.domain_contended)
+}
+
+fn main() {
+    // Oversubscribed testbed: polite waiters (see fig4_message_rate).
+    std::env::set_var("MPIX_SPIN", "64");
+    println!("§12 — engine-driven message rate vs progress-domain count");
+    println!(
+        "{:>8} {:>14} {:>10} {:>10}",
+        "domains", "rate", "steals", "contended"
+    );
+    let domain_counts = [1usize, 2, 4, 8];
+    let mut col_rate = Vec::new();
+    let mut col_steal = Vec::new();
+    let mut col_cont = Vec::new();
+    for &n in &domain_counts {
+        // Best-of-3 on rate; counters reported from the best run.
+        let (mut best, mut steals, mut cont) = (0f64, 0u64, 0u64);
+        for _ in 0..3 {
+            let (r, s, c) = run(n);
+            if r > best {
+                (best, steals, cont) = (r, s, c);
+            }
+        }
+        println!("{:>8} {:>14} {:>10} {:>10}", n, fmt_rate(best), steals, cont);
+        col_rate.push(best);
+        col_steal.push(steals as f64);
+        col_cont.push(cont as f64);
+    }
+
+    record_bench_run(
+        "domains",
+        "§12 progress domains",
+        "total messages/sec across thread pairs, engine-driven completion",
+        Json::obj([
+            ("unix_time", Json::Num(unix_now())),
+            ("msg_bytes", Json::Num(MSG as f64)),
+            ("pairs", Json::Num(PAIRS as f64)),
+            ("n_shared", Json::Num(N_SHARED as f64)),
+            ("domains", Json::nums(domain_counts.iter().map(|&n| n as f64))),
+            ("rate", Json::nums(col_rate)),
+            ("steals", Json::nums(col_steal)),
+            ("contended", Json::nums(col_cont)),
+        ]),
+    );
+}

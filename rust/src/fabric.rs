@@ -60,6 +60,13 @@ pub struct FabricConfig {
     pub max_streams: usize,
     /// Locking regime for shared endpoints.
     pub lock_mode: LockMode,
+    /// Progress domains per rank (see [`crate::progress::domain`]): the
+    /// shared VCIs + rank-level services partition into this many
+    /// independently-pollable engines. `Default` resolves
+    /// `MPIX_PROGRESS_DOMAINS` through the hint registry; 1 (the
+    /// fallback) is the classic single-engine walk. Clamped per rank to
+    /// `n_shared` by [`crate::progress::DomainSet::new`].
+    pub progress_domains: usize,
     /// Largest message copied eagerly (heap cell); above this the
     /// rendezvous protocol engages.
     pub eager_max: usize,
@@ -95,6 +102,7 @@ impl Default for FabricConfig {
             n_shared: 8,
             max_streams: 24,
             lock_mode: LockMode::PerVci,
+            progress_domains: crate::progress::domains_from_env(),
             eager_max: 64 * 1024,
             chunk_size: 64 * 1024,
             channel_cap: 256,
@@ -423,6 +431,11 @@ pub struct Endpoint {
     /// endpoints bump it uncontended, shared endpoints under their own
     /// exclusion. [`Fabric::snapshot`] aggregates.
     pub refresh_skips: AtomicU64,
+    /// Debug-only double-poll detector for the progress-domain claim
+    /// protocol: `domain + 1` while a domain-attributed poll is inside
+    /// the drain, 0 otherwise (see `debug_tag_enter` in
+    /// [`crate::progress`]). Release builds never touch it.
+    pub poll_owner: AtomicU32,
 }
 
 impl Endpoint {
@@ -433,6 +446,7 @@ impl Endpoint {
             state: HybridLock::new(EpState::new()),
             inboxes: InboxRegistry::new(shards),
             refresh_skips: AtomicU64::new(0),
+            poll_owner: AtomicU32::new(0),
         }
     }
 }
@@ -459,10 +473,14 @@ pub struct RankState {
     pub win_origins: Mutex<HashMap<u32, Arc<crate::rma::OriginState>>>,
     /// Default progress-thread control (paper extension 6).
     pub progress_ctl: Arc<crate::progress::ProgressCtl>,
+    /// Progress-domain partition of this rank's shared VCIs + services
+    /// slot: claim words, pass tallies, and per-domain thread controls
+    /// (see [`crate::progress::domain`]).
+    pub domains: crate::progress::DomainSet,
 }
 
 impl RankState {
-    fn new(n_shared: usize, max_streams: usize) -> Self {
+    fn new(n_shared: usize, max_streams: usize, progress_domains: usize) -> Self {
         let free = ((n_shared as u16)..(n_shared + max_streams) as u16)
             .rev()
             .collect();
@@ -474,6 +492,7 @@ impl RankState {
             windows: Mutex::new(HashMap::new()),
             win_origins: Mutex::new(HashMap::new()),
             progress_ctl: Arc::new(crate::progress::ProgressCtl::new()),
+            domains: crate::progress::DomainSet::new(progress_domains, n_shared),
         }
     }
 }
@@ -552,7 +571,7 @@ impl Fabric {
             })
             .collect();
         let ranks = (0..cfg.nranks)
-            .map(|_| RankState::new(cfg.n_shared, cfg.max_streams))
+            .map(|_| RankState::new(cfg.n_shared, cfg.max_streams, cfg.progress_domains))
             .collect();
         Ok(Arc::new(Fabric {
             cfg,
@@ -610,6 +629,7 @@ impl Fabric {
             .flatten()
             .map(|e| e.refresh_skips.load(Ordering::Relaxed)) // lint: atomic(counter)
             .sum();
+        s.domain_polls = self.ranks.iter().map(|r| r.domains.polls_total()).sum();
         s
     }
 

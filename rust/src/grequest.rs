@@ -76,17 +76,22 @@ pub fn grequest_start_try(
     )
 }
 
-/// Invoked by the progress engine (general progress): poll every pending
-/// generalized request of the rank, completing those whose tasks are
-/// done.
-pub fn poll_rank(fabric: &Arc<Fabric>, rank: u32) {
+/// Invoked by the progress engine: poll every pending generalized
+/// request of the rank, completing those whose tasks are done. Returns
+/// whether any entries were pending (the domain pass's activity signal).
+///
+/// Grequest polling is the progress-domain **services slot**: home to
+/// domain 0 and excluded from work stealing, so poll callbacks run in
+/// exactly one domain's pass at a time — a `poll_fn` never observes two
+/// concurrent invocations just because the rank has N domains.
+pub fn poll_rank(fabric: &Arc<Fabric>, rank: u32) -> bool {
     let slot = &fabric.ranks[rank as usize].grequests;
     // Swap the list out so poll callbacks can start new grequests without
     // deadlocking on the registry lock.
     let mut entries = {
         let mut g = slot.lock().unwrap();
         if g.is_empty() {
-            return;
+            return false;
         }
         std::mem::take(&mut *g)
     };
@@ -108,6 +113,7 @@ pub fn poll_rank(fabric: &Arc<Fabric>, rank: u32) {
         }
     });
     slot.lock().unwrap().extend(entries.drain(..));
+    true
 }
 
 /// Batched-wait optimization used by [`crate::request::waitall`]: for any

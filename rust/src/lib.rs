@@ -26,7 +26,7 @@
 //! |---|---|
 //! | Launcher: N ranks as threads over one fabric | [`universe`] |
 //! | API surface: communicators, requests, collectives, RMA, two-phase IO | [`comm`], [`request`], [`coll`], [`rma`], [`io`], [`datatype`], [`info`] |
-//! | Paper extensions | [`grequest`] (1), [`datatype`] (2), [`stream`] (3), [`enqueue`] + [`offload`] (4), [`threadcomm`] (5), [`progress`] (6) |
+//! | Paper extensions | [`grequest`] (1), [`datatype`] (2), [`stream`] (3), [`enqueue`] + [`offload`] (4), [`threadcomm`] (5), [`progress`] (6) — partitionable into parallel work-stealing progress domains ([`progress::domain`]) |
 //! | Transport: endpoints/VCIs, channels, matching | [`fabric`], [`matching`] |
 //! | Netmods: pluggable transports (inproc / shm / tcp) | [`netmod`] |
 //! | Substrate: SPSC ring, chunk pool, hint registry, counters | [`util::spsc`], [`util::pool`], [`util::hints`], [`metrics`] |

@@ -28,6 +28,13 @@ pub struct Metrics {
     pub unexpected_hits: AtomicU64,
     /// Progress-engine poll invocations.
     pub progress_polls: AtomicU64,
+    /// VCIs stolen (claimed, drained, and handed back) by an idle
+    /// progress domain from another domain's partition.
+    pub progress_steals: AtomicU64,
+    /// Domain claim attempts that lost the CAS — another domain was
+    /// inside the slot. The contention-free claim under test: stays 0
+    /// when each domain is driven by one thread and nobody steals.
+    pub domain_contended: AtomicU64,
     /// Generalized-request poll callbacks invoked.
     pub grequest_polls: AtomicU64,
     /// RMA target-side operations serviced.
@@ -106,6 +113,11 @@ impl Metrics {
             expected_hits: self.expected_hits.load(Relaxed),
             unexpected_hits: self.unexpected_hits.load(Relaxed),
             progress_polls: self.progress_polls.load(Relaxed),
+            progress_steals: self.progress_steals.load(Relaxed),
+            domain_contended: self.domain_contended.load(Relaxed),
+            // Counted per domain to keep the pass tally off this struct's
+            // shared cache line; `Fabric::snapshot` fills it.
+            domain_polls: 0,
             grequest_polls: self.grequest_polls.load(Relaxed),
             rma_serviced: self.rma_serviced.load(Relaxed),
             offload_ops: self.offload_ops.load(Relaxed),
@@ -147,6 +159,12 @@ pub struct MetricsSnapshot {
     pub expected_hits: u64,
     pub unexpected_hits: u64,
     pub progress_polls: u64,
+    pub progress_steals: u64,
+    pub domain_contended: u64,
+    /// Progress-domain passes run (all domains of all ranks). Tallied per
+    /// domain — `crate::fabric::Fabric::snapshot` fills it in; a bare
+    /// `Metrics::snapshot` reports 0. Diff snapshots from the same source.
+    pub domain_polls: u64,
     pub grequest_polls: u64,
     pub rma_serviced: u64,
     pub offload_ops: u64,
@@ -184,7 +202,7 @@ impl MetricsSnapshot {
     /// cross-checks the name table against the `Metrics` struct — together
     /// they keep reporting tools (`perf_probes`) from silently dropping
     /// counters.
-    pub fn named_fields(&self) -> [(&'static str, u64); 31] {
+    pub fn named_fields(&self) -> [(&'static str, u64); 34] {
         let MetricsSnapshot {
             eager_inline,
             eager_heap,
@@ -197,6 +215,9 @@ impl MetricsSnapshot {
             expected_hits,
             unexpected_hits,
             progress_polls,
+            progress_steals,
+            domain_contended,
+            domain_polls,
             grequest_polls,
             rma_serviced,
             offload_ops,
@@ -230,6 +251,9 @@ impl MetricsSnapshot {
             ("expected_hits", expected_hits),
             ("unexpected_hits", unexpected_hits),
             ("progress_polls", progress_polls),
+            ("progress_steals", progress_steals),
+            ("domain_contended", domain_contended),
+            ("domain_polls", domain_polls),
             ("grequest_polls", grequest_polls),
             ("rma_serviced", rma_serviced),
             ("offload_ops", offload_ops),
@@ -267,6 +291,9 @@ impl MetricsSnapshot {
             expected_hits: self.expected_hits - earlier.expected_hits,
             unexpected_hits: self.unexpected_hits - earlier.unexpected_hits,
             progress_polls: self.progress_polls - earlier.progress_polls,
+            progress_steals: self.progress_steals - earlier.progress_steals,
+            domain_contended: self.domain_contended - earlier.domain_contended,
+            domain_polls: self.domain_polls - earlier.domain_polls,
             grequest_polls: self.grequest_polls - earlier.grequest_polls,
             rma_serviced: self.rma_serviced - earlier.rma_serviced,
             offload_ops: self.offload_ops - earlier.offload_ops,
@@ -318,7 +345,7 @@ mod tests {
         let s = m.snapshot();
         let rows = s.named_fields();
         // One row per snapshot field, values matching the struct.
-        assert_eq!(rows.len(), 31);
+        assert_eq!(rows.len(), 34);
         assert_eq!(
             rows.iter().find(|(n, _)| *n == "netmod_bytes_rx"),
             Some(&("netmod_bytes_rx", 9))
@@ -327,6 +354,6 @@ mod tests {
         let mut names: Vec<_> = rows.iter().map(|(n, _)| *n).collect();
         names.sort_unstable();
         names.dedup();
-        assert_eq!(names.len(), 31);
+        assert_eq!(names.len(), 34);
     }
 }

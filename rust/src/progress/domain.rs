@@ -1,0 +1,288 @@
+//! Progress domains: contention-free partitions of one rank's progress
+//! work ("MPI Progress For All", arXiv 2405.13807).
+//!
+//! A rank's progress work is `n_shared` shared VCIs plus one rank-level
+//! **services slot** (grequest `poll_fn`s; the RMA target service rides
+//! the VCIs themselves, since RMA ops arrive as endpoint control
+//! traffic). A [`DomainSet`] partitions those `n_shared + 1` slots over
+//! `n_domains` domains: slot `s` is *home* to domain `s % n_domains`,
+//! and the services slot is home to domain 0 — so exactly one domain
+//! services grequests per pass, and `Shared`-scope waiters (which drive
+//! domain 0) always reach them.
+//!
+//! ## The claim protocol
+//!
+//! Each slot has one atomic claim word, `owner << 1 | busy`:
+//!
+//! * **poll** — the owner CAS-es `owner<<1 → owner<<1|1`, drains the
+//!   VCI, then stores `owner<<1`. A failed CAS means another domain is
+//!   inside the slot (counted in `domain_contended`) and the poller
+//!   skips it — safe, because whoever holds the busy bit is draining
+//!   that same VCI right now and wait loops re-poll.
+//! * **steal** — an idle domain CAS-es `victim<<1 → thief<<1|1` (claim
+//!   and busy in one shot, so the victim cannot slip in between), drains
+//!   the VCI, then stores `home<<1`: exact ownership handback.
+//!
+//! The busy bit is what makes domain pollers mutually exclusive per VCI
+//! without touching the endpoint lock; in `PerVci` mode a domain
+//! therefore owns its VCI subset contention-free. Direct polls outside
+//! the partition (stream endpoints, threadcomm routes, explicit
+//! `poll_endpoint` calls) still serialize on the endpoint lock as
+//! before. Orderings: the successful CAS/swap is AcqRel (acquire the
+//! previous holder's drain, publish ours), the handback store is
+//! Release, owner reads are Acquire — manifest role `domain_claim`.
+//!
+//! Domain count comes from [`crate::universe::UniverseBuilder::progress_domains`]
+//! or the `MPIX_PROGRESS_DOMAINS` hint ([`PROGRESS_DOMAIN_KEYS`]); the
+//! default of 1 reproduces the single-engine behavior exactly (every
+//! slot home to domain 0, no steal sweep compiled into the pass).
+
+use super::{ProgressCtl, PROGRESS_BUSY, PROGRESS_EXIT, PROGRESS_IDLE};
+use crate::fabric::Fabric;
+use crate::metrics::Metrics;
+use crate::util::cache_padded::CachePadded;
+use crate::util::hints::{parse_u64, HintKey, HintRegistry};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// `MPIX_PROGRESS_DOMAINS` hint key (one slot; the encoded value is the
+/// requested domain count, ≥ 1).
+pub static PROGRESS_DOMAIN_KEYS: [HintKey; 1] = [HintKey {
+    info: "mpix_progress_domains",
+    env: "MPIX_PROGRESS_DOMAINS",
+    parse: parse_domains_hint,
+}];
+
+fn parse_domains_hint(s: &str) -> Option<u64> {
+    parse_u64(s).filter(|&v| v >= 1)
+}
+
+/// Resolve the domain count from the environment (read once; unset or
+/// invalid values fall back to 1 — the single-engine default). Called by
+/// `FabricConfig::default()`.
+pub fn domains_from_env() -> usize {
+    HintRegistry::from_env(&PROGRESS_DOMAIN_KEYS)
+        .get(0)
+        .map(|v| v as usize)
+        .unwrap_or(1)
+}
+
+/// A domain steals even when its own slots are busy every this-many
+/// passes — the starvation bound that keeps a foreign VCI's traffic
+/// moving when no thread ever drives its home domain.
+pub const STEAL_PERIOD: u64 = 8;
+
+/// One rank's progress-domain partition: claim words and per-domain
+/// pass tallies for the `n_shared + 1` slots, plus one [`ProgressCtl`]
+/// per domain for the per-domain progress-thread variant.
+pub struct DomainSet {
+    n_domains: u32,
+    n_shared: usize,
+    /// Per-slot claim word, `owner << 1 | busy` (see module docs).
+    claims: Box<[CachePadded<AtomicU32>]>,
+    /// Per-domain pass tallies, aggregated into the `domain_polls`
+    /// snapshot field by [`Fabric::snapshot`] (kept off the shared
+    /// [`Metrics`] cache line like `Endpoint::refresh_skips`).
+    polls: Box<[CachePadded<AtomicU64>]>,
+    /// Per-domain progress-thread control blocks.
+    ctls: Box<[Arc<ProgressCtl>]>,
+}
+
+impl DomainSet {
+    /// Build the partition. The domain count is clamped to
+    /// `1..=max(1, n_shared)`: more domains than VCIs would leave some
+    /// permanently idle (and stealing from nothing).
+    pub fn new(n_domains: usize, n_shared: usize) -> Self {
+        let n = n_domains.clamp(1, n_shared.max(1)) as u32;
+        let slots = n_shared + 1;
+        let home = |s: usize| -> u32 {
+            if s == n_shared {
+                0
+            } else {
+                (s as u32) % n
+            }
+        };
+        Self {
+            n_domains: n,
+            n_shared,
+            claims: (0..slots)
+                .map(|s| CachePadded::new(AtomicU32::new(home(s) << 1)))
+                .collect(),
+            polls: (0..n as usize)
+                .map(|_| CachePadded::new(AtomicU64::new(0)))
+                .collect(),
+            ctls: (0..n as usize).map(|_| Arc::new(ProgressCtl::new())).collect(),
+        }
+    }
+
+    pub fn n_domains(&self) -> u32 {
+        self.n_domains
+    }
+
+    /// Claimable slots: the shared VCIs plus the services slot.
+    pub fn slots(&self) -> usize {
+        self.n_shared + 1
+    }
+
+    /// The rank-level services slot (grequest polling). Home to domain 0
+    /// and never stolen — exactly one domain services grequests per
+    /// pass, and `Shared`-scope waiters always reach them.
+    pub fn services_slot(&self) -> usize {
+        self.n_shared
+    }
+
+    /// Home domain of a slot (where ownership returns after a steal).
+    pub fn home(&self, slot: usize) -> u32 {
+        if slot == self.n_shared {
+            0
+        } else {
+            (slot as u32) % self.n_domains
+        }
+    }
+
+    /// Current owner of a slot (racy by nature; exact between passes).
+    // lint: atomic(domain_claim)
+    pub fn owner(&self, slot: usize) -> u32 {
+        self.claims[slot].load(Ordering::Acquire) >> 1
+    }
+
+    /// Whether a domain is inside the slot right now (test observability).
+    // lint: atomic(domain_claim)
+    pub fn is_busy(&self, slot: usize) -> bool {
+        self.claims[slot].load(Ordering::Acquire) & 1 == 1
+    }
+
+    /// Enter a slot as its owner. `false` means another domain holds the
+    /// busy bit (or ownership moved) — skip, don't block.
+    // lint: atomic(domain_claim)
+    pub fn begin_poll(&self, slot: usize, d: u32) -> bool {
+        self.claims[slot]
+            .compare_exchange(d << 1, (d << 1) | 1, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+    }
+
+    /// Leave a slot entered via [`DomainSet::begin_poll`].
+    // lint: atomic(domain_claim)
+    pub fn end_poll(&self, slot: usize, d: u32) {
+        self.claims[slot].store(d << 1, Ordering::Release);
+    }
+
+    /// Claim a foreign, unclaimed slot: ownership and busy bit move to
+    /// `thief` in one CAS. `false` when the slot is busy, already ours,
+    /// or ownership moved under us.
+    // lint: atomic(domain_claim)
+    pub fn try_steal(&self, slot: usize, thief: u32) -> bool {
+        let w = self.claims[slot].load(Ordering::Acquire);
+        if w & 1 == 1 || w >> 1 == thief {
+            return false;
+        }
+        self.claims[slot]
+            .compare_exchange(w, (thief << 1) | 1, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+    }
+
+    /// Hand a stolen slot back to `owner` (its home domain), clearing
+    /// the busy bit.
+    // lint: atomic(domain_claim)
+    pub fn release_to(&self, slot: usize, owner: u32) {
+        self.claims[slot].store(owner << 1, Ordering::Release);
+    }
+
+    /// Count one pass for `d`; returns the pass number (prior count).
+    // lint: atomic(counter)
+    pub fn note_poll(&self, d: u32) -> u64 {
+        self.polls[d as usize].fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Passes run by domain `d`.
+    // lint: atomic(counter)
+    pub fn polls(&self, d: u32) -> u64 {
+        self.polls[d as usize].load(Ordering::Relaxed)
+    }
+
+    /// Passes run by all domains of this rank (the `domain_polls`
+    /// snapshot aggregation).
+    pub fn polls_total(&self) -> u64 {
+        (0..self.n_domains).map(|d| self.polls(d)).sum()
+    }
+
+    /// Progress-thread control block of domain `d`.
+    pub fn ctl(&self, d: u32) -> &Arc<ProgressCtl> {
+        &self.ctls[d as usize]
+    }
+}
+
+/// One progress pass for `domain` of `rank`: poll every slot the domain
+/// is home to, then — when its own slots were all idle, or every
+/// [`STEAL_PERIOD`]th pass regardless — sweep foreign VCIs for work to
+/// steal. Domain 0's pass is exactly [`super::general_progress`].
+pub fn domain_progress(fabric: &Arc<Fabric>, rank: u32, domain: u32) {
+    Metrics::bump(&fabric.metrics.progress_polls);
+    let ds = &fabric.ranks[rank as usize].domains;
+    let domain = domain.min(ds.n_domains() - 1);
+    let pass = ds.note_poll(domain);
+    let mut active = false;
+    for slot in 0..ds.slots() {
+        if ds.home(slot) == domain {
+            active |= poll_slot(fabric, rank, ds, slot, domain);
+        }
+    }
+    if ds.n_domains() > 1 && (!active || pass % STEAL_PERIOD == 0) {
+        super::steal::steal_sweep(fabric, rank, ds, domain);
+    }
+}
+
+/// Poll one home slot under the claim protocol. Returns whether the
+/// slot had work (transport-active VCI, or a serviced grequest).
+fn poll_slot(fabric: &Arc<Fabric>, rank: u32, ds: &DomainSet, slot: usize, domain: u32) -> bool {
+    if !ds.begin_poll(slot, domain) {
+        Metrics::bump(&fabric.metrics.domain_contended);
+        return false;
+    }
+    let active = if slot == ds.services_slot() {
+        crate::grequest::poll_rank(fabric, rank)
+    } else {
+        super::poll_endpoint_as(fabric, rank, slot as u16, Some(domain))
+    };
+    ds.end_poll(slot, domain);
+    active
+}
+
+/// Per-domain `MPIX_Start_progress_thread` variant: spawn a progress
+/// thread driving exactly one domain's pass, with the paper's
+/// idle/busy/exit control on that domain's [`ProgressCtl`]. One thread
+/// per domain is the "N cores driving N domains" configuration.
+///
+/// Same restart discipline as [`super::start_progress_thread`]: a
+/// running thread for this domain is stopped and joined first, under the
+/// handle lock, so racing starts cannot leak a detached poll loop.
+pub fn start_domain_progress_thread(fabric: &Arc<Fabric>, rank: u32, domain: u32) {
+    let ctl = Arc::clone(fabric.ranks[rank as usize].domains.ctl(domain));
+    let mut slot = ctl.handle.lock().unwrap();
+    if let Some(h) = slot.take() {
+        ctl.state.store(PROGRESS_EXIT, Ordering::Release); // lint: atomic(progress_state)
+        let _ = h.join();
+    }
+    let f = Arc::clone(fabric);
+    ctl.set_busy();
+    let ctl2 = Arc::clone(&ctl);
+    let h = std::thread::spawn(move || loop {
+        match ctl2.state() {
+            PROGRESS_BUSY => domain_progress(&f, rank, domain),
+            PROGRESS_IDLE => std::thread::sleep(std::time::Duration::from_millis(1)),
+            _ => break,
+        }
+    });
+    *slot = Some(h);
+}
+
+/// Stop (and join) the progress thread of one domain.
+pub fn stop_domain_progress_thread(fabric: &Arc<Fabric>, rank: u32, domain: u32) {
+    let ctl = fabric.ranks[rank as usize].domains.ctl(domain);
+    let mut slot = ctl.handle.lock().unwrap();
+    ctl.state.store(PROGRESS_EXIT, Ordering::Release); // lint: atomic(progress_state)
+    if let Some(h) = slot.take() {
+        let _ = h.join();
+    }
+    ctl.state.store(PROGRESS_IDLE, Ordering::Release); // lint: atomic(progress_state)
+}

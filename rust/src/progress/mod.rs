@@ -10,6 +10,24 @@
 //! thread of `MPIX_Start_progress_thread` ≙ [`ProgressCtl`] +
 //! [`start_progress_thread`], with the paper's idle/busy/exit spin-up /
 //! spin-down control exposed directly.
+//!
+//! Since the progress-domain split ("MPI Progress For All"), the engine
+//! is no longer one engine: each rank's shared VCIs plus its rank-level
+//! services partition into [`domain::DomainSet`] progress domains
+//! ([`domain`]), each polled contention-free by its own driver, with
+//! idle domains work-stealing whole VCIs from busy ones ([`steal`]).
+//! [`general_progress`] is domain 0's pass — the default domain keeps
+//! pre-domain semantics, so every existing call site is unchanged.
+
+pub mod domain;
+pub(crate) mod steal;
+#[cfg(test)]
+mod tests;
+
+pub use domain::{
+    domains_from_env, start_domain_progress_thread, stop_domain_progress_thread, DomainSet,
+    PROGRESS_DOMAIN_KEYS,
+};
 
 use crate::fabric::{
     Channel, Endpoint, Envelope, EpKind, EpState, Fabric, Header, LockMode, Payload, RecvPtr,
@@ -51,6 +69,7 @@ pub struct RecvXfer {
 pub fn poll_scope(fabric: &Arc<Fabric>, rank: u32, scope: &ProgressScope) {
     match scope {
         ProgressScope::Shared => general_progress(fabric, rank),
+        ProgressScope::Domain(d) => domain::domain_progress(fabric, rank, *d),
         ProgressScope::Stream(vci) => {
             poll_endpoint(fabric, rank, *vci);
         }
@@ -66,12 +85,15 @@ pub fn poll_scope(fabric: &Arc<Fabric>, rank: u32, scope: &ProgressScope) {
 
 /// `MPIX_Stream_progress(MPIX_STREAM_NULL)`: progress all shared
 /// endpoints of the rank plus rank-level services (grequests).
+///
+/// Post-domain-split this is domain 0's pass. With one domain (the
+/// default) domain 0 owns every shared VCI plus the services slot and no
+/// steal sweep runs, so the behavior is exactly the pre-domain walk;
+/// with more domains, blocked `Shared`-scope waiters still complete
+/// because domain 0 periodically steals foreign VCIs (see
+/// [`steal::steal_sweep`]).
 pub fn general_progress(fabric: &Arc<Fabric>, rank: u32) {
-    Metrics::bump(&fabric.metrics.progress_polls);
-    for vci in 0..fabric.cfg.n_shared as u16 {
-        poll_endpoint(fabric, rank, vci);
-    }
-    crate::grequest::poll_rank(fabric, rank);
+    domain::domain_progress(fabric, rank, 0);
 }
 
 /// `MPIX_Stream_progress(stream)`: progress one stream-owned endpoint.
@@ -117,26 +139,48 @@ pub fn with_ep<R>(
 /// itself contains no dynamic dispatch (ch4's compile-time netmod
 /// binding, as an enum + generic function).
 pub fn poll_endpoint(fabric: &Arc<Fabric>, rank: u32, vci: u16) {
+    poll_endpoint_as(fabric, rank, vci, None);
+}
+
+/// [`poll_endpoint`] with domain attribution: `Some(d)` marks this poll
+/// as domain `d` driving a VCI it holds under the claim protocol (the
+/// debug double-poll detector checks the mark); `None` is a direct poll
+/// outside the domain partition (stream endpoints, threadcomm routes,
+/// explicit API polls) — those serialize on the endpoint lock as before.
+/// Returns whether the transport reported the endpoint active.
+pub(crate) fn poll_endpoint_as(
+    fabric: &Arc<Fabric>,
+    rank: u32,
+    vci: u16,
+    domain: Option<u32>,
+) -> bool {
     match &fabric.netmod {
-        ActiveNetmod::Inproc(nm) => poll_endpoint_on(nm, fabric, rank, vci),
+        ActiveNetmod::Inproc(nm) => poll_endpoint_on(nm, fabric, rank, vci, domain),
         #[cfg(unix)]
-        ActiveNetmod::Shm(nm) => poll_endpoint_on(nm, fabric, rank, vci),
-        ActiveNetmod::Tcp(nm) => poll_endpoint_on(nm, fabric, rank, vci),
+        ActiveNetmod::Shm(nm) => poll_endpoint_on(nm, fabric, rank, vci, domain),
+        ActiveNetmod::Tcp(nm) => poll_endpoint_on(nm, fabric, rank, vci, domain),
     }
 }
 
 /// The transport-generic poll body. For inproc this compiles to exactly
 /// the pre-netmod drain loop (registry refresh + nested bucket/channel
 /// pops, via the inlined [`Netmod`] impl).
-fn poll_endpoint_on<N: Netmod>(nm: &N, fabric: &Arc<Fabric>, rank: u32, vci: u16) {
+fn poll_endpoint_on<N: Netmod>(
+    nm: &N,
+    fabric: &Arc<Fabric>,
+    rank: u32,
+    vci: u16,
+    domain: Option<u32>,
+) -> bool {
     let ep = fabric.endpoint(rank, vci);
     // Idle-endpoint fast path: the transport vouches there is neither
     // inbound traffic nor pending tx work, so skip the exclusion
     // entirely (pending rendezvous work always keeps an endpoint
     // active: CTS/chunks/FIN arrive inbound).
     if !nm.maybe_active(fabric, ep, rank, vci) {
-        return;
+        return false;
     }
+    debug_tag_enter(ep, domain);
     // Threadcomm envelopes are forwarded *outside* the endpoint exclusion:
     // their rendezvous follow-ups re-enter this endpoint.
     let mut tc_deferred: Vec<Envelope> = Vec::new();
@@ -159,10 +203,45 @@ fn poll_endpoint_on<N: Netmod>(nm: &N, fabric: &Arc<Fabric>, rank: u32, vci: u16
         }
         pump_sends(fabric, st);
     });
+    debug_tag_exit(ep, domain);
     for env in tc_deferred {
         crate::threadcomm::forward(fabric, rank, env);
     }
+    true
 }
+
+/// Debug-only double-poll detector (the independent witness for the
+/// `domain_claim` protocol): a domain-attributed poll stamps
+/// [`Endpoint::poll_owner`] with `domain + 1` for the drain's duration.
+/// Two domains inside the same VCI at once — which the claim words make
+/// impossible — would trip the assert, naming both domains.
+// lint: atomic(domain_claim)
+#[cfg(debug_assertions)]
+fn debug_tag_enter(ep: &Endpoint, domain: Option<u32>) {
+    if let Some(d) = domain {
+        let prev = ep.poll_owner.swap(d + 1, std::sync::atomic::Ordering::AcqRel);
+        assert_eq!(
+            prev,
+            0,
+            "VCI drained by domain {d} while domain {} was still inside it",
+            prev.wrapping_sub(1)
+        );
+    }
+}
+
+// lint: atomic(domain_claim)
+#[cfg(debug_assertions)]
+fn debug_tag_exit(ep: &Endpoint, domain: Option<u32>) {
+    if domain.is_some() {
+        ep.poll_owner.store(0, std::sync::atomic::Ordering::Release);
+    }
+}
+
+#[cfg(not(debug_assertions))]
+fn debug_tag_enter(_ep: &Endpoint, _domain: Option<u32>) {}
+
+#[cfg(not(debug_assertions))]
+fn debug_tag_exit(_ep: &Endpoint, _domain: Option<u32>) {}
 
 /// Dispatch one inbound envelope, or defer it: threadcomm envelopes must
 /// be forwarded outside the endpoint exclusion (their rendezvous
@@ -532,108 +611,3 @@ pub fn stop_progress_thread(fabric: &Arc<Fabric>, rank: u32) {
     ctl.state.store(PROGRESS_IDLE, Ordering::Release); // lint: atomic(progress_state)
 }
 
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::fabric::FabricConfig;
-
-    #[test]
-    fn pump_suspends_on_backpressure_and_resumes_from_pool() {
-        // White-box drive of one two-copy send over a capacity-2 ring:
-        // the pump must suspend on the ring's Err, resume at the exact
-        // cursor/seq on the next poll, and recycle chunk cells so the
-        // whole 5-chunk transfer allocates only ring-bound cells.
-        let f = Fabric::new(FabricConfig {
-            nranks: 2,
-            channel_cap: 2, // SpscRing rounds to exactly 2
-            chunk_size: 16,
-            // White-box ring/pool assertions below: pin the inproc
-            // netmod (capacity semantics are transport-specific).
-            netmod: crate::netmod::NetmodSel::Inproc,
-            ..Default::default()
-        });
-        let src: Vec<u8> = (0..80u8).collect(); // 5 chunks of 16
-        let req = ReqInner::new();
-        let token = f.next_token(0);
-        let src_ep = f.endpoint(0, 0);
-        let ch = src_ep.state.with_locked(&f.metrics, |st| {
-            // Install the transfer the way the CTS arm does: channel
-            // resolved once, cached in the xfer.
-            let ch = f.channel(st, (0, 0), (1, 0));
-            st.pending_sends.insert(
-                token,
-                SendXfer {
-                    src: SendPtr(src.as_ptr()),
-                    len: src.len(),
-                    cursor: 0,
-                    seq: 0,
-                    ch: Some(Arc::clone(&ch)),
-                    req: Arc::clone(&req),
-                },
-            );
-            pump_sends(&f, st);
-            // Ring full after 2 chunks: suspended mid-transfer.
-            let x = st.pending_sends.get(&token).unwrap();
-            assert_eq!((x.cursor, x.seq), (32, 2));
-            ch
-        });
-        // Drain like a receiver: seq order, correct bytes, cells
-        // recycled by the drop.
-        let pop_chunk = |expect_seq: u32, expect_last: bool| {
-            let env = ch.pop().expect("chunk in ring");
-            match env.payload {
-                Payload::Chunk { seq, last, data, .. } => {
-                    assert_eq!(seq, expect_seq);
-                    assert_eq!(last, expect_last);
-                    let off = seq as usize * 16;
-                    assert_eq!(&data[..], &src[off..off + 16]);
-                }
-                other => panic!("expected chunk, got {other:?}"),
-            }
-        };
-        pop_chunk(0, false);
-        pop_chunk(1, false);
-        src_ep.state.with_locked(&f.metrics, |st| {
-            pump_sends(&f, st);
-            let x = st.pending_sends.get(&token).unwrap();
-            assert_eq!((x.cursor, x.seq), (64, 4));
-        });
-        pop_chunk(2, false);
-        pop_chunk(3, false);
-        src_ep.state.with_locked(&f.metrics, |st| {
-            pump_sends(&f, st);
-            let x = st.pending_sends.get(&token).unwrap();
-            assert_eq!((x.cursor, x.seq), (80, 5));
-            // Pool-reuse: only the 2 cold-start acquires that filled the
-            // ring allocated (the is_full probe stops the pump before a
-            // third); everything after was a recycled cell.
-            assert_eq!(st.chunk_pool.shared().allocated(), 2);
-        });
-        pop_chunk(4, true);
-        let m = f.metrics.snapshot();
-        assert_eq!(m.rdv_chunks, 5);
-        assert_eq!(m.pool_misses, 2);
-        assert_eq!(m.pool_hits, 3); // 2 on the second pump, 1 on the third
-    }
-
-    #[test]
-    fn progress_thread_restart_stops_previous() {
-        // Regression: a second start used to overwrite `ctl.handle`
-        // without joining the first thread, leaking a detached busy-poll
-        // loop. Restarting must stop-and-join, and one stop afterwards
-        // must leave no thread behind.
-        let f = Fabric::new(FabricConfig {
-            nranks: 1,
-            ..Default::default()
-        });
-        start_progress_thread(&f, 0, None);
-        assert_eq!(f.ranks[0].progress_ctl.state(), PROGRESS_BUSY);
-        start_progress_thread(&f, 0, Some(f.cfg.n_shared as u16));
-        assert_eq!(f.ranks[0].progress_ctl.state(), PROGRESS_BUSY);
-        stop_progress_thread(&f, 0);
-        assert_eq!(f.ranks[0].progress_ctl.state(), PROGRESS_IDLE);
-        assert!(f.ranks[0].progress_ctl.handle.lock().unwrap().is_none());
-        // Stopping again is a no-op, not a hang.
-        stop_progress_thread(&f, 0);
-    }
-}

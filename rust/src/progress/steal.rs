@@ -1,0 +1,39 @@
+//! Work stealing between progress domains.
+//!
+//! A domain whose home slots are idle (or whose pass number hits the
+//! [`super::domain::STEAL_PERIOD`] heartbeat) sweeps the other domains'
+//! VCIs and steals whole slots through the claim protocol: one CAS moves
+//! ownership *and* the busy bit to the thief, the thief drains the VCI,
+//! then hands the slot straight back to its home domain. Stealing whole
+//! VCIs (not individual messages) keeps the contention-free property:
+//! at any instant each VCI still has exactly one domain inside it.
+//!
+//! The services slot is never stolen — grequest `poll_fn`s must be
+//! serviced by exactly one domain per pass, and their home (domain 0) is
+//! the domain every `Shared`-scope waiter drives, so they cannot starve.
+//! A failed steal CAS means the victim (or another thief) is actively
+//! draining that VCI right now — skipping is safe because wait loops
+//! re-poll; the miss is counted in `domain_contended`.
+
+use super::domain::DomainSet;
+use crate::fabric::Fabric;
+use crate::metrics::Metrics;
+use std::sync::Arc;
+
+/// Sweep every foreign, non-services slot once, stealing and draining
+/// the ones whose claim is free. Each successful steal bumps
+/// `progress_steals` and ends with an exact ownership handback.
+pub(crate) fn steal_sweep(fabric: &Arc<Fabric>, rank: u32, ds: &DomainSet, thief: u32) {
+    for slot in 0..ds.slots() {
+        if slot == ds.services_slot() || ds.home(slot) == thief {
+            continue;
+        }
+        if !ds.try_steal(slot, thief) {
+            Metrics::bump(&fabric.metrics.domain_contended);
+            continue;
+        }
+        Metrics::bump(&fabric.metrics.progress_steals);
+        super::poll_endpoint_as(fabric, rank, slot as u16, Some(thief));
+        ds.release_to(slot, ds.home(slot));
+    }
+}

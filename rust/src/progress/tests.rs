@@ -1,0 +1,324 @@
+use super::domain::domain_progress;
+use super::*;
+use crate::fabric::FabricConfig;
+use crate::grequest::grequest_start;
+use crate::netmod::NetmodSel;
+use crate::universe::Universe;
+use std::sync::atomic::{AtomicBool, AtomicU32};
+
+#[test]
+fn pump_suspends_on_backpressure_and_resumes_from_pool() {
+    // White-box drive of one two-copy send over a capacity-2 ring:
+    // the pump must suspend on the ring's Err, resume at the exact
+    // cursor/seq on the next poll, and recycle chunk cells so the
+    // whole 5-chunk transfer allocates only ring-bound cells.
+    let f = Fabric::new(FabricConfig {
+        nranks: 2,
+        channel_cap: 2, // SpscRing rounds to exactly 2
+        chunk_size: 16,
+        // White-box ring/pool assertions below: pin the inproc
+        // netmod (capacity semantics are transport-specific).
+        netmod: crate::netmod::NetmodSel::Inproc,
+        ..Default::default()
+    });
+    let src: Vec<u8> = (0..80u8).collect(); // 5 chunks of 16
+    let req = ReqInner::new();
+    let token = f.next_token(0);
+    let src_ep = f.endpoint(0, 0);
+    let ch = src_ep.state.with_locked(&f.metrics, |st| {
+        // Install the transfer the way the CTS arm does: channel
+        // resolved once, cached in the xfer.
+        let ch = f.channel(st, (0, 0), (1, 0));
+        st.pending_sends.insert(
+            token,
+            SendXfer {
+                src: SendPtr(src.as_ptr()),
+                len: src.len(),
+                cursor: 0,
+                seq: 0,
+                ch: Some(Arc::clone(&ch)),
+                req: Arc::clone(&req),
+            },
+        );
+        pump_sends(&f, st);
+        // Ring full after 2 chunks: suspended mid-transfer.
+        let x = st.pending_sends.get(&token).unwrap();
+        assert_eq!((x.cursor, x.seq), (32, 2));
+        ch
+    });
+    // Drain like a receiver: seq order, correct bytes, cells
+    // recycled by the drop.
+    let pop_chunk = |expect_seq: u32, expect_last: bool| {
+        let env = ch.pop().expect("chunk in ring");
+        match env.payload {
+            Payload::Chunk { seq, last, data, .. } => {
+                assert_eq!(seq, expect_seq);
+                assert_eq!(last, expect_last);
+                let off = seq as usize * 16;
+                assert_eq!(&data[..], &src[off..off + 16]);
+            }
+            other => panic!("expected chunk, got {other:?}"),
+        }
+    };
+    pop_chunk(0, false);
+    pop_chunk(1, false);
+    src_ep.state.with_locked(&f.metrics, |st| {
+        pump_sends(&f, st);
+        let x = st.pending_sends.get(&token).unwrap();
+        assert_eq!((x.cursor, x.seq), (64, 4));
+    });
+    pop_chunk(2, false);
+    pop_chunk(3, false);
+    src_ep.state.with_locked(&f.metrics, |st| {
+        pump_sends(&f, st);
+        let x = st.pending_sends.get(&token).unwrap();
+        assert_eq!((x.cursor, x.seq), (80, 5));
+        // Pool-reuse: only the 2 cold-start acquires that filled the
+        // ring allocated (the is_full probe stops the pump before a
+        // third); everything after was a recycled cell.
+        assert_eq!(st.chunk_pool.shared().allocated(), 2);
+    });
+    pop_chunk(4, true);
+    let m = f.metrics.snapshot();
+    assert_eq!(m.rdv_chunks, 5);
+    assert_eq!(m.pool_misses, 2);
+    assert_eq!(m.pool_hits, 3); // 2 on the second pump, 1 on the third
+}
+
+#[test]
+fn progress_thread_restart_stops_previous() {
+    // Regression: a second start used to overwrite `ctl.handle`
+    // without joining the first thread, leaking a detached busy-poll
+    // loop. Restarting must stop-and-join, and one stop afterwards
+    // must leave no thread behind.
+    let f = Fabric::new(FabricConfig {
+        nranks: 1,
+        ..Default::default()
+    });
+    start_progress_thread(&f, 0, None);
+    assert_eq!(f.ranks[0].progress_ctl.state(), PROGRESS_BUSY);
+    start_progress_thread(&f, 0, Some(f.cfg.n_shared as u16));
+    assert_eq!(f.ranks[0].progress_ctl.state(), PROGRESS_BUSY);
+    stop_progress_thread(&f, 0);
+    assert_eq!(f.ranks[0].progress_ctl.state(), PROGRESS_IDLE);
+    assert!(f.ranks[0].progress_ctl.handle.lock().unwrap().is_none());
+    // Stopping again is a no-op, not a hang.
+    stop_progress_thread(&f, 0);
+}
+
+// ------------------------------------------------------ progress domains
+
+#[test]
+fn partition_and_claim_protocol() {
+    let ds = DomainSet::new(2, 4);
+    assert_eq!(ds.n_domains(), 2);
+    assert_eq!(ds.slots(), 5);
+    assert_eq!(ds.services_slot(), 4);
+    // Round-robin homes; services slot pinned to domain 0.
+    let homes: Vec<u32> = (0..ds.slots()).map(|s| ds.home(s)).collect();
+    assert_eq!(homes, vec![0, 1, 0, 1, 0]);
+    // Owner enters and leaves its own slot.
+    assert!(ds.begin_poll(0, 0));
+    assert!(ds.is_busy(0));
+    // A busy slot can be neither stolen nor re-entered.
+    assert!(!ds.try_steal(0, 1));
+    assert!(!ds.begin_poll(0, 0));
+    ds.end_poll(0, 0);
+    // Only the owner may begin_poll.
+    assert!(!ds.begin_poll(0, 1));
+    // Steal moves ownership + busy bit in one CAS; the home domain is
+    // locked out until the exact handback.
+    assert!(ds.try_steal(0, 1));
+    assert_eq!(ds.owner(0), 1);
+    assert!(ds.is_busy(0));
+    assert!(!ds.begin_poll(0, 0));
+    ds.release_to(0, ds.home(0));
+    assert_eq!(ds.owner(0), 0);
+    assert!(!ds.is_busy(0));
+    assert!(ds.begin_poll(0, 0));
+    ds.end_poll(0, 0);
+    // A domain cannot "steal" a slot it already owns.
+    assert!(!ds.try_steal(1, 1));
+    // Domain count clamps to [1, n_shared].
+    assert_eq!(DomainSet::new(9, 4).n_domains(), 4);
+    assert_eq!(DomainSet::new(0, 4).n_domains(), 1);
+    // With one domain everything is home to domain 0 (the pre-domain walk).
+    let one = DomainSet::new(1, 4);
+    assert!((0..one.slots()).all(|s| one.home(s) == 0));
+}
+
+#[test]
+fn claim_protocol_never_admits_two_domains() {
+    // Hammer the claim words from two racing domains — owner path vs
+    // steal path — and witness mutual exclusion with an occupancy count
+    // per slot that must never exceed 1.
+    const ITERS: usize = 20_000;
+    let ds = DomainSet::new(2, 2); // slots 0,1 + services slot 2
+    let occupancy: Vec<AtomicU32> = (0..ds.slots()).map(|_| AtomicU32::new(0)).collect();
+    std::thread::scope(|s| {
+        for d in 0..2u32 {
+            let ds = &ds;
+            let occ = &occupancy;
+            s.spawn(move || {
+                for _ in 0..ITERS {
+                    for slot in 0..ds.slots() {
+                        let claimed = if ds.home(slot) == d {
+                            ds.begin_poll(slot, d)
+                        } else if slot != ds.services_slot() {
+                            ds.try_steal(slot, d)
+                        } else {
+                            false // services slot: never stolen
+                        };
+                        if !claimed {
+                            continue;
+                        }
+                        let inside = occ[slot].fetch_add(1, Ordering::AcqRel);
+                        assert_eq!(inside, 0, "two domains inside slot {slot}");
+                        occ[slot].fetch_sub(1, Ordering::AcqRel);
+                        if ds.home(slot) == d {
+                            ds.end_poll(slot, d);
+                        } else {
+                            ds.release_to(slot, ds.home(slot));
+                        }
+                    }
+                }
+            });
+        }
+    });
+    // Quiescent state: every slot back home, nothing busy.
+    for slot in 0..ds.slots() {
+        assert_eq!(ds.owner(slot), ds.home(slot));
+        assert!(!ds.is_busy(slot));
+    }
+}
+
+#[test]
+fn idle_domain_steals_loaded_vci_and_hands_back() {
+    // World-comm traffic hashes to VCI (CTX_WORLD % n_shared) = 1, which
+    // with two domains is home to domain 1. Nobody drives domain 1 and
+    // the receiver polls ONLY domain 0 — so the message can complete
+    // solely through domain 0's steal sweep claiming VCI 1.
+    Universe::builder()
+        .ranks(2)
+        .progress_domains(2)
+        .netmod(NetmodSel::Inproc)
+        .run(|world| {
+            if world.rank() == 1 {
+                world.send(b"steal me", 0, 7).unwrap();
+                return;
+            }
+            let f = Arc::clone(world.fabric());
+            let me = world.my_world_rank();
+            let mut buf = [0u8; 8];
+            let req = world.irecv(&mut buf, 1, 7).unwrap();
+            while !req.test_no_progress() {
+                domain_progress(&f, me, 0);
+                std::hint::spin_loop();
+            }
+            let st = req.wait().unwrap();
+            assert_eq!(st.len, 8);
+            assert_eq!(&buf, b"steal me");
+            let m = f.snapshot();
+            assert!(m.progress_steals >= 1, "completion required a steal");
+            // Single driver thread: the claim protocol never contends.
+            assert_eq!(m.domain_contended, 0);
+            assert!(m.domain_polls >= 1);
+            // Exact handback: every slot owned by its home domain, idle.
+            let ds = &f.ranks[me as usize].domains;
+            for slot in 0..ds.slots() {
+                assert_eq!(ds.owner(slot), ds.home(slot));
+                assert!(!ds.is_busy(slot));
+            }
+        });
+}
+
+#[test]
+fn grequest_serviced_by_exactly_one_domain() {
+    // The services slot is home to domain 0 and excluded from stealing:
+    // one domain pass = at most one poll_fn invocation, no matter how
+    // many domains exist.
+    Universe::builder()
+        .ranks(1)
+        .progress_domains(2)
+        .netmod(NetmodSel::Inproc)
+        .run(|world| {
+            let f = Arc::clone(world.fabric());
+            let done = Arc::new(AtomicBool::new(false));
+            let d2 = Arc::clone(&done);
+            let req = grequest_start(
+                &world,
+                Box::new(move || d2.load(Ordering::Acquire).then(Status::empty)),
+                None,
+            );
+            let before = f.metrics.snapshot();
+            domain_progress(&f, 0, 0);
+            // Domain 0 (the services slot's home) polled it exactly once.
+            assert_eq!(f.metrics.snapshot().since(&before).grequest_polls, 1);
+            domain_progress(&f, 0, 1);
+            // Domain 1's pass — including its steal sweep — never touches
+            // the services slot.
+            assert_eq!(f.metrics.snapshot().since(&before).grequest_polls, 1);
+            done.store(true, Ordering::Release);
+            let st = req.wait().unwrap();
+            assert_eq!(st.len, 0);
+        });
+}
+
+#[test]
+#[cfg(debug_assertions)]
+#[should_panic(expected = "while domain")]
+fn double_poll_detector_trips() {
+    // The debug owner tag in poll_endpoint_on is the independent witness
+    // for the claim protocol: forging a resident domain on an active VCI
+    // must trip it. White-box (no Universe) so the panic lands on this
+    // thread, where #[should_panic] can see its message.
+    let f = Fabric::new(FabricConfig {
+        nranks: 1,
+        progress_domains: 2,
+        netmod: NetmodSel::Inproc,
+        ..Default::default()
+    });
+    // An inline self-envelope makes VCI 1 active, so the drain — and the
+    // tag check ahead of it — actually runs.
+    let hdr = Header {
+        ctx: crate::fabric::CTX_WORLD,
+        src: 0,
+        tag: 0,
+        src_stream: 0,
+        dst_stream: 0,
+    };
+    crate::comm::push_eager_raw(&f, (0, 1), (0, 1), hdr, b"x").unwrap();
+    // Forge "domain 1 is still inside VCI 1"...
+    f.endpoint(0, 1).poll_owner.store(2, Ordering::Release);
+    // ...then enter as domain 0: the detector must panic.
+    super::poll_endpoint_as(&f, 0, 1, Some(0));
+}
+
+#[test]
+fn domain_thread_start_stop_restart() {
+    // Per-domain variant of MPIX_Start_progress_thread: same stop-join
+    // restart discipline as the rank-default thread, on the domain's own
+    // ProgressCtl.
+    let f = Fabric::new(FabricConfig {
+        nranks: 1,
+        progress_domains: 2,
+        netmod: NetmodSel::Inproc,
+        ..Default::default()
+    });
+    start_domain_progress_thread(&f, 0, 1);
+    assert_eq!(f.ranks[0].domains.ctl(1).state(), PROGRESS_BUSY);
+    // Liveness: the spawned thread runs domain 1's pass.
+    while f.ranks[0].domains.polls(1) == 0 {
+        std::hint::spin_loop();
+    }
+    // Restart joins the previous thread instead of leaking it.
+    start_domain_progress_thread(&f, 0, 1);
+    assert_eq!(f.ranks[0].domains.ctl(1).state(), PROGRESS_BUSY);
+    stop_domain_progress_thread(&f, 0, 1);
+    assert_eq!(f.ranks[0].domains.ctl(1).state(), PROGRESS_IDLE);
+    assert!(f.ranks[0].domains.ctl(1).handle.lock().unwrap().is_none());
+    // Stopping again is a no-op, not a hang.
+    stop_domain_progress_thread(&f, 0, 1);
+    // The rank-default control block is untouched by domain threads.
+    assert_eq!(f.ranks[0].progress_ctl.state(), PROGRESS_IDLE);
+}

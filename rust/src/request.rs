@@ -105,7 +105,14 @@ impl ReqInner {
 #[derive(Clone)]
 pub enum ProgressScope {
     /// Poll all shared endpoints of `rank` (MPIX_STREAM_NULL).
+    /// Post-domain-split this is domain 0's pass — identical when
+    /// `progress_domains` is 1 (the default).
     Shared,
+    /// Poll one progress domain of `rank` (see
+    /// [`crate::progress::domain`]): the domain's home VCIs, plus a
+    /// periodic steal sweep so waiters parked on a foreign VCI's traffic
+    /// still complete. Out-of-range handles clamp to the last domain.
+    Domain(u32),
     /// Poll one stream-owned endpoint (vci) of `rank`.
     Stream(u16),
     /// Poll a threadcomm engine (thread id) plus the shared endpoints.

@@ -8,6 +8,12 @@
 //! an [`crate::offload::OffloadStream`] via info hints; communication on
 //! their stream comms is *enqueued* to the offload context instead of
 //! executing on the calling thread.
+//!
+//! Stream-owned endpoints sit **outside** the progress-domain partition
+//! ([`crate::progress::domain`]): the serial context that owns a stream
+//! polls its VCI directly (domain tag `None` on the poll path), and
+//! domain engines neither sweep nor steal stream VCIs — the lock-free
+//! promise would not survive a second poller.
 
 use crate::comm::{Comm, CommInner, CommKind};
 use crate::error::{MpiError, Result};

@@ -134,6 +134,14 @@ impl UniverseBuilder {
         self
     }
 
+    /// Progress domains per rank, overriding `MPIX_PROGRESS_DOMAINS`
+    /// (see [`crate::progress::domain`]). 1 — the default — is the
+    /// classic single-engine progress walk.
+    pub fn progress_domains(mut self, n: usize) -> Self {
+        self.cfg.progress_domains = n;
+        self
+    }
+
     /// Eager/rendezvous protocol switchover in bytes.
     pub fn eager_max(mut self, bytes: usize) -> Self {
         self.cfg.eager_max = bytes;

@@ -1,0 +1,20 @@
+// Fixture: seeded PL201/PL202 violations against the domain_claim role.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+pub struct Claims {
+    pub word: AtomicU32,
+}
+
+impl Claims {
+    pub fn relaxed_handback(&self) {
+        // domain_claim handback stores must be Release: PL201.
+        self.word.store(0, Ordering::Relaxed); // lint: atomic(domain_claim)
+    }
+
+    pub fn untagged_claim(&self) -> bool {
+        self.word
+            .compare_exchange(0, 1, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok() // no role tag anywhere: PL202
+    }
+}

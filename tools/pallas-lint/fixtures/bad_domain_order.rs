@@ -1,0 +1,20 @@
+// Fixture: seeded PL101 violations for the progress-domain claim
+// protocol (rank 15). Not compiled — parsed by the analyzer self-tests.
+
+pub fn claim_inside_endpoint(fab: &Fabric, ep: &Endpoint, ds: &DomainSet) {
+    with_ep(fab, ep, |st| { // rank 20 (endpoint), held by the closure
+        ds.begin_poll(0, 1); // rank 15 under rank 20: PL101
+    });
+}
+
+pub fn steal_under_service(svc: &Service, ds: &DomainSet) {
+    let w = svc.windows.lock().unwrap(); // rank 90 (service)
+    ds.try_steal(3, 0); // rank 15 under rank 90: PL101
+    drop(w);
+}
+
+pub fn claim_then_endpoint_is_fine(fab: &Fabric, ep: &Endpoint, ds: &DomainSet) {
+    if ds.begin_poll(0, 0) { // rank 15: claim words are instantaneous
+        with_ep(fab, ep, |st| { let _ = st; }); // rank 20 after 15: fine
+    }
+}

@@ -16,6 +16,16 @@ rank = 10
 patterns = [".global.lock("]
 
 [[lock]]
+name = "domain_claim"
+rank = 15
+patterns = [".begin_poll(", ".try_steal("]
+
+[[lock]]
+name = "endpoint"
+rank = 20
+patterns = ["with_ep("]
+
+[[lock]]
 name = "service"
 rank = 90
 patterns = [".windows.lock(", ".handle.lock("]
@@ -29,6 +39,13 @@ load = ["Acquire"]
 store = []
 rmw = ["Release"]
 cas = []
+
+[[role]]
+name = "domain_claim"
+load = ["Acquire"]
+store = ["Release"]
+rmw = ["AcqRel"]
+cas = ["AcqRel/Acquire"]
 
 [[hotpath]]
 file = "bad_hotpath.rs"
@@ -74,6 +91,29 @@ fn lock_order_fires() {
     // the two correctly ordered functions below them.
     assert_eq!(d[0].line, 6);
     assert_eq!(d[1].line, 12);
+}
+
+#[test]
+fn domain_lock_order_fires() {
+    let f = fixture("bad_domain_order.rs");
+    let mut d = Vec::new();
+    locks::check(&f, &manifest(), &mut d);
+    assert_eq!(codes(&d), vec!["PL101", "PL101"], "{d:?}");
+    // Claim under the endpoint closure, then claim under a service
+    // guard — and nothing from the correctly ordered function below.
+    assert_eq!(d[0].line, 6);
+    assert_eq!(d[1].line, 12);
+}
+
+#[test]
+fn domain_atomics_fire() {
+    let f = fixture("bad_domain_atomics.rs");
+    let mut d = Vec::new();
+    atomics::check(&f, &manifest(), &mut d);
+    d.sort_by_key(|x| x.line);
+    assert_eq!(codes(&d), vec!["PL201", "PL202"], "{d:?}");
+    assert!(d[0].msg.contains("domain_claim"), "{}", d[0].msg);
+    assert!(d[0].msg.contains("Relaxed"), "{}", d[0].msg);
 }
 
 #[test]
@@ -148,8 +188,8 @@ fn clean_fixture_is_clean_under_every_checker() {
 fn real_manifest_parses_and_is_nontrivial() {
     let m = Manifest::load(&Path::new(env!("CARGO_MANIFEST_DIR")).join("lock_order.toml"))
         .expect("repo manifest parses");
-    assert_eq!(m.locks.len(), 5);
-    assert_eq!(m.roles.len(), 9);
+    assert_eq!(m.locks.len(), 6);
+    assert_eq!(m.roles.len(), 10);
     assert!(m.hotpath.len() >= 15, "hotpath list shrank: {}", m.hotpath.len());
     assert!(m.atomics_scope.iter().any(|s| s == "rust/src/util/spsc.rs"));
 }
