@@ -1,0 +1,161 @@
+//! E13 — persistent collectives: plan-once/start-many amortisation.
+//!
+//! The schedule-DAG runtime compiles a collective into a dependency
+//! graph at `*_init` time and replays it on every `start()`; the claim
+//! (§13) is that the Nth iteration pays zero selector work and zero
+//! allocation, so a start should beat the equivalent one-shot call as
+//! soon as the plan is warm. Three columns per payload size over
+//! 4 proc ranks:
+//!
+//!  - `oneshot`  — `coll::allreduce_t` per iteration (selector + fresh
+//!    requests + staging every time),
+//!  - `start`    — one `allreduce_init`, then `start()`/`wait()` per
+//!    iteration (the steady state the counters assert on),
+//!  - `replan`   — `allreduce_init` + a single start per iteration
+//!    (what a naive caller pays if they never reuse the plan; the gap
+//!    to `start` is the compilation + install cost being amortised).
+//!
+//! A second table repeats oneshot-vs-start for bcast, the latency-bound
+//! end of the collective set. Each run appends to
+//! `BENCH_persistent.json` at the repo root (tag with
+//! `BENCH_LABEL=...`).
+//!
+//! Run: `cargo bench --offline --bench persistent_coll`
+
+use mpix::coll;
+use mpix::universe::Universe;
+use mpix::util::json::Json;
+use mpix::util::stats::{fmt_time, record_bench_run, unix_now};
+use std::time::Instant;
+
+const SIZES: &[usize] = &[1, 8, 64, 512, 4096]; // f64 elements
+const ITERS: usize = 300;
+const RANKS: usize = 4;
+
+fn oneshot_allreduce(nelem: usize) -> f64 {
+    let out = Universe::builder().ranks(RANKS).run(|world| {
+        let mut v = vec![world.rank() as f64; nelem];
+        coll::barrier(&world).unwrap();
+        let t0 = Instant::now();
+        for _ in 0..ITERS {
+            coll::allreduce_t(&world, &mut v, |a, b| *a += *b).unwrap();
+        }
+        t0.elapsed().as_secs_f64() / ITERS as f64
+    });
+    out[0]
+}
+
+fn persistent_allreduce(nelem: usize) -> f64 {
+    let out = Universe::builder().ranks(RANKS).run(|world| {
+        let mut v = vec![world.rank() as f64; nelem];
+        let mut plan = world.allreduce_init(&mut v, |a, b| *a += *b).unwrap();
+        // Warm the pools and retire one full DAG before timing.
+        plan.start().unwrap().wait().unwrap();
+        coll::barrier(&world).unwrap();
+        let t0 = Instant::now();
+        for _ in 0..ITERS {
+            plan.start().unwrap().wait().unwrap();
+        }
+        t0.elapsed().as_secs_f64() / ITERS as f64
+    });
+    out[0]
+}
+
+fn replan_allreduce(nelem: usize) -> f64 {
+    let out = Universe::builder().ranks(RANKS).run(|world| {
+        let mut v = vec![world.rank() as f64; nelem];
+        coll::barrier(&world).unwrap();
+        let t0 = Instant::now();
+        for _ in 0..ITERS {
+            let mut plan = world.allreduce_init(&mut v, |a, b| *a += *b).unwrap();
+            plan.start().unwrap().wait().unwrap();
+        }
+        t0.elapsed().as_secs_f64() / ITERS as f64
+    });
+    out[0]
+}
+
+fn oneshot_bcast(nelem: usize) -> f64 {
+    let out = Universe::builder().ranks(RANKS).run(|world| {
+        let mut v = vec![world.rank() as f64; nelem];
+        coll::barrier(&world).unwrap();
+        let t0 = Instant::now();
+        for _ in 0..ITERS {
+            coll::bcast_t(&world, &mut v, 0).unwrap();
+        }
+        t0.elapsed().as_secs_f64() / ITERS as f64
+    });
+    out[0]
+}
+
+fn persistent_bcast(nelem: usize) -> f64 {
+    let out = Universe::builder().ranks(RANKS).run(|world| {
+        let mut v = vec![world.rank() as f64; nelem];
+        let mut plan = world.bcast_init(&mut v, 0).unwrap();
+        plan.start().unwrap().wait().unwrap();
+        coll::barrier(&world).unwrap();
+        let t0 = Instant::now();
+        for _ in 0..ITERS {
+            plan.start().unwrap().wait().unwrap();
+        }
+        t0.elapsed().as_secs_f64() / ITERS as f64
+    });
+    out[0]
+}
+
+fn main() {
+    // 4 rank-threads on 2 cores: yield quickly when blocked.
+    std::env::set_var("MPIX_SPIN", "16");
+    println!("E13 — persistent allreduce over {RANKS} ranks: plan-once vs one-shot");
+    println!(
+        "{:>10} {:>14} {:>14} {:>14}",
+        "f64 elems", "oneshot", "start", "replan"
+    );
+    let mut ar_oneshot = Vec::new();
+    let mut ar_start = Vec::new();
+    let mut ar_replan = Vec::new();
+    for &n in SIZES {
+        let o = oneshot_allreduce(n);
+        let s = persistent_allreduce(n);
+        let r = replan_allreduce(n);
+        ar_oneshot.push(o);
+        ar_start.push(s);
+        ar_replan.push(r);
+        println!(
+            "{:>10} {:>14} {:>14} {:>14}",
+            n,
+            fmt_time(o),
+            fmt_time(s),
+            fmt_time(r)
+        );
+    }
+
+    println!();
+    println!("E13b — persistent bcast (root 0, {RANKS} ranks)");
+    println!("{:>10} {:>14} {:>14}", "f64 elems", "oneshot", "start");
+    let mut bc_oneshot = Vec::new();
+    let mut bc_start = Vec::new();
+    for &n in SIZES {
+        let o = oneshot_bcast(n);
+        let s = persistent_bcast(n);
+        bc_oneshot.push(o);
+        bc_start.push(s);
+        println!("{:>10} {:>14} {:>14}", n, fmt_time(o), fmt_time(s));
+    }
+
+    record_bench_run(
+        "persistent",
+        "E13",
+        "seconds per op (4 ranks)",
+        Json::obj([
+            ("unix_time", Json::Num(unix_now())),
+            ("section", Json::Str("plan_once_start_many".into())),
+            ("sizes_f64", Json::nums(SIZES.iter().map(|&n| n as f64))),
+            ("allreduce_oneshot", Json::nums(ar_oneshot)),
+            ("allreduce_start", Json::nums(ar_start)),
+            ("allreduce_replan", Json::nums(ar_replan)),
+            ("bcast_oneshot", Json::nums(bc_oneshot)),
+            ("bcast_start", Json::nums(bc_start)),
+        ]),
+    );
+}

@@ -1,4 +1,5 @@
-//! `MPI_Allreduce` schedules: binomial tree and ring.
+//! `MPI_Allreduce` schedules: binomial tree, ring, and Rabenseifner's
+//! halving/doubling.
 
 use super::{bcast, reduce_t, CommLike};
 use crate::error::Result;
@@ -81,6 +82,87 @@ pub fn allreduce_ring_t<C: CommLike, T: Pod>(
         let req = comm.coll_isend(bytes_of(&out[..sl]), right, tag2)?;
         comm.coll_recv(bytes_of_mut(&mut buf[rs..rs + rl]), left, tag2)?;
         req.wait()?;
+    }
+    Ok(())
+}
+
+/// Rabenseifner allreduce: recursive-halving reduce-scatter fused with
+/// recursive-doubling allgather. log₂ n rounds per phase with message
+/// sizes halving/doubling each round — bandwidth-optimal like the ring
+/// but with log₂ n instead of n−1 rounds per phase, so it wins on large
+/// power-of-two communicators. Requires a commutative op. Non-power-of-
+/// two sizes delegate to the ring (the halving pairing needs `me ^ dist`
+/// to stay in range).
+pub fn allreduce_rabenseifner_t<C: CommLike, T: Pod>(
+    comm: &C,
+    buf: &mut [T],
+    op: impl Fn(&mut T, &T) + Copy,
+) -> Result<()> {
+    let n = comm.size();
+    let me = comm.rank();
+    if n <= 1 {
+        return Ok(());
+    }
+    if !n.is_power_of_two() {
+        return allreduce_ring_t(comm, buf, op);
+    }
+    Metrics::bump(&comm.metrics().coll_allreduce_rabenseifner);
+    let count = buf.len();
+    if count == 0 {
+        return Ok(());
+    }
+    let tag = comm.next_coll_tag();
+    // Phase 1 — recursive halving: the pair (me, me ^ dist) splits its
+    // current range at the midpoint; the lower rank keeps the lower
+    // half. Each side sends the half it gives up, folds the partner's
+    // contribution into the half it keeps. Ranges may become empty when
+    // count < n; zero-length exchanges are still matched.
+    let mut tmp = vec![buf[0]; count.div_ceil(2)];
+    let mut spans: Vec<(usize, usize)> = Vec::new();
+    let (mut lo, mut hi) = (0usize, count);
+    let mut dist = n / 2;
+    let mut round = 0i32;
+    while dist >= 1 {
+        let partner = me ^ dist;
+        let mid = lo + (hi - lo) / 2;
+        let (keep_lo, keep_hi, send_lo, send_hi) = if me & dist == 0 {
+            (lo, mid, mid, hi)
+        } else {
+            (mid, hi, lo, mid)
+        };
+        let keep_len = keep_hi - keep_lo;
+        let t = tag.wrapping_add(round);
+        let req = comm.coll_isend(bytes_of(&buf[send_lo..send_hi]), partner, t)?;
+        comm.coll_recv(bytes_of_mut(&mut tmp[..keep_len]), partner, t)?;
+        req.wait()?;
+        for (a, b) in buf[keep_lo..keep_hi].iter_mut().zip(tmp[..keep_len].iter()) {
+            op(a, b);
+        }
+        spans.push((keep_lo, keep_hi));
+        lo = keep_lo;
+        hi = keep_hi;
+        dist /= 2;
+        round += 1;
+    }
+    // Phase 2 — recursive doubling in reverse: exchange owned ranges
+    // with the same partners, widest pair last, until every rank holds
+    // [0, count). Per-round tags continue past the phase-1 window.
+    let rounds = spans.len();
+    let mut own = spans[rounds - 1];
+    for i in (0..rounds).rev() {
+        let parent = if i == 0 { (0, count) } else { spans[i - 1] };
+        let partner = me ^ ((n / 2) >> i);
+        let t = tag.wrapping_add(rounds as i32 + (rounds - 1 - i) as i32);
+        // Split the parent range into our half and the sibling half the
+        // partner owns; disjoint borrows for the concurrent send/recv.
+        let sib_is_upper = own.0 == parent.0;
+        let boundary = if sib_is_upper { own.1 } else { own.0 };
+        let (lower, upper) = buf[parent.0..parent.1].split_at_mut(boundary - parent.0);
+        let (mine, theirs) = if sib_is_upper { (lower, upper) } else { (upper, lower) };
+        let req = comm.coll_isend(bytes_of(mine), partner, t)?;
+        comm.coll_recv(bytes_of_mut(theirs), partner, t)?;
+        req.wait()?;
+        own = parent;
     }
     Ok(())
 }

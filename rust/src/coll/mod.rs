@@ -30,7 +30,7 @@ pub mod select;
 mod tests;
 
 pub use allgather::{allgather_recdbl_t, allgather_ring_t};
-pub use allreduce::{allreduce_ring_t, allreduce_tree_t};
+pub use allreduce::{allreduce_rabenseifner_t, allreduce_ring_t, allreduce_tree_t};
 pub use bcast::{bcast_binomial, bcast_binomial_t, bcast_chain, bcast_chain_t};
 pub use reduce_scatter::{reduce_scatter_block_linear_t, reduce_scatter_block_pairwise_t};
 pub use select::{CollAlgo, CollOp, CollSelector};
@@ -147,7 +147,8 @@ pub fn reduce_t<C: CommLike, T: Pod>(
 
 /// Typed `MPI_Allreduce` — selector-dispatched: binomial tree
 /// (reduce + bcast) for small counts, ring (reduce_scatter + allgather)
-/// for large ones (`MPIX_COLL_ALLREDUCE=tree|ring`).
+/// for large ones, Rabenseifner halving/doubling for large power-of-two
+/// communicators (`MPIX_COLL_ALLREDUCE=tree|ring|rabenseifner`).
 pub fn allreduce_t<C: CommLike, T: Pod>(
     comm: &C,
     buf: &mut [T],
@@ -160,6 +161,7 @@ pub fn allreduce_t<C: CommLike, T: Pod>(
     let bytes = buf.len() * std::mem::size_of::<T>();
     match comm.selector().choose(CollOp::Allreduce, bytes, n) {
         CollAlgo::Ring => allreduce_ring_t(comm, buf, op),
+        CollAlgo::Rabenseifner => allreduce_rabenseifner_t(comm, buf, op),
         _ => allreduce_tree_t(comm, buf, op),
     }
 }

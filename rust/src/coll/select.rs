@@ -45,6 +45,13 @@ pub const REDUCE_SCATTER_PAIRWISE_MIN_BYTES: usize = 4 * 1024;
 /// doubling (log₂ n rounds) on power-of-two sizes; above it, ring.
 pub const ALLGATHER_RECDBL_MAX_BYTES: usize = 16 * 1024;
 
+/// Payload bytes at which auto allreduce prefers Rabenseifner's
+/// halving/doubling schedule over the ring on power-of-two sizes: both
+/// are bandwidth-optimal, but Rabenseifner needs log₂ n rounds where the
+/// ring needs 2(n−1), so it wins once the payload is large enough that
+/// its uneven halves stop mattering.
+pub const ALLREDUCE_RABENSEIFNER_MIN_BYTES: usize = 64 * 1024;
+
 /// The collective operations with more than one schedule.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CollOp {
@@ -95,7 +102,7 @@ impl CollOp {
     pub fn accepts(self, algo: CollAlgo) -> bool {
         use CollAlgo::*;
         match self {
-            CollOp::Allreduce => matches!(algo, Auto | Tree | Ring),
+            CollOp::Allreduce => matches!(algo, Auto | Tree | Ring | Rabenseifner),
             CollOp::Bcast => matches!(algo, Auto | Tree | Chain),
             CollOp::ReduceScatter => matches!(algo, Auto | Linear | Pairwise),
             CollOp::Allgather => matches!(algo, Auto | Ring | RecDbl),
@@ -123,6 +130,10 @@ pub enum CollAlgo {
     RecDbl,
     /// Reference composition (reduce_scatter as reduce + scatter).
     Linear,
+    /// Rabenseifner allreduce: recursive-halving reduce-scatter fused
+    /// with recursive-doubling allgather; power-of-two sizes only,
+    /// silently falls back to ring otherwise.
+    Rabenseifner,
 }
 
 impl CollAlgo {
@@ -136,6 +147,9 @@ impl CollAlgo {
             "pairwise" => Some(CollAlgo::Pairwise),
             "recdbl" | "recursive_doubling" | "recursive-doubling" => Some(CollAlgo::RecDbl),
             "linear" => Some(CollAlgo::Linear),
+            "rabenseifner" | "rab" | "halving_doubling" | "halving-doubling" => {
+                Some(CollAlgo::Rabenseifner)
+            }
             _ => None,
         }
     }
@@ -149,6 +163,7 @@ impl CollAlgo {
             CollAlgo::Pairwise => 4,
             CollAlgo::RecDbl => 5,
             CollAlgo::Linear => 6,
+            CollAlgo::Rabenseifner => 7,
         }
     }
 
@@ -160,6 +175,7 @@ impl CollAlgo {
             4 => CollAlgo::Pairwise,
             5 => CollAlgo::RecDbl,
             6 => CollAlgo::Linear,
+            7 => CollAlgo::Rabenseifner,
             _ => CollAlgo::Auto,
         }
     }
@@ -313,7 +329,9 @@ fn check(op: CollOp, algo: CollAlgo) -> Result<()> {
 fn heuristic(op: CollOp, bytes: usize, ranks: usize) -> CollAlgo {
     match op {
         CollOp::Allreduce => {
-            if ranks > 2 && bytes >= ALLREDUCE_RING_MIN_BYTES {
+            if ranks > 2 && ranks.is_power_of_two() && bytes >= ALLREDUCE_RABENSEIFNER_MIN_BYTES {
+                CollAlgo::Rabenseifner
+            } else if ranks > 2 && bytes >= ALLREDUCE_RING_MIN_BYTES {
                 CollAlgo::Ring
             } else {
                 CollAlgo::Tree

@@ -367,6 +367,132 @@ fn reduce_scatter_algorithms_agree() {
     }
 }
 
+// ------------------------------------------------- rabenseifner allreduce
+
+#[test]
+fn rabenseifner_parses_and_validates() {
+    assert_eq!(CollAlgo::parse("rabenseifner"), Some(CollAlgo::Rabenseifner));
+    assert_eq!(CollAlgo::parse("rab"), Some(CollAlgo::Rabenseifner));
+    assert_eq!(
+        CollAlgo::parse("halving_doubling"),
+        Some(CollAlgo::Rabenseifner)
+    );
+    assert_eq!(
+        CollAlgo::from_code(CollAlgo::Rabenseifner.code()),
+        CollAlgo::Rabenseifner
+    );
+    let sel = CollSelector::new();
+    sel.force(CollOp::Allreduce, CollAlgo::Rabenseifner).unwrap();
+    assert_eq!(sel.forced(CollOp::Allreduce), CollAlgo::Rabenseifner);
+    // An allreduce-only schedule: every other op rejects it.
+    assert!(sel.force(CollOp::Bcast, CollAlgo::Rabenseifner).is_err());
+    assert!(sel.force(CollOp::ReduceScatter, CollAlgo::Rabenseifner).is_err());
+    assert!(sel.force(CollOp::Allgather, CollAlgo::Rabenseifner).is_err());
+}
+
+#[test]
+fn rabenseifner_heuristic_crossover() {
+    let sel = CollSelector::new();
+    let rab = select::ALLREDUCE_RABENSEIFNER_MIN_BYTES;
+    // Large payloads on power-of-two comms take halving/doubling ...
+    assert_eq!(sel.choose(CollOp::Allreduce, rab, 4), CollAlgo::Rabenseifner);
+    assert_eq!(sel.choose(CollOp::Allreduce, rab, 8), CollAlgo::Rabenseifner);
+    // ... below the floor the ring keeps the bandwidth regime ...
+    assert_eq!(sel.choose(CollOp::Allreduce, rab - 1, 4), CollAlgo::Ring);
+    // ... and off powers of two the `me ^ dist` pairing has no home.
+    assert_eq!(sel.choose(CollOp::Allreduce, rab, 6), CollAlgo::Ring);
+    assert_eq!(sel.choose(CollOp::Allreduce, rab, 2), CollAlgo::Tree);
+}
+
+/// The env path (`MPIX_COLL_ALLREDUCE`) and the info path
+/// (`mpix_coll_allreduce`) resolve through the same parse function in
+/// [`select::COLL_KEYS`] — asserted against both, so the two override
+/// surfaces cannot drift apart.
+#[test]
+fn env_and_info_overrides_share_one_parse_path() {
+    let key = &select::COLL_KEYS[CollOp::Allreduce.idx()];
+    assert_eq!(key.env, "MPIX_COLL_ALLREDUCE");
+    assert_eq!(key.info, "mpix_coll_allreduce");
+    // What `HintRegistry::from_env` would store for the env string ...
+    let env_code = (key.parse)("rabenseifner").unwrap();
+    assert_eq!(env_code, CollAlgo::Rabenseifner.code() as u64);
+    // ... is exactly what the info path stores ...
+    let sel = CollSelector::new();
+    let mut info = crate::info::Info::new();
+    info.set("mpix_coll_allreduce", "rabenseifner");
+    sel.apply_info(&info).unwrap();
+    assert_eq!(
+        sel.forced(CollOp::Allreduce).code() as u64,
+        env_code,
+        "info path stored a different code than the env parse"
+    );
+    // ... and both reject inapplicable ops at parse time.
+    let bcast_key = &select::COLL_KEYS[CollOp::Bcast.idx()];
+    assert_eq!((bcast_key.parse)("rabenseifner"), None);
+}
+
+/// Rabenseifner must agree with the reference on power-of-two sizes and
+/// delegate to the ring elsewhere, at counts exercising odd halving
+/// splits and empty ranges.
+#[test]
+fn allreduce_rabenseifner_agrees() {
+    for &n in &[2usize, 3, 4, 6, 8] {
+        for &count in &[1usize, 5, 13, 130] {
+            Universe::builder().ranks(n).run(|world| {
+                let me = world.rank() as u64;
+                let init: Vec<u64> = (0..count as u64).map(|i| me * 1000 + i + 1).collect();
+                let want: Vec<u64> = (0..count as u64)
+                    .map(|i| (0..n as u64).map(|r| r * 1000 + i + 1).sum())
+                    .collect();
+                let mut rab = init.clone();
+                allreduce_rabenseifner_t(&world, &mut rab, |a, b| *a += *b).unwrap();
+                assert_eq!(rab, want, "rabenseifner n={n} count={count}");
+            });
+        }
+    }
+}
+
+/// Forcing Rabenseifner via the info key is visible in the dispatch
+/// counters — including the delegation: off powers of two the entry
+/// point runs (and counts) the ring schedule instead.
+#[test]
+fn rabenseifner_dispatch_is_observable_in_metrics() {
+    Universe::builder().ranks(4).run(|world| {
+        let mut info = crate::info::Info::new();
+        info.set("mpix_coll_allreduce", "rab");
+        world.apply_coll_info(&info).unwrap();
+        assert_eq!(
+            world.coll_selector().forced(CollOp::Allreduce),
+            CollAlgo::Rabenseifner
+        );
+        barrier(&world).unwrap();
+        let m0 = world.fabric().metrics.snapshot();
+        let mut v = [world.rank() as u64 + 1];
+        allreduce_t(&world, &mut v, |a, b| *a += *b).unwrap();
+        assert_eq!(v[0], 10);
+        barrier(&world).unwrap();
+        let d = world.fabric().metrics.snapshot().since(&m0);
+        assert!(d.coll_allreduce_rabenseifner >= 1, "rab dispatch not observed");
+        assert_eq!(d.coll_allreduce_ring, 0);
+        assert_eq!(d.coll_allreduce_tree, 0);
+    });
+    Universe::builder().ranks(3).run(|world| {
+        world
+            .coll_selector()
+            .force(CollOp::Allreduce, CollAlgo::Rabenseifner)
+            .unwrap();
+        barrier(&world).unwrap();
+        let m0 = world.fabric().metrics.snapshot();
+        let mut v = [world.rank() as u64 + 1];
+        allreduce_t(&world, &mut v, |a, b| *a += *b).unwrap();
+        assert_eq!(v[0], 6);
+        barrier(&world).unwrap();
+        let d = world.fabric().metrics.snapshot().since(&m0);
+        assert!(d.coll_allreduce_ring >= 1, "non-pow2 delegation not observed");
+        assert_eq!(d.coll_allreduce_rabenseifner, 0);
+    });
+}
+
 /// Size mismatches are MPI-style errors, not panics (error-discipline
 /// regression for `reduce_scatter_block_t`).
 #[test]

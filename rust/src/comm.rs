@@ -21,7 +21,9 @@ use crate::info::Info;
 use crate::matching::{MatchAction, PostedRecv};
 use crate::metrics::Metrics;
 use crate::progress::{self, with_ep};
-use crate::request::{ProgressHandle, ProgressScope, ReqInner, Request, Status};
+use crate::request::{
+    PersistentKind, PersistentRequest, ProgressHandle, ProgressScope, ReqInner, Request, Status,
+};
 use crate::stream::Stream;
 use crate::util::pod::{bytes_of, bytes_of_mut, Pod};
 use crate::ANY_STREAM;
@@ -434,9 +436,38 @@ impl Comm {
         if src != crate::ANY_SOURCE {
             self.check_peer(src as usize)?;
         }
-        let fabric = &self.inner.fabric;
-        Metrics::bump(&fabric.metrics.requests_alloc);
+        Metrics::bump(&self.inner.fabric.metrics.requests_alloc);
         let req = ReqInner::new();
+        self.post_recv_into(
+            ctx,
+            RecvPtr(buf.as_mut_ptr()),
+            buf.len(),
+            src,
+            tag,
+            src_idx,
+            dst_idx,
+            &req,
+        );
+        Ok(Request::new(req, self.progress_handle(dst_idx)))
+    }
+
+    /// Post a receive described by raw parts, completing a caller-owned
+    /// request — the shared tail of `irecv`, persistent-recv starts, and
+    /// the schedule executor's [`Comm::coll_irecv_into`] (which is why it
+    /// takes the request by reference and allocates nothing itself).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn post_recv_into(
+        &self,
+        ctx: u32,
+        buf: RecvPtr,
+        cap: usize,
+        src: i32,
+        tag: i32,
+        src_idx: i32,
+        dst_idx: usize,
+        req: &Arc<ReqInner>,
+    ) {
+        let fabric = &self.inner.fabric;
         let me = (self.world_rank(self.rank()), self.my_vci(dst_idx));
         let posted = PostedRecv {
             ctx,
@@ -444,9 +475,9 @@ impl Comm {
             tag,
             src_stream: src_idx,
             dst_stream: dst_idx as i32,
-            buf: RecvPtr(buf.as_mut_ptr()),
-            cap: buf.len(),
-            req: Arc::clone(&req),
+            buf,
+            cap,
+            req: Arc::clone(req),
         };
         let ep = fabric.endpoint(me.0, me.1);
         with_ep(fabric, ep, |st| {
@@ -466,7 +497,6 @@ impl Comm {
                 );
             }
         });
-        Ok(Request::new(req, self.progress_handle(dst_idx)))
     }
 
     // ------------------------------------------------------- typed sugar
@@ -649,6 +679,79 @@ impl crate::coll::CommLike for Comm {
     }
 }
 
+// ----------------------------------------- schedule-executor entry points
+// The compiled-schedule runtime (`crate::sched`) issues p2p traffic on
+// the collective context but completes it into request objects the plan
+// preallocated at compile time — so the Nth start of a persistent
+// collective allocates nothing (no fresh `ReqInner`, no `requests_alloc`
+// bump; the amortization is counter-visible).
+
+impl Comm {
+    /// Nonblocking send on the collective context completing into a
+    /// caller-owned request. Returns `false` when the message went eager
+    /// (data copied out; the caller retires the node immediately instead
+    /// of tracking `req`), `true` when a rendezvous transfer is in
+    /// flight and will complete `req`.
+    pub(crate) fn coll_isend_into(
+        &self,
+        buf: &[u8],
+        dst: usize,
+        tag: i32,
+        req: &Arc<ReqInner>,
+    ) -> Result<bool> {
+        let ctx = self.inner.ctx | crate::coll::COLL_CTX_BIT;
+        let fabric = &self.inner.fabric;
+        if buf.len() <= fabric.cfg.eager_max {
+            self.push_eager(ctx, buf, dst, tag, 0, 0)?;
+            return Ok(false);
+        }
+        Metrics::bump(&fabric.metrics.rdv);
+        let me = (self.world_rank(self.rank()), self.my_vci(0));
+        let token = fabric.next_token(me.0);
+        let peer = (self.world_rank(dst), self.dst_vci(dst, 0));
+        let env = Envelope {
+            hdr: self.hdr(ctx, tag, 0, 0),
+            payload: Payload::Rts {
+                token,
+                len: buf.len(),
+                reply_rank: me.0,
+                reply_vci: me.1,
+            },
+        };
+        let src_ep = fabric.endpoint(me.0, me.1);
+        with_ep(fabric, src_ep, |st| {
+            st.pending_sends.insert(
+                token,
+                progress::SendXfer {
+                    src: SendPtr(buf.as_ptr()),
+                    len: buf.len(),
+                    cursor: 0,
+                    seq: 0,
+                    ch: None,
+                    req: Arc::clone(req),
+                },
+            );
+        });
+        self.push_envelope(me, peer, env)?;
+        Ok(true)
+    }
+
+    /// Post a receive on the collective context into a raw buffer,
+    /// completing a caller-owned request (the no-alloc sibling of
+    /// [`crate::coll::CommLike::coll_recv`] for compiled schedules).
+    pub(crate) fn coll_irecv_into(
+        &self,
+        buf: RecvPtr,
+        cap: usize,
+        src: usize,
+        tag: i32,
+        req: &Arc<ReqInner>,
+    ) {
+        let ctx = self.inner.ctx | crate::coll::COLL_CTX_BIT;
+        self.post_recv_into(ctx, buf, cap, src as i32, tag, ANY_STREAM, 0, req);
+    }
+}
+
 // ----------------------------------------------------- raw send helpers
 // Shared by Comm and ThreadComm (threadcomm remote traffic rides the proc
 // fabric with its own header addressing).
@@ -812,39 +915,28 @@ impl Comm {
 }
 
 // ------------------------------------------------- persistent requests
-
-/// A persistent operation (`MPI_Send_init`/`MPI_Recv_init`): captures the
-/// argument set once; `start()` launches an instance. Restartable any
-/// number of times (each start returns a fresh [`Request`] borrowing the
-/// persistent object, which borrows the buffer).
-pub struct PersistentSend<'buf> {
-    comm: Comm,
-    buf: &'buf [u8],
-    dst: usize,
-    tag: i32,
-}
-
-pub struct PersistentRecv<'buf> {
-    comm: Comm,
-    // Raw parts: start() hands out disjoint-lifetime Requests, each
-    // borrowing self mutably — the borrow checker serializes instances.
-    buf: RecvPtr,
-    cap: usize,
-    src: i32,
-    tag: i32,
-    _m: std::marker::PhantomData<&'buf mut [u8]>,
-}
+// All persistent operations — p2p inits here, collective inits in
+// `crate::sched` — return the one unified `PersistentRequest` type (see
+// `crate::request`): `start()` yields an ordinary `Request`, so wait /
+// test / waitall stay uniform across every operation kind.
 
 impl Comm {
-    /// `MPI_Send_init`.
-    pub fn send_init<'a>(&self, buf: &'a [u8], dst: usize, tag: i32) -> Result<PersistentSend<'a>> {
+    /// `MPI_Send_init`: capture the argument set once; each
+    /// [`PersistentRequest::start`] launches an instance.
+    pub fn send_init<'a>(
+        &self,
+        buf: &'a [u8],
+        dst: usize,
+        tag: i32,
+    ) -> Result<PersistentRequest<'a>> {
         self.check_peer(dst)?;
-        Ok(PersistentSend {
+        Ok(PersistentRequest::new(PersistentKind::Send {
             comm: self.clone(),
-            buf,
+            ptr: SendPtr(buf.as_ptr()),
+            len: buf.len(),
             dst,
             tag,
-        })
+        }))
     }
 
     /// `MPI_Recv_init`.
@@ -853,65 +945,32 @@ impl Comm {
         buf: &'a mut [u8],
         src: i32,
         tag: i32,
-    ) -> Result<PersistentRecv<'a>> {
+    ) -> Result<PersistentRequest<'a>> {
         if src != crate::ANY_SOURCE {
             self.check_peer(src as usize)?;
         }
-        Ok(PersistentRecv {
+        Ok(PersistentRequest::new(PersistentKind::Recv {
             comm: self.clone(),
-            buf: RecvPtr(buf.as_mut_ptr()),
+            ptr: RecvPtr(buf.as_mut_ptr()),
             cap: buf.len(),
             src,
             tag,
-            _m: std::marker::PhantomData,
-        })
+        }))
     }
-}
 
-impl<'buf> PersistentSend<'buf> {
-    /// `MPI_Start`.
-    pub fn start(&mut self) -> Result<Request<'_>> {
-        self.comm.isend(self.buf, self.dst, self.tag)
-    }
-}
-
-impl<'buf> PersistentRecv<'buf> {
-    /// `MPI_Start`.
-    pub fn start(&mut self) -> Result<Request<'_>> {
-        let fabric = &self.comm.inner.fabric;
-        Metrics::bump(&fabric.metrics.requests_alloc);
+    /// One persistent-recv instance: post the registered buffer again.
+    /// Called from [`PersistentRequest::start`]; raw parts because the
+    /// persistent object owns the borrow.
+    pub(crate) fn start_persistent_recv(
+        &self,
+        ptr: RecvPtr,
+        cap: usize,
+        src: i32,
+        tag: i32,
+    ) -> Result<Request<'static>> {
+        Metrics::bump(&self.inner.fabric.metrics.requests_alloc);
         let req = ReqInner::new();
-        let me = (
-            self.comm.world_rank(self.comm.rank()),
-            self.comm.my_vci(0),
-        );
-        let posted = PostedRecv {
-            ctx: self.comm.inner.ctx,
-            src: self.src,
-            tag: self.tag,
-            src_stream: ANY_STREAM,
-            dst_stream: 0,
-            buf: self.buf,
-            cap: self.cap,
-            req: Arc::clone(&req),
-        };
-        let ep = fabric.endpoint(me.0, me.1);
-        with_ep(fabric, ep, |st| {
-            fabric.refresh_inboxes(ep, st);
-            if let Some(MatchAction::StartTwoCopy {
-                token,
-                len,
-                reply_rank,
-                reply_vci,
-                posted,
-                status,
-            }) = st.matching.post(posted)
-            {
-                progress::start_two_copy(
-                    fabric, me.0, me.1, st, token, len, reply_rank, reply_vci, posted, status,
-                );
-            }
-        });
-        Ok(Request::new(req, self.comm.progress_handle(0)))
+        self.post_recv_into(self.inner.ctx, ptr, cap, src, tag, ANY_STREAM, 0, &req);
+        Ok(Request::new(req, self.progress_handle(0)))
     }
 }

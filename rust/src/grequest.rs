@@ -76,6 +76,41 @@ pub fn grequest_start_try(
     )
 }
 
+/// Remove a resident poll entry by identity. If the entry is currently
+/// checked out by a concurrent [`poll_rank`] pass, the retain misses it;
+/// residents handle that by also observing a tear-down flag in their
+/// callback and returning `Some` (self-removal on the next pass).
+pub(crate) fn unregister_resident(fabric: &Fabric, rank: u32, ident: &Arc<ReqInner>) {
+    fabric.ranks[rank as usize]
+        .grequests
+        .lock()
+        .unwrap()
+        .retain(|e| !Arc::ptr_eq(&e.req, ident));
+}
+
+/// Register a **resident** poll entry: a callback that stays installed
+/// across many operations instead of completing once — the schedule
+/// runtime (`crate::sched`) steps its executor from here, which is what
+/// makes compiled schedules progress under any `ProgressScope`
+/// (including per-domain progress threads: grequest polling is the
+/// services slot, serviced by exactly one domain pass at a time, so a
+/// resident callback never observes two concurrent invocations). The
+/// callback must return `None` while resident. Returns the entry's
+/// identity request, used by [`unregister_resident`].
+pub(crate) fn register_resident(fabric: &Arc<Fabric>, rank: u32, poll: TryPollFn) -> Arc<ReqInner> {
+    let req = ReqInner::new();
+    fabric.ranks[rank as usize]
+        .grequests
+        .lock()
+        .unwrap()
+        .push(GrequestEntry {
+            req: Arc::clone(&req),
+            poll,
+            wait: None,
+        });
+    req
+}
+
 /// Invoked by the progress engine: poll every pending generalized
 /// request of the rank, completing those whose tasks are done. Returns
 /// whether any entries were pending (the domain pass's activity signal).

@@ -27,6 +27,7 @@
 //! | Launcher: N ranks as threads over one fabric | [`universe`] |
 //! | API surface: communicators, requests, collectives, RMA, two-phase IO | [`comm`], [`request`], [`coll`], [`rma`], [`io`], [`datatype`], [`info`] |
 //! | Paper extensions | [`grequest`] (1), [`datatype`] (2), [`stream`] (3), [`enqueue`] + [`offload`] (4), [`threadcomm`] (5), [`progress`] (6) — partitionable into parallel work-stealing progress domains ([`progress::domain`]) |
+//! | Schedule-DAG runtime: persistent collectives as compiled plans | [`sched`] |
 //! | Transport: endpoints/VCIs, channels, matching | [`fabric`], [`matching`] |
 //! | Netmods: pluggable transports (inproc / shm / tcp) | [`netmod`] |
 //! | Substrate: SPSC ring, chunk pool, hint registry, counters | [`util::spsc`], [`util::pool`], [`util::hints`], [`metrics`] |
@@ -38,6 +39,18 @@
 //! by `MPIX_COLL_<OP>` env overrides, `mpix_coll_<op>` info keys, or a
 //! size heuristic, with per-algorithm dispatch counters in
 //! [`metrics::Metrics`].
+//!
+//! They are also *compilable* schedules ([`sched`]): the persistent
+//! plan-once/start-many API ([`Comm::allreduce_init`],
+//! [`Comm::bcast_init`], [`Comm::reduce_scatter_init`],
+//! [`Comm::allgather_init`]) runs the selector once, compiles the chosen
+//! algorithm into a dependency DAG of isend/irecv/reduce/copy nodes, and
+//! returns a [`request::PersistentRequest`] whose `start()` re-executes
+//! the plan with zero allocation and zero selector work — retired node
+//! by node from a resident grequest poll callback, so plans progress
+//! under any progress scope, including per-domain progress threads.
+//! `start_all` is `MPI_Startall`; point-to-point persistent requests
+//! (`send_init`/`recv_init`) share the same surface.
 //!
 //! MPI-IO ([`io`]) is the ROMIO-shaped consumer of the grequest and
 //! iovec extensions: `write_at_all`/`read_at_all` run **two-phase
@@ -91,6 +104,7 @@ pub mod progress;
 pub mod request;
 pub mod rma;
 pub mod runtime;
+pub mod sched;
 pub mod stream;
 pub mod threadcomm;
 pub mod universe;
@@ -101,7 +115,7 @@ pub use error::{MpiError, Result};
 pub use fabric::{FabricConfig, LockMode};
 pub use info::Info;
 pub use netmod::NetmodSel;
-pub use request::{waitall, waitany, Request, Status};
+pub use request::{start_all, waitall, waitany, PersistentRequest, Request, Status};
 pub use stream::{stream_comm_create, stream_comm_create_multiplex, Stream};
 pub use threadcomm::{ThreadComm, Threadcomm};
 pub use universe::Universe;

@@ -43,10 +43,21 @@ pub struct Metrics {
     pub offload_ops: AtomicU64,
     /// Requests allocated (the threadcomm small-message shortcut skips this).
     pub requests_alloc: AtomicU64,
+    /// Persistent-collective schedules compiled (one per `*_init` call;
+    /// the plan-once/start-many invariant is `sched_compiled == 1` no
+    /// matter how many times the plan is started).
+    pub sched_compiled: AtomicU64,
+    /// Schedule starts (`MPI_Start` on a compiled plan).
+    pub sched_starts: AtomicU64,
+    /// Schedule DAG nodes retired by the executor.
+    pub sched_nodes_retired: AtomicU64,
     /// Allreduce dispatches to the binomial-tree schedule.
     pub coll_allreduce_tree: AtomicU64,
     /// Allreduce dispatches to the ring schedule.
     pub coll_allreduce_ring: AtomicU64,
+    /// Allreduce dispatches to the Rabenseifner schedule
+    /// (reduce_scatter + allgather fused in one DAG).
+    pub coll_allreduce_rabenseifner: AtomicU64,
     /// Bcast dispatches to the binomial-tree schedule.
     pub coll_bcast_binomial: AtomicU64,
     /// Bcast dispatches to the pipelined-chain schedule.
@@ -122,8 +133,12 @@ impl Metrics {
             rma_serviced: self.rma_serviced.load(Relaxed),
             offload_ops: self.offload_ops.load(Relaxed),
             requests_alloc: self.requests_alloc.load(Relaxed),
+            sched_compiled: self.sched_compiled.load(Relaxed),
+            sched_starts: self.sched_starts.load(Relaxed),
+            sched_nodes_retired: self.sched_nodes_retired.load(Relaxed),
             coll_allreduce_tree: self.coll_allreduce_tree.load(Relaxed),
             coll_allreduce_ring: self.coll_allreduce_ring.load(Relaxed),
+            coll_allreduce_rabenseifner: self.coll_allreduce_rabenseifner.load(Relaxed),
             coll_bcast_binomial: self.coll_bcast_binomial.load(Relaxed),
             coll_bcast_chain: self.coll_bcast_chain.load(Relaxed),
             coll_reduce_scatter_linear: self.coll_reduce_scatter_linear.load(Relaxed),
@@ -169,10 +184,17 @@ pub struct MetricsSnapshot {
     pub rma_serviced: u64,
     pub offload_ops: u64,
     pub requests_alloc: u64,
+    /// Schedule-runtime tallies (see `crate::sched`): plans compiled,
+    /// starts, and DAG nodes retired — how the agreement suite proves a
+    /// persistent collective compiled once and amortized N starts.
+    pub sched_compiled: u64,
+    pub sched_starts: u64,
+    pub sched_nodes_retired: u64,
     /// Per-algorithm collective dispatch tallies (see `coll::select`):
     /// which schedule each multi-algorithm collective actually ran.
     pub coll_allreduce_tree: u64,
     pub coll_allreduce_ring: u64,
+    pub coll_allreduce_rabenseifner: u64,
     pub coll_bcast_binomial: u64,
     pub coll_bcast_chain: u64,
     pub coll_reduce_scatter_linear: u64,
@@ -202,7 +224,7 @@ impl MetricsSnapshot {
     /// cross-checks the name table against the `Metrics` struct — together
     /// they keep reporting tools (`perf_probes`) from silently dropping
     /// counters.
-    pub fn named_fields(&self) -> [(&'static str, u64); 34] {
+    pub fn named_fields(&self) -> [(&'static str, u64); 38] {
         let MetricsSnapshot {
             eager_inline,
             eager_heap,
@@ -222,8 +244,12 @@ impl MetricsSnapshot {
             rma_serviced,
             offload_ops,
             requests_alloc,
+            sched_compiled,
+            sched_starts,
+            sched_nodes_retired,
             coll_allreduce_tree,
             coll_allreduce_ring,
+            coll_allreduce_rabenseifner,
             coll_bcast_binomial,
             coll_bcast_chain,
             coll_reduce_scatter_linear,
@@ -258,8 +284,12 @@ impl MetricsSnapshot {
             ("rma_serviced", rma_serviced),
             ("offload_ops", offload_ops),
             ("requests_alloc", requests_alloc),
+            ("sched_compiled", sched_compiled),
+            ("sched_starts", sched_starts),
+            ("sched_nodes_retired", sched_nodes_retired),
             ("coll_allreduce_tree", coll_allreduce_tree),
             ("coll_allreduce_ring", coll_allreduce_ring),
+            ("coll_allreduce_rabenseifner", coll_allreduce_rabenseifner),
             ("coll_bcast_binomial", coll_bcast_binomial),
             ("coll_bcast_chain", coll_bcast_chain),
             ("coll_reduce_scatter_linear", coll_reduce_scatter_linear),
@@ -298,8 +328,13 @@ impl MetricsSnapshot {
             rma_serviced: self.rma_serviced - earlier.rma_serviced,
             offload_ops: self.offload_ops - earlier.offload_ops,
             requests_alloc: self.requests_alloc - earlier.requests_alloc,
+            sched_compiled: self.sched_compiled - earlier.sched_compiled,
+            sched_starts: self.sched_starts - earlier.sched_starts,
+            sched_nodes_retired: self.sched_nodes_retired - earlier.sched_nodes_retired,
             coll_allreduce_tree: self.coll_allreduce_tree - earlier.coll_allreduce_tree,
             coll_allreduce_ring: self.coll_allreduce_ring - earlier.coll_allreduce_ring,
+            coll_allreduce_rabenseifner: self.coll_allreduce_rabenseifner
+                - earlier.coll_allreduce_rabenseifner,
             coll_bcast_binomial: self.coll_bcast_binomial - earlier.coll_bcast_binomial,
             coll_bcast_chain: self.coll_bcast_chain - earlier.coll_bcast_chain,
             coll_reduce_scatter_linear: self.coll_reduce_scatter_linear
@@ -345,7 +380,7 @@ mod tests {
         let s = m.snapshot();
         let rows = s.named_fields();
         // One row per snapshot field, values matching the struct.
-        assert_eq!(rows.len(), 34);
+        assert_eq!(rows.len(), 38);
         assert_eq!(
             rows.iter().find(|(n, _)| *n == "netmod_bytes_rx"),
             Some(&("netmod_bytes_rx", 9))
@@ -354,6 +389,6 @@ mod tests {
         let mut names: Vec<_> = rows.iter().map(|(n, _)| *n).collect();
         names.sort_unstable();
         names.dedup();
-        assert_eq!(names.len(), 34);
+        assert_eq!(names.len(), 38);
     }
 }

@@ -85,6 +85,16 @@ impl ReqInner {
         unsafe { *self.status.get() }
     }
 
+    /// Re-arm a completed request for reuse — persistent operations
+    /// recycle one `ReqInner` per registered node across starts so the
+    /// steady state allocates nothing. Caller must guarantee no thread
+    /// still observes the previous completion (the schedule executor
+    /// resets only between runs, under the run lock).
+    pub(crate) fn reset(&self) {
+        *self.err.lock().unwrap() = None;
+        self.state.store(PENDING, Ordering::Release); // lint: atomic(completion)
+    }
+
     pub fn take_result(&self) -> Result<Status> {
         match self.state.load(Ordering::Acquire) { // lint: atomic(completion)
             COMPLETE => Ok(self.status()),
@@ -205,6 +215,132 @@ impl Drop for Request<'_> {
             backoff(&mut spins);
         }
     }
+}
+
+/// A persistent operation (`MPI_Send_init`/`MPI_Recv_init`/
+/// `MPIX_Allreduce_init`…): the argument set — and for collectives the
+/// compiled schedule DAG and pooled staging buffers — captured once;
+/// [`start`](PersistentRequest::start) launches an instance.
+///
+/// This is the one persistent surface of the library: p2p inits and the
+/// schedule-backed collective inits ([`crate::Comm::allreduce_init`] and
+/// friends) all return this type, and every start yields an ordinary
+/// [`Request`], so completion is uniform across p2p, grequests, split-IO
+/// and persistent operations — one `wait`/`test`/[`waitall`] vocabulary,
+/// no per-kind code paths.
+///
+/// Each returned `Request` borrows the persistent object mutably, which
+/// borrows the registered buffers (`'buf`): the borrow checker serializes
+/// instances and keeps the raw pointers registered at init alive.
+#[must_use = "persistent requests do nothing until started"]
+pub struct PersistentRequest<'buf> {
+    kind: PersistentKind,
+    _buf: PhantomData<&'buf mut [u8]>,
+}
+
+/// What a `start()` launches. P2p kinds re-post through the normal
+/// isend/irecv machinery; `Sched` re-runs a compiled schedule DAG
+/// ([`crate::sched`]) with zero allocation and zero selector work.
+pub(crate) enum PersistentKind {
+    Send {
+        comm: crate::comm::Comm,
+        ptr: crate::fabric::SendPtr,
+        len: usize,
+        dst: usize,
+        tag: i32,
+    },
+    Recv {
+        comm: crate::comm::Comm,
+        ptr: crate::fabric::RecvPtr,
+        cap: usize,
+        src: i32,
+        tag: i32,
+    },
+    Sched(Arc<crate::sched::SchedState>),
+}
+
+impl<'buf> PersistentRequest<'buf> {
+    pub(crate) fn new(kind: PersistentKind) -> Self {
+        PersistentRequest {
+            kind,
+            _buf: PhantomData,
+        }
+    }
+
+    /// `MPI_Start`: launch one instance. The returned [`Request`] is
+    /// waited/tested like any other; the persistent object stays armed
+    /// for the next start.
+    pub fn start(&mut self) -> Result<Request<'_>> {
+        match &self.kind {
+            PersistentKind::Send {
+                comm,
+                ptr,
+                len,
+                dst,
+                tag,
+            } => {
+                // SAFETY: `'buf` outlives self; &mut self serializes
+                // instances, so the slice is valid for the Request's
+                // borrow of self.
+                let buf = unsafe { std::slice::from_raw_parts(ptr.0, *len) };
+                comm.isend(buf, *dst, *tag)
+            }
+            PersistentKind::Recv {
+                comm,
+                ptr,
+                cap,
+                src,
+                tag,
+            } => comm.start_persistent_recv(*ptr, *cap, *src, *tag),
+            PersistentKind::Sched(state) => crate::sched::start_run(state),
+        }
+    }
+
+    /// Mutable access to the primary registered buffer between starts
+    /// (MPI lets applications refill persistent buffers while no
+    /// instance is active; `&mut self` enforces exactly that). `None`
+    /// for kinds without a writable registered buffer (persistent
+    /// sends, reduce_scatter/allgather send inputs).
+    pub fn buf_mut(&mut self) -> Option<&mut [u8]> {
+        match &self.kind {
+            PersistentKind::Send { .. } => None,
+            PersistentKind::Recv { ptr, cap, .. } => {
+                // SAFETY: `'buf` mutable registration; no instance is
+                // active while the caller holds this &mut borrow.
+                Some(unsafe { std::slice::from_raw_parts_mut(ptr.0, *cap) })
+            }
+            PersistentKind::Sched(state) => state.primary_buf_mut(),
+        }
+    }
+
+    /// The schedule state behind a collective plan — test instrumentation
+    /// (pool/staging assertions in `crate::sched::tests`).
+    #[cfg(test)]
+    pub(crate) fn sched_state(&self) -> Option<&Arc<crate::sched::SchedState>> {
+        match &self.kind {
+            PersistentKind::Sched(state) => Some(state),
+            _ => None,
+        }
+    }
+}
+
+impl Drop for PersistentRequest<'_> {
+    /// `MPI_Request_free` on a persistent handle: quiesce any in-flight
+    /// instance (the registered buffers die with `'buf`) and, for
+    /// schedule-backed kinds, unregister the resident progress hook so
+    /// the schedule's resources are released (see [`crate::sched`]).
+    fn drop(&mut self) {
+        if let PersistentKind::Sched(state) = &self.kind {
+            crate::sched::release(state);
+        }
+    }
+}
+
+/// `MPI_Startall`: start every persistent request in the set. The
+/// returned requests feed straight into [`waitall`] — the same batch
+/// vocabulary as nonblocking p2p.
+pub fn start_all<'a>(reqs: &'a mut [PersistentRequest<'_>]) -> Result<Vec<Request<'a>>> {
+    reqs.iter_mut().map(|p| p.start()).collect()
 }
 
 /// `MPI_Waitall`: wait on a set, driving each scope; also invokes

@@ -1,0 +1,849 @@
+//! Collective algorithms as compiled schedules, and the persistent
+//! `Comm::*_init` API surface.
+//!
+//! Each builder here emits the *same* communication pattern as its
+//! inline sibling in `crate::coll` (same peers, same tag discipline,
+//! same fold order — so persistent results are byte-identical to
+//! one-shot), but expressed as a dependency DAG instead of a blocking
+//! loop. Two structural differences the DAG affords:
+//!
+//! * no per-step outgoing-copy staging: sends read straight from the
+//!   user buffer, with **completion edges** (a receive that overwrites a
+//!   range depends on the send that read it) replacing the copies the
+//!   inline loops make to keep an isend from aliasing a receive;
+//! * independent rounds overlap: a chain-bcast relay of chunk `c` runs
+//!   while chunk `c+1` is still arriving, pairwise sends all post
+//!   up-front, and Rabenseifner's two phases fuse into one schedule with
+//!   no barrier between them.
+//!
+//! Algorithm selection runs **once**, at `*_init` (the per-algorithm
+//! dispatch counter is bumped then, too — one tally per plan, mirroring
+//! one tally per one-shot call); starts do zero selector work.
+
+use crate::coll::select::{CollAlgo, CollOp, BCAST_CHAIN_CHUNK_BYTES};
+use crate::coll::CommLike;
+use crate::comm::Comm;
+use crate::error::{MpiError, Result};
+use crate::fabric::{RecvPtr, SendPtr};
+use crate::metrics::Metrics;
+use crate::request::{PersistentKind, PersistentRequest};
+use crate::util::pod::Pod;
+use std::sync::Arc;
+
+use super::{deps, exec, BufId, BufRange, NodeOp, ReduceFn, SchedBuilder};
+
+/// Range in the primary (writable) user buffer.
+fn prim(off: usize, len: usize) -> BufRange {
+    BufRange::new(BufId::Primary, off, len)
+}
+
+/// Range in the secondary read-only user buffer.
+fn inp(off: usize, len: usize) -> BufRange {
+    BufRange::new(BufId::Input, off, len)
+}
+
+/// Range in staging cell `id`.
+fn st(id: BufId, off: usize, len: usize) -> BufRange {
+    BufRange::new(id, off, len)
+}
+
+/// Compile a typed fold into the plan's byte-level [`ReduceFn`].
+/// Element-wise with unaligned loads/stores: the source side is usually
+/// a pool-staged scratch cell (alignment 1).
+pub(crate) fn byte_fold<T: Pod>(op: impl Fn(&mut T, &T) + Send + Sync + 'static) -> ReduceFn {
+    Arc::new(move |dst, src, len| {
+        let n = len / std::mem::size_of::<T>();
+        for k in 0..n {
+            // SAFETY: the executor passes ranges of equal `len` bytes
+            // inside live buffers; `read_unaligned`/`write_unaligned`
+            // because staging cells make no alignment promise.
+            unsafe {
+                let d = (dst as *mut T).add(k);
+                let s = (src as *const T).add(k);
+                let mut a = std::ptr::read_unaligned(d);
+                let b = std::ptr::read_unaligned(s);
+                op(&mut a, &b);
+                std::ptr::write_unaligned(d, a);
+            }
+        }
+    })
+}
+
+impl Comm {
+    /// Plan a persistent `MPI_Allreduce` over `buf` (in-out):
+    /// `MPI_Allreduce_init`. Collective: every rank must call it at the
+    /// same point (the plan reserves a collective-tag window and runs
+    /// the selector against the common size). Returns the plan; each
+    /// [`PersistentRequest::start`] then runs one iteration with zero
+    /// allocation and zero selector work.
+    ///
+    /// Unlike the one-shot [`crate::coll::allreduce_t`], the fold
+    /// closure must be `Send + Sync + 'static`: it is compiled into the
+    /// plan and invoked from whichever thread drives progress.
+    pub fn allreduce_init<'buf, T: Pod>(
+        &self,
+        buf: &'buf mut [T],
+        op: impl Fn(&mut T, &T) + Send + Sync + 'static,
+    ) -> Result<PersistentRequest<'buf>> {
+        let n = self.size();
+        let me = self.rank();
+        let elem = std::mem::size_of::<T>();
+        let bytes = buf.len() * elem;
+        let base_tag = self.next_coll_tag();
+        let mut b = SchedBuilder::new();
+        if n > 1 && !buf.is_empty() {
+            match self.selector().choose(CollOp::Allreduce, bytes, n) {
+                CollAlgo::Rabenseifner if n.is_power_of_two() => {
+                    Metrics::bump(&self.metrics().coll_allreduce_rabenseifner);
+                    build_allreduce_rabenseifner(&mut b, me, n, buf.len(), elem);
+                }
+                // Rabenseifner needs a power of two; delegate like the
+                // one-shot path does (and tally the schedule that runs).
+                CollAlgo::Ring | CollAlgo::Rabenseifner => {
+                    Metrics::bump(&self.metrics().coll_allreduce_ring);
+                    build_allreduce_ring(&mut b, me, n, buf.len(), elem);
+                }
+                _ => {
+                    Metrics::bump(&self.metrics().coll_allreduce_tree);
+                    build_allreduce_tree(&mut b, me, n, bytes);
+                }
+            }
+        }
+        let sched = b.build(base_tag, Some(byte_fold::<T>(op)));
+        let state = exec::install(
+            self,
+            sched,
+            Some((RecvPtr(buf.as_mut_ptr() as *mut u8), bytes)),
+            None,
+        );
+        Ok(PersistentRequest::new(PersistentKind::Sched(state)))
+    }
+
+    /// Plan a persistent `MPI_Bcast` from `root`: `MPI_Bcast_init`.
+    /// Collective; see [`Comm::allreduce_init`] for the start-time
+    /// guarantees. Refill the root's payload between starts via
+    /// [`PersistentRequest::buf_mut`].
+    pub fn bcast_init<'buf, T: Pod>(
+        &self,
+        buf: &'buf mut [T],
+        root: usize,
+    ) -> Result<PersistentRequest<'buf>> {
+        let n = self.size();
+        if root >= n {
+            return Err(MpiError::RankOutOfRange {
+                rank: root as i32,
+                size: n,
+            });
+        }
+        let me = self.rank();
+        let bytes = std::mem::size_of_val(buf);
+        let base_tag = self.next_coll_tag();
+        let mut b = SchedBuilder::new();
+        if n > 1 && !buf.is_empty() {
+            match self.selector().choose(CollOp::Bcast, bytes, n) {
+                CollAlgo::Chain => {
+                    Metrics::bump(&self.metrics().coll_bcast_chain);
+                    build_bcast_chain(&mut b, me, n, bytes, root);
+                }
+                _ => {
+                    Metrics::bump(&self.metrics().coll_bcast_binomial);
+                    build_bcast_binomial(&mut b, me, n, bytes, root, 0, None);
+                }
+            }
+        }
+        let sched = b.build(base_tag, None);
+        let state = exec::install(
+            self,
+            sched,
+            Some((RecvPtr(buf.as_mut_ptr() as *mut u8), bytes)),
+            None,
+        );
+        Ok(PersistentRequest::new(PersistentKind::Sched(state)))
+    }
+
+    /// Plan a persistent `MPI_Reduce_scatter_block`:
+    /// `MPI_Reduce_scatter_block_init`. `send.len()` must be
+    /// `size() * recv.len()`. Collective; the op must be commutative
+    /// when the pairwise schedule is eligible (same contract as
+    /// [`crate::coll::reduce_scatter_block_t`]).
+    pub fn reduce_scatter_init<'buf, T: Pod>(
+        &self,
+        send: &'buf [T],
+        recv: &'buf mut [T],
+        op: impl Fn(&mut T, &T) + Send + Sync + 'static,
+    ) -> Result<PersistentRequest<'buf>> {
+        let n = self.size();
+        let me = self.rank();
+        let elem = std::mem::size_of::<T>();
+        let blk = recv.len();
+        if send.len() != n * blk {
+            return Err(MpiError::SizeMismatch(format!(
+                "reduce_scatter_init: send has {} elements, want size * recv = {n} * {blk} = {}",
+                send.len(),
+                n * blk
+            )));
+        }
+        let base_tag = self.next_coll_tag();
+        let mut b = SchedBuilder::new();
+        if blk > 0 {
+            if n <= 1 {
+                b.node(
+                    NodeOp::Copy {
+                        src: inp(0, blk * elem),
+                        dst: prim(0, blk * elem),
+                    },
+                    &[],
+                );
+            } else {
+                match self.selector().choose(CollOp::ReduceScatter, send.len() * elem, n) {
+                    CollAlgo::Pairwise => {
+                        Metrics::bump(&self.metrics().coll_reduce_scatter_pairwise);
+                        build_reduce_scatter_pairwise(&mut b, me, n, blk * elem);
+                    }
+                    _ => {
+                        Metrics::bump(&self.metrics().coll_reduce_scatter_linear);
+                        build_reduce_scatter_linear(&mut b, me, n, blk * elem);
+                    }
+                }
+            }
+        }
+        let sched = b.build(base_tag, Some(byte_fold::<T>(op)));
+        let state = exec::install(
+            self,
+            sched,
+            Some((RecvPtr(recv.as_mut_ptr() as *mut u8), blk * elem)),
+            Some((SendPtr(send.as_ptr() as *const u8), send.len() * elem)),
+        );
+        Ok(PersistentRequest::new(PersistentKind::Sched(state)))
+    }
+
+    /// Plan a persistent `MPI_Allgather`: `MPI_Allgather_init`.
+    /// `recv.len()` must be `size() * send.len()`. Collective.
+    pub fn allgather_init<'buf, T: Pod>(
+        &self,
+        send: &'buf [T],
+        recv: &'buf mut [T],
+    ) -> Result<PersistentRequest<'buf>> {
+        let n = self.size();
+        let me = self.rank();
+        let elem = std::mem::size_of::<T>();
+        let blk = send.len();
+        if recv.len() != n * blk {
+            return Err(MpiError::SizeMismatch(format!(
+                "allgather_init: recv has {} elements, want size * send = {n} * {blk} = {}",
+                recv.len(),
+                n * blk
+            )));
+        }
+        let base_tag = self.next_coll_tag();
+        let mut b = SchedBuilder::new();
+        if blk > 0 {
+            if n <= 1 {
+                b.node(
+                    NodeOp::Copy {
+                        src: inp(0, blk * elem),
+                        dst: prim(0, blk * elem),
+                    },
+                    &[],
+                );
+            } else {
+                match self.selector().choose(CollOp::Allgather, recv.len() * elem, n) {
+                    CollAlgo::RecDbl if n.is_power_of_two() => {
+                        Metrics::bump(&self.metrics().coll_allgather_recdbl);
+                        build_allgather_recdbl(&mut b, me, n, blk * elem);
+                    }
+                    _ => {
+                        Metrics::bump(&self.metrics().coll_allgather_ring);
+                        build_allgather_ring(&mut b, me, n, blk * elem);
+                    }
+                }
+            }
+        }
+        let sched = b.build(base_tag, None);
+        let state = exec::install(
+            self,
+            sched,
+            Some((RecvPtr(recv.as_mut_ptr() as *mut u8), recv.len() * elem)),
+            Some((SendPtr(send.as_ptr() as *const u8), blk * elem)),
+        );
+        Ok(PersistentRequest::new(PersistentKind::Sched(state)))
+    }
+}
+
+/// Ring allreduce (`coll::allreduce_ring_t`'s pattern): ring
+/// reduce-scatter (tag_off 0), then ring allgather of the reduced
+/// segments (tag_off 1). Unlike the inline loop there is no outgoing
+/// staging copy — phase-2 receives carry completion edges to the
+/// phase-1 sends that read the ranges they overwrite.
+fn build_allreduce_ring(b: &mut SchedBuilder, me: usize, n: usize, count: usize, elem: usize) {
+    let q = count / n;
+    let rem = count % n;
+    // Near-equal partition, same as the inline schedule: segment r is
+    // (start, len) in elements; the first `rem` segments carry one
+    // extra. Zero-length exchanges are still matched.
+    let seg = |r: usize| {
+        let r = r % n;
+        (r * q + r.min(rem), q + usize::from(r < rem))
+    };
+    let right = (me + 1) % n;
+    let left = (me + n - 1) % n;
+    let max_seg = q + usize::from(rem > 0);
+    let tmp = b.stage(max_seg * elem);
+    // Phase 1 — ring reduce-scatter: step s sends segment (me−s), folds
+    // the incoming partial into segment (me−s−1).
+    let mut prev_send: Option<u32> = None;
+    let mut prev_recv: Option<u32> = None;
+    let mut prev_fold: Option<u32> = None;
+    let mut p1_sends: Vec<u32> = Vec::with_capacity(n - 1);
+    for s in 0..n - 1 {
+        let (ss, sl) = seg(me + n - s);
+        let (rs, rl) = seg(me + n - s - 1);
+        // Send after the fold that produced this segment; chain sends
+        // to keep same-(peer, tag) posting order.
+        let send = b.node(
+            NodeOp::Send {
+                buf: prim(ss * elem, sl * elem),
+                peer: right,
+                tag_off: 0,
+            },
+            &deps(&[prev_fold, prev_send]),
+        );
+        // The scratch cell is reused every step: recv only after the
+        // previous fold consumed it (and in posting order).
+        let recv = b.node(
+            NodeOp::Recv {
+                buf: st(tmp, 0, rl * elem),
+                peer: left,
+                tag_off: 0,
+            },
+            &deps(&[prev_recv, prev_fold]),
+        );
+        let fold = b.node(
+            NodeOp::Reduce {
+                src: st(tmp, 0, rl * elem),
+                dst: prim(rs * elem, rl * elem),
+            },
+            &deps(&[Some(recv)]),
+        );
+        p1_sends.push(send);
+        prev_send = Some(send);
+        prev_recv = Some(recv);
+        prev_fold = Some(fold);
+    }
+    // Phase 2 — ring allgather of reduced segments: step s relays
+    // segment (me+1−s), receives segment (me−s).
+    let mut prev_s2: Option<u32> = None;
+    let mut prev_r2: Option<u32> = None;
+    for s in 0..n - 1 {
+        let (ss, sl) = seg(me + 1 + n - s);
+        let (rs, rl) = seg(me + n - s);
+        // s = 0 relays the fully-reduced own segment (ready at the last
+        // fold); s > 0 relays what the previous step just landed.
+        let send = b.node(
+            NodeOp::Send {
+                buf: prim(ss * elem, sl * elem),
+                peer: right,
+                tag_off: 1,
+            },
+            &deps(&[if s == 0 { prev_fold } else { prev_r2 }, prev_s2]),
+        );
+        // Completion edge: this receive overwrites the segment phase-1
+        // step s sent from — that send must have fully completed.
+        let recv = b.node(
+            NodeOp::Recv {
+                buf: prim(rs * elem, rl * elem),
+                peer: left,
+                tag_off: 1,
+            },
+            &deps(&[Some(p1_sends[s]), prev_r2]),
+        );
+        prev_s2 = Some(send);
+        prev_r2 = Some(recv);
+    }
+}
+
+/// Tree allreduce (`coll::allreduce_tree_t`'s pattern): binomial reduce
+/// to rank 0 (tag_off 0), binomial bcast back (tag_off 1).
+fn build_allreduce_tree(b: &mut SchedBuilder, me: usize, n: usize, bytes: usize) {
+    // Phase 1 — binomial reduce to rank 0, mirroring `coll::reduce_t`
+    // (root 0, so vrank == me): fold children smaller-mask-first, then
+    // send the partial to the parent.
+    let mut chain: Option<u32> = None;
+    let mut tmp: Option<BufId> = None;
+    let mut mask = 1usize;
+    while mask < n {
+        if me & mask != 0 {
+            let parent = me - mask;
+            let send = b.node(
+                NodeOp::Send {
+                    buf: prim(0, bytes),
+                    peer: parent,
+                    tag_off: 0,
+                },
+                &deps(&[chain]),
+            );
+            chain = Some(send);
+            break;
+        }
+        let child = me + mask;
+        if child < n {
+            let cell = *tmp.get_or_insert_with(|| b.stage(bytes));
+            // One scratch cell, reused per child: chain recvs behind the
+            // fold that consumed the previous partial.
+            let recv = b.node(
+                NodeOp::Recv {
+                    buf: st(cell, 0, bytes),
+                    peer: child,
+                    tag_off: 0,
+                },
+                &deps(&[chain]),
+            );
+            let fold = b.node(
+                NodeOp::Reduce {
+                    src: st(cell, 0, bytes),
+                    dst: prim(0, bytes),
+                },
+                &deps(&[Some(recv)]),
+            );
+            chain = Some(fold);
+        }
+        mask <<= 1;
+    }
+    // Phase 2 — binomial bcast from rank 0 (tag_off 1). The parent-recv
+    // overwrites the whole buffer, so it gates on the reduce-phase
+    // terminal (our send upward, or the last fold at rank 0).
+    build_bcast_binomial(b, me, n, bytes, 0, 1, chain);
+}
+
+/// Binomial-tree bcast (`coll::bcast::binomial`'s pattern). `extra_dep`
+/// gates the whole subtree (used by the tree-allreduce composition);
+/// child sends fan out concurrently once the payload is in hand.
+fn build_bcast_binomial(
+    b: &mut SchedBuilder,
+    me: usize,
+    n: usize,
+    bytes: usize,
+    root: usize,
+    tag_off: i32,
+    extra_dep: Option<u32>,
+) {
+    let vrank = (me + n - root) % n;
+    let mut gate = extra_dep;
+    if vrank != 0 {
+        let mut mask = 1usize;
+        while mask <= vrank {
+            mask <<= 1;
+        }
+        mask >>= 1;
+        let parent = (vrank - mask + root) % n;
+        let recv = b.node(
+            NodeOp::Recv {
+                buf: prim(0, bytes),
+                peer: parent,
+                tag_off,
+            },
+            &deps(&[extra_dep]),
+        );
+        gate = Some(recv);
+    }
+    let mut mask = 1usize;
+    while mask <= vrank {
+        mask <<= 1;
+    }
+    while mask < n {
+        let child_v = vrank + mask;
+        if child_v < n {
+            let child = (child_v + root) % n;
+            b.node(
+                NodeOp::Send {
+                    buf: prim(0, bytes),
+                    peer: child,
+                    tag_off,
+                },
+                &deps(&[gate]),
+            );
+        }
+        mask <<= 1;
+    }
+}
+
+/// Pipelined-chain bcast (`coll::bcast_chain`'s pattern): ranks in
+/// vrank order relay [`BCAST_CHAIN_CHUNK_BYTES`] chunks; chunk `c`
+/// forwards while chunk `c+1` arrives. Same-(peer, tag) recvs and sends
+/// are order-chained; no staging.
+fn build_bcast_chain(b: &mut SchedBuilder, me: usize, n: usize, bytes: usize, root: usize) {
+    let vrank = (me + n - root) % n;
+    // vrank−1/+1 in root-relative order are real ranks me−1/+1.
+    let prev_rank = (me + n - 1) % n;
+    let next_rank = (me + 1) % n;
+    let last = vrank == n - 1;
+    let mut off = 0usize;
+    let mut prev_recv: Option<u32> = None;
+    let mut prev_send: Option<u32> = None;
+    while off < bytes {
+        let len = BCAST_CHAIN_CHUNK_BYTES.min(bytes - off);
+        let mut got: Option<u32> = None;
+        if vrank != 0 {
+            let r = b.node(
+                NodeOp::Recv {
+                    buf: prim(off, len),
+                    peer: prev_rank,
+                    tag_off: 0,
+                },
+                &deps(&[prev_recv]),
+            );
+            prev_recv = Some(r);
+            got = Some(r);
+        }
+        if !last {
+            let s = b.node(
+                NodeOp::Send {
+                    buf: prim(off, len),
+                    peer: next_rank,
+                    tag_off: 0,
+                },
+                &deps(&[got, prev_send]),
+            );
+            prev_send = Some(s);
+        }
+        off += len;
+    }
+}
+
+/// Pairwise reduce_scatter (`coll::reduce_scatter_block_pairwise_t`'s
+/// pattern). All n−1 sends read the immutable input buffer, so they
+/// post as roots — full overlap the inline loop cannot express. `blk`
+/// in bytes.
+fn build_reduce_scatter_pairwise(b: &mut SchedBuilder, me: usize, n: usize, blk: usize) {
+    let c0 = b.node(
+        NodeOp::Copy {
+            src: inp(me * blk, blk),
+            dst: prim(0, blk),
+        },
+        &[],
+    );
+    let tmp = b.stage(blk);
+    let mut prev_fold = c0;
+    for s in 1..n {
+        let dst = (me + s) % n;
+        let src = (me + n - s) % n;
+        b.node(
+            NodeOp::Send {
+                buf: inp(dst * blk, blk),
+                peer: dst,
+                tag_off: 0,
+            },
+            &[],
+        );
+        // Scratch reuse: recv after the previous fold consumed the cell.
+        let recv = b.node(
+            NodeOp::Recv {
+                buf: st(tmp, 0, blk),
+                peer: src,
+                tag_off: 0,
+            },
+            &deps(&[if s > 1 { Some(prev_fold) } else { None }]),
+        );
+        // Serial fold chain into the result block (commutative op:
+        // ring-arrival order, as inline).
+        let fold = b.node(
+            NodeOp::Reduce {
+                src: st(tmp, 0, blk),
+                dst: prim(0, blk),
+            },
+            &[recv, prev_fold],
+        );
+        prev_fold = fold;
+    }
+}
+
+/// Linear reduce_scatter (`coll::reduce_scatter_block_linear_t`'s
+/// pattern): binomial reduce of the whole `n·blk` accumulator to rank 0
+/// (tag_off 0), then linear scatter (tag_off 1). The accumulator is a
+/// staging cell seeded by a copy of the input. `blk` in bytes.
+fn build_reduce_scatter_linear(b: &mut SchedBuilder, me: usize, n: usize, blk: usize) {
+    let total = n * blk;
+    let acc = b.stage(total);
+    let copy = b.node(
+        NodeOp::Copy {
+            src: inp(0, total),
+            dst: st(acc, 0, total),
+        },
+        &[],
+    );
+    let mut chain = copy;
+    let mut tmp: Option<BufId> = None;
+    let mut mask = 1usize;
+    while mask < n {
+        if me & mask != 0 {
+            let parent = me - mask;
+            let send = b.node(
+                NodeOp::Send {
+                    buf: st(acc, 0, total),
+                    peer: parent,
+                    tag_off: 0,
+                },
+                &[chain],
+            );
+            chain = send;
+            break;
+        }
+        let child = me + mask;
+        if child < n {
+            let cell = *tmp.get_or_insert_with(|| b.stage(total));
+            let recv = b.node(
+                NodeOp::Recv {
+                    buf: st(cell, 0, total),
+                    peer: child,
+                    tag_off: 0,
+                },
+                &[chain],
+            );
+            let fold = b.node(
+                NodeOp::Reduce {
+                    src: st(cell, 0, total),
+                    dst: st(acc, 0, total),
+                },
+                &[recv],
+            );
+            chain = fold;
+        }
+        mask <<= 1;
+    }
+    if me == 0 {
+        b.node(
+            NodeOp::Copy {
+                src: st(acc, 0, blk),
+                dst: prim(0, blk),
+            },
+            &[chain],
+        );
+        for r in 1..n {
+            b.node(
+                NodeOp::Send {
+                    buf: st(acc, r * blk, blk),
+                    peer: r,
+                    tag_off: 1,
+                },
+                &[chain],
+            );
+        }
+    } else {
+        // Our block arrives from the root; posting early is fine (the
+        // write target is the result buffer, untouched by phase 1).
+        b.node(
+            NodeOp::Recv {
+                buf: prim(0, blk),
+                peer: 0,
+                tag_off: 1,
+            },
+            &[],
+        );
+    }
+}
+
+/// Ring allgather (`coll::allgather_ring_t`'s pattern): n−1 relay
+/// steps, one tag, no staging — sends read the result buffer directly
+/// with order edges to the receive that landed the block. `blk` in
+/// bytes.
+fn build_allgather_ring(b: &mut SchedBuilder, me: usize, n: usize, blk: usize) {
+    let c0 = b.node(
+        NodeOp::Copy {
+            src: inp(0, blk),
+            dst: prim(me * blk, blk),
+        },
+        &[],
+    );
+    let right = (me + 1) % n;
+    let left = (me + n - 1) % n;
+    let mut prev_s: Option<u32> = None;
+    let mut prev_r: Option<u32> = None;
+    for s in 0..n - 1 {
+        let sb = (me + n - s) % n;
+        let rb = (me + n - s - 1) % n;
+        let send = b.node(
+            NodeOp::Send {
+                buf: prim(sb * blk, blk),
+                peer: right,
+                tag_off: 0,
+            },
+            &deps(&[if s == 0 { Some(c0) } else { prev_r }, prev_s]),
+        );
+        let recv = b.node(
+            NodeOp::Recv {
+                buf: prim(rb * blk, blk),
+                peer: left,
+                tag_off: 0,
+            },
+            &deps(&[prev_r]),
+        );
+        prev_s = Some(send);
+        prev_r = Some(recv);
+    }
+}
+
+/// Recursive-doubling allgather (`coll::allgather_recdbl_t`'s pattern):
+/// log₂ n exchanges with per-step tags. Every receive targets a
+/// disjoint region, so they all post as roots; sends chain so step k's
+/// send sees every earlier landing. `blk` in bytes; power-of-two `n`.
+fn build_allgather_recdbl(b: &mut SchedBuilder, me: usize, n: usize, blk: usize) {
+    let c0 = b.node(
+        NodeOp::Copy {
+            src: inp(0, blk),
+            dst: prim(me * blk, blk),
+        },
+        &[],
+    );
+    let mut prev_send: Option<u32> = None;
+    let mut last_recv: Option<u32> = None;
+    let mut mask = 1usize;
+    let mut step = 0i32;
+    while mask < n {
+        let partner = me ^ mask;
+        let my_start = me & !(mask - 1);
+        let peer_start = partner & !(mask - 1);
+        let group = mask * blk;
+        let send = b.node(
+            NodeOp::Send {
+                buf: prim(my_start * blk, group),
+                peer: partner,
+                tag_off: step,
+            },
+            &deps(&[
+                if mask == 1 { Some(c0) } else { prev_send },
+                last_recv,
+            ]),
+        );
+        let recv = b.node(
+            NodeOp::Recv {
+                buf: prim(peer_start * blk, group),
+                peer: partner,
+                tag_off: step,
+            },
+            &[],
+        );
+        prev_send = Some(send);
+        last_recv = Some(recv);
+        mask <<= 1;
+        step += 1;
+    }
+}
+
+/// Rabenseifner allreduce — the algorithm only the DAG makes cheap:
+/// recursive-halving reduce-scatter (rounds `0..R`, tag_offs `0..R`)
+/// fused with recursive-doubling allgather (tag_offs `R..2R`) in one
+/// schedule, no intermediate barrier. Power-of-two `n` (the `*_init`
+/// dispatcher delegates other sizes to ring); any `count` — halving
+/// just splits ranges, possibly unevenly or empty.
+///
+/// Phase 1: the pair `(me, me^dist)` splits the owned element range at
+/// its midpoint; each side sends the half it gives up, folds the
+/// partner's contribution into the half it keeps. Phase 2 undoes the
+/// halving in reverse, exchanging owned ranges with the same partners
+/// until every rank holds `[0, count)`. The join node fences phase-2
+/// receives (which overwrite given-up ranges) behind every phase-1
+/// send that read them.
+fn build_allreduce_rabenseifner(
+    b: &mut SchedBuilder,
+    me: usize,
+    n: usize,
+    count: usize,
+    elem: usize,
+) {
+    let tmp = b.stage(count.div_ceil(2).max(1) * elem);
+    let mut lo = 0usize;
+    let mut hi = count;
+    let mut spans: Vec<(usize, usize)> = Vec::new();
+    let mut p1_sends: Vec<Option<u32>> = Vec::new();
+    let mut prev_fold: Option<u32> = None;
+    let mut dist = n / 2;
+    let mut round = 0i32;
+    while dist >= 1 {
+        let partner = me ^ dist;
+        let mid = lo + (hi - lo) / 2;
+        // The lower rank of the pair keeps the lower half; each side
+        // sends the half the partner keeps.
+        let (keep_lo, keep_hi, send_lo, send_hi) = if me & dist == 0 {
+            (lo, mid, mid, hi)
+        } else {
+            (mid, hi, lo, mid)
+        };
+        let keep_len = keep_hi - keep_lo;
+        let send = b.node(
+            NodeOp::Send {
+                buf: prim(send_lo * elem, (send_hi - send_lo) * elem),
+                peer: partner,
+                tag_off: round,
+            },
+            &deps(&[prev_fold]),
+        );
+        let recv = b.node(
+            NodeOp::Recv {
+                buf: st(tmp, 0, keep_len * elem),
+                peer: partner,
+                tag_off: round,
+            },
+            &deps(&[prev_fold]),
+        );
+        let fold = b.node(
+            NodeOp::Reduce {
+                src: st(tmp, 0, keep_len * elem),
+                dst: prim(keep_lo * elem, keep_len * elem),
+            },
+            &deps(&[Some(recv)]),
+        );
+        p1_sends.push(Some(send));
+        spans.push((keep_lo, keep_hi));
+        prev_fold = Some(fold);
+        lo = keep_lo;
+        hi = keep_hi;
+        dist /= 2;
+        round += 1;
+    }
+    // Fan-in: every phase-1 send completed + the final fold.
+    let mut jdeps: Vec<u32> = p1_sends.iter().filter_map(|&d| d).collect();
+    jdeps.extend(deps(&[prev_fold]));
+    let join = b.node(NodeOp::Nop, &jdeps);
+    // Phase 2 — reverse the halving. Sends chain (send k transitively
+    // sees every earlier landing); receives post at the join, each into
+    // a disjoint given-up range.
+    let rounds = spans.len();
+    let mut own = spans[rounds - 1];
+    let mut prev_send: Option<u32> = None;
+    let mut prev_recv: Option<u32> = None;
+    for i in (0..rounds).rev() {
+        let parent = if i == 0 { (0, count) } else { spans[i - 1] };
+        let dist_i = (n / 2) >> i;
+        let partner = me ^ dist_i;
+        let tag_off = rounds as i32 + (rounds - 1 - i) as i32;
+        // The sibling half of the round-i parent range: what the
+        // partner owns and we are about to receive.
+        let sib = if own.0 == parent.0 {
+            (own.1, parent.1)
+        } else {
+            (parent.0, own.0)
+        };
+        let send = b.node(
+            NodeOp::Send {
+                buf: prim(own.0 * elem, (own.1 - own.0) * elem),
+                peer: partner,
+                tag_off,
+            },
+            &deps(&[
+                if prev_send.is_none() { Some(join) } else { prev_send },
+                prev_recv,
+            ]),
+        );
+        let recv = b.node(
+            NodeOp::Recv {
+                buf: prim(sib.0 * elem, (sib.1 - sib.0) * elem),
+                peer: partner,
+                tag_off,
+            },
+            &deps(&[Some(join)]),
+        );
+        prev_send = Some(send);
+        prev_recv = Some(recv);
+        own = parent;
+    }
+}

@@ -1,0 +1,438 @@
+//! The schedule executor: run state + the resident grequest poll that
+//! steps compiled plans from the progress engine.
+//!
+//! # Execution model
+//!
+//! A [`SchedState`] pairs one compiled [`Sched`] with everything a run
+//! needs, preallocated at install time: a per-node completion request, a
+//! per-node ready-count word, the staging-cell pool, and the run-level
+//! completion request handed back from every `start()`. Installing the
+//! plan registers a **resident** poll callback with
+//! [`crate::grequest::register_resident`]; every progress pass of the
+//! rank then calls [`SchedState::step`], which reaps completed p2p
+//! nodes, cascades their successors, and completes the run request when
+//! the last node retires. Because grequest polling is the progress
+//! domains' services slot (exactly one domain pass runs it at a time),
+//! `step` never races itself; the `core` mutex only arbitrates against
+//! the application thread inside `start()`.
+//!
+//! # Concurrency contract
+//!
+//! * `active` / `gone` are the cross-thread handshake words (role
+//!   `progress_state`): release-stores publish run state, acquire-loads
+//!   observe it.
+//! * per-node ready counts and the live-node count (role `sched_ready`)
+//!   are only mutated under `core`, but their `AcqRel` decrements also
+//!   carry the data dependency from a retiring node's effects to the
+//!   successor's issue.
+//! * `core` (lock rank 18, between the domain claim and the endpoint
+//!   locks) serializes issue/retire bookkeeping; `step` uses `try_lock`
+//!   so a progress pass never blocks behind a starting thread.
+//!
+//! # Teardown
+//!
+//! Dropping the owning `PersistentRequest` calls [`release`]: quiesce
+//! any in-flight run (poll until idle — node requests point into user
+//! buffers, so the borrow must not end while a transfer is live), set
+//! `gone`, and unregister the resident entry. If the entry is checked
+//! out by a concurrent poll pass at that moment, the retain misses it —
+//! which is why the callback also observes `gone` and self-removes by
+//! returning `Some` on its next invocation.
+
+use crate::comm::Comm;
+use crate::error::{MpiError, Result};
+use crate::fabric::{RecvPtr, SendPtr};
+use crate::grequest;
+use crate::metrics::Metrics;
+use crate::request::{backoff, ProgressHandle, ProgressScope, ReqInner, Request, Status};
+use crate::util::pool::{LocalChunkPool, PooledBuf};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::{BufId, BufRange, NodeOp, Sched};
+
+/// No instance in flight; `start()` may arm one.
+const IDLE: u8 = 0;
+/// An instance is executing; `step()` is driving it.
+const RUNNING: u8 = 1;
+/// A node failed mid-run; the plan cannot be restarted.
+const POISONED: u8 = 2;
+
+/// Mutable per-run bookkeeping, serialized by the `core` mutex (lock
+/// rank 18). Every container is sized at install time so the steady
+/// state never allocates.
+struct RunCore {
+    /// Plan-owned staging pool: cells cycle out at start, back at
+    /// completion, so start N>1 is all pool hits.
+    pool: LocalChunkPool,
+    /// Acquired staging cells, indexed like `Sched::stage_sizes`.
+    stage: Vec<Option<PooledBuf>>,
+    /// Nodes handed to the transport, awaiting their request.
+    inflight: Vec<u32>,
+    /// Ready-to-issue work stack.
+    stack: Vec<u32>,
+}
+
+/// One installed plan: the compiled [`Sched`] plus all run state. Owned
+/// by a `PersistentRequest` (strong `Arc`) and by the resident poll
+/// closure (also strong — teardown is explicit via [`release`], never
+/// implicit via a failed upgrade, so a run can complete while the owner
+/// is mid-drop).
+pub(crate) struct SchedState {
+    comm: Comm,
+    sched: Sched,
+    /// World rank the resident entry lives on (progress home).
+    rank: u32,
+    /// Scope the returned run requests poll under.
+    handle: ProgressHandle,
+    /// Run-level completion request: reset and re-armed by every start,
+    /// completed by the executor when the last node retires.
+    run_req: Arc<ReqInner>,
+    /// Per-node completion requests, reset each start; p2p nodes
+    /// complete into these via `coll_isend_into` / `coll_irecv_into`.
+    node_reqs: Box<[Arc<ReqInner>]>,
+    /// Per-node outstanding-dependency counts (re-seeded from
+    /// `Sched::indeg` each start).
+    ready: Box<[AtomicU32]>,
+    /// Nodes not yet retired this run.
+    nodes_left: AtomicU32,
+    /// IDLE / RUNNING / POISONED.
+    active: AtomicU8,
+    /// Set by [`release`]; the resident callback self-removes on seeing
+    /// it.
+    gone: AtomicBool,
+    /// The primary (writable) user buffer, if the plan has one.
+    primary: Option<(RecvPtr, usize)>,
+    /// The secondary read-only user buffer (send input of
+    /// reduce_scatter/allgather), if the plan has one.
+    input: Option<(SendPtr, usize)>,
+    /// Identity of the resident grequest entry (for unregister).
+    resident: OnceLock<Arc<ReqInner>>,
+    core: Mutex<RunCore>,
+}
+
+/// Install a compiled plan on `comm`'s rank: preallocate all run state
+/// and register the resident poll entry that will execute it. Compile
+/// path — allocation is fine here; this is the cost `start()` amortizes.
+pub(crate) fn install(
+    comm: &Comm,
+    sched: Sched,
+    primary: Option<(RecvPtr, usize)>,
+    input: Option<(SendPtr, usize)>,
+) -> Arc<SchedState> {
+    let fabric = Arc::clone(comm.fabric());
+    let rank = comm.world_rank(comm.rank());
+    let n = sched.ops.len();
+    let n_stage = sched.stage_sizes.len();
+    let state = Arc::new(SchedState {
+        comm: comm.clone(),
+        sched,
+        rank,
+        handle: ProgressHandle {
+            fabric: Arc::clone(&fabric),
+            rank,
+            scope: ProgressScope::Shared,
+        },
+        run_req: ReqInner::new(),
+        node_reqs: (0..n).map(|_| ReqInner::new()).collect(),
+        ready: (0..n).map(|_| AtomicU32::new(0)).collect(),
+        nodes_left: AtomicU32::new(0),
+        active: AtomicU8::new(IDLE),
+        gone: AtomicBool::new(false),
+        primary,
+        input,
+        resident: OnceLock::new(),
+        core: Mutex::new(RunCore {
+            pool: LocalChunkPool::new(),
+            stage: (0..n_stage).map(|_| None).collect(),
+            inflight: Vec::with_capacity(n),
+            stack: Vec::with_capacity(n),
+        }),
+    });
+    let s2 = Arc::clone(&state);
+    let ident = grequest::register_resident(
+        &fabric,
+        rank,
+        Box::new(move || {
+            // Torn down mid-poll: self-remove (see module docs).
+            // lint: atomic(progress_state)
+            if s2.gone.load(Ordering::Acquire) {
+                return Some(Ok(Status::empty()));
+            }
+            s2.step();
+            None
+        }),
+    );
+    let _ = state.resident.set(ident);
+    Metrics::bump(&comm.fabric().metrics.sched_compiled);
+    state
+}
+
+/// `MPI_Start`: arm one run of the plan and return its completion
+/// request. Called via `PersistentRequest::start`, whose `&mut self`
+/// serializes starts of one plan.
+pub(crate) fn start_run(state: &Arc<SchedState>) -> Result<Request<'static>> {
+    state.start()?;
+    Ok(Request::new(
+        Arc::clone(&state.run_req),
+        state.handle.clone(),
+    ))
+}
+
+/// Tear down a plan (from `PersistentRequest::drop`): quiesce any
+/// in-flight run, then flag and unregister the resident entry.
+pub(crate) fn release(state: &Arc<SchedState>) {
+    state.quiesce();
+    state.gone.store(true, Ordering::Release); // lint: atomic(progress_state)
+    if let Some(ident) = state.resident.get() {
+        grequest::unregister_resident(state.comm.fabric(), state.rank, ident);
+    }
+}
+
+impl SchedState {
+    /// Arm one run: reset per-node state, pull staging cells from the
+    /// plan pool, seed the work stack with the DAG roots, and issue
+    /// everything already ready. Hot path — the steady state performs
+    /// zero allocations (PL401-enforced).
+    fn start(&self) -> Result<()> {
+        // lint: atomic(progress_state)
+        if self.active.load(Ordering::Acquire) != IDLE {
+            return Err(MpiError::InvalidState(
+                "persistent schedule started while a prior start is active or failed".into(),
+            ));
+        }
+        let mut core = self.core.lock().unwrap();
+        let metrics = &self.comm.fabric().metrics;
+        Metrics::bump(&metrics.sched_starts);
+        self.run_req.reset();
+        for r in self.node_reqs.iter() {
+            r.reset();
+        }
+        let n = self.sched.ops.len() as u32;
+        self.nodes_left.store(n, Ordering::Relaxed); // lint: atomic(sched_ready)
+        for (i, w) in self.ready.iter().enumerate() {
+            w.store(self.sched.indeg[i], Ordering::Relaxed); // lint: atomic(sched_ready)
+        }
+        {
+            // Disjoint field borrows: the pool hands cells to the stage
+            // slots.
+            let RunCore { pool, stage, .. } = &mut *core;
+            for (k, cell) in stage.iter_mut().enumerate() {
+                let sz = self.sched.stage_sizes[k];
+                let mut buf = pool.acquire(sz);
+                if buf.recycled() {
+                    Metrics::bump(&metrics.pool_hits);
+                } else {
+                    Metrics::bump(&metrics.pool_misses);
+                }
+                buf.resize_zeroed(sz);
+                *cell = Some(buf);
+            }
+        }
+        core.inflight.clear();
+        core.stack.clear();
+        core.stack.extend_from_slice(&self.sched.roots);
+        self.active.store(RUNNING, Ordering::Release); // lint: atomic(progress_state)
+        if let Err(e) = self.drain_ready(&mut core) {
+            self.poison(e);
+            return Ok(()); // surfaces through the run request
+        }
+        self.maybe_finish(&mut core);
+        Ok(())
+    }
+
+    /// One executor step, invoked from the resident poll on every
+    /// progress pass of this rank: reap completed p2p nodes, cascade
+    /// their successors, finish the run when the last node retires.
+    /// Hot path — allocation-free.
+    pub(crate) fn step(&self) {
+        // lint: atomic(progress_state)
+        if self.active.load(Ordering::Acquire) != RUNNING {
+            return;
+        }
+        // Never block a progress pass behind a starting thread; we run
+        // again next pass.
+        let Ok(mut core) = self.core.try_lock() else {
+            return;
+        };
+        let mut i = 0;
+        while i < core.inflight.len() {
+            let idx = core.inflight[i];
+            if !self.node_reqs[idx as usize].is_complete() {
+                i += 1;
+                continue;
+            }
+            core.inflight.swap_remove(i);
+            if let Err(e) = self.node_reqs[idx as usize].take_result() {
+                self.poison(e);
+                return;
+            }
+            self.retire_node(&mut core, idx);
+            if let Err(e) = self.drain_ready(&mut core) {
+                self.poison(e);
+                return;
+            }
+        }
+        self.maybe_finish(&mut core);
+    }
+
+    /// Issue every node on the ready stack; local nodes retire inline
+    /// and cascade. Hot path.
+    fn drain_ready(&self, core: &mut RunCore) -> Result<()> {
+        while let Some(idx) = core.stack.pop() {
+            self.issue(core, idx)?;
+        }
+        Ok(())
+    }
+
+    /// Launch one ready node. P2p nodes go to the transport on the
+    /// collective context, completing into their preallocated request;
+    /// local nodes execute inline and retire immediately. Hot path.
+    fn issue(&self, core: &mut RunCore, idx: u32) -> Result<()> {
+        let i = idx as usize;
+        match &self.sched.ops[i] {
+            NodeOp::Send { buf, peer, tag_off } => {
+                let p = self.read_ptr(core, *buf);
+                // SAFETY: ranges resolve into the registered user
+                // buffers or acquired staging cells; both outlive the
+                // call, and in-flight reuse is fenced by the DAG's
+                // completion edges.
+                let slice = unsafe { std::slice::from_raw_parts(p, buf.len) };
+                let tag = self.sched.base_tag.wrapping_add(*tag_off);
+                let pending = self
+                    .comm
+                    .coll_isend_into(slice, *peer, tag, &self.node_reqs[i])?;
+                if pending {
+                    core.inflight.push(idx);
+                } else {
+                    // Eager: the transport copied the bytes out already.
+                    self.retire_node(core, idx);
+                }
+            }
+            NodeOp::Recv { buf, peer, tag_off } => {
+                let ptr = self.write_ptr(core, *buf);
+                let tag = self.sched.base_tag.wrapping_add(*tag_off);
+                self.comm
+                    .coll_irecv_into(ptr, buf.len, *peer, tag, &self.node_reqs[i]);
+                core.inflight.push(idx);
+            }
+            NodeOp::Reduce { src, dst } => {
+                let s = self.read_ptr(core, *src);
+                let d = self.write_ptr(core, *dst);
+                let fold = self.sched.reduce.as_ref().expect("reduce node without op");
+                fold(d.0, s, src.len);
+                self.retire_node(core, idx);
+            }
+            NodeOp::Copy { src, dst } => {
+                let s = self.read_ptr(core, *src);
+                let d = self.write_ptr(core, *dst);
+                // SAFETY: builders emit disjoint src/dst ranges.
+                unsafe { std::ptr::copy_nonoverlapping(s, d.0, src.len) };
+                self.retire_node(core, idx);
+            }
+            NodeOp::FileOp(f) => {
+                f()?;
+                self.retire_node(core, idx);
+            }
+            NodeOp::Nop => self.retire_node(core, idx),
+        }
+        Ok(())
+    }
+
+    /// Mark a node done and push newly-ready successors. Hot path.
+    fn retire_node(&self, core: &mut RunCore, idx: u32) {
+        Metrics::bump(&self.comm.fabric().metrics.sched_nodes_retired);
+        for &s in self.sched.succs[idx as usize].iter() {
+            // AcqRel: the retiring node's effects (folds, landed
+            // payloads) must be visible to the successor's issue.
+            // lint: atomic(sched_ready)
+            if self.ready[s as usize].fetch_sub(1, Ordering::AcqRel) == 1 {
+                core.stack.push(s);
+            }
+        }
+        self.nodes_left.fetch_sub(1, Ordering::AcqRel); // lint: atomic(sched_ready)
+    }
+
+    /// Complete the run if every node retired: park the staging cells
+    /// back in the pool and fire the run request.
+    fn maybe_finish(&self, core: &mut RunCore) {
+        // lint: atomic(sched_ready)
+        if self.nodes_left.load(Ordering::Acquire) != 0 {
+            return;
+        }
+        for cell in core.stage.iter_mut() {
+            *cell = None;
+        }
+        self.active.store(IDLE, Ordering::Release); // lint: atomic(progress_state)
+        self.run_req.complete(Status::empty());
+    }
+
+    /// A node failed: fail the run request and freeze the plan (staging
+    /// stays parked — outstanding receives may still land into it; a
+    /// poisoned plan refuses further starts).
+    fn poison(&self, e: MpiError) {
+        self.active.store(POISONED, Ordering::Release); // lint: atomic(progress_state)
+        self.run_req.fail(e);
+    }
+
+    /// Drive progress until no instance is in flight (teardown with a
+    /// forgotten outstanding run).
+    fn quiesce(&self) {
+        let mut spins = 0u32;
+        // lint: atomic(progress_state)
+        while self.active.load(Ordering::Acquire) == RUNNING {
+            self.handle.poll();
+            backoff(&mut spins);
+        }
+    }
+
+    /// Between-starts access to the primary user buffer (the
+    /// `PersistentRequest::buf_mut` hook for refilling inputs).
+    pub(crate) fn primary_buf_mut(&self) -> Option<&mut [u8]> {
+        debug_assert!(
+            self.active.load(Ordering::Acquire) != RUNNING, // lint: atomic(progress_state)
+            "buf_mut while a start is in flight"
+        );
+        let (p, len) = self.primary?;
+        // SAFETY: reached only through `&mut PersistentRequest` (sole
+        // owner; no run Request exists, or it has completed), and the
+        // executor touches user memory only between start and
+        // completion.
+        Some(unsafe { std::slice::from_raw_parts_mut(p.0, len) })
+    }
+
+    /// Cells ever allocated by the plan's staging pool — the zero-
+    /// steady-state-allocation assertion hook for tests and benches.
+    pub(crate) fn staging_allocated(&self) -> u64 {
+        self.core.lock().unwrap().pool.shared().allocated()
+    }
+
+    /// Resolve a range's base for reading.
+    fn read_ptr(&self, core: &RunCore, r: BufRange) -> *const u8 {
+        let base: *const u8 = match r.buf {
+            BufId::Primary => self.primary.expect("plan has no primary buffer").0 .0,
+            BufId::Input => self.input.expect("plan has no input buffer").0 .0,
+            BufId::Stage(k) => core.stage[k as usize]
+                .as_ref()
+                .expect("stage cell not acquired")
+                .as_ptr(),
+        };
+        // SAFETY: offsets are within the registered capacities by
+        // construction (builders partition, never exceed).
+        unsafe { base.add(r.off) }
+    }
+
+    /// Resolve a range's base for writing.
+    fn write_ptr(&self, core: &mut RunCore, r: BufRange) -> RecvPtr {
+        let base: *mut u8 = match r.buf {
+            BufId::Primary => self.primary.expect("plan has no primary buffer").0 .0,
+            BufId::Input => unreachable!("the input buffer is read-only"),
+            BufId::Stage(k) => core.stage[k as usize]
+                .as_mut()
+                .expect("stage cell not acquired")
+                .as_mut_ptr(),
+        };
+        // SAFETY: as in `read_ptr`.
+        RecvPtr(unsafe { base.add(r.off) })
+    }
+}

@@ -1,0 +1,243 @@
+//! Schedule-DAG runtime: persistent collectives as compiled plans.
+//!
+//! "Extending MPI with User-Level Schedules" (arXiv:1909.11762) observes
+//! that a collective algorithm is just a DAG of sends, receives, and
+//! local reductions — and that compiling the DAG *once* and executing it
+//! many times amortizes every per-call cost: algorithm selection, tag
+//! reservation, dependency bookkeeping, and staging-buffer allocation.
+//! The source paper's grequest extension (poll callbacks driven by the
+//! MPI progress engine) supplies exactly the execution hook such a
+//! runtime needs. This module combines the two:
+//!
+//! * a [`Sched`] is a compiled schedule: nodes of
+//!   isend / irecv / local-reduce / copy / file-op plus dependency
+//!   edges, expressed against *buffer slots* rather than addresses, so
+//!   one plan can be re-armed against the same user buffers every start;
+//! * [`exec::SchedState`] executes it: a **resident grequest poll
+//!   callback** steps the executor on every progress pass, retiring
+//!   completed p2p nodes and issuing newly-ready ones — so schedules
+//!   progress under any [`crate::request::ProgressScope`], including
+//!   per-domain progress threads (grequest polling is the services
+//!   slot, serviced by exactly one domain pass at a time);
+//! * [`coll`] ports the `crate::coll` algorithms (ring/tree allreduce,
+//!   binomial/chain bcast, pairwise/linear reduce_scatter,
+//!   recursive-doubling/ring allgather) to *emit* schedules, surfaced as
+//!   the plan-once/start-many persistent API:
+//!   [`crate::Comm::allreduce_init`], [`bcast_init`],
+//!   [`reduce_scatter_init`], [`allgather_init`] →
+//!   [`crate::request::PersistentRequest`] with `start()` / `wait()`
+//!   (and `start_all` for `MPI_Startall`).
+//!
+//! [`bcast_init`]: crate::Comm::bcast_init
+//! [`reduce_scatter_init`]: crate::Comm::reduce_scatter_init
+//! [`allgather_init`]: crate::Comm::allgather_init
+//!
+//! # Steady-state cost
+//!
+//! Compilation (once, at `*_init`) runs the selector, reserves one
+//! collective-tag window, builds the node/edge arrays, and preallocates
+//! one completion request per node. A start then performs **zero
+//! allocations and zero selector work**: node requests are `reset()`,
+//! staging cells come from a plan-owned [`crate::util::pool`] chunk pool
+//! (first start misses, every later start hits), and p2p nodes complete
+//! into the preallocated requests via [`crate::comm`]'s
+//! `coll_isend_into` / `coll_irecv_into` — no fresh `ReqInner`, no
+//! `requests_alloc` bump. The amortization is counter-visible:
+//! `sched_compiled` / `sched_starts` / `sched_nodes_retired` in
+//! [`crate::metrics::Metrics`], plus the pool hit/miss tallies.
+//!
+//! # Tag discipline
+//!
+//! Each plan reserves one per-communicator collective ordinal at compile
+//! time (`next_coll_tag`, a 64-tag window) and addresses rounds by
+//! `tag_off` within it. Reusing the same tags across starts is safe
+//! because (a) starts of one plan are serialized by `&mut
+//! PersistentRequest`, (b) per-(peer, tag) traffic is FIFO end to end
+//! (channel delivery and unexpected-queue matching), and (c) the DAG
+//! chains same-(peer, tag, direction) nodes with order edges, so
+//! iteration N's first message cannot overtake iteration N−1's last.
+//!
+//! # Rabenseifner allreduce
+//!
+//! The DAG also makes one new algorithm cheap enough to include:
+//! Rabenseifner's allreduce (recursive-halving reduce-scatter fused with
+//! recursive-doubling allgather in a single schedule, no intermediate
+//! barrier), wired into [`crate::coll::CollSelector`] as the
+//! large-message power-of-two candidate and also available one-shot as
+//! [`crate::coll::allreduce_rabenseifner_t`].
+
+pub(crate) mod coll;
+pub(crate) mod exec;
+#[cfg(test)]
+mod tests;
+
+pub(crate) use exec::{release, start_run, SchedState};
+
+use crate::error::Result;
+use std::sync::Arc;
+
+/// A local fold over raw bytes: `f(dst, src, len_bytes)` reduces `src`
+/// into `dst`. Compiled once per plan from the user's typed closure by
+/// [`coll::byte_fold`]; operates element-wise with unaligned loads so it
+/// can run against pool-staged scratch cells (alignment 1).
+pub(crate) type ReduceFn = Arc<dyn Fn(*mut u8, *const u8, usize) + Send + Sync>;
+
+/// A file/compute hook node: arbitrary local work executed inline by the
+/// executor when its dependencies retire (the split-collective I/O
+/// shape: an fsync or a sieved write riding a communication DAG).
+pub(crate) type FileOpFn = Arc<dyn Fn() -> Result<()> + Send + Sync>;
+
+/// Which buffer a [`BufRange`] addresses. Plans never hold raw
+/// addresses in their nodes — ranges resolve against the buffers
+/// registered at `*_init` time, which is what makes a compiled plan
+/// reusable across starts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum BufId {
+    /// The primary (writable) user buffer: the in-out buffer of
+    /// allreduce/bcast, the receive buffer of reduce_scatter/allgather.
+    Primary,
+    /// The secondary read-only user buffer: the send input of
+    /// reduce_scatter/allgather.
+    Input,
+    /// Pool-staged scratch cell `k` (sized by [`Sched::stage_sizes`];
+    /// acquired at start, released at completion).
+    Stage(u32),
+}
+
+/// A byte range inside one of the plan's buffers.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct BufRange {
+    pub buf: BufId,
+    pub off: usize,
+    pub len: usize,
+}
+
+impl BufRange {
+    pub(crate) fn new(buf: BufId, off: usize, len: usize) -> BufRange {
+        BufRange { buf, off, len }
+    }
+}
+
+/// One schedule node. `Send`/`Recv` are handed to the transport on the
+/// collective context and retire when their completion request fires;
+/// the local ops execute inline in the issuing pass and retire
+/// immediately.
+pub(crate) enum NodeOp {
+    /// isend `buf` to comm-local `peer`, tag `base_tag + tag_off`.
+    Send {
+        buf: BufRange,
+        peer: usize,
+        tag_off: i32,
+    },
+    /// irecv into `buf` from comm-local `peer`.
+    Recv {
+        buf: BufRange,
+        peer: usize,
+        tag_off: i32,
+    },
+    /// Fold `src` into `dst` with the plan's [`ReduceFn`] (equal
+    /// lengths by construction).
+    Reduce { src: BufRange, dst: BufRange },
+    /// `memcpy` `src` → `dst` (builders emit disjoint ranges).
+    Copy { src: BufRange, dst: BufRange },
+    /// Arbitrary local task; an `Err` poisons the run.
+    FileOp(FileOpFn),
+    /// Pure join/fan-in point.
+    Nop,
+}
+
+/// A compiled schedule: the node table plus its dependency structure in
+/// executor-ready form (successor lists + in-degrees + initial roots),
+/// the staging-cell size table, the compiled fold, and the reserved
+/// base tag. Immutable after [`SchedBuilder::build`]; all mutable run
+/// state lives in [`exec::SchedState`].
+pub(crate) struct Sched {
+    pub ops: Box<[NodeOp]>,
+    pub succs: Box<[Box<[u32]>]>,
+    pub indeg: Box<[u32]>,
+    pub roots: Box<[u32]>,
+    pub stage_sizes: Box<[usize]>,
+    pub reduce: Option<ReduceFn>,
+    pub base_tag: i32,
+}
+
+/// Builds a [`Sched`] one node at a time. Compile-time only — the
+/// builder allocates freely; the executor never touches it again.
+pub(crate) struct SchedBuilder {
+    ops: Vec<NodeOp>,
+    succs: Vec<Vec<u32>>,
+    indeg: Vec<u32>,
+    stage_sizes: Vec<usize>,
+}
+
+impl SchedBuilder {
+    pub fn new() -> SchedBuilder {
+        SchedBuilder {
+            ops: Vec::new(),
+            succs: Vec::new(),
+            indeg: Vec::new(),
+            stage_sizes: Vec::new(),
+        }
+    }
+
+    /// Append a node depending on `deps` (duplicates tolerated: each
+    /// edge is recorded once, so in-degrees stay exact).
+    pub fn node(&mut self, op: NodeOp, deps: &[u32]) -> u32 {
+        let id = self.ops.len() as u32;
+        self.ops.push(op);
+        self.succs.push(Vec::new());
+        let mut indeg = 0u32;
+        for &d in deps {
+            debug_assert!(d < id, "dependency on a later node: {d} >= {id}");
+            if !self.succs[d as usize].contains(&id) {
+                self.succs[d as usize].push(id);
+                indeg += 1;
+            }
+        }
+        self.indeg.push(indeg);
+        id
+    }
+
+    /// Reserve a staging cell of `bytes` (zero-size cells are rounded
+    /// up so the pool always hands out a real cell).
+    pub fn stage(&mut self, bytes: usize) -> BufId {
+        let k = self.stage_sizes.len() as u32;
+        self.stage_sizes.push(bytes.max(1));
+        BufId::Stage(k)
+    }
+
+    /// Number of nodes emitted so far.
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// Freeze into an executable [`Sched`].
+    pub fn build(self, base_tag: i32, reduce: Option<ReduceFn>) -> Sched {
+        let roots: Vec<u32> = self
+            .indeg
+            .iter()
+            .enumerate()
+            .filter(|(_, &d)| d == 0)
+            .map(|(i, _)| i as u32)
+            .collect();
+        Sched {
+            ops: self.ops.into_boxed_slice(),
+            succs: self
+                .succs
+                .into_iter()
+                .map(Vec::into_boxed_slice)
+                .collect(),
+            indeg: self.indeg.into_boxed_slice(),
+            roots: roots.into_boxed_slice(),
+            stage_sizes: self.stage_sizes.into_boxed_slice(),
+            reduce,
+            base_tag,
+        }
+    }
+}
+
+/// Collect present dependencies: builders track "previous node of kind
+/// X" as `Option<u32>` and pass them all here.
+pub(crate) fn deps(list: &[Option<u32>]) -> Vec<u32> {
+    list.iter().filter_map(|&d| d).collect()
+}

@@ -1,0 +1,604 @@
+//! Schedule-runtime test suite.
+//!
+//! The load-bearing property is **agreement**: a persistent plan started
+//! 100 times must produce byte-identical results to the one-shot
+//! collective on every iteration, for every communicator size 2..=8 and
+//! every algorithm the selector can pick. The second property is the
+//! amortization claim itself, proven with exact counter deltas: N starts
+//! of one plan cost one compilation, zero request allocations, and zero
+//! steady-state staging growth.
+
+use super::{deps, exec, NodeOp, SchedBuilder};
+use crate::coll::{self, CollAlgo, CollOp, CommLike};
+use crate::error::MpiError;
+use crate::request::{start_all, waitall, PersistentKind, PersistentRequest};
+use crate::universe::Universe;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Deterministic per-(iteration, salt, index) word so every rank can
+/// reproduce any other rank's contribution locally.
+fn word(iter: u64, salt: u64, k: usize) -> u32 {
+    (iter
+        .wrapping_mul(0x9E37_79B9)
+        .wrapping_add(salt.wrapping_mul(0x85EB_CA6B))
+        .wrapping_add((k as u64).wrapping_mul(0xC2B2_AE35))) as u32
+}
+
+/// Fill a persistent plan's byte-view buffer with u32 words.
+fn fill_words(bytes: &mut [u8], iter: u64, salt: u64) {
+    for (k, c) in bytes.chunks_exact_mut(4).enumerate() {
+        c.copy_from_slice(&word(iter, salt, k).to_le_bytes());
+    }
+}
+
+fn read_word(bytes: &[u8], k: usize) -> u32 {
+    u32::from_le_bytes(bytes[4 * k..4 * k + 4].try_into().unwrap())
+}
+
+fn add(a: &mut u32, b: &u32) {
+    *a = a.wrapping_add(*b);
+}
+
+/// Assert a plan's primary buffer equals a typed expectation.
+fn assert_words(got: &[u8], want: &[u32], ctx: &str) {
+    for (k, &w) in want.iter().enumerate() {
+        assert_eq!(read_word(got, k), w, "{ctx} word {k}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Agreement: persistent vs one-shot, sizes 2..=8, 100 starts each.
+// ---------------------------------------------------------------------
+
+#[test]
+fn persistent_allreduce_agrees_with_oneshot() {
+    for n in 2..=8usize {
+        Universe::builder().ranks(n).run(|world| {
+            let me = world.rank() as u64;
+            const COUNT: usize = 96; // 384 B: eager, uneven segments for most n
+            let mut pbuf = vec![0u32; COUNT];
+            let mut plan = world.allreduce_init(&mut pbuf, add).unwrap();
+            for iter in 0..100u64 {
+                fill_words(plan.buf_mut().unwrap(), iter, me);
+                plan.start().unwrap().wait().unwrap();
+                let mut obuf: Vec<u32> = (0..COUNT).map(|k| word(iter, me, k)).collect();
+                coll::allreduce_t(&world, &mut obuf, add).unwrap();
+                assert_words(
+                    plan.buf_mut().unwrap(),
+                    &obuf,
+                    &format!("allreduce n={n} iter={iter}"),
+                );
+            }
+        });
+    }
+}
+
+#[test]
+fn persistent_bcast_agrees_with_oneshot() {
+    for n in 2..=8usize {
+        Universe::builder().ranks(n).run(|world| {
+            const COUNT: usize = 96;
+            let root = 1usize; // n >= 2, so always valid and non-zero
+            let mut pbuf = vec![0u32; COUNT];
+            let mut plan = world.bcast_init(&mut pbuf, root).unwrap();
+            for iter in 0..100u64 {
+                if world.rank() == root {
+                    fill_words(plan.buf_mut().unwrap(), iter, 777);
+                }
+                plan.start().unwrap().wait().unwrap();
+                let mut obuf = vec![0u32; COUNT];
+                if world.rank() == root {
+                    for (k, w) in obuf.iter_mut().enumerate() {
+                        *w = word(iter, 777, k);
+                    }
+                }
+                coll::bcast_t(&world, &mut obuf, root).unwrap();
+                // Every rank must now hold the root's iteration pattern.
+                let want: Vec<u32> = (0..COUNT).map(|k| word(iter, 777, k)).collect();
+                assert_eq!(obuf, want, "one-shot bcast n={n} iter={iter}");
+                assert_words(
+                    plan.buf_mut().unwrap(),
+                    &want,
+                    &format!("bcast n={n} iter={iter}"),
+                );
+            }
+        });
+    }
+}
+
+#[test]
+fn persistent_reduce_scatter_agrees_with_oneshot() {
+    for n in 2..=8usize {
+        Universe::builder().ranks(n).run(|world| {
+            let me = world.rank() as u64;
+            const BLK: usize = 33;
+            let send: Vec<u32> = (0..n * BLK).map(|k| word(9, me, k)).collect();
+            let mut recv = vec![0u32; BLK];
+            let mut plan = world.reduce_scatter_init(&send, &mut recv, add).unwrap();
+            let mut orecv = vec![0u32; BLK];
+            coll::reduce_scatter_block_t(&world, &send, &mut orecv, add).unwrap();
+            for iter in 0..100u64 {
+                plan.start().unwrap().wait().unwrap();
+                assert_words(
+                    plan.buf_mut().unwrap(),
+                    &orecv,
+                    &format!("reduce_scatter n={n} iter={iter}"),
+                );
+            }
+        });
+    }
+}
+
+#[test]
+fn persistent_allgather_agrees_with_oneshot() {
+    // Power-of-two sizes take the recursive-doubling builder, the rest
+    // the ring builder (recv payload stays under the recdbl ceiling).
+    for n in 2..=8usize {
+        Universe::builder().ranks(n).run(|world| {
+            let me = world.rank() as u64;
+            const BLK: usize = 40;
+            let send: Vec<u32> = (0..BLK).map(|k| word(4, me, k)).collect();
+            let mut recv = vec![0u32; n * BLK];
+            let mut plan = world.allgather_init(&send, &mut recv).unwrap();
+            let mut orecv = vec![0u32; n * BLK];
+            coll::allgather_t(&world, &send, &mut orecv).unwrap();
+            let want: Vec<u32> = (0..n)
+                .flat_map(|r| (0..BLK).map(move |k| word(4, r as u64, k)))
+                .collect();
+            assert_eq!(orecv, want, "one-shot allgather n={n}");
+            for iter in 0..100u64 {
+                plan.start().unwrap().wait().unwrap();
+                assert_words(
+                    plan.buf_mut().unwrap(),
+                    &want,
+                    &format!("allgather n={n} iter={iter}"),
+                );
+            }
+        });
+    }
+}
+
+// ---------------------------------------------------------------------
+// Agreement across every selectable algorithm (forced per communicator).
+// ---------------------------------------------------------------------
+
+#[test]
+fn persistent_allreduce_all_algorithms_agree() {
+    for &(n, algo) in &[
+        (2usize, CollAlgo::Ring),
+        (4, CollAlgo::Tree),
+        (5, CollAlgo::Ring),
+        (6, CollAlgo::Rabenseifner), // non-pow2: compiles the ring schedule
+        (8, CollAlgo::Rabenseifner),
+    ] {
+        Universe::builder().ranks(n).run(|world| {
+            world.coll_selector().force(CollOp::Allreduce, algo).unwrap();
+            let me = world.rank() as u64;
+            const COUNT: usize = 130; // uneven halving/segment splits
+            let mut pbuf = vec![0u32; COUNT];
+            let mut plan = world.allreduce_init(&mut pbuf, add).unwrap();
+            for iter in 0..25u64 {
+                fill_words(plan.buf_mut().unwrap(), iter, me);
+                plan.start().unwrap().wait().unwrap();
+                let mut obuf: Vec<u32> = (0..COUNT).map(|k| word(iter, me, k)).collect();
+                coll::allreduce_t(&world, &mut obuf, add).unwrap();
+                assert_words(
+                    plan.buf_mut().unwrap(),
+                    &obuf,
+                    &format!("allreduce {algo:?} n={n} iter={iter}"),
+                );
+            }
+        });
+    }
+}
+
+#[test]
+fn persistent_bcast_chain_agrees() {
+    for &n in &[2usize, 3, 5, 8] {
+        Universe::builder().ranks(n).run(|world| {
+            world
+                .coll_selector()
+                .force(CollOp::Bcast, CollAlgo::Chain)
+                .unwrap();
+            // 20 KiB: three pipeline chunks (8 KiB each) through the chain.
+            const COUNT: usize = 5 * 1024;
+            let root = n - 1; // exercise a non-zero virtual ring origin
+            let mut pbuf = vec![0u32; COUNT];
+            let mut plan = world.bcast_init(&mut pbuf, root).unwrap();
+            for iter in 0..10u64 {
+                if world.rank() == root {
+                    fill_words(plan.buf_mut().unwrap(), iter, 31);
+                }
+                plan.start().unwrap().wait().unwrap();
+                let want: Vec<u32> = (0..COUNT).map(|k| word(iter, 31, k)).collect();
+                assert_words(
+                    plan.buf_mut().unwrap(),
+                    &want,
+                    &format!("chain bcast n={n} iter={iter}"),
+                );
+            }
+        });
+    }
+}
+
+#[test]
+fn persistent_reduce_scatter_pairwise_agrees() {
+    for &n in &[3usize, 4, 7] {
+        Universe::builder().ranks(n).run(|world| {
+            world
+                .coll_selector()
+                .force(CollOp::ReduceScatter, CollAlgo::Pairwise)
+                .unwrap();
+            let me = world.rank() as u64;
+            const BLK: usize = 17;
+            let send: Vec<u32> = (0..n * BLK).map(|k| word(2, me, k)).collect();
+            let mut recv = vec![0u32; BLK];
+            let mut plan = world.reduce_scatter_init(&send, &mut recv, add).unwrap();
+            let mut orecv = vec![0u32; BLK];
+            coll::reduce_scatter_block_t(&world, &send, &mut orecv, add).unwrap();
+            for iter in 0..25u64 {
+                plan.start().unwrap().wait().unwrap();
+                assert_words(
+                    plan.buf_mut().unwrap(),
+                    &orecv,
+                    &format!("pairwise reduce_scatter n={n} iter={iter}"),
+                );
+            }
+        });
+    }
+}
+
+#[test]
+fn persistent_allgather_forced_algorithms_agree() {
+    for &(n, algo) in &[
+        (4usize, CollAlgo::Ring), // ring forced where auto would pick recdbl
+        (4, CollAlgo::RecDbl),
+        (6, CollAlgo::RecDbl), // non-pow2: compiles the ring schedule
+    ] {
+        Universe::builder().ranks(n).run(|world| {
+            world.coll_selector().force(CollOp::Allgather, algo).unwrap();
+            let me = world.rank() as u64;
+            const BLK: usize = 23;
+            let send: Vec<u32> = (0..BLK).map(|k| word(6, me, k)).collect();
+            let mut recv = vec![0u32; n * BLK];
+            let mut plan = world.allgather_init(&send, &mut recv).unwrap();
+            let want: Vec<u32> = (0..n)
+                .flat_map(|r| (0..BLK).map(move |k| word(6, r as u64, k)))
+                .collect();
+            for iter in 0..25u64 {
+                plan.start().unwrap().wait().unwrap();
+                assert_words(
+                    plan.buf_mut().unwrap(),
+                    &want,
+                    &format!("allgather {algo:?} n={n} iter={iter}"),
+                );
+            }
+        });
+    }
+}
+
+/// Full-buffer tree sends above eager_max: the DAG's rendezvous path
+/// (chunked two-copy transfers completing preallocated node requests).
+#[test]
+fn persistent_allreduce_rendezvous_payload() {
+    Universe::builder().ranks(4).run(|world| {
+        world
+            .coll_selector()
+            .force(CollOp::Allreduce, CollAlgo::Tree)
+            .unwrap();
+        let me = world.rank() as u64;
+        const COUNT: usize = 24 * 1024; // 96 KiB > default eager_max
+        let mut pbuf = vec![0u32; COUNT];
+        let mut plan = world.allreduce_init(&mut pbuf, add).unwrap();
+        for iter in 0..5u64 {
+            fill_words(plan.buf_mut().unwrap(), iter, me);
+            plan.start().unwrap().wait().unwrap();
+            let mut obuf: Vec<u32> = (0..COUNT).map(|k| word(iter, me, k)).collect();
+            coll::allreduce_t(&world, &mut obuf, add).unwrap();
+            assert_words(plan.buf_mut().unwrap(), &obuf, &format!("rdv iter={iter}"));
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// Degenerate shapes.
+// ---------------------------------------------------------------------
+
+#[test]
+fn single_rank_and_empty_plans_complete() {
+    Universe::builder().ranks(1).run(|world| {
+        let mut buf = vec![7u32; 8];
+        let mut plan = world.allreduce_init(&mut buf, add).unwrap();
+        for _ in 0..3 {
+            plan.start().unwrap().wait().unwrap();
+        }
+        let want = vec![7u32; 8];
+        assert_words(plan.buf_mut().unwrap(), &want, "n=1 allreduce identity");
+
+        let send = vec![3u32; 5];
+        let mut recv = vec![0u32; 5];
+        let mut plan = world.reduce_scatter_init(&send, &mut recv, add).unwrap();
+        plan.start().unwrap().wait().unwrap();
+        assert_words(plan.buf_mut().unwrap(), &send, "n=1 reduce_scatter copy");
+
+        let mut empty: Vec<u32> = Vec::new();
+        let mut plan = world.allreduce_init(&mut empty, add).unwrap();
+        plan.start().unwrap().wait().unwrap();
+    });
+    Universe::builder().ranks(2).run(|world| {
+        // Empty buffers on a real communicator: plans with no nodes.
+        let mut empty: Vec<u32> = Vec::new();
+        let mut plan = world.bcast_init(&mut empty, 0).unwrap();
+        for _ in 0..3 {
+            plan.start().unwrap().wait().unwrap();
+        }
+    });
+}
+
+#[test]
+fn init_validates_arguments() {
+    Universe::builder().ranks(2).run(|world| {
+        let mut buf = vec![0u32; 4];
+        match world.bcast_init(&mut buf, 2) {
+            Err(MpiError::RankOutOfRange { rank: 2, size: 2 }) => {}
+            other => panic!("bcast_init bad root: {other:?}"),
+        }
+        let send = vec![0u32; 7]; // not 2 * recv.len()
+        let mut recv = vec![0u32; 4];
+        match world.reduce_scatter_init(&send, &mut recv, add) {
+            Err(MpiError::SizeMismatch(_)) => {}
+            other => panic!("reduce_scatter_init bad counts: {other:?}"),
+        }
+        let send = vec![0u32; 4];
+        let mut recv = vec![0u32; 7]; // not 2 * send.len()
+        match world.allgather_init(&send, &mut recv) {
+            Err(MpiError::SizeMismatch(_)) => {}
+            other => panic!("allgather_init bad counts: {other:?}"),
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// The amortization claim, counter-asserted with exact deltas.
+// ---------------------------------------------------------------------
+
+/// 4 ranks x (1 init + 100 starts): exactly 4 compilations, exactly 400
+/// starts, exactly 0 request allocations, and per-plan staging that
+/// stops growing after the first start. Snapshots are taken outside
+/// `run_on` (after the join), so the deltas are race-free and exact.
+#[test]
+fn plan_once_start_many_is_allocation_free() {
+    let fabric = Universe::builder().ranks(4).fabric();
+    let s0 = fabric.metrics.snapshot();
+    Universe::run_on(&fabric, &|world| {
+        let me = world.rank() as u64;
+        let mut buf = vec![0u32; 96];
+        let mut plan = world.allreduce_init(&mut buf, add).unwrap();
+        let mut first_alloc = 0u64;
+        for iter in 0..100u64 {
+            fill_words(plan.buf_mut().unwrap(), iter, me);
+            plan.start().unwrap().wait().unwrap();
+            let alloc = plan.sched_state().unwrap().staging_allocated();
+            if iter == 0 {
+                first_alloc = alloc;
+            } else {
+                assert_eq!(alloc, first_alloc, "staging grew at start {iter}");
+            }
+        }
+    });
+    let d = fabric.metrics.snapshot().since(&s0);
+    assert_eq!(d.sched_compiled, 4, "one compilation per rank");
+    assert_eq!(d.sched_starts, 400, "100 starts per rank");
+    // Tree at n=4 has 12 p2p nodes + folds across the fleet; every start
+    // retires every node of its plan.
+    assert!(
+        d.sched_nodes_retired >= 400,
+        "retired {} nodes",
+        d.sched_nodes_retired
+    );
+    // The whole 400-start run creates no request objects: node requests
+    // are preallocated at install and reset per start.
+    assert_eq!(d.requests_alloc, 0, "persistent path allocated requests");
+    // Staging cells miss once per plan cell, then hit forever.
+    assert!(
+        d.pool_misses < d.pool_hits / 10,
+        "staging/pool reuse regressed: {} misses vs {} hits",
+        d.pool_misses,
+        d.pool_hits
+    );
+}
+
+/// The selector runs at `*_init` only: forcing a different algorithm
+/// after init does not change what a compiled plan executes.
+#[test]
+fn compiled_plan_ignores_later_selector_changes() {
+    Universe::builder().ranks(4).run(|world| {
+        let me = world.rank() as u64;
+        const COUNT: usize = 64;
+        let mut pbuf = vec![0u32; COUNT];
+        world
+            .coll_selector()
+            .force(CollOp::Allreduce, CollAlgo::Ring)
+            .unwrap();
+        let mut plan = world.allreduce_init(&mut pbuf, add).unwrap();
+        // Repoint the selector; the plan must keep running its ring DAG.
+        world
+            .coll_selector()
+            .force(CollOp::Allreduce, CollAlgo::Tree)
+            .unwrap();
+        let before = world.metrics().coll_allreduce_ring.load(Ordering::Relaxed);
+        for iter in 0..5u64 {
+            fill_words(plan.buf_mut().unwrap(), iter, me);
+            plan.start().unwrap().wait().unwrap();
+            let want: Vec<u32> = (0..COUNT)
+                .map(|k| {
+                    (0..4u64)
+                        .map(|r| word(iter, r, k))
+                        .fold(0u32, |a, b| a.wrapping_add(b))
+                })
+                .collect();
+            assert_words(plan.buf_mut().unwrap(), &want, &format!("iter={iter}"));
+        }
+        // Starts never re-run selection: the ring counter moved only at init.
+        let after = world.metrics().coll_allreduce_ring.load(Ordering::Relaxed);
+        assert_eq!(after, before, "start() re-ran the selector");
+    });
+}
+
+// ---------------------------------------------------------------------
+// Mixed persistent kinds, manual DAGs, failure handling, teardown.
+// ---------------------------------------------------------------------
+
+#[test]
+fn start_all_mixes_p2p_and_sched_plans() {
+    Universe::builder().ranks(2).run(|world| {
+        let me = world.rank();
+        let mut cbuf = vec![0u32; 32];
+        let payload = *b"persistent";
+        let mut inbox = [0u8; 10];
+        for iter in 0..10u64 {
+            // Rebuild plans each outer iteration to also exercise
+            // install/release cycling; start each one 3 times.
+            let mut plans = Vec::new();
+            plans.push(world.bcast_init(&mut cbuf, 0).unwrap());
+            if me == 0 {
+                plans.push(world.send_init(&payload, 1, 5).unwrap());
+            } else {
+                plans.push(world.recv_init(&mut inbox, 0, 5).unwrap());
+            }
+            for round in 0..3u64 {
+                if me == 0 {
+                    fill_words(plans[0].buf_mut().unwrap(), iter * 3 + round, 1);
+                }
+                let reqs = start_all(&mut plans).unwrap();
+                waitall(reqs).unwrap();
+                let want: Vec<u32> = (0..32).map(|k| word(iter * 3 + round, 1, k)).collect();
+                assert_words(plans[0].buf_mut().unwrap(), &want, "mixed bcast");
+                if me == 1 {
+                    assert_eq!(plans[1].buf_mut().unwrap(), b"persistent");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn manual_dag_runs_file_ops() {
+    Universe::builder().ranks(1).run(|world| {
+        let hits = Arc::new(AtomicUsize::new(0));
+        let mut b = SchedBuilder::new();
+        let join = b.node(NodeOp::Nop, &[]);
+        let h = Arc::clone(&hits);
+        let fop = b.node(
+            NodeOp::FileOp(Arc::new(move || {
+                h.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            })),
+            &deps(&[Some(join)]),
+        );
+        let h2 = Arc::clone(&hits);
+        b.node(
+            NodeOp::FileOp(Arc::new(move || {
+                h2.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            })),
+            &[join, fop],
+        );
+        let state = exec::install(&world, b.build(world.next_coll_tag(), None), None, None);
+        let mut plan = PersistentRequest::new(PersistentKind::Sched(state));
+        for _ in 0..5 {
+            plan.start().unwrap().wait().unwrap();
+        }
+        assert_eq!(hits.load(Ordering::Relaxed), 10);
+    });
+}
+
+#[test]
+fn failing_file_op_poisons_the_plan() {
+    Universe::builder().ranks(1).run(|world| {
+        let mut b = SchedBuilder::new();
+        b.node(
+            NodeOp::FileOp(Arc::new(|| Err(MpiError::Runtime("disk full".into())))),
+            &[],
+        );
+        let state = exec::install(&world, b.build(world.next_coll_tag(), None), None, None);
+        let mut plan = PersistentRequest::new(PersistentKind::Sched(state));
+        let err = plan.start().unwrap().wait().unwrap_err();
+        assert!(matches!(err, MpiError::Runtime(_)), "got {err:?}");
+        // The plan is poisoned: further starts refuse instead of running
+        // a half-broken DAG.
+        match plan.start() {
+            Err(MpiError::InvalidState(_)) => {}
+            other => panic!("poisoned plan restarted: {other:?}"),
+        }
+    });
+}
+
+#[test]
+fn dropping_a_plan_unregisters_its_resident_poll() {
+    Universe::builder().ranks(2).run(|world| {
+        let rank = world.world_rank(world.rank()) as usize;
+        let resident = |w: &crate::comm::Comm| {
+            w.fabric().ranks[rank].grequests.lock().unwrap().len()
+        };
+        let base = resident(&world);
+        let mut buf = vec![0u32; 16];
+        let mut plan = world.allreduce_init(&mut buf, add).unwrap();
+        assert_eq!(resident(&world), base + 1, "install registered a poll");
+        plan.start().unwrap().wait().unwrap();
+        drop(plan);
+        assert_eq!(resident(&world), base, "release left a resident poll");
+        // The fabric keeps progressing fine after teardown.
+        coll::barrier(&world).unwrap();
+    });
+}
+
+// ---------------------------------------------------------------------
+// Acceptance: same agreement over the shm netmod (in-process segment).
+// ---------------------------------------------------------------------
+
+#[cfg(unix)]
+#[test]
+fn persistent_collectives_agree_over_shm_netmod() {
+    Universe::builder()
+        .ranks(4)
+        .netmod(crate::netmod::NetmodSel::Shm)
+        .run(|world| {
+            let me = world.rank() as u64;
+            const COUNT: usize = 48;
+            const BLK: usize = 12; // COUNT / 4 ranks
+            let n = world.size();
+            let mut abuf = vec![0u32; COUNT];
+            let mut bbuf = vec![0u32; COUNT];
+            let send: Vec<u32> = (0..COUNT).map(|k| word(5, me, k)).collect();
+            let mut rsrecv = vec![0u32; BLK];
+            let mut agrecv = vec![0u32; n * BLK];
+            let mut ar = world.allreduce_init(&mut abuf, add).unwrap();
+            let mut bc = world.bcast_init(&mut bbuf, 0).unwrap();
+            let mut rs = world.reduce_scatter_init(&send, &mut rsrecv, add).unwrap();
+            let mut ag = world.allgather_init(&send[..BLK], &mut agrecv).unwrap();
+            let mut ors = vec![0u32; BLK];
+            coll::reduce_scatter_block_t(&world, &send, &mut ors, add).unwrap();
+            let mut oag = vec![0u32; n * BLK];
+            coll::allgather_t(&world, &send[..BLK], &mut oag).unwrap();
+            for iter in 0..20u64 {
+                fill_words(ar.buf_mut().unwrap(), iter, me);
+                if world.rank() == 0 {
+                    fill_words(bc.buf_mut().unwrap(), iter, 55);
+                }
+                ar.start().unwrap().wait().unwrap();
+                bc.start().unwrap().wait().unwrap();
+                rs.start().unwrap().wait().unwrap();
+                ag.start().unwrap().wait().unwrap();
+
+                let mut oar: Vec<u32> = (0..COUNT).map(|k| word(iter, me, k)).collect();
+                coll::allreduce_t(&world, &mut oar, add).unwrap();
+                assert_words(ar.buf_mut().unwrap(), &oar, &format!("shm allreduce {iter}"));
+                let wbc: Vec<u32> = (0..COUNT).map(|k| word(iter, 55, k)).collect();
+                assert_words(bc.buf_mut().unwrap(), &wbc, &format!("shm bcast {iter}"));
+                assert_words(rs.buf_mut().unwrap(), &ors, &format!("shm reduce_scatter {iter}"));
+                assert_words(ag.buf_mut().unwrap(), &oag, &format!("shm allgather {iter}"));
+            }
+        });
+}

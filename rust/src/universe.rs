@@ -41,18 +41,6 @@ impl Universe {
         }
     }
 
-    /// Launch `cfg.nranks` ranks, run `f(world)` on each, join, and
-    /// return each rank's result ordered by rank.
-    #[deprecated(since = "0.7.0", note = "use Universe::builder()…run(f)")]
-    pub fn run<T, F>(cfg: FabricConfig, f: F) -> Vec<T>
-    where
-        T: Send,
-        F: Fn(Comm) -> T + Sync,
-    {
-        let fabric = Fabric::new(cfg);
-        Self::run_on(&fabric, &f)
-    }
-
     /// Launch over an existing fabric (benches reuse fabrics to avoid
     /// re-allocating endpoints between samples).
     pub fn run_on<T, F>(fabric: &Arc<Fabric>, f: &F) -> Vec<T>
@@ -80,15 +68,6 @@ impl Universe {
                 .map(|h| h.join().expect("rank panicked"))
                 .collect()
         })
-    }
-
-    /// Convenience: default config with `n` ranks.
-    #[deprecated(since = "0.7.0", note = "use Universe::builder().ranks(n)")]
-    pub fn with_ranks(n: usize) -> FabricConfig {
-        FabricConfig {
-            nranks: n,
-            ..Default::default()
-        }
     }
 }
 
@@ -250,14 +229,5 @@ mod tests {
                 assert_eq!(st.tag, 7);
             }
         });
-    }
-
-    // The deprecated constructors stay as thin wrappers; this pins their
-    // behavior until they are removed.
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_constructors_still_work() {
-        let out = Universe::run(Universe::with_ranks(2), |world| world.size());
-        assert_eq!(out, vec![2, 2]);
     }
 }

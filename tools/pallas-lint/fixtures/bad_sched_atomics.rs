@@ -1,0 +1,23 @@
+// Fixture: seeded sched_ready violations — a Release store where the
+// role allows Relaxed only (PL201), and an untagged ready-word
+// decrement (PL202).
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+pub struct Exec {
+    pub ready: AtomicU32,
+}
+
+impl Exec {
+    pub fn wrong_store(&self) {
+        self.ready.store(3, Ordering::Release); // lint: atomic(sched_ready)
+    }
+
+    pub fn untagged_retire(&self) -> u32 {
+        self.ready.fetch_sub(1, Ordering::AcqRel) // no tag anywhere: PL202
+    }
+
+    pub fn correct(&self) -> u32 {
+        self.ready.load(Ordering::Acquire) // lint: atomic(sched_ready)
+    }
+}

@@ -1,0 +1,17 @@
+// Fixture: seeded PL401 violation — `Plan::start_run` is listed as
+// hot-path in the fixture manifest but builds a fresh work stack per
+// start instead of recycling the plan's preallocated one.
+
+pub struct Plan;
+
+impl Plan {
+    pub fn start_run(&self) -> Vec<u32> {
+        let mut stack = vec![0u32; 4];
+        stack.push(1);
+        stack
+    }
+
+    pub fn step(&self, out: &mut [u32]) -> usize {
+        out.len() // allocation-free: no finding
+    }
+}

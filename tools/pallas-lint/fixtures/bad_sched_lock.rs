@@ -1,0 +1,16 @@
+// Fixture: seeded PL101 — the schedule run lock (rank 18) acquired
+// inside endpoint exclusion (rank 20); the legal nesting is the
+// reverse (the executor issues transport ops under the run lock).
+
+pub fn inverted(ep: &Endpoint, plan: &Plan) {
+    ep.with_ep(|st| {
+        let c = plan.core.lock().unwrap(); // rank 18 under rank 20: PL101
+        drop((st, c));
+    });
+}
+
+pub fn correct(plan: &Plan, ep: &Endpoint) {
+    let c = plan.core.lock().unwrap(); // rank 18 first…
+    ep.with_ep(|st| st.touch()); // …then endpoint 20: fine
+    drop(c);
+}

@@ -21,6 +21,11 @@ rank = 15
 patterns = [".begin_poll(", ".try_steal("]
 
 [[lock]]
+name = "sched_run"
+rank = 18
+patterns = [".core.lock(", ".core.try_lock("]
+
+[[lock]]
 name = "endpoint"
 rank = 20
 patterns = ["with_ep("]
@@ -31,7 +36,7 @@ rank = 90
 patterns = [".windows.lock(", ".handle.lock("]
 
 [atomics]
-scope = ["bad_atomics.rs", "clean.rs"]
+scope = ["bad_atomics.rs", "bad_sched_atomics.rs", "clean.rs"]
 
 [[role]]
 name = "doorbell"
@@ -47,6 +52,13 @@ store = ["Release"]
 rmw = ["AcqRel"]
 cas = ["AcqRel/Acquire"]
 
+[[role]]
+name = "sched_ready"
+load = ["Acquire"]
+store = ["Relaxed"]
+rmw = ["AcqRel"]
+cas = []
+
 [[hotpath]]
 file = "bad_hotpath.rs"
 name = "Ring::push"
@@ -58,6 +70,10 @@ name = "Ring::vanished"
 [[hotpath]]
 file = "clean.rs"
 name = "Door::pump"
+
+[[hotpath]]
+file = "bad_sched_hotpath.rs"
+name = "Plan::start_run"
 
 [counters]
 metrics_file = "src/metrics.rs"
@@ -140,11 +156,51 @@ fn unsafe_fires_once() {
 fn hotpath_fires_and_flags_stale_entry() {
     let files = vec![fixture("bad_hotpath.rs"), fixture("clean.rs")];
     let mut d = Vec::new();
-    hotpath::check(&files, &manifest(), &mut d);
+    let mut m = manifest();
+    m.hotpath.retain(|h| h.file != "bad_sched_hotpath.rs");
+    hotpath::check(&files, &m, &mut d);
     d.sort_by_key(|x| x.code);
     assert_eq!(codes(&d), vec!["PL401", "PL402"], "{d:?}");
     assert!(d[0].msg.contains("Vec::new"), "{}", d[0].msg);
     assert!(d[1].msg.contains("vanished"), "{}", d[1].msg);
+}
+
+#[test]
+fn sched_lock_order_fires() {
+    let f = fixture("bad_sched_lock.rs");
+    let mut d = Vec::new();
+    locks::check(&f, &manifest(), &mut d);
+    assert_eq!(codes(&d), vec!["PL101"], "{d:?}");
+    // The run lock under endpoint exclusion — and nothing from the
+    // correctly ordered function below it.
+    assert_eq!(d[0].line, 7);
+    assert!(d[0].msg.contains("sched_run"), "{}", d[0].msg);
+    assert!(d[0].msg.contains("endpoint"), "{}", d[0].msg);
+}
+
+#[test]
+fn sched_atomics_fire() {
+    let f = fixture("bad_sched_atomics.rs");
+    let mut d = Vec::new();
+    atomics::check(&f, &manifest(), &mut d);
+    d.sort_by_key(|x| x.line);
+    assert_eq!(codes(&d), vec!["PL201", "PL202"], "{d:?}");
+    assert_eq!(d[0].line, 13);
+    assert!(d[0].msg.contains("sched_ready"), "{}", d[0].msg);
+    assert!(d[0].msg.contains("Release"), "{}", d[0].msg);
+    assert_eq!(d[1].line, 17);
+}
+
+#[test]
+fn sched_hotpath_fires() {
+    let files = vec![fixture("bad_sched_hotpath.rs")];
+    let mut d = Vec::new();
+    let mut m = manifest();
+    m.hotpath.retain(|h| h.file == "bad_sched_hotpath.rs");
+    hotpath::check(&files, &m, &mut d);
+    assert_eq!(codes(&d), vec!["PL401"], "{d:?}");
+    assert!(d[0].msg.contains("vec!"), "{}", d[0].msg);
+    assert_eq!(d[0].line, 9);
 }
 
 #[test]
@@ -188,8 +244,8 @@ fn clean_fixture_is_clean_under_every_checker() {
 fn real_manifest_parses_and_is_nontrivial() {
     let m = Manifest::load(&Path::new(env!("CARGO_MANIFEST_DIR")).join("lock_order.toml"))
         .expect("repo manifest parses");
-    assert_eq!(m.locks.len(), 6);
-    assert_eq!(m.roles.len(), 10);
+    assert_eq!(m.locks.len(), 7);
+    assert_eq!(m.roles.len(), 11);
     assert!(m.hotpath.len() >= 15, "hotpath list shrank: {}", m.hotpath.len());
     assert!(m.atomics_scope.iter().any(|s| s == "rust/src/util/spsc.rs"));
 }
