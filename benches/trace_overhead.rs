@@ -1,0 +1,119 @@
+//! Flight-recorder overhead (§14): both halves of the "always safe to
+//! ship instrumented" claim.
+//!
+//! **Raw emit.** `trace::emit` with the gate off must cost one relaxed
+//! load and a predicted branch; with the gate on, a timestamp plus three
+//! relaxed stores into the caller's ring. A tight loop measures ns/op on
+//! each side.
+//!
+//! **Instrumented flood.** The seams the recorder hooks (eager send,
+//! matching, progress polls) are the hottest paths in the runtime, so
+//! the end-to-end check is an eager message flood between 2 ranks with
+//! recording off vs on — the disabled rate must sit within noise of the
+//! pre-instrumentation baseline, and the enabled rate bounds what an
+//! always-on recorder costs in production.
+//!
+//! Run: `cargo bench --offline --bench trace_overhead`
+//!
+//! Each run is appended to `BENCH_trace.json` at the repo root (see
+//! README §Benches for the format).
+
+use mpix::trace::{self, EventKind};
+use mpix::universe::Universe;
+use mpix::util::json::Json;
+use mpix::util::stats::{fmt_rate, record_bench_run, unix_now};
+use std::time::Instant;
+
+const RAW_OPS: usize = 4_000_000;
+const MSG: usize = 8;
+const WINDOW: usize = 64;
+const ROUNDS: usize = 200;
+
+/// ns per `trace::emit` in a tight loop with the gate preset.
+fn raw_emit_ns(on: bool) -> f64 {
+    trace::set_enabled(on);
+    let t0 = Instant::now();
+    for i in 0..RAW_OPS {
+        trace::emit(EventKind::PollBegin, 0, i as u64);
+    }
+    let ns = t0.elapsed().as_nanos() as f64 / RAW_OPS as f64;
+    trace::set_enabled(false);
+    ns
+}
+
+/// Bidirectional eager flood between 2 ranks; total messages/sec.
+fn eager_flood(on: bool) -> f64 {
+    let fabric = Universe::builder().ranks(2).trace(false).fabric();
+    trace::set_enabled(on);
+    let rates = Universe::run_on(&fabric, &|world| {
+        let peer = 1 - world.rank();
+        let sendbuf = [0u8; MSG];
+        let mut recvbufs = vec![[0u8; MSG]; WINDOW];
+        let t0 = Instant::now();
+        for _ in 0..ROUNDS {
+            let mut reqs = Vec::with_capacity(2 * WINDOW);
+            for rb in recvbufs.iter_mut() {
+                reqs.push(world.irecv(rb, peer as i32, 0).unwrap());
+            }
+            for _ in 0..WINDOW {
+                reqs.push(world.isend(&sendbuf, peer, 0).unwrap());
+            }
+            for req in reqs {
+                req.wait().unwrap();
+            }
+        }
+        (WINDOW * ROUNDS) as f64 / t0.elapsed().as_secs_f64()
+    });
+    trace::set_enabled(false);
+    rates.iter().sum()
+}
+
+fn main() {
+    // Oversubscribed testbed: polite waiters (see fig4_message_rate).
+    std::env::set_var("MPIX_SPIN", "64");
+    println!("§14 — flight-recorder overhead, recording off vs on");
+
+    let mut emit_off = f64::MAX;
+    let mut emit_on = f64::MAX;
+    for _ in 0..3 {
+        emit_off = emit_off.min(raw_emit_ns(false));
+        emit_on = emit_on.min(raw_emit_ns(true));
+    }
+    println!("raw emit:    disabled {emit_off:>8.2} ns/op   enabled {emit_on:>8.2} ns/op");
+
+    let mut flood_off = 0f64;
+    let mut flood_on = 0f64;
+    for _ in 0..3 {
+        flood_off = flood_off.max(eager_flood(false));
+        flood_on = flood_on.max(eager_flood(true));
+    }
+    println!(
+        "eager flood: disabled {:>12}   enabled {:>12}   ({:.1}% overhead)",
+        fmt_rate(flood_off),
+        fmt_rate(flood_on),
+        (flood_off / flood_on - 1.0) * 100.0
+    );
+    let (events, dropped) = trace::rings().iter().fold((0u64, 0u64), |(e, d), r| {
+        (e + r.total_events(), d + r.total_dropped())
+    });
+    println!("rings: {events} events recorded, {dropped} overwritten unread");
+
+    record_bench_run(
+        "trace",
+        "§14 trace overhead",
+        "ns per trace::emit and eager msgs/sec, recording off vs on",
+        Json::obj([
+            ("unix_time", Json::Num(unix_now())),
+            ("raw_ops", Json::Num(RAW_OPS as f64)),
+            ("msg_bytes", Json::Num(MSG as f64)),
+            ("window", Json::Num(WINDOW as f64)),
+            ("rounds", Json::Num(ROUNDS as f64)),
+            ("emit_ns_disabled", Json::Num(emit_off)),
+            ("emit_ns_enabled", Json::Num(emit_on)),
+            ("flood_rate_disabled", Json::Num(flood_off)),
+            ("flood_rate_enabled", Json::Num(flood_on)),
+            ("ring_events", Json::Num(events as f64)),
+            ("ring_dropped", Json::Num(dropped as f64)),
+        ]),
+    );
+}

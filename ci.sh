@@ -59,6 +59,11 @@ stage_smoke() {
     cargo run --release --example shm_launcher -- 4
     echo "==> netmod matrix: integration suite under MPIX_NETMOD=shm"
     MPIX_NETMOD=shm cargo test -q --test integration
+    echo "==> trace smoke: MPIX_TRACE=1 launcher, per-rank dumps must parse"
+    rm -f mpix_trace.rank*.json
+    MPIX_TRACE=1 cargo run --release --example shm_launcher -- 4
+    cargo run --release --example validate_bench -- --trace mpix_trace.rank*.json
+    rm -f mpix_trace.rank*.json
 }
 
 stage_lint() {

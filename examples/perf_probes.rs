@@ -4,10 +4,72 @@
 //! structural hot-path counters: chunk-pool hits vs misses (allocation-
 //! free steady state) and inbox-registry refreshes skipped (the sharded
 //! registry's fast path).
+//!
+//! `--trace <path>` switches to flight-recorder mode instead: a 4-rank,
+//! 2-domain mixed workload (eager + rendezvous p2p, persistent and
+//! one-shot collectives, a manual second-domain pass) runs with
+//! recording on, the merged Chrome-trace JSON lands at `<path>` (open it
+//! in Perfetto or `chrome://tracing`), and the per-ring event/drop
+//! totals are printed.
 use mpix::universe::Universe;
 use std::time::Instant;
 
+/// `--trace` mode: record a mixed workload and report the rings.
+fn trace_mode(path: &str) {
+    let fabric = Universe::builder()
+        .ranks(4)
+        .progress_domains(2)
+        .trace(true)
+        .trace_path(path)
+        .fabric();
+    Universe::run_on(&fabric, &|world| {
+        let me = world.rank();
+        let next = (me + 1) % 4;
+        let prev = (me + 3) % 4;
+        // Eager ring, then a rendezvous-sized transfer (nonblocking on
+        // the send side so the ring of sends cannot deadlock).
+        world.send(&[me as u8; 16], next, 1).unwrap();
+        let mut small = [0u8; 16];
+        world.recv(&mut small, prev as i32, 1).unwrap();
+        let big = vec![me as u8; 96 * 1024];
+        let req = world.isend(&big, next, 2).unwrap();
+        let mut bigr = vec![0u8; 96 * 1024];
+        world.recv(&mut bigr, prev as i32, 2).unwrap();
+        req.wait().unwrap();
+        // Persistent collective: plan once, start a few times.
+        let mut acc = [me as u64; 64];
+        let mut plan = world.allreduce_init(&mut acc, |a, b| *a += *b).unwrap();
+        for _ in 0..3 {
+            plan.start().unwrap().wait().unwrap();
+        }
+        drop(plan);
+        // One-shot collective, then one manual pass of the second
+        // domain (pass 0 always runs the steal sweep).
+        let mut x = [me as u32];
+        mpix::coll::allreduce_t(&world, &mut x, |a, b| *a += *b).unwrap();
+        mpix::progress::domain::domain_progress(world.fabric(), me as u32, 1);
+    });
+    let dump = mpix::trace::TraceDump::collect(&fabric);
+    println!("trace written to {path}");
+    println!("{:>6} {:>6} {:>10} {:>10}", "rank", "tid", "events", "dropped");
+    for d in &dump.rings {
+        let rank = if d.rank == u32::MAX { "-".into() } else { d.rank.to_string() };
+        println!("{:>6} {:>6} {:>10} {:>10}", rank, d.tid, d.events.len(), d.dropped);
+    }
+    println!(
+        "total: {} events retained, {} overwritten unread",
+        dump.total_events(),
+        dump.total_dropped()
+    );
+}
+
 fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    if let Some(i) = args.iter().position(|a| a == "--trace") {
+        let path = args.get(i + 1).map(String::as_str).unwrap_or("mpix_trace.json");
+        trace_mode(path);
+        return;
+    }
     let out = Universe::builder().ranks(1).run(|world| {
         let n = 100_000;
         let b = [0u8; 8];

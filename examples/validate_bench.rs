@@ -5,8 +5,15 @@
 //! A valid results document (see `util::stats::record_bench_run`) is a
 //! top-level object with string `bench`/`figure`/`metric` fields and a
 //! `runs` array whose entries are objects.
+//!
+//! `--trace <path>...` validates Chrome trace-event dumps instead (the
+//! files `MPIX_TRACE=1` / `trace::TraceDump` write): the document must
+//! parse, carry a `traceEvents` array of instant events with
+//! `name`/`ph`/`ts`/`pid`/`tid`, and keep `ts` monotone within each
+//! `(pid, tid)` ring. Run by `ci.sh smoke` against the launcher's dumps.
 
 use mpix::util::json::Json;
+use std::collections::HashMap;
 use std::path::Path;
 
 fn check_doc(name: &str, text: &str) -> Result<usize, String> {
@@ -28,7 +35,74 @@ fn check_doc(name: &str, text: &str) -> Result<usize, String> {
     Ok(runs.len())
 }
 
+/// Validate one Chrome trace-event dump; returns the event count.
+fn check_trace(name: &str, text: &str) -> Result<usize, String> {
+    let doc = Json::parse(text).map_err(|e| format!("{name}: parse error: {e}"))?;
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("{name}: missing `traceEvents` array"))?;
+    let mut last_ts: HashMap<(i64, i64), f64> = HashMap::new();
+    for (i, ev) in events.iter().enumerate() {
+        if ev.get("name").and_then(Json::as_str).is_none() {
+            return Err(format!("{name}: traceEvents[{i}] has no string name"));
+        }
+        if ev.get("ph").and_then(Json::as_str).is_none() {
+            return Err(format!("{name}: traceEvents[{i}] has no phase"));
+        }
+        let ts = match ev.get("ts") {
+            Some(Json::Num(n)) => *n,
+            _ => return Err(format!("{name}: traceEvents[{i}] has no numeric ts")),
+        };
+        let pid = ev.get("pid").and_then(Json::as_i64);
+        let tid = ev.get("tid").and_then(Json::as_i64);
+        let (Some(pid), Some(tid)) = (pid, tid) else {
+            return Err(format!("{name}: traceEvents[{i}] has no pid/tid"));
+        };
+        if let Some(&prev) = last_ts.get(&(pid, tid)) {
+            if ts < prev {
+                return Err(format!(
+                    "{name}: traceEvents[{i}] ts {ts} < {prev} within (pid {pid}, tid {tid})"
+                ));
+            }
+        }
+        last_ts.insert((pid, tid), ts);
+    }
+    Ok(events.len())
+}
+
 fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    if args.get(1).map(String::as_str) == Some("--trace") {
+        let paths = &args[2..];
+        if paths.is_empty() {
+            eprintln!("--trace needs at least one dump path");
+            std::process::exit(1);
+        }
+        let mut bad = 0usize;
+        for p in paths {
+            match std::fs::read_to_string(p).map_err(|e| format!("{p}: unreadable: {e}")) {
+                Ok(text) => match check_trace(p, &text) {
+                    Ok(n) => println!("{p}: ok ({n} events)"),
+                    Err(msg) => {
+                        eprintln!("{msg}");
+                        bad += 1;
+                    }
+                },
+                Err(msg) => {
+                    eprintln!("{msg}");
+                    bad += 1;
+                }
+            }
+        }
+        if bad > 0 {
+            eprintln!("{bad} of {} trace dumps are malformed", paths.len());
+            std::process::exit(1);
+        }
+        println!("validated {} trace dumps", paths.len());
+        return;
+    }
+
     // The crate manifest lives in rust/; the repo root is its parent.
     let root = Path::new(env!("CARGO_MANIFEST_DIR"))
         .parent()

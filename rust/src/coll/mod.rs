@@ -98,10 +98,19 @@ pub fn bcast<C: CommLike>(comm: &C, buf: &mut [u8], root: usize) -> Result<()> {
     if n <= 1 {
         return Ok(());
     }
-    match comm.selector().choose(CollOp::Bcast, buf.len(), n) {
+    let algo = comm.selector().choose(CollOp::Bcast, buf.len(), n);
+    trace_dispatch(CollOp::Bcast, algo);
+    match algo {
         CollAlgo::Chain => bcast_chain(comm, buf, root),
         _ => bcast_binomial(comm, buf, root),
     }
+}
+
+/// Record a selector decision on the flight recorder: which algorithm a
+/// multi-algorithm collective dispatched to (the trace-timeline twin of
+/// the per-algorithm `coll_*` dispatch counters).
+fn trace_dispatch(op: CollOp, algo: CollAlgo) {
+    crate::trace::emit(crate::trace::EventKind::CollDispatch, op as u32, algo as u64);
 }
 
 /// Typed `MPI_Bcast`.
@@ -159,7 +168,9 @@ pub fn allreduce_t<C: CommLike, T: Pod>(
         return Ok(());
     }
     let bytes = buf.len() * std::mem::size_of::<T>();
-    match comm.selector().choose(CollOp::Allreduce, bytes, n) {
+    let algo = comm.selector().choose(CollOp::Allreduce, bytes, n);
+    trace_dispatch(CollOp::Allreduce, algo);
+    match algo {
         CollAlgo::Ring => allreduce_ring_t(comm, buf, op),
         CollAlgo::Rabenseifner => allreduce_rabenseifner_t(comm, buf, op),
         _ => allreduce_tree_t(comm, buf, op),
@@ -173,7 +184,9 @@ pub fn allreduce_t<C: CommLike, T: Pod>(
 pub fn allgather_t<C: CommLike, T: Pod>(comm: &C, send: &[T], recv: &mut [T]) -> Result<()> {
     let n = comm.size();
     let bytes = recv.len() * std::mem::size_of::<T>();
-    match comm.selector().choose(CollOp::Allgather, bytes, n) {
+    let algo = comm.selector().choose(CollOp::Allgather, bytes, n);
+    trace_dispatch(CollOp::Allgather, algo);
+    match algo {
         CollAlgo::RecDbl => allgather_recdbl_t(comm, send, recv),
         _ => allgather_ring_t(comm, send, recv),
     }
@@ -335,7 +348,9 @@ pub fn reduce_scatter_block_t<C: CommLike, T: Pod>(
 ) -> Result<()> {
     let n = comm.size();
     let bytes = send.len() * std::mem::size_of::<T>();
-    match comm.selector().choose(CollOp::ReduceScatter, bytes, n) {
+    let algo = comm.selector().choose(CollOp::ReduceScatter, bytes, n);
+    trace_dispatch(CollOp::ReduceScatter, algo);
+    match algo {
         CollAlgo::Pairwise => reduce_scatter_block_pairwise_t(comm, send, recv, op),
         _ => reduce_scatter_block_linear_t(comm, send, recv, op),
     }

@@ -67,6 +67,11 @@ pub(crate) struct CommInner {
     /// `mpix_io_*` info keys via [`Comm::apply_io_info`]; files opened
     /// on this comm inherit them ([`crate::io::File::open_with_info`]).
     pub io_hints: crate::io::IoHints,
+    /// Flight-recorder setting: `MPIX_TRACE` env read at creation,
+    /// `mpix_trace` info key via [`Comm::apply_trace_info`]. The setting
+    /// propagates per-comm (dup/split/stream children inherit it); its
+    /// effect is process-global — see [`crate::trace::TraceHints`].
+    pub trace_hints: crate::trace::TraceHints,
 }
 
 /// An MPI communicator handle (cheap to clone; clones share collective
@@ -90,6 +95,7 @@ impl Comm {
             group,
             CollSelector::from_env(),
             crate::io::IoHints::from_env(),
+            crate::trace::TraceHints::from_env(),
         )
     }
 
@@ -104,6 +110,7 @@ impl Comm {
         group: Arc<Vec<u32>>,
         coll_sel: CollSelector,
         io_hints: crate::io::IoHints,
+        trace_hints: crate::trace::TraceHints,
     ) -> Comm {
         let size = group.len();
         Comm {
@@ -119,6 +126,7 @@ impl Comm {
                 win_seq: AtomicU32::new(0),
                 coll_sel,
                 io_hints,
+                trace_hints,
             }),
         }
     }
@@ -278,6 +286,7 @@ impl Comm {
         }
         // Two-copy rendezvous.
         Metrics::bump(&fabric.metrics.rdv);
+        crate::trace::emit(crate::trace::EventKind::Rts, dst as u32, buf.len() as u64);
         Metrics::bump(&fabric.metrics.requests_alloc);
         let req = ReqInner::new();
         let me = (self.world_rank(self.rank()), self.my_vci(src_idx));
@@ -325,6 +334,7 @@ impl Comm {
         let peer = (self.world_rank(dst), self.dst_vci(dst, dst_idx));
         let payload = if buf.len() <= INLINE_MAX {
             Metrics::bump(&fabric.metrics.eager_inline);
+            crate::trace::emit(crate::trace::EventKind::EagerInline, dst as u32, buf.len() as u64);
             let mut data = [0u8; INLINE_MAX];
             data[..buf.len()].copy_from_slice(buf);
             Payload::Inline {
@@ -333,6 +343,7 @@ impl Comm {
             }
         } else {
             Metrics::bump(&fabric.metrics.eager_heap);
+            crate::trace::emit(crate::trace::EventKind::EagerHeap, dst as u32, buf.len() as u64);
             pooled_eager(fabric, me, buf)
         };
         let env = Envelope {
@@ -526,6 +537,7 @@ impl Comm {
             Arc::clone(&self.inner.group),
             CollSelector::inherited(&self.inner.coll_sel),
             crate::io::IoHints::inherited(&self.inner.io_hints),
+            crate::trace::TraceHints::inherited(&self.inner.trace_hints),
         )
     }
 
@@ -559,6 +571,7 @@ impl Comm {
             Arc::new(group),
             CollSelector::inherited(&self.inner.coll_sel),
             crate::io::IoHints::inherited(&self.inner.io_hints),
+            crate::trace::TraceHints::inherited(&self.inner.trace_hints),
         ))
     }
 
@@ -630,6 +643,22 @@ impl Comm {
     /// This communicator's MPI-IO hint set.
     pub fn io_hints(&self) -> &crate::io::IoHints {
         &self.inner.io_hints
+    }
+
+    /// Apply the `mpix_trace` info key ("1"/"on" enables, "0"/"off"
+    /// disables) — the info-key analogue of the `MPIX_TRACE` env switch,
+    /// mirroring [`Comm::apply_coll_info`]. The *setting* is per-comm
+    /// (children created afterwards inherit it); the *effect* toggles
+    /// the process-global recorder gate, since trace rings are
+    /// per-thread, not per-comm. Transactional: an unparsable value
+    /// leaves both untouched.
+    pub fn apply_trace_info(&self, info: &Info) -> Result<()> {
+        self.inner.trace_hints.apply_info(info)
+    }
+
+    /// This communicator's flight-recorder hint set.
+    pub fn trace_hints(&self) -> &crate::trace::TraceHints {
+        &self.inner.trace_hints
     }
 }
 
@@ -706,6 +735,7 @@ impl Comm {
             return Ok(false);
         }
         Metrics::bump(&fabric.metrics.rdv);
+        crate::trace::emit(crate::trace::EventKind::Rts, dst as u32, buf.len() as u64);
         let me = (self.world_rank(self.rank()), self.my_vci(0));
         let token = fabric.next_token(me.0);
         let peer = (self.world_rank(dst), self.dst_vci(dst, 0));
@@ -824,6 +854,7 @@ pub(crate) fn push_eager_raw(
 ) -> Result<()> {
     let payload = if buf.len() <= INLINE_MAX {
         Metrics::bump(&fabric.metrics.eager_inline);
+        crate::trace::emit(crate::trace::EventKind::EagerInline, peer.0, buf.len() as u64);
         let mut data = [0u8; INLINE_MAX];
         data[..buf.len()].copy_from_slice(buf);
         Payload::Inline {
@@ -832,6 +863,7 @@ pub(crate) fn push_eager_raw(
         }
     } else {
         Metrics::bump(&fabric.metrics.eager_heap);
+        crate::trace::emit(crate::trace::EventKind::EagerHeap, peer.0, buf.len() as u64);
         pooled_eager(fabric, me, buf)
     };
     push_envelope_raw(fabric, me, peer, Envelope { hdr, payload })
@@ -853,6 +885,7 @@ pub(crate) fn isend_raw<'a>(
         return Ok(Request::new(ReqInner::done(), handle));
     }
     Metrics::bump(&fabric.metrics.rdv);
+    crate::trace::emit(crate::trace::EventKind::Rts, peer.0, buf.len() as u64);
     Metrics::bump(&fabric.metrics.requests_alloc);
     let req = ReqInner::new();
     let token = fabric.next_token(me.0);

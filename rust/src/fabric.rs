@@ -93,6 +93,15 @@ pub struct FabricConfig {
     /// sparse until touched). `eager_max`/`chunk_size` are clamped so a
     /// record always fits half a ring.
     pub shm_ring_bytes: usize,
+    /// Enable the flight-recorder trace at startup (see [`crate::trace`]).
+    /// `Default` resolves `MPIX_TRACE` through the hint registry; the
+    /// recorder can also be toggled later per communicator via the
+    /// `mpix_trace` info key or [`crate::trace::set_enabled`].
+    pub trace: bool,
+    /// Where [`crate::universe::Universe::run_on`] writes the merged
+    /// Chrome-trace JSON when `trace` is on (`None` = `mpix_trace.json`
+    /// in the working directory).
+    pub trace_path: Option<PathBuf>,
 }
 
 impl Default for FabricConfig {
@@ -111,6 +120,8 @@ impl Default for FabricConfig {
             shm_path: None,
             shm_attach: false,
             shm_ring_bytes: 256 * 1024,
+            trace: crate::trace::trace_from_env(),
+            trace_path: None,
         }
     }
 }
@@ -675,6 +686,7 @@ impl Fabric {
             ActiveNetmod::Tcp(nm) => nm.connect(self, src, dst),
         };
         Metrics::bump(&self.metrics.netmod_connects);
+        crate::trace::emit(crate::trace::EventKind::NetConnect, dst.0, dst.1 as u64);
         st.tx_cache.insert(dst, Arc::clone(&ch));
         ch
     }
@@ -683,6 +695,7 @@ impl Fabric {
     /// once per rank after its main function returns — the teardown half
     /// of the netmod contract ([`Netmod::flush`]).
     pub fn flush_netmod(&self, rank: u32) {
+        crate::trace::emit(crate::trace::EventKind::NetFlush, rank, 0);
         match &self.netmod {
             ActiveNetmod::Inproc(nm) => nm.flush(self, rank),
             #[cfg(unix)]

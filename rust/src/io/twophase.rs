@@ -123,6 +123,7 @@ pub(crate) fn write_at_all(fi: &Arc<FileInner>, data: &[u8]) -> Result<usize> {
         // the trailing barrier preserving the "all data visible on
         // return" collective contract.
         Metrics::bump(&m.io_indep_fallback);
+        crate::trace::emit(crate::trace::EventKind::IoDispatch, 0, data.len() as u64);
         let written = fi.independent_write(data)?;
         coll::barrier(comm)?;
         return Ok(written);
@@ -132,6 +133,7 @@ pub(crate) fn write_at_all(fi: &Arc<FileInner>, data: &[u8]) -> Result<usize> {
         return Ok(0);
     };
     Metrics::bump(&m.io_coll_ops);
+    crate::trace::emit(crate::trace::EventKind::IoDispatch, 1, data.len() as u64);
     let ndom = plan.dom.ndomains();
     // Phase 1a: ship segments + payload to every non-self aggregator
     // (empty messages included — deterministic receive counts).
@@ -230,6 +232,7 @@ pub(crate) fn read_at_all(fi: &Arc<FileInner>, out: &mut [u8]) -> Result<usize> 
     let cb_nodes = fi.hints.cb_nodes(n);
     if cb_nodes == 0 {
         Metrics::bump(&m.io_indep_fallback);
+        crate::trace::emit(crate::trace::EventKind::IoDispatch, 0, out.len() as u64);
         let read = fi.independent_read(out)?;
         coll::barrier(comm)?;
         return Ok(read);
@@ -239,6 +242,7 @@ pub(crate) fn read_at_all(fi: &Arc<FileInner>, out: &mut [u8]) -> Result<usize> 
         return Ok(0);
     };
     Metrics::bump(&m.io_coll_ops);
+    crate::trace::emit(crate::trace::EventKind::IoDispatch, 1, out.len() as u64);
     let ndom = plan.dom.ndomains();
     // Phase 1a: requests to every non-self aggregator.
     let mut req_bodies: Vec<Vec<u8>> = Vec::with_capacity(ndom);

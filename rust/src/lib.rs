@@ -31,6 +31,7 @@
 //! | Transport: endpoints/VCIs, channels, matching | [`fabric`], [`matching`] |
 //! | Netmods: pluggable transports (inproc / shm / tcp) | [`netmod`] |
 //! | Substrate: SPSC ring, chunk pool, hint registry, counters | [`util::spsc`], [`util::pool`], [`util::hints`], [`metrics`] |
+//! | Observability: flight-recorder rings, Chrome-trace export, MPI_T pvars | [`trace`] |
 //! | Kernel runtime: PJRT client for AOT artifacts | [`runtime`] |
 //!
 //! Collectives are *selectable schedules* ([`coll::select`]): each
@@ -72,6 +73,14 @@
 //! env read once at creation, transactional info-key overrides,
 //! snapshot inheritance through dup/split/stream communicators.
 //!
+//! Observability is built in ([`trace`]): per-thread lock-free
+//! flight-recorder rings record protocol transitions, matching
+//! outcomes, domain steals, schedule node retirement, and dispatch
+//! decisions behind one relaxed-atomic gate (`MPIX_TRACE` /
+//! `mpix_trace` / [`universe::UniverseBuilder::trace`]), exportable as
+//! Chrome trace-event JSON ([`trace::TraceDump`]) and readable through
+//! MPI_T-style performance variables ([`trace::PvarSession`]).
+//!
 //! # Hot path
 //!
 //! The per-message path is engineered allocation-free in steady state:
@@ -107,6 +116,7 @@ pub mod runtime;
 pub mod sched;
 pub mod stream;
 pub mod threadcomm;
+pub mod trace;
 pub mod universe;
 pub mod util;
 

@@ -211,6 +211,8 @@ impl MatchEngine {
             p.posted
         } else {
             let (i, _) = wild.unwrap();
+            let tag = env.hdr.tag as u32 as u64;
+            crate::trace::emit(crate::trace::EventKind::MatchWildcard, env.hdr.src, tag);
             self.posted_wild.remove(i).unwrap().posted
         };
         self.posted_count -= 1;

@@ -95,6 +95,13 @@ pub struct Metrics {
     pub netmod_bytes_tx: AtomicU64,
     /// Bytes deserialized off an out-of-process transport.
     pub netmod_bytes_rx: AtomicU64,
+    /// Trace events recorded into the flight-recorder rings, credited at
+    /// dump time (`trace::TraceDump::collect` harvests each ring's
+    /// since-last-dump delta, so repeated dumps never double-count).
+    pub trace_events: AtomicU64,
+    /// Trace events overwritten unread (ring full) — the recorder's
+    /// never-block contract made visible.
+    pub trace_dropped: AtomicU64,
 }
 
 impl Metrics {
@@ -153,6 +160,8 @@ impl Metrics {
             netmod_connects: self.netmod_connects.load(Relaxed),
             netmod_bytes_tx: self.netmod_bytes_tx.load(Relaxed),
             netmod_bytes_rx: self.netmod_bytes_rx.load(Relaxed),
+            trace_events: self.trace_events.load(Relaxed),
+            trace_dropped: self.trace_dropped.load(Relaxed),
         }
     }
 }
@@ -214,6 +223,10 @@ pub struct MetricsSnapshot {
     pub netmod_connects: u64,
     pub netmod_bytes_tx: u64,
     pub netmod_bytes_rx: u64,
+    /// Flight-recorder tallies (see `crate::trace`): events recorded and
+    /// events overwritten unread, harvested at dump time.
+    pub trace_events: u64,
+    pub trace_dropped: u64,
 }
 
 impl MetricsSnapshot {
@@ -224,7 +237,7 @@ impl MetricsSnapshot {
     /// cross-checks the name table against the `Metrics` struct — together
     /// they keep reporting tools (`perf_probes`) from silently dropping
     /// counters.
-    pub fn named_fields(&self) -> [(&'static str, u64); 38] {
+    pub fn named_fields(&self) -> [(&'static str, u64); 40] {
         let MetricsSnapshot {
             eager_inline,
             eager_heap,
@@ -264,6 +277,8 @@ impl MetricsSnapshot {
             netmod_connects,
             netmod_bytes_tx,
             netmod_bytes_rx,
+            trace_events,
+            trace_dropped,
         } = *self;
         [
             ("eager_inline", eager_inline),
@@ -304,6 +319,8 @@ impl MetricsSnapshot {
             ("netmod_connects", netmod_connects),
             ("netmod_bytes_tx", netmod_bytes_tx),
             ("netmod_bytes_rx", netmod_bytes_rx),
+            ("trace_events", trace_events),
+            ("trace_dropped", trace_dropped),
         ]
     }
 
@@ -351,6 +368,8 @@ impl MetricsSnapshot {
             netmod_connects: self.netmod_connects - earlier.netmod_connects,
             netmod_bytes_tx: self.netmod_bytes_tx - earlier.netmod_bytes_tx,
             netmod_bytes_rx: self.netmod_bytes_rx - earlier.netmod_bytes_rx,
+            trace_events: self.trace_events - earlier.trace_events,
+            trace_dropped: self.trace_dropped - earlier.trace_dropped,
         }
     }
 }
@@ -380,7 +399,7 @@ mod tests {
         let s = m.snapshot();
         let rows = s.named_fields();
         // One row per snapshot field, values matching the struct.
-        assert_eq!(rows.len(), 38);
+        assert_eq!(rows.len(), 40);
         assert_eq!(
             rows.iter().find(|(n, _)| *n == "netmod_bytes_rx"),
             Some(&("netmod_bytes_rx", 9))
@@ -389,6 +408,6 @@ mod tests {
         let mut names: Vec<_> = rows.iter().map(|(n, _)| *n).collect();
         names.sort_unstable();
         names.dedup();
-        assert_eq!(names.len(), 38);
+        assert_eq!(names.len(), 40);
     }
 }

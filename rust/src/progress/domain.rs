@@ -239,6 +239,7 @@ fn poll_slot(fabric: &Arc<Fabric>, rank: u32, ds: &DomainSet, slot: usize, domai
         Metrics::bump(&fabric.metrics.domain_contended);
         return false;
     }
+    crate::trace::emit(crate::trace::EventKind::PollBegin, rank, slot as u64);
     let active = if slot == ds.services_slot() {
         crate::grequest::poll_rank(fabric, rank)
     } else {
@@ -266,11 +267,16 @@ pub fn start_domain_progress_thread(fabric: &Arc<Fabric>, rank: u32, domain: u32
     let f = Arc::clone(fabric);
     ctl.set_busy();
     let ctl2 = Arc::clone(&ctl);
-    let h = std::thread::spawn(move || loop {
-        match ctl2.state() {
-            PROGRESS_BUSY => domain_progress(&f, rank, domain),
-            PROGRESS_IDLE => std::thread::sleep(std::time::Duration::from_millis(1)),
-            _ => break,
+    let h = std::thread::spawn(move || {
+        if crate::trace::enabled() {
+            crate::trace::set_rank(rank);
+        }
+        loop {
+            match ctl2.state() {
+                PROGRESS_BUSY => domain_progress(&f, rank, domain),
+                PROGRESS_IDLE => std::thread::sleep(std::time::Duration::from_millis(1)),
+                _ => break,
+            }
         }
     });
     *slot = Some(h);

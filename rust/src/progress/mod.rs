@@ -267,12 +267,15 @@ fn dispatch(fabric: &Arc<Fabric>, rank: u32, vci: u16, st: &mut EpState, env: En
         handle_ctrl(fabric, rank, vci, st, env);
         return;
     }
+    let (src, tag) = (env.hdr.src, env.hdr.tag);
     match st.matching.deliver(env) {
         None => {
             Metrics::bump(&fabric.metrics.unexpected_hits);
+            crate::trace::emit(crate::trace::EventKind::MatchUnexpected, src, tag as u32 as u64);
         }
         Some(MatchAction::Done) => {
             Metrics::bump(&fabric.metrics.expected_hits);
+            crate::trace::emit(crate::trace::EventKind::MatchPosted, src, tag as u32 as u64);
         }
         Some(MatchAction::StartTwoCopy {
             token,
@@ -283,6 +286,7 @@ fn dispatch(fabric: &Arc<Fabric>, rank: u32, vci: u16, st: &mut EpState, env: En
             status,
         }) => {
             Metrics::bump(&fabric.metrics.expected_hits);
+            crate::trace::emit(crate::trace::EventKind::MatchPosted, src, tag as u32 as u64);
             start_two_copy(
                 fabric, rank, vci, st, token, len, reply_rank, reply_vci, posted, status,
             );
@@ -315,6 +319,7 @@ pub fn start_two_copy(
             from: (reply_rank, reply_vci),
         },
     );
+    crate::trace::emit(crate::trace::EventKind::Cts, reply_rank, token);
     send_ctrl(
         fabric,
         st,
@@ -365,6 +370,7 @@ fn handle_ctrl(fabric: &Arc<Fabric>, rank: u32, vci: u16, st: &mut EpState, env:
         Payload::Fin { token } => {
             if let Some(x) = st.pending_sends.remove(&token) {
                 x.req.complete(Status::empty());
+                crate::trace::emit(crate::trace::EventKind::Fin, 0, token);
             }
         }
         Payload::Rma(msg) => {
@@ -427,6 +433,7 @@ fn pump_sends(fabric: &Arc<Fabric>, st: &mut EpState) {
             match ch.push(&fabric.metrics, env) {
                 Ok(()) => {
                     Metrics::bump(&fabric.metrics.rdv_chunks);
+                    crate::trace::emit(crate::trace::EventKind::Chunk, x.seq, token);
                     x.cursor += n;
                     x.seq += 1;
                 }

@@ -33,7 +33,9 @@ pub(crate) fn steal_sweep(fabric: &Arc<Fabric>, rank: u32, ds: &DomainSet, thief
             continue;
         }
         Metrics::bump(&fabric.metrics.progress_steals);
+        crate::trace::emit(crate::trace::EventKind::Steal, rank, slot as u64);
         super::poll_endpoint_as(fabric, rank, slot as u16, Some(thief));
         ds.release_to(slot, ds.home(slot));
+        crate::trace::emit(crate::trace::EventKind::Handback, rank, slot as u64);
     }
 }

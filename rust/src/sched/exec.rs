@@ -204,6 +204,8 @@ impl SchedState {
         let mut core = self.core.lock().unwrap();
         let metrics = &self.comm.fabric().metrics;
         Metrics::bump(&metrics.sched_starts);
+        let rank = self.comm.my_world_rank();
+        crate::trace::emit(crate::trace::EventKind::SchedStart, rank, self.sched.ops.len() as u64);
         self.run_req.reset();
         for r in self.node_reqs.iter() {
             r.reset();
@@ -290,6 +292,8 @@ impl SchedState {
     /// local nodes execute inline and retire immediately. Hot path.
     fn issue(&self, core: &mut RunCore, idx: u32) -> Result<()> {
         let i = idx as usize;
+        let rank = self.comm.my_world_rank() as u64;
+        crate::trace::emit(crate::trace::EventKind::SchedIssue, idx, rank);
         match &self.sched.ops[i] {
             NodeOp::Send { buf, peer, tag_off } => {
                 let p = self.read_ptr(core, *buf);
@@ -342,6 +346,8 @@ impl SchedState {
     /// Mark a node done and push newly-ready successors. Hot path.
     fn retire_node(&self, core: &mut RunCore, idx: u32) {
         Metrics::bump(&self.comm.fabric().metrics.sched_nodes_retired);
+        let rank = self.comm.my_world_rank() as u64;
+        crate::trace::emit(crate::trace::EventKind::SchedRetire, idx, rank);
         for &s in self.sched.succs[idx as usize].iter() {
             // AcqRel: the retiring node's effects (folds, landed
             // payloads) must be visible to the successor's issue.

@@ -137,6 +137,7 @@ pub fn stream_comm_create(comm: &Comm, stream: Option<&Stream>) -> Result<Comm> 
             win_seq: AtomicU32::new(0),
             coll_sel: crate::coll::CollSelector::inherited(&comm.inner.coll_sel),
             io_hints: crate::io::IoHints::inherited(&comm.inner.io_hints),
+            trace_hints: crate::trace::TraceHints::inherited(&comm.inner.trace_hints),
         }),
     })
 }
@@ -189,6 +190,7 @@ pub fn stream_comm_create_multiplex(comm: &Comm, streams: &[Stream]) -> Result<C
             win_seq: AtomicU32::new(0),
             coll_sel: crate::coll::CollSelector::inherited(&comm.inner.coll_sel),
             io_hints: crate::io::IoHints::inherited(&comm.inner.io_hints),
+            trace_hints: crate::trace::TraceHints::inherited(&comm.inner.trace_hints),
         }),
     })
 }

@@ -1,0 +1,171 @@
+//! The trace event vocabulary and the monotonic timestamp source.
+//!
+//! An [`Event`] is deliberately tiny — 24 bytes of plain integers — so a
+//! ring slot is three words and recording one is three relaxed stores
+//! (see [`super::ring`]). The `a`/`b` payload words carry per-kind
+//! detail (peer rank, byte count, token, node index …); the schema table
+//! lives in ARCHITECTURE.md §14.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Process-wide timestamp epoch: every ring shares it, so merged
+/// timelines from different threads are directly comparable.
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Nanoseconds since the first trace timestamp taken by this process.
+/// Monotonic (per `Instant`), allocation-free after the first call.
+#[inline]
+pub fn now_ns() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// What happened. Fieldless so a kind packs into the high half of one
+/// slot word; decoded back with [`EventKind::from_u32`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u32)]
+pub enum EventKind {
+    /// Eager send, payload inline in the envelope cell. `a` = dst rank,
+    /// `b` = bytes.
+    EagerInline = 0,
+    /// Eager send through a pooled heap cell. `a` = dst rank, `b` = bytes.
+    EagerHeap = 1,
+    /// Rendezvous request-to-send queued. `a` = dst rank, `b` = bytes.
+    Rts = 2,
+    /// Clear-to-send answered for a matched RTS. `a` = reply rank,
+    /// `b` = transfer token.
+    Cts = 3,
+    /// One rendezvous chunk pushed. `a` = chunk seq, `b` = transfer token.
+    Chunk = 4,
+    /// Rendezvous FIN: sender request complete. `a` = 0, `b` = token.
+    Fin = 5,
+    /// Incoming envelope matched a posted receive. `a` = src rank,
+    /// `b` = tag (as u32).
+    MatchPosted = 6,
+    /// Incoming envelope queued as unexpected. `a` = src rank,
+    /// `b` = tag (as u32).
+    MatchUnexpected = 7,
+    /// Match resolved through the wildcard fallback list. `a` = src rank,
+    /// `b` = tag (as u32).
+    MatchWildcard = 8,
+    /// A progress domain claimed a slot for a poll pass. `a` = rank,
+    /// `b` = slot index.
+    PollBegin = 9,
+    /// A domain stole a foreign slot. `a` = rank, `b` = slot index.
+    Steal = 10,
+    /// A stolen slot handed back to its home domain. `a` = rank,
+    /// `b` = slot index.
+    Handback = 11,
+    /// Persistent schedule `start()`. `a` = rank, `b` = node count.
+    SchedStart = 12,
+    /// Schedule node issued to the fabric. `a` = node index, `b` = rank.
+    SchedIssue = 13,
+    /// Schedule node retired (successors decremented). `a` = node index,
+    /// `b` = rank.
+    SchedRetire = 14,
+    /// Collective dispatched to a selected algorithm. `a` = `CollOp`
+    /// discriminant, `b` = `CollAlgo` discriminant.
+    CollDispatch = 15,
+    /// Collective I/O dispatched. `a` = 1 two-phase / 0 independent
+    /// fallback, `b` = bytes.
+    IoDispatch = 16,
+    /// Netmod channel established. `a` = dst rank, `b` = dst vci.
+    NetConnect = 17,
+    /// Netmod tx flush at teardown. `a` = rank, `b` = 0.
+    NetFlush = 18,
+}
+
+impl EventKind {
+    /// Number of kinds (decode bound for [`EventKind::from_u32`]).
+    pub const COUNT: u32 = 19;
+
+    /// Decode a slot word's kind half. `None` for out-of-range values —
+    /// a torn slot read (overwrite racing a dump) decodes to garbage and
+    /// is skipped, never misattributed.
+    pub fn from_u32(k: u32) -> Option<EventKind> {
+        const TABLE: [EventKind; EventKind::COUNT as usize] = [
+            EventKind::EagerInline,
+            EventKind::EagerHeap,
+            EventKind::Rts,
+            EventKind::Cts,
+            EventKind::Chunk,
+            EventKind::Fin,
+            EventKind::MatchPosted,
+            EventKind::MatchUnexpected,
+            EventKind::MatchWildcard,
+            EventKind::PollBegin,
+            EventKind::Steal,
+            EventKind::Handback,
+            EventKind::SchedStart,
+            EventKind::SchedIssue,
+            EventKind::SchedRetire,
+            EventKind::CollDispatch,
+            EventKind::IoDispatch,
+            EventKind::NetConnect,
+            EventKind::NetFlush,
+        ];
+        TABLE.get(k as usize).copied()
+    }
+
+    /// Stable lowercase name — the `name` field of the exported Chrome
+    /// trace events, and what tools grep for (`steal`, `sched_start`, …).
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::EagerInline => "eager_inline",
+            EventKind::EagerHeap => "eager_heap",
+            EventKind::Rts => "rts",
+            EventKind::Cts => "cts",
+            EventKind::Chunk => "chunk",
+            EventKind::Fin => "fin",
+            EventKind::MatchPosted => "match_posted",
+            EventKind::MatchUnexpected => "match_unexpected",
+            EventKind::MatchWildcard => "match_wildcard",
+            EventKind::PollBegin => "poll_begin",
+            EventKind::Steal => "steal",
+            EventKind::Handback => "handback",
+            EventKind::SchedStart => "sched_start",
+            EventKind::SchedIssue => "sched_issue",
+            EventKind::SchedRetire => "sched_retire",
+            EventKind::CollDispatch => "coll_dispatch",
+            EventKind::IoDispatch => "io_dispatch",
+            EventKind::NetConnect => "net_connect",
+            EventKind::NetFlush => "net_flush",
+        }
+    }
+}
+
+/// One recorded instant: when, what, and two words of per-kind detail.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Event {
+    /// Nanoseconds since the process [`EPOCH`] (see [`now_ns`]).
+    pub ts: u64,
+    /// What happened.
+    pub kind: EventKind,
+    /// First payload word (see the per-kind docs on [`EventKind`]).
+    pub a: u32,
+    /// Second payload word.
+    pub b: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_roundtrips_through_u32() {
+        for k in 0..EventKind::COUNT {
+            let kind = EventKind::from_u32(k).expect("in-range kind decodes");
+            assert_eq!(kind as u32, k);
+            assert!(!kind.name().is_empty());
+        }
+        assert_eq!(EventKind::from_u32(EventKind::COUNT), None);
+        assert_eq!(EventKind::from_u32(u32::MAX), None);
+    }
+
+    #[test]
+    fn timestamps_are_monotone() {
+        let a = now_ns();
+        let b = now_ns();
+        assert!(b >= a);
+    }
+}

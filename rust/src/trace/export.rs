@@ -1,0 +1,122 @@
+//! Merge every ring into one Chrome trace-event JSON dump.
+//!
+//! The output is the Trace Event Format's JSON-object flavor — a
+//! top-level `{"traceEvents": [...]}` — loadable in Perfetto or
+//! `chrome://tracing`. Each recorded [`Event`] becomes an instant event
+//! (`"ph": "i"`, thread scope): `pid` is the MPI rank the recording
+//! thread drove (−1 when the thread never declared one), `tid` is the
+//! ring's registration index, `ts` is microseconds since the process
+//! trace epoch, and the raw `a`/`b` payload words ride in `args`
+//! alongside the decoded event name.
+//!
+//! Collection also settles the ring totals into the fabric's
+//! [`crate::metrics::Metrics`]: each ring carries harvest cursors, and a
+//! dump adds only the *delta* since the previous dump to `trace_events`
+//! / `trace_dropped` — dump twice, count once.
+
+use std::io;
+use std::path::Path;
+use std::sync::Arc;
+
+use super::event::Event;
+use super::ring::TraceRing;
+use crate::fabric::Fabric;
+use crate::metrics::Metrics;
+use crate::util::json::Json;
+
+/// One ring's contribution to a dump: identity, retained events (push
+/// order), and the drop total at collection time.
+pub struct RingDump {
+    /// MPI rank stamped on the ring (`u32::MAX` = never stamped).
+    pub rank: u32,
+    /// Ring registration index (Chrome `tid`).
+    pub tid: u32,
+    /// Retained events, oldest first.
+    pub events: Vec<Event>,
+    /// Events overwritten unread over the ring's lifetime.
+    pub dropped: u64,
+}
+
+/// A merged snapshot of every registered ring, rank- then tid-ordered.
+pub struct TraceDump {
+    /// Per-ring dumps, sorted by `(rank, tid)`; within one ring the
+    /// events keep push order, so `ts` is monotone per `tid`.
+    pub rings: Vec<RingDump>,
+}
+
+impl TraceDump {
+    /// Snapshot every ring that recorded anything, crediting the
+    /// since-last-dump event/drop deltas to `fabric`'s `trace_events` /
+    /// `trace_dropped` counters.
+    pub fn collect(fabric: &Fabric) -> TraceDump {
+        let mut rings: Vec<RingDump> = Vec::new();
+        for r in super::rings() {
+            let dump = collect_ring(&r, fabric);
+            if !dump.events.is_empty() || dump.dropped > 0 {
+                rings.push(dump);
+            }
+        }
+        rings.sort_by_key(|d| (d.rank, d.tid));
+        TraceDump { rings }
+    }
+
+    /// Total retained events across rings.
+    pub fn total_events(&self) -> usize {
+        self.rings.iter().map(|d| d.events.len()).sum()
+    }
+
+    /// Total dropped events across rings.
+    pub fn total_dropped(&self) -> u64 {
+        self.rings.iter().map(|d| d.dropped).sum()
+    }
+
+    /// Serialize to the Chrome trace-event JSON object.
+    pub fn to_json(&self) -> Json {
+        let mut events = Vec::with_capacity(self.total_events());
+        for d in self.rings.iter() {
+            // An unstamped ring (a thread outside any rank's control
+            // flow) groups under pid -1 rather than a fake rank.
+            let pid = if d.rank == u32::MAX { -1.0 } else { d.rank as f64 };
+            for ev in &d.events {
+                events.push(Json::obj([
+                    ("name", Json::Str(ev.kind.name().to_string())),
+                    ("ph", Json::Str("i".to_string())),
+                    ("s", Json::Str("t".to_string())),
+                    ("ts", Json::Num(ev.ts as f64 / 1000.0)),
+                    ("pid", Json::Num(pid)),
+                    ("tid", Json::Num(d.tid as f64)),
+                    (
+                        "args",
+                        Json::obj([
+                            ("a", Json::Num(ev.a as f64)),
+                            ("b", Json::Num(ev.b as f64)),
+                        ]),
+                    ),
+                ]));
+            }
+        }
+        Json::obj([
+            ("traceEvents", Json::Arr(events)),
+            ("displayTimeUnit", Json::Str("ns".to_string())),
+        ])
+    }
+
+    /// Write the JSON dump to `path`.
+    pub fn write(&self, path: &Path) -> io::Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+    }
+}
+
+fn collect_ring(r: &Arc<TraceRing>, fabric: &Fabric) -> RingDump {
+    let events = r.collect();
+    let dropped = r.total_dropped();
+    let (ev_delta, drop_delta) = r.harvest();
+    Metrics::add(&fabric.metrics.trace_events, ev_delta);
+    Metrics::add(&fabric.metrics.trace_dropped, drop_delta);
+    RingDump {
+        rank: r.rank(),
+        tid: r.tid(),
+        events,
+        dropped,
+    }
+}

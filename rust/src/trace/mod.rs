@@ -1,0 +1,189 @@
+//! Flight-recorder tracing and the MPI_T-style tool interface.
+//!
+//! Counters (§ [`crate::metrics`]) say *how often*; this layer says
+//! *when*. Every thread that touches an instrumented seam owns one
+//! lock-free SPSC event ring ([`ring::TraceRing`]): fixed capacity,
+//! overwrite-oldest, a drop counter instead of ever blocking — the
+//! recorder can stay attached in production because the hot path never
+//! waits on it. Recording is gated by **one process-global relaxed
+//! atomic flag**, so the disabled cost of an instrumented seam is a
+//! single load and a predicted branch (`benches/trace_overhead.rs`
+//! measures both sides of that claim into `BENCH_trace.json`).
+//!
+//! The instrumented seams (schema table in ARCHITECTURE.md §14):
+//! p2p protocol transitions (eager / RTS / CTS / chunk / FIN), matching
+//! outcomes (posted / unexpected / wildcard fallback), progress-domain
+//! poll begin / steal / handback, schedule start / issue / retire,
+//! coll + io algorithm dispatch, and netmod connect / flush.
+//!
+//! On top of the rings sit the tool interfaces:
+//! * [`pvar::PvarSession`] — MPI_T-shaped performance variables:
+//!   enumerate, bind a handle, read, read-and-reset, straight off
+//!   [`crate::metrics::MetricsSnapshot::named_fields`] plus per-ring
+//!   depth/drop gauges.
+//! * [`export::TraceDump`] — merges all rings rank- and thread-ordered
+//!   into Chrome trace-event JSON (load the file in Perfetto or
+//!   `chrome://tracing`).
+//!
+//! Enablement resolves like every other tunable (`util::hints`): the
+//! `MPIX_TRACE` env var is read once at fabric construction, the
+//! `mpix_trace` info key applies transactionally via
+//! [`crate::Comm::apply_trace_info`], child comms inherit their
+//! parent's setting, and `Universe::builder().trace(true)` /
+//! `.trace_path(..)` is the programmatic switch: `run_on` records the
+//! whole run and writes the merged dump at teardown.
+
+pub mod event;
+pub mod export;
+pub mod pvar;
+pub mod ring;
+#[cfg(test)]
+mod tests;
+
+pub use event::{now_ns, Event, EventKind};
+pub use export::TraceDump;
+pub use pvar::{PvarClass, PvarHandle, PvarSession};
+pub use ring::{TraceRing, RING_CAP};
+
+use crate::error::Result;
+use crate::info::Info;
+use crate::util::hints::{HintKey, HintRegistry};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Process-global recording gate. Relaxed on both sides: flipping it
+/// synchronizes nothing — events racing the flip land or don't, which is
+/// exactly a flight recorder's contract — and the disabled fast path in
+/// [`emit`] stays a single uncontended load.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Every ring ever registered, in registration (tid) order. Rings are
+/// `Arc`-shared with their owning thread and never removed: a thread
+/// that exits leaves its ring behind for the final dump. The mutex
+/// guards registration and snapshot only — never the emit path.
+static REGISTRY: Mutex<Vec<Arc<TraceRing>>> = Mutex::new(Vec::new());
+
+thread_local! {
+    /// This thread's ring, created and registered on first use so
+    /// threads that never emit cost nothing.
+    static RING: Arc<TraceRing> = register_ring();
+}
+
+fn register_ring() -> Arc<TraceRing> {
+    let mut reg = REGISTRY.lock().unwrap();
+    let ring = Arc::new(TraceRing::new(reg.len() as u32));
+    reg.push(Arc::clone(&ring));
+    ring
+}
+
+/// Is recording on? (One relaxed load — callers building event
+/// arguments eagerly can skip the work when off.)
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed) // lint: atomic(trace_flag)
+}
+
+/// Flip recording. Process-global: every thread's [`emit`] observes the
+/// new state on its next event.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed); // lint: atomic(trace_flag)
+}
+
+/// Record one event on the calling thread's ring. The disabled path is
+/// one relaxed load + branch; the enabled path is a timestamp and three
+/// relaxed stores — never a lock, never an allocation (the ring itself
+/// is lazily registered *outside* this fn, on the thread's first event).
+#[inline]
+pub fn emit(kind: EventKind, a: u32, b: u64) {
+    if !ENABLED.load(Ordering::Relaxed) { // lint: atomic(trace_flag)
+        return;
+    }
+    let ev = Event { ts: event::now_ns(), kind, a, b };
+    RING.with(|r| r.push(ev));
+}
+
+/// Stamp the calling thread's ring with the MPI rank it drives (the
+/// Chrome `pid` of its events). Called by the `Universe` rank threads
+/// and per-domain progress threads when recording is on.
+pub fn set_rank(rank: u32) {
+    RING.with(|r| r.set_rank(rank));
+}
+
+/// Snapshot of every ring registered so far, tid order.
+pub fn rings() -> Vec<Arc<TraceRing>> {
+    REGISTRY.lock().unwrap().clone()
+}
+
+/// Reset every ring (cursor, drops, harvest marks) — test isolation
+/// between recording tests sharing the process-global registry.
+pub fn reset_all() {
+    for r in rings() {
+        r.reset();
+    }
+}
+
+// ---------------------------------------------------------------- hints
+
+/// `MPIX_TRACE` / `mpix_trace` hint key (one slot; encoded 0 = off,
+/// 1 = on).
+pub static TRACE_KEYS: [HintKey; 1] = [HintKey {
+    info: "mpix_trace",
+    env: "MPIX_TRACE",
+    parse: parse_trace_hint,
+}];
+
+fn parse_trace_hint(s: &str) -> Option<u64> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "1" | "on" | "true" | "yes" => Some(1),
+        "0" | "off" | "false" | "no" => Some(0),
+        _ => None,
+    }
+}
+
+/// Resolve the trace switch from the environment (read once; unset or
+/// invalid means off). Called by `FabricConfig::default()`.
+pub fn trace_from_env() -> bool {
+    HintRegistry::from_env(&TRACE_KEYS).get(0) == Some(1)
+}
+
+/// Per-communicator trace hint state: the same env-once / transactional
+/// info / inherit-on-dup resolution as `MPIX_COLL_*`, `MPIX_IO_*`, and
+/// `MPIX_NETMOD`. The *setting* is per-comm (children snapshot their
+/// parent, MPI-style); the recording *effect* is process-global — an
+/// accepted `mpix_trace` flips the global gate, because events from one
+/// comm's traffic are meaningless without the progress/steal context
+/// recorded around them.
+pub struct TraceHints {
+    reg: HintRegistry<1>,
+}
+
+impl TraceHints {
+    /// Read `MPIX_TRACE` once (world-comm creation).
+    pub fn from_env() -> Self {
+        TraceHints {
+            reg: HintRegistry::from_env(&TRACE_KEYS),
+        }
+    }
+
+    /// Snapshot the parent (dup/split/stream-comm creation).
+    pub fn inherited(parent: &Self) -> Self {
+        TraceHints {
+            reg: HintRegistry::inherited(&parent.reg),
+        }
+    }
+
+    /// Apply an `mpix_trace` info key transactionally; on acceptance the
+    /// process-global recording gate follows the new setting.
+    pub fn apply_info(&self, info: &Info) -> Result<()> {
+        self.reg.apply_info(info)?;
+        if let Some(on) = self.setting() {
+            set_enabled(on);
+        }
+        Ok(())
+    }
+
+    /// The resolved setting: `None` when neither env nor info spoke.
+    pub fn setting(&self) -> Option<bool> {
+        self.reg.get(0).map(|v| v != 0)
+    }
+}

@@ -1,0 +1,146 @@
+//! MPI_T-style performance variables over the metrics table and the
+//! trace rings.
+//!
+//! MPI_T's pvar model: a tool *enumerates* the variables an
+//! implementation exposes, *binds* a handle to the ones it cares about,
+//! then *reads* (or reads-and-resets) through the handle. The variables
+//! here come from two places, with zero bespoke plumbing:
+//!
+//! * every row of [`crate::metrics::MetricsSnapshot::named_fields`] —
+//!   the same table `examples/perf_probes.rs` prints — as a
+//!   [`PvarClass::Counter`], and
+//! * two variables per registered trace ring: `trace_ring<tid>_depth`
+//!   (a [`PvarClass::Gauge`], events currently retained) and
+//!   `trace_ring<tid>_dropped` (a counter).
+//!
+//! Reset is **session-local**, as MPI_T requires: `read_reset` moves the
+//! session's baseline, so other sessions (and the runtime's own
+//! counters) are undisturbed. Handle lifecycle: a [`PvarHandle`] is an
+//! index into the session it came from, valid as long as the session —
+//! rings registered *after* the session started are not visible through
+//! it (start a fresh session to see them), so a handle never dangles.
+
+use std::sync::Arc;
+
+use super::ring::TraceRing;
+use crate::fabric::Fabric;
+
+/// MPI_T variable class (the subset the runtime exposes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PvarClass {
+    /// Monotonically non-decreasing tally; `read_reset` rebases it.
+    Counter,
+    /// Instantaneous level (ring depth); `read_reset` does not rebase.
+    Gauge,
+}
+
+/// A bound performance variable: an index into the owning session's
+/// variable table. Copyable, only meaningful with that session.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PvarHandle(usize);
+
+enum Source {
+    /// Row index into `MetricsSnapshot::named_fields`.
+    Metric(usize),
+    /// Depth gauge of `rings[i]`.
+    RingDepth(usize),
+    /// Drop counter of `rings[i]`.
+    RingDropped(usize),
+}
+
+struct Var {
+    name: String,
+    class: PvarClass,
+    source: Source,
+    /// Session-local rebase point for `read_reset` on counters.
+    baseline: u64,
+}
+
+/// One tool session: an enumerated snapshot of the available variables
+/// plus per-variable session-local baselines.
+pub struct PvarSession<'f> {
+    fabric: &'f Fabric,
+    rings: Vec<Arc<TraceRing>>,
+    vars: Vec<Var>,
+}
+
+impl<'f> PvarSession<'f> {
+    /// Enumerate: all metrics-table rows, then depth/drop pairs for
+    /// every ring registered so far.
+    pub fn new(fabric: &'f Fabric) -> PvarSession<'f> {
+        let mut vars = Vec::new();
+        for (i, (name, _)) in fabric.metrics.snapshot().named_fields().iter().enumerate() {
+            vars.push(Var {
+                name: (*name).to_string(),
+                class: PvarClass::Counter,
+                source: Source::Metric(i),
+                baseline: 0,
+            });
+        }
+        let rings = super::rings();
+        for (i, r) in rings.iter().enumerate() {
+            vars.push(Var {
+                name: format!("trace_ring{}_depth", r.tid()),
+                class: PvarClass::Gauge,
+                source: Source::RingDepth(i),
+                baseline: 0,
+            });
+            vars.push(Var {
+                name: format!("trace_ring{}_dropped", r.tid()),
+                class: PvarClass::Counter,
+                source: Source::RingDropped(i),
+                baseline: 0,
+            });
+        }
+        PvarSession { fabric, rings, vars }
+    }
+
+    /// Number of variables this session enumerates.
+    pub fn count(&self) -> usize {
+        self.vars.len()
+    }
+
+    /// Name and class of variable `i` (enumeration order is stable for
+    /// the session's lifetime).
+    pub fn info(&self, i: usize) -> Option<(&str, PvarClass)> {
+        self.vars.get(i).map(|v| (v.name.as_str(), v.class))
+    }
+
+    /// Bind a handle by variable name.
+    pub fn bind(&self, name: &str) -> Option<PvarHandle> {
+        self.vars.iter().position(|v| v.name == name).map(PvarHandle)
+    }
+
+    /// Bind a handle by enumeration index.
+    pub fn bind_index(&self, i: usize) -> Option<PvarHandle> {
+        (i < self.vars.len()).then_some(PvarHandle(i))
+    }
+
+    /// Current value through a handle (counters: since the session's
+    /// last `read_reset` of that handle, or ever if never reset).
+    pub fn read(&self, h: PvarHandle) -> u64 {
+        let v = &self.vars[h.0];
+        self.raw(&v.source).saturating_sub(v.baseline)
+    }
+
+    /// Read, then (for counters) rebase the session-local baseline so
+    /// the next `read` starts from zero. Gauges are level-valued and
+    /// keep their reading.
+    pub fn read_reset(&mut self, h: PvarHandle) -> u64 {
+        let raw = self.raw(&self.vars[h.0].source);
+        let v = &mut self.vars[h.0];
+        let out = raw.saturating_sub(v.baseline);
+        if v.class == PvarClass::Counter {
+            v.baseline = raw;
+        }
+        out
+    }
+
+    fn raw(&self, s: &Source) -> u64 {
+        match *s {
+            Source::Metric(i) => self.fabric.metrics.snapshot().named_fields()[i].1,
+            Source::RingDepth(i) => self.rings[i].depth(),
+            Source::RingDropped(i) => self.rings[i].total_dropped(),
+        }
+    }
+}

@@ -1,0 +1,170 @@
+//! Per-thread flight-recorder ring: fixed capacity, overwrite-oldest,
+//! never blocks.
+//!
+//! Each recording thread owns exactly one [`TraceRing`] (see the
+//! `thread_local` in [`super`]), so the ring is SPSC by construction:
+//! the owner is the only producer, and the only consumers are the dump
+//! paths ([`super::export`], [`super::pvar`]) reading after — or,
+//! harmlessly, during — the traffic they observe.
+//!
+//! A slot is **three independent `AtomicU64` words** (`ts`,
+//! `kind<<32|a`, `b`), all accessed `Relaxed`. No slot-level seqlock, no
+//! `unsafe`: each word is tear-free on its own, and a reader racing the
+//! producer's overwrite can at worst observe words from two different
+//! events in one slot. That is the accepted flight-recorder trade —
+//! wrong *detail* on at most the slots overwritten mid-dump, never UB,
+//! never a stall on the hot path. A torn `kind` half that decodes
+//! out-of-range is skipped at read time ([`super::event::EventKind::from_u32`]).
+//!
+//! The cursor protocol matches the fabric's SPSC rings (lint role
+//! `ring_cursor`): the producer reads `head` relaxed (it is the only
+//! writer), fills the slot, then publishes with a release store; readers
+//! acquire `head` so every published slot's words are visible. Once
+//! `head` passes capacity every push overwrites the oldest slot and
+//! counts one drop — recording never exerts backpressure.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+use super::event::{Event, EventKind};
+
+/// Events per ring. Power of two: the slot index is `head & (CAP - 1)`.
+pub const RING_CAP: usize = 4096;
+
+/// One event, stored as three relaxed words (see the module docs for the
+/// tearing argument). `meta` packs `kind << 32 | a`.
+struct Slot {
+    ts: AtomicU64,
+    meta: AtomicU64,
+    b: AtomicU64,
+}
+
+/// One thread's event ring plus its harvest bookkeeping. `tid` is the
+/// registration index (stable for the ring's lifetime); `rank` is
+/// stamped by [`super::set_rank`] once the owning thread knows which MPI
+/// rank it is driving (`u32::MAX` until then).
+pub struct TraceRing {
+    tid: u32,
+    rank: AtomicU32,
+    /// Total events ever pushed; `head & (CAP-1)` is the next slot.
+    head: AtomicU64,
+    /// Events overwritten before any dump read them.
+    dropped: AtomicU64,
+    /// Harvest cursors: how much of `head`/`dropped` previous dumps
+    /// already accounted into `Metrics` (see [`super::export`]).
+    harvested_events: AtomicU64,
+    harvested_dropped: AtomicU64,
+    slots: Box<[Slot]>,
+}
+
+impl TraceRing {
+    pub(super) fn new(tid: u32) -> Self {
+        let slots = (0..RING_CAP)
+            .map(|_| Slot {
+                ts: AtomicU64::new(0),
+                // Unreadable sentinel kind; never reached anyway because
+                // reads stop at `head`.
+                meta: AtomicU64::new(u64::MAX),
+                b: AtomicU64::new(0),
+            })
+            .collect();
+        TraceRing {
+            tid,
+            rank: AtomicU32::new(u32::MAX),
+            head: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            harvested_events: AtomicU64::new(0),
+            harvested_dropped: AtomicU64::new(0),
+            slots,
+        }
+    }
+
+    /// Record one event: three relaxed slot stores and one release
+    /// publish. Never blocks, never allocates; a full ring overwrites
+    /// the oldest slot and counts one drop.
+    pub fn push(&self, ev: Event) {
+        let h = self.head.load(Ordering::Relaxed); // lint: atomic(ring_cursor)
+        let slot = &self.slots[(h as usize) & (RING_CAP - 1)];
+        let meta = ((ev.kind as u64) << 32) | ev.a as u64;
+        slot.ts.store(ev.ts, Ordering::Relaxed); // lint: atomic(trace_flag)
+        slot.meta.store(meta, Ordering::Relaxed); // lint: atomic(trace_flag)
+        slot.b.store(ev.b, Ordering::Relaxed); // lint: atomic(trace_flag)
+        if h >= RING_CAP as u64 {
+            self.dropped.fetch_add(1, Ordering::Relaxed); // lint: atomic(counter)
+        }
+        self.head.store(h + 1, Ordering::Release); // lint: atomic(ring_cursor)
+    }
+
+    /// Registration index of the owning thread (merge key, Chrome `tid`).
+    pub fn tid(&self) -> u32 {
+        self.tid
+    }
+
+    /// Stamped MPI rank, `u32::MAX` when the thread never declared one.
+    pub fn rank(&self) -> u32 {
+        self.rank.load(Ordering::Relaxed) // lint: atomic(trace_flag)
+    }
+
+    pub(super) fn set_rank(&self, rank: u32) {
+        self.rank.store(rank, Ordering::Relaxed); // lint: atomic(trace_flag)
+    }
+
+    /// Events currently held (≤ [`RING_CAP`]).
+    pub fn depth(&self) -> u64 {
+        let h = self.head.load(Ordering::Acquire); // lint: atomic(ring_cursor)
+        h.min(RING_CAP as u64)
+    }
+
+    /// Total events ever pushed through this ring.
+    pub fn total_events(&self) -> u64 {
+        self.head.load(Ordering::Acquire) // lint: atomic(ring_cursor)
+    }
+
+    /// Events overwritten unread (the `trace_dropped` gauge source).
+    pub fn total_dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed) // lint: atomic(counter)
+    }
+
+    /// Advance the harvest cursors to the current totals, returning the
+    /// `(events, dropped)` deltas since the previous harvest — what a
+    /// dump should add to the fabric's `trace_events`/`trace_dropped`
+    /// counters so repeated dumps never double-count.
+    pub(super) fn harvest(&self) -> (u64, u64) {
+        let ev = self.total_events();
+        let dr = self.total_dropped();
+        let pe = self.harvested_events.load(Ordering::Relaxed); // lint: atomic(counter)
+        let pd = self.harvested_dropped.load(Ordering::Relaxed); // lint: atomic(counter)
+        self.harvested_events.store(ev, Ordering::Relaxed); // lint: atomic(counter)
+        self.harvested_dropped.store(dr, Ordering::Relaxed); // lint: atomic(counter)
+        (ev.saturating_sub(pe), dr.saturating_sub(pd))
+    }
+
+    /// The retained events, oldest first (push order — timestamps are
+    /// monotone within one ring because the owner is the sole producer).
+    /// Slots whose `kind` half fails to decode (torn by a concurrent
+    /// overwrite) are skipped.
+    pub fn collect(&self) -> Vec<Event> {
+        let head = self.head.load(Ordering::Acquire); // lint: atomic(ring_cursor)
+        let start = head.saturating_sub(RING_CAP as u64);
+        let mut out = Vec::with_capacity((head - start) as usize);
+        for i in start..head {
+            let slot = &self.slots[(i as usize) & (RING_CAP - 1)];
+            let ts = slot.ts.load(Ordering::Relaxed); // lint: atomic(trace_flag)
+            let meta = slot.meta.load(Ordering::Relaxed); // lint: atomic(trace_flag)
+            let b = slot.b.load(Ordering::Relaxed); // lint: atomic(trace_flag)
+            if let Some(kind) = EventKind::from_u32((meta >> 32) as u32) {
+                out.push(Event { ts, kind, a: meta as u32, b });
+            }
+        }
+        out
+    }
+
+    /// Forget everything: cursor, drops, and harvest marks back to zero
+    /// (test isolation; the slots themselves need no scrub — reads stop
+    /// at `head`).
+    pub(super) fn reset(&self) {
+        self.head.store(0, Ordering::Release); // lint: atomic(ring_cursor)
+        self.dropped.store(0, Ordering::Relaxed); // lint: atomic(counter)
+        self.harvested_events.store(0, Ordering::Relaxed); // lint: atomic(counter)
+        self.harvested_dropped.store(0, Ordering::Relaxed); // lint: atomic(counter)
+    }
+}

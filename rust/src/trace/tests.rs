@@ -1,0 +1,312 @@
+//! Trace subsystem tests: ring overwrite discipline, harvest deltas,
+//! hint resolution/inheritance, pvar sessions, and the end-to-end
+//! 4-rank / 2-domain export acceptance run.
+
+use super::event::{Event, EventKind};
+use super::ring::{TraceRing, RING_CAP};
+use super::TraceHints;
+use crate::info::Info;
+use crate::metrics::Metrics;
+use crate::universe::Universe;
+use std::sync::Mutex;
+
+/// Tests that flip the process-global recording gate (or depend on its
+/// state) serialize here so they cannot observe each other's flips.
+/// Poisoning is survivable: the gate guards no invariant of its own.
+static GATE: Mutex<()> = Mutex::new(());
+
+fn gate() -> std::sync::MutexGuard<'static, ()> {
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn ev(kind: EventKind, a: u32, b: u64) -> Event {
+    Event {
+        ts: super::event::now_ns(),
+        kind,
+        a,
+        b,
+    }
+}
+
+// ------------------------------------------------------------- ring
+
+#[test]
+fn full_ring_overwrites_oldest_and_counts_drops_exactly() {
+    let r = TraceRing::new(7001);
+    const EXTRA: u64 = 5;
+    for i in 0..(RING_CAP as u64 + EXTRA) {
+        r.push(ev(EventKind::Steal, 0, i));
+    }
+    assert_eq!(r.total_events(), RING_CAP as u64 + EXTRA);
+    assert_eq!(r.depth(), RING_CAP as u64, "depth saturates at capacity");
+    assert_eq!(r.total_dropped(), EXTRA, "exactly the overwritten slots");
+    let got = r.collect();
+    assert_eq!(got.len(), RING_CAP);
+    // Oldest retained event is the first *surviving* push: #EXTRA.
+    assert_eq!(got[0].b, EXTRA);
+    assert_eq!(got[RING_CAP - 1].b, RING_CAP as u64 + EXTRA - 1);
+    for w in got.windows(2) {
+        assert!(w[1].ts >= w[0].ts, "push order is timestamp order");
+        assert_eq!(w[1].b, w[0].b + 1, "no gaps, no reorder");
+    }
+}
+
+#[test]
+fn ring_below_capacity_drops_nothing() {
+    let r = TraceRing::new(7002);
+    for i in 0..10u64 {
+        r.push(ev(EventKind::PollBegin, 3, i));
+    }
+    assert_eq!(r.total_dropped(), 0);
+    assert_eq!(r.depth(), 10);
+    let got = r.collect();
+    assert_eq!(got.len(), 10);
+    assert_eq!(got[0].b, 0);
+    assert_eq!(got[9].a, 3);
+}
+
+#[test]
+fn harvest_returns_deltas_not_totals() {
+    let r = TraceRing::new(7003);
+    for i in 0..3u64 {
+        r.push(ev(EventKind::Fin, 0, i));
+    }
+    assert_eq!(r.harvest(), (3, 0));
+    r.push(ev(EventKind::Fin, 0, 3));
+    assert_eq!(r.harvest(), (1, 0), "second harvest sees only the delta");
+    assert_eq!(r.harvest(), (0, 0), "nothing new, nothing credited");
+    r.reset();
+    assert_eq!(r.total_events(), 0);
+    assert_eq!(r.harvest(), (0, 0), "reset also clears harvest marks");
+}
+
+// ------------------------------------------------------------ hints
+
+#[test]
+fn parse_trace_hint_vocabulary() {
+    for on in ["1", "on", "true", "yes", " On ", "TRUE"] {
+        assert_eq!(super::parse_trace_hint(on), Some(1), "{on:?}");
+    }
+    for off in ["0", "off", "false", "no", " OFF "] {
+        assert_eq!(super::parse_trace_hint(off), Some(0), "{off:?}");
+    }
+    for bad in ["", "2", "banana", "enabled"] {
+        assert_eq!(super::parse_trace_hint(bad), None, "{bad:?}");
+    }
+}
+
+#[test]
+fn trace_info_flips_global_gate_and_rejects_garbage() {
+    let _g = gate();
+    let hints = TraceHints::from_env();
+    let mut on = Info::new();
+    on.set("mpix_trace", "on");
+    hints.apply_info(&on).unwrap();
+    assert_eq!(hints.setting(), Some(true));
+    assert!(super::enabled(), "accepted info key flips the gate");
+
+    let mut bad = Info::new();
+    bad.set("mpix_trace", "banana");
+    assert!(hints.apply_info(&bad).is_err());
+    assert_eq!(hints.setting(), Some(true), "transactional: unchanged");
+    assert!(super::enabled());
+
+    let mut off = Info::new();
+    off.set("mpix_trace", "0");
+    hints.apply_info(&off).unwrap();
+    assert_eq!(hints.setting(), Some(false));
+    assert!(!super::enabled());
+}
+
+#[test]
+fn children_inherit_parent_trace_setting() {
+    let _g = gate();
+    let parent = TraceHints::from_env();
+    let mut on = Info::new();
+    on.set("mpix_trace", "1");
+    parent.apply_info(&on).unwrap();
+    let child = TraceHints::inherited(&parent);
+    assert_eq!(child.setting(), Some(true), "snapshot at creation");
+    let mut off = Info::new();
+    off.set("mpix_trace", "off");
+    parent.apply_info(&off).unwrap();
+    assert_eq!(child.setting(), Some(true), "parent's later flip stays out");
+    assert_eq!(parent.setting(), Some(false));
+    super::set_enabled(false);
+}
+
+#[test]
+fn comm_dup_inherits_trace_hints() {
+    let _g = gate();
+    Universe::builder().ranks(1).run(|world| {
+        let mut on = Info::new();
+        on.set("mpix_trace", "yes");
+        world.apply_trace_info(&on).unwrap();
+        let child = world.dup();
+        assert_eq!(child.trace_hints().setting(), Some(true));
+        let mut off = Info::new();
+        off.set("mpix_trace", "no");
+        world.apply_trace_info(&off).unwrap();
+        assert_eq!(child.trace_hints().setting(), Some(true), "snapshot");
+        assert_eq!(world.trace_hints().setting(), Some(false));
+    });
+    super::set_enabled(false);
+}
+
+// ------------------------------------------------------------- pvars
+
+#[test]
+fn pvar_session_enumerates_metrics_rows() {
+    let fabric = Universe::builder().ranks(1).fabric();
+    let s = super::PvarSession::new(&fabric);
+    let nmetrics = fabric.metrics.snapshot().named_fields().len();
+    assert!(s.count() >= nmetrics, "all metric rows plus ring vars");
+    let (name0, class0) = s.info(0).unwrap();
+    assert_eq!(class0, super::PvarClass::Counter);
+    assert_eq!(s.bind(name0), s.bind_index(0));
+    assert!(s.bind("trace_events").is_some());
+    assert!(s.bind("no_such_pvar").is_none());
+    assert!(s.info(s.count()).is_none());
+}
+
+#[test]
+fn pvar_read_reset_is_session_local() {
+    let fabric = Universe::builder().ranks(1).fabric();
+    let mut s = super::PvarSession::new(&fabric);
+    let h = s.bind("trace_events").unwrap();
+    let before = s.read(h);
+    Metrics::add(&fabric.metrics.trace_events, 5);
+    assert_eq!(s.read(h), before + 5);
+    assert_eq!(s.read_reset(h), before + 5);
+    assert_eq!(s.read(h), 0, "counter rebased to the session baseline");
+    Metrics::add(&fabric.metrics.trace_events, 3);
+    assert_eq!(s.read(h), 3);
+    // The runtime's own counter never moved backwards.
+    assert_eq!(fabric.metrics.snapshot().trace_events, before + 8);
+}
+
+// ----------------------------------------------------- export (e2e)
+
+#[test]
+fn mixed_workload_exports_chrome_trace_with_steal_and_sched_start() {
+    let _g = gate();
+    super::reset_all();
+    let dir = std::env::temp_dir().join(format!("mpix_trace_test_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trace.json");
+
+    let fabric = Universe::builder()
+        .ranks(4)
+        .progress_domains(2)
+        .trace(true)
+        .trace_path(&path)
+        .fabric();
+    Universe::run_on(&fabric, &|world| {
+        let me = world.rank();
+        // p2p: eager ring + one rendezvous-sized transfer.
+        let next = (me + 1) % 4;
+        let prev = (me + 3) % 4;
+        world.send(&[me as u8; 16], next, 1).unwrap();
+        let mut small = [0u8; 16];
+        world.recv(&mut small, prev as i32, 1).unwrap();
+        // Nonblocking on the send side: a blocking rendezvous ring of
+        // sends would deadlock (nobody reaches their recv).
+        let big = vec![me as u8; 96 * 1024];
+        let req = world.isend(&big, next, 2).unwrap();
+        let mut bigr = vec![0u8; 96 * 1024];
+        world.recv(&mut bigr, prev as i32, 2).unwrap();
+        req.wait().unwrap();
+        // Persistent collective: plan once, start twice.
+        let mut acc = [me as u64; 64];
+        let mut plan = world.allreduce_init(&mut acc, |a, b| *a += *b).unwrap();
+        for _ in 0..2 {
+            plan.start().unwrap().wait().unwrap();
+        }
+        drop(plan);
+        // One-shot collective for a dispatch event, then a manual pass
+        // of the second domain (pass 0 always runs the steal sweep).
+        let mut x = [me as u32];
+        crate::coll::allreduce_t(&world, &mut x, |a, b| *a += *b).unwrap();
+        crate::progress::domain::domain_progress(world.fabric(), me as u32, 1);
+    });
+
+    // The gate is off again; give stragglers mid-`emit` on unrelated
+    // test threads a beat to land before snapshotting the rings.
+    std::thread::sleep(std::time::Duration::from_millis(10));
+    let dump = super::TraceDump::collect(&fabric);
+    let kinds: Vec<EventKind> = dump
+        .rings
+        .iter()
+        .flat_map(|d| d.events.iter().map(|e| e.kind))
+        .collect();
+    assert!(kinds.contains(&EventKind::Steal), "2-domain run must steal");
+    assert!(kinds.contains(&EventKind::SchedStart), "persistent start");
+    assert!(kinds.contains(&EventKind::SchedRetire));
+    assert!(kinds.contains(&EventKind::Rts), "96 KiB goes rendezvous");
+    assert!(kinds.contains(&EventKind::MatchPosted) || kinds.contains(&EventKind::MatchUnexpected));
+    assert!(kinds.contains(&EventKind::CollDispatch));
+    assert!(kinds.contains(&EventKind::PollBegin));
+
+    // Per-ring: events keep push order, so ts is monotone; rank threads
+    // (pid 0..4) have all joined, so their rings are quiescent.
+    for d in dump.rings.iter().filter(|d| d.rank < 4) {
+        for w in d.events.windows(2) {
+            assert!(w[1].ts >= w[0].ts, "ring tid={} not monotone", d.tid);
+        }
+    }
+
+    // run_on's teardown exported the same rings to the builder path.
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.starts_with('{'));
+    assert!(text.contains("\"traceEvents\""));
+    assert!(text.contains("\"steal\""));
+    assert!(text.contains("\"sched_start\""));
+    assert!(text.contains("\"displayTimeUnit\""));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn trace_dump_credits_metrics_once_per_event() {
+    let _g = gate();
+    super::reset_all();
+    let fabric = Universe::builder().ranks(1).fabric();
+    super::set_enabled(true);
+    super::emit(EventKind::NetFlush, 4242, 77);
+    super::emit(EventKind::NetFlush, 4242, 78);
+    super::set_enabled(false);
+    // Let stragglers mid-`emit` on unrelated test threads land before
+    // the delta-credit assertions below snapshot the rings.
+    std::thread::sleep(std::time::Duration::from_millis(10));
+    let dump = super::TraceDump::collect(&fabric);
+    let mine: Vec<&Event> = dump
+        .rings
+        .iter()
+        .flat_map(|d| d.events.iter())
+        .filter(|e| e.kind == EventKind::NetFlush && e.a == 4242)
+        .collect();
+    assert_eq!(mine.len(), 2);
+    assert_eq!(mine[0].b, 77);
+    assert_eq!(mine[1].b, 78);
+    let after_first = fabric.metrics.snapshot().trace_events;
+    assert!(after_first >= 2, "collect credits harvested events");
+    // A second dump re-reads retained events but credits no new ones.
+    let dump2 = super::TraceDump::collect(&fabric);
+    assert!(dump2.total_events() >= 2);
+    assert_eq!(fabric.metrics.snapshot().trace_events, after_first);
+}
+
+#[test]
+fn disabled_emit_is_invisible() {
+    let _g = gate();
+    super::set_enabled(false);
+    super::reset_all();
+    let fabric = Universe::builder().ranks(1).fabric();
+    super::emit(EventKind::NetConnect, 999_001, 1);
+    let dump = super::TraceDump::collect(&fabric);
+    let seen = dump
+        .rings
+        .iter()
+        .flat_map(|d| d.events.iter())
+        .any(|e| e.a == 999_001);
+    assert!(!seen, "gate off: emit must record nothing");
+}

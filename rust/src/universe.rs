@@ -49,14 +49,20 @@ impl Universe {
         F: Fn(Comm) -> T + Sync,
     {
         let n = fabric.cfg.nranks;
+        if fabric.cfg.trace {
+            crate::trace::set_enabled(true);
+        }
         let group = Arc::new((0..n as u32).collect::<Vec<_>>());
-        std::thread::scope(|s| {
+        let out = std::thread::scope(|s| {
             let mut handles = Vec::with_capacity(n);
             for rank in 0..n {
                 let fabric = Arc::clone(fabric);
                 let group = Arc::clone(&group);
                 let f = &f;
                 handles.push(s.spawn(move || {
+                    if crate::trace::enabled() {
+                        crate::trace::set_rank(rank as u32);
+                    }
                     let world = Comm::new_proc(Arc::clone(&fabric), CTX_WORLD, rank as u32, group);
                     let out = f(world);
                     fabric.flush_netmod(rank as u32);
@@ -67,7 +73,23 @@ impl Universe {
                 .into_iter()
                 .map(|h| h.join().expect("rank panicked"))
                 .collect()
-        })
+        });
+        if fabric.cfg.trace {
+            crate::trace::set_enabled(false);
+            export_trace(fabric, fabric.cfg.trace_path.as_deref(), "mpix_trace.json");
+        }
+        out
+    }
+}
+
+/// Best-effort trace export at universe teardown: merge every ring into
+/// Chrome-trace JSON at `path` (or `fallback` when unset). A write error
+/// is reported, not fatal — tracing must never fail the application.
+fn export_trace(fabric: &Arc<Fabric>, path: Option<&std::path::Path>, fallback: &str) {
+    let dump = crate::trace::TraceDump::collect(fabric);
+    let path = path.unwrap_or_else(|| std::path::Path::new(fallback));
+    if let Err(e) = dump.write(path) {
+        eprintln!("mpix: trace export to {} failed: {e}", path.display());
     }
 }
 
@@ -160,6 +182,26 @@ impl UniverseBuilder {
         self
     }
 
+    /// Enable the flight recorder for this universe's run, overriding
+    /// `MPIX_TRACE`. While the ranks run, every instrumented seam
+    /// (protocol transitions, matching, domain polls/steals, schedule
+    /// nodes, coll/IO dispatch, netmod) records into per-thread rings;
+    /// at teardown the merged Chrome-trace JSON is written (see
+    /// [`trace_path`](Self::trace_path) and [`crate::trace`]).
+    pub fn trace(mut self, on: bool) -> Self {
+        self.cfg.trace = on;
+        self
+    }
+
+    /// Where the merged trace JSON goes (default `mpix_trace.json`;
+    /// `run_rank` appends `.rank<R>` before the extension). Implies
+    /// nothing by itself — pair with [`trace`](Self::trace) or
+    /// `MPIX_TRACE=1`.
+    pub fn trace_path(mut self, path: impl Into<PathBuf>) -> Self {
+        self.cfg.trace_path = Some(path.into());
+        self
+    }
+
     /// Replace the whole config (escape hatch for tests/benches that
     /// already hold a [`FabricConfig`]).
     pub fn with_config(mut self, cfg: FabricConfig) -> Self {
@@ -195,10 +237,21 @@ impl UniverseBuilder {
         let n = self.cfg.nranks;
         assert!((rank as usize) < n, "rank {rank} out of range for {n} ranks");
         let fabric = Fabric::new(self.cfg);
+        if fabric.cfg.trace {
+            crate::trace::set_enabled(true);
+            crate::trace::set_rank(rank);
+        }
         let group = Arc::new((0..n as u32).collect::<Vec<_>>());
         let world = Comm::new_proc(Arc::clone(&fabric), CTX_WORLD, rank, group);
         let out = f(world);
         fabric.flush_netmod(rank);
+        if fabric.cfg.trace {
+            crate::trace::set_enabled(false);
+            // One file per process: peer ranks are other processes
+            // writing their own rings.
+            let fallback = format!("mpix_trace.rank{rank}.json");
+            export_trace(&fabric, fabric.cfg.trace_path.as_deref(), &fallback);
+        }
         out
     }
 }

@@ -1266,6 +1266,45 @@ mod progress_domains {
         assert_eq!(identity(&inproc_d), identity(&base_d));
     }
 
+    /// §14 neutrality: with the flight recorder compiled in but
+    /// disabled (explicit `.trace(false)` — emit is one relaxed load
+    /// that fails), the identity suite must hold unchanged AND the
+    /// recorder's own counters must stay exactly zero: no event
+    /// credited, no slot overwritten, no file written. Integration
+    /// tests run in their own process, so no concurrent lib test can
+    /// flip the global gate under us.
+    #[test]
+    fn tracing_disabled_is_identity() {
+        assert!(!mpix::trace::enabled(), "recording must start off in this process");
+        let run = |domains: usize| {
+            let fabric = Universe::builder()
+                .ranks(RANKS)
+                .progress_domains(domains)
+                .trace(false)
+                .fabric();
+            let before = fabric.metrics.snapshot();
+            let out = Universe::run_on(&fabric, &workload);
+            let delta = fabric.metrics.snapshot().since(&before);
+            (out, delta)
+        };
+        let (base_res, base_d) = run(1);
+        assert!(base_d.rdv > 0, "flood must cross the rendezvous threshold");
+        assert_eq!(base_d.trace_events, 0, "disabled recorder credited events");
+        assert_eq!(base_d.trace_dropped, 0, "disabled recorder overwrote slots");
+        for domains in [2, 4] {
+            let (res, d) = run(domains);
+            assert_eq!(base_res, res, "disabled tracing perturbed results at {domains} domains");
+            assert_eq!(
+                identity(&base_d),
+                identity(&d),
+                "protocol counters diverge at {domains} domains with tracing compiled\n \
+                 base: {base_d:?}\n got: {d:?}"
+            );
+            assert_eq!((d.trace_events, d.trace_dropped), (0, 0));
+        }
+        assert!(!mpix::trace::enabled(), "a disabled run must not flip the gate");
+    }
+
     #[test]
     fn progress_domains_hint_env_and_builder() {
         // Builder knob lands the partition on every rank.

@@ -1,0 +1,23 @@
+// Fixture: seeded trace_flag violations — an Acquire load where the
+// role allows Relaxed only (PL201: the recording gate must never fence
+// the hot path), and an untagged gate flip (PL202).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+pub struct Recorder {
+    pub enabled: AtomicBool,
+}
+
+impl Recorder {
+    pub fn wrong_load(&self) -> bool {
+        self.enabled.load(Ordering::Acquire) // lint: atomic(trace_flag)
+    }
+
+    pub fn untagged_flip(&self) {
+        self.enabled.store(true, Ordering::Relaxed) // no tag anywhere: PL202
+    }
+
+    pub fn correct(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed) // lint: atomic(trace_flag)
+    }
+}

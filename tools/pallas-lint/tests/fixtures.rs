@@ -36,7 +36,7 @@ rank = 90
 patterns = [".windows.lock(", ".handle.lock("]
 
 [atomics]
-scope = ["bad_atomics.rs", "bad_sched_atomics.rs", "clean.rs"]
+scope = ["bad_atomics.rs", "bad_sched_atomics.rs", "bad_trace_atomics.rs", "clean.rs"]
 
 [[role]]
 name = "doorbell"
@@ -57,6 +57,13 @@ name = "sched_ready"
 load = ["Acquire"]
 store = ["Relaxed"]
 rmw = ["AcqRel"]
+cas = []
+
+[[role]]
+name = "trace_flag"
+load = ["Relaxed"]
+store = ["Relaxed"]
+rmw = []
 cas = []
 
 [[hotpath]]
@@ -192,6 +199,19 @@ fn sched_atomics_fire() {
 }
 
 #[test]
+fn trace_atomics_fire() {
+    let f = fixture("bad_trace_atomics.rs");
+    let mut d = Vec::new();
+    atomics::check(&f, &manifest(), &mut d);
+    d.sort_by_key(|x| x.line);
+    assert_eq!(codes(&d), vec!["PL201", "PL202"], "{d:?}");
+    assert_eq!(d[0].line, 13);
+    assert!(d[0].msg.contains("trace_flag"), "{}", d[0].msg);
+    assert!(d[0].msg.contains("Acquire"), "{}", d[0].msg);
+    assert_eq!(d[1].line, 17);
+}
+
+#[test]
 fn sched_hotpath_fires() {
     let files = vec![fixture("bad_sched_hotpath.rs")];
     let mut d = Vec::new();
@@ -245,7 +265,7 @@ fn real_manifest_parses_and_is_nontrivial() {
     let m = Manifest::load(&Path::new(env!("CARGO_MANIFEST_DIR")).join("lock_order.toml"))
         .expect("repo manifest parses");
     assert_eq!(m.locks.len(), 7);
-    assert_eq!(m.roles.len(), 11);
+    assert_eq!(m.roles.len(), 12);
     assert!(m.hotpath.len() >= 15, "hotpath list shrank: {}", m.hotpath.len());
     assert!(m.atomics_scope.iter().any(|s| s == "rust/src/util/spsc.rs"));
 }
